@@ -1,0 +1,48 @@
+"""Benchmark orchestrator: one module per paper table/figure + the roofline
+table.  ``python -m benchmarks.run [--only fig1,fig2,...]``.
+Prints CSV lines (name,...) and writes artifacts/bench/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,fig2,fig3,roofline,wire")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig1_convergence, fig2_compressors, fig3_realworld,
+                   roofline, wire_micro)
+    suites = {
+        "fig1": fig1_convergence.main,
+        "fig2": fig2_compressors.main,
+        "fig3": fig3_realworld.main,
+        "wire": wire_micro.main,
+        "roofline": roofline.main,
+    }
+    rc = 0
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"==== {name} ====", flush=True)
+        try:
+            r = fn() or 0
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"{name},SUITE_ERROR,{type(e).__name__}")
+            r = 1
+        rc |= r
+        print(f"==== {name} done in {time.time()-t0:.1f}s (rc={r}) ====",
+              flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

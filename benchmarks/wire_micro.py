@@ -1,0 +1,56 @@
+"""Wire-codec microbenchmark: wall-time per call of the math-level
+compressors, the fixed-shape wire codecs, and the Pallas kernels
+(interpret=True on CPU — correctness-path timing, not TPU performance), plus
+the static bits-per-element table that drives communication accounting.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wire import make_wire
+from repro.kernels import ops
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+D = 1 << 18   # 256k elements
+
+
+def timeit(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    ART.mkdir(parents=True, exist_ok=True)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (D,))
+    rows = []
+    print("name,codec,us_per_call,bits_per_elt,ratio_vs_f32")
+    for spec in ("dense", "int8:block=512", "ternary:block=512",
+                 "hybrid:block=512,top_j=4", "randk:block=512,k=128"):
+        fmt = make_wire(spec)
+        enc = jax.jit(lambda k, v, f=fmt: f.encode(k, v))
+        us = timeit(enc, key, x)
+        bits = fmt.wire_bits(x.shape) / D
+        rows.append({"codec": spec, "us": us, "bits_per_elt": bits})
+        print(f"wire_micro,{spec},{us:.1f},{bits:.2f},{32/bits:.1f}")
+    x2 = x.reshape(-1, 512)
+    us = timeit(lambda: ops.ternary_encode(x2.reshape(-1), key, block=512))
+    print(f"wire_micro,pallas_ternary_encode(interp),{us:.1f},2.06,15.5")
+    rows.append({"codec": "pallas_ternary_interp", "us": us})
+    (ART / "wire_micro.json").write_text(json.dumps(rows, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

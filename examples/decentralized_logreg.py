@@ -1,0 +1,52 @@
+"""Real-world-style example (paper §V-3): 10-node decentralized logistic
+regression with a non-convex regularizer on Spambase-scale data, non-i.i.d.
+label-skew split, comparing communication cost across methods.
+
+    PYTHONPATH=src python examples/decentralized_logreg.py
+"""
+import jax
+import numpy as np
+
+from repro.core import baselines, consensus as cons, dcdgd, problems
+from repro.core.compressors import HybridChain, Sparsifier, Ternary
+
+
+def main():
+    X, y = problems.spambase_like_data(n=4601, d=57, seed=7)
+    prob = problems.logreg_nonconvex(X, y, n_nodes=10, rho=0.1, iid=False)
+    W = cons.fig3_topology_b()
+    s = cons.spectrum(W)
+    eta_min = s.snr_threshold
+    print(f"10-node graph: lambda_N={s.lambda_n:.3f} beta={s.beta:.3f} "
+          f"SNR threshold {eta_min:.2f}\n")
+
+    alpha, steps = 0.08, 600
+    runs = {
+        "DGD (uncompressed)": lambda: baselines.run_baseline(
+            "dgd", prob, W, alpha, steps, jax.random.PRNGKey(0)),
+        "QDGD (int8)": lambda: baselines.run_baseline(
+            "qdgd", prob, W, alpha, steps, jax.random.PRNGKey(0)),
+        "ADC-DGD (int8, g=1.2)": lambda: baselines.run_baseline(
+            "adc-dgd", prob, W, alpha, steps, jax.random.PRNGKey(0)),
+        "DC-DGD sparsifier": lambda: dcdgd.run(
+            prob, W, Sparsifier(p=min(cons.sparsifier_p_threshold(W) + 0.1,
+                                      0.9)),
+            alpha, steps, jax.random.PRNGKey(0)),
+        "DC-DGD ternary": lambda: dcdgd.run(
+            prob, W, Ternary(), alpha, steps, jax.random.PRNGKey(0)),
+        "DC-DGD hybrid": lambda: dcdgd.run(
+            prob, W, HybridChain(eta=max(1.25 * eta_min, 1.0)), alpha, steps,
+            jax.random.PRNGKey(0)),
+    }
+    print(f"{'method':26s} {'final |grad|^2':>14s} {'Mbits to 3% err':>16s}")
+    for name, fn in runs.items():
+        r = fn()
+        err = np.where(np.isfinite(r["grad_norm_sq"]), r["grad_norm_sq"], 1e12)
+        thresh = 0.03 * err[0]
+        hit = np.argmax(err < thresh) if (err < thresh).any() else -1
+        bits = r["cum_bits"][hit] / 1e6 if hit >= 0 else float("inf")
+        print(f"{name:26s} {err[-1]:14.3e} {bits:16.2f}")
+
+
+if __name__ == "__main__":
+    main()

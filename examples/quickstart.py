@@ -1,0 +1,52 @@
+"""Quickstart: the paper's 5-node circle network (objective (14)) solved
+with DC-DGD under three compressors, vs the uncompressed DGD baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows: the Theorem-1 SNR gate, convergence parity with DGD, the
+self-noise-reduction effect, and per-step communication cost.
+"""
+import jax
+import numpy as np
+
+from repro.core import baselines, consensus as cons, dcdgd, problems
+from repro.core.compressors import HybridChain, Sparsifier, Ternary
+
+
+def main():
+    prob = problems.paper_objective_5node(dim=5, seed=0)
+    W = cons.W1_PAPER
+    s = cons.spectrum(W)
+    print(f"consensus: 5-node circle, lambda_N={s.lambda_n:.3f}, "
+          f"beta={s.beta:.3f}")
+    print(f"Theorem-1 SNR threshold: {s.snr_threshold:.3f} "
+          f"(sparsifier needs p > {cons.sparsifier_p_threshold(W):.3f})\n")
+
+    steps, alpha = 400, 0.1
+    dgd = baselines.run_baseline("dgd", prob, W, alpha, steps,
+                                 jax.random.PRNGKey(0))
+    print(f"{'method':34s} {'final |grad|^2':>14s} {'Mbits sent':>12s}")
+    print(f"{'DGD (uncompressed)':34s} {dgd['grad_norm_sq'][-1]:14.3e} "
+          f"{dgd['cum_bits'][-1]/1e6:12.2f}")
+
+    for comp in (Sparsifier(p=0.8), Sparsifier(p=0.5), Ternary(),
+                 HybridChain(eta=1.2 * s.snr_threshold)):
+        ok, msg = cons.validate_compressor_for_topology(
+            W, comp.snr_lower_bound(prob.dim), strict=False)
+        r = dcdgd.run(prob, W, comp, alpha, steps, jax.random.PRNGKey(0))
+        g = r["grad_norm_sq"][-1]
+        tag = "gate: OK " if ok else "gate: WARN"
+        print(f"DC-DGD/{comp.name:27s} {g:14.3e} {r['cum_bits'][-1]/1e6:12.2f}"
+              f"   [{tag}]")
+
+    # self-noise-reduction: compression noise power over time
+    r = dcdgd.run(prob, W, Sparsifier(p=0.8), alpha, steps,
+                  jax.random.PRNGKey(0))
+    n = r["noise_power"]
+    print(f"\nself-noise-reduction (Sparsifier p=0.8): "
+          f"E||eps||^2 step 10: {n[10]:.2e} -> step {steps}: {n[-1]:.2e} "
+          f"(x{n[10]/max(n[-1],1e-30):.0f} smaller, no damping parameter)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""End-to-end LM training driver: decentralized DC-DGD data-parallel
+training of a transformer on the synthetic non-i.i.d. pipeline, with
+checkpoint/resume.
+
+    # CPU-sized default (runs in ~2 min):
+    PYTHONPATH=src python examples/train_lm.py
+
+    # the ~100M-parameter preset (a few hundred steps; give it a while on CPU
+    # or run on real devices):
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+The 100m preset is a 12L/768d qwen3-family model (~100M params plus
+embeddings).  Loss curves land in artifacts/examples/train_lm_<preset>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.data import SyntheticLMData
+from repro.launch.mesh import make_test_mesh
+from repro.train import make_trainer
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "examples"
+
+
+def preset(name: str):
+    base = get_smoke("qwen3-8b")
+    if name == "tiny":
+        return dataclasses.replace(base, name="tiny-lm", n_layers=2,
+                                   d_model=128, n_heads=4, n_kv_heads=2,
+                                   d_ff=512, head_dim=32, vocab_size=2048), 128, 16
+    if name == "100m":
+        return dataclasses.replace(
+            base, name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, d_ff=2048, head_dim=64, vocab_size=32768), 512, 16
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--wire", default="hybrid:block=512,top_j=4")
+    ap.add_argument("--consensus", default="data")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    arch, seq_len, global_batch = preset(args.preset)
+    n_dev = len(jax.devices())
+    mesh = make_test_mesh((max(n_dev, 1), 1), ("data", "model"))
+    shape = ShapeConfig("ex", seq_len, global_batch, "train")
+    run = RunConfig(consensus_axis=args.consensus, wire=args.wire,
+                    optimizer="adam", alpha=3e-3, grad_accum=1,
+                    topology="ring")
+    tr = make_trainer(mesh, arch, run, shape)
+    print(f"{arch.name}: nodes={tr.n_nodes} wire={args.wire}")
+    if tr.node_mode and tr.n_nodes > 1:
+        ws = tr.wire_stats()
+        print(f"per-step comm/node: {ws['wire_bits_per_node_step']/8e6:.2f} MB "
+              f"({ws['compression_ratio']:.1f}x vs dense)")
+    state = tr.init_state(0)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(state.x)) // max(tr.n_nodes, 1)
+    print(f"params/node: {n_params/1e6:.1f}M")
+
+    step_fn = tr.jit_train_step()
+    data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=seq_len,
+                           global_batch=global_batch,
+                           n_nodes=max(tr.n_nodes, 1), iid=False, seed=11)
+    hist = []
+    t0 = time.time()
+    mgr = None
+    if args.ckpt:
+        from repro.ckpt import CheckpointManager
+        mgr = CheckpointManager(args.ckpt, every=100)
+    with jax.set_mesh(mesh):
+        for i in range(args.steps):
+            state, m = step_fn(state, data.batch(i))
+            if (i + 1) % 10 == 0:
+                loss = float(m["loss"])
+                nd = float(m.get("noise_power", 0)) / max(
+                    float(m.get("diff_power", 1)), 1e-30)
+                hist.append({"step": i + 1, "loss": loss, "noise_ratio": nd,
+                             "wall_s": round(time.time() - t0, 1)})
+                print(f"step {i+1:4d}  loss {loss:.4f}  "
+                      f"noise/diff {nd:.3f}  ({hist[-1]['wall_s']}s)")
+            if mgr:
+                mgr.maybe_save(i + 1, state)
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"train_lm_{args.preset}.json").write_text(json.dumps(hist, indent=1))
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss did not decrease"
+    print(f"done; loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Assemble EXPERIMENTS.md from artifacts (dryrun/, dryrun_baseline/,
+bench/).  Re-runnable: PYTHONPATH=src python scripts/build_experiments.py
+"""
+import glob
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+ART = REPO / "artifacts"
+
+PEAK = 197e12
+HBM_BW = 819e9
+LINK = 50e9
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(str(d / "*.json")):
+        r = json.loads(Path(f).read_text())
+        out[(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))] = r
+    return out
+
+
+def terms(r):
+    c = r["hlo_flops_per_device"] / PEAK
+    m = r["hlo_hbm_bytes_per_device"] / HBM_BW
+    l = r["collectives"]["total"] / LINK
+    dom = max((("compute", c), ("memory", m), ("collective", l)),
+              key=lambda kv: kv[1])[0]
+    frac = c / max(c, m, l) if max(c, m, l) else 0
+    return c, m, l, dom, frac
+
+
+def fmt_cell(r):
+    if r["status"] == "skipped":
+        return None
+    c, m, l, dom, frac = terms(r)
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']:.0f}s | {r['bytes_per_device_gib']:.1f} "
+            f"| {c:.3g} | {m:.3g} | {l:.3g} | {dom} | {frac:.2f} |")
+
+
+def dryrun_section(cur):
+    lines = ["## §Dry-run — lower+compile, all 40 cells x {16x16, 2x16x16}",
+             "",
+             "Every cell `.lower().compile()`s on the production meshes; "
+             "`memory_analysis()` (GiB/device, donation-aliased as deployed) "
+             "and the trip-count-weighted HLO terms are recorded per cell in "
+             "`artifacts/dryrun/*.json`. Skipped cells are the designed "
+             "long_500k skips for pure full-attention archs "
+             "(DESIGN.md §3).", "",
+             "| arch | shape | mesh | compile | GiB/dev | compute s | "
+             "memory s | coll s | dominant | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = 0
+    fits = 0
+    for key in sorted(cur):
+        r = cur[key]
+        if key[3]:
+            continue
+        if r["status"] == "skipped":
+            n_skip += 1
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| — | — | — | SKIP | ({r['reason'][:40]}) |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| ERROR | | | | | | |")
+            continue
+        n_ok += 1
+        fits += r["bytes_per_device_gib"] < 16.0
+        lines.append(fmt_cell(r))
+    lines.insert(3, f"**{n_ok} cells compile OK, {n_skip} designed skips; "
+                 f"{fits}/{n_ok} fit 16 GiB HBM (see §Perf for the fixes "
+                 f"that got them there).**")
+    return "\n".join(lines)
+
+
+def roofline_section():
+    rows = json.loads((ART / "bench" / "roofline.json").read_text()) \
+        if (ART / "bench" / "roofline.json").exists() else []
+    md = (ART / "bench" / "roofline.md").read_text() \
+        if (ART / "bench" / "roofline.md").exists() else "(run benchmarks)"
+    ok = [r for r in rows if r.get("status") == "ok"]
+    import numpy as np
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    hdr = [
+        "## §Roofline — three terms per (arch x shape x mesh)",
+        "",
+        "Terms from the compiled dry-run artifacts (per-device, "
+        "trip-count-weighted HLO analysis; v5e constants 197 TF bf16, "
+        "819 GB/s HBM, 50 GB/s/link ICI).  MODEL_FLOPS = 6·N_active·D "
+        "(train) / 2·N_active·D (inference), N_active excludes embeddings "
+        "and non-routed experts; `useful ratio` = MODEL_FLOPS/HLO_FLOPs "
+        "(captures remat recompute, head padding, causal-tile and capacity "
+        "waste).",
+        "",
+        f"Dominant-term census over {len(ok)} cells: {doms}.",
+        f"Median roofline fraction: "
+        f"{np.median([r['roofline_fraction'] for r in ok]):.2f}; "
+        f"median useful ratio "
+        f"{np.median([r['useful_ratio'] for r in ok]):.2f}.",
+        "",
+    ]
+    return "\n".join(hdr) + "\n" + md
+
+
+def perf_section(cur, base):
+    def get(d, a, s, m):
+        return d.get((a, s, m, ""))
+
+    def row(r):
+        if r is None or r["status"] != "ok":
+            return None
+        c, mm, l, dom, frac = terms(r)
+        return dict(gib=r["bytes_per_device_gib"], c=c, m=mm, l=l, dom=dom,
+                    frac=frac, coll=r["collectives"]["total"],
+                    hbm=r["hlo_hbm_bytes_per_device"],
+                    flops=r["hlo_flops_per_device"],
+                    wire=(r.get("wire_stats") or {}))
+
+    out = ["## §Perf — hypothesis -> change -> measure log", ""]
+    out.append(
+        "Baselines for every cell are frozen in `artifacts/dryrun_baseline/` "
+        "(the paper-faithful configuration: DC-DGD with the blocked-ternary "
+        "wire, f32 consensus state, bf16 KV).  The three hillclimbed cells "
+        "and the global iterations are below; numbers are per-device from "
+        "the compiled dry-run.")
+    out.append("")
+
+    pairs = [
+        ("qwen3-8b", "train_4k", "single",
+         "representative of the paper's technique (node=replica DC-DGD)"),
+        ("llama4-maverick-400b-a17b", "train_4k", "multi",
+         "worst memory / hierarchical pod-consensus + MoE + FSDP"),
+        ("qwen1.5-32b", "decode_32k", "single",
+         "worst baseline HBM (infeasible at bf16 KV)"),
+    ]
+    out.append("### Hillclimbed cells (before -> after)\n")
+    out.append("| cell | why chosen | GiB/dev | compute s | memory s | "
+               "coll s | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|")
+    for a, s, m, why in pairs:
+        b = row(get(base, a, s, m))
+        c = row(get(cur, a, s, m))
+        if b and c:
+            out.append(
+                f"| {a} x {s} x {m} | {why} "
+                f"| {b['gib']:.1f} → **{c['gib']:.1f}** "
+                f"| {b['c']:.3g} → {c['c']:.3g} "
+                f"| {b['m']:.3g} → **{c['m']:.3g}** "
+                f"| {b['l']:.3g} → **{c['l']:.3g}** "
+                f"| {b['frac']:.2f} → **{c['frac']:.2f}** |")
+    out.append("")
+    return "\n".join(out)
+
+
+def main():
+    cur = load(ART / "dryrun")
+    base = load(ART / "dryrun_baseline")
+    sections = []
+    header = (REPO / "EXPERIMENTS_HEADER.md").read_text() \
+        if (REPO / "EXPERIMENTS_HEADER.md").exists() else \
+        "# EXPERIMENTS\n"
+    sections.append(header)
+    sections.append(dryrun_section(cur))
+    sections.append("")
+    sections.append(roofline_section())
+    sections.append("")
+    sections.append(perf_section(cur, base))
+    perf_log = (REPO / "EXPERIMENTS_PERF_LOG.md")
+    if perf_log.exists():
+        sections.append(perf_log.read_text())
+    (REPO / "EXPERIMENTS.md").write_text("\n".join(sections))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

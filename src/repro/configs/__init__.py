@@ -1,0 +1,145 @@
+"""Architecture registry + per-(arch x shape) input specs.
+
+``get_arch(name)`` / ``get_smoke(name)`` return the full / reduced configs;
+``input_specs(cfg, shape, kind)`` builds the ShapeDtypeStruct stand-ins the
+dry-run lowers against (weak-type-correct, shardable, no allocation).
+``PER_ARCH_RUN`` carries the distribution defaults from DESIGN.md §3
+(consensus axis, param mode, microbatching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import SHAPES, SMOKE_SHAPES, ArchConfig, RunConfig, ShapeConfig
+from . import (chameleon_34b, deepseek_v2_lite, h2o_danube3_4b,
+               llama4_maverick, qwen15_4b, qwen15_32b, qwen3_8b,
+               seamless_m4t_medium, xlstm_350m, zamba2_7b)
+
+_MODULES = {
+    "xlstm-350m": xlstm_350m,
+    "qwen1.5-4b": qwen15_4b,
+    "qwen3-8b": qwen3_8b,
+    "h2o-danube-3-4b": h2o_danube3_4b,
+    "qwen1.5-32b": qwen15_32b,
+    "chameleon-34b": chameleon_34b,
+    "llama4-maverick-400b-a17b": llama4_maverick,
+    "deepseek-v2-lite-16b": deepseek_v2_lite,
+    "zamba2-7b": zamba2_7b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_arch(name: str) -> ArchConfig:
+    return _MODULES[name].CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _MODULES[name].SMOKE
+
+
+# ---------------------------------------------------------------------------
+# distribution defaults per arch (DESIGN.md §3): consensus axis + param mode.
+# "data"  -> paper-faithful: nodes = DP replicas, params replicated per node.
+# "pod"   -> hierarchical: FSDP inside the pod, DC-DGD gossip across pods
+#            (models whose 2x-f32 consensus state cannot replicate per node).
+# grad_accum keeps per-microbatch activations + MoE buffers inside HBM.
+# ---------------------------------------------------------------------------
+PER_ARCH_RUN: Dict[str, dict] = {
+    "xlstm-350m": dict(consensus_axis="data", param_mode="dp_tp", grad_accum=1),
+    "qwen1.5-4b": dict(consensus_axis="data", param_mode="dp_tp", grad_accum=2,
+                       kv_dtype="int8"),
+    "qwen3-8b": dict(consensus_axis="data", param_mode="dp_tp", grad_accum=2,
+                     kv_dtype="int8"),
+    "h2o-danube-3-4b": dict(consensus_axis="data", param_mode="dp_tp",
+                            grad_accum=2),
+    "qwen1.5-32b": dict(consensus_axis="pod", param_mode="fsdp_tp",
+                        grad_accum=4, kv_dtype="int8"),
+    "chameleon-34b": dict(consensus_axis="pod", param_mode="fsdp_tp",
+                          grad_accum=4, kv_dtype="int8"),
+    "llama4-maverick-400b-a17b": dict(consensus_axis="pod", param_mode="fsdp_tp",
+                                      grad_accum=8, kv_dtype="int8",
+                                      gossip_stream=True,
+                                      grad_dtype="bfloat16"),
+    # 16B total params: 7 f32 param-sized tensors (x, s, g, u, d, c, agg)
+    # at dp_tp would need ~28 GiB/device -> hierarchical mode like the other
+    # big models (§Perf iteration D; baseline artifact kept for comparison)
+    "deepseek-v2-lite-16b": dict(consensus_axis="pod", param_mode="fsdp_tp",
+                                 grad_accum=4),
+    "zamba2-7b": dict(consensus_axis="data", param_mode="dp_tp", grad_accum=2,
+                      kv_dtype="int8"),
+    "seamless-m4t-medium": dict(consensus_axis="data", param_mode="dp_tp",
+                                grad_accum=1),
+}
+
+
+def default_run_config(arch: str, **overrides) -> RunConfig:
+    kw = dict(PER_ARCH_RUN.get(arch, {}))
+    kw.update(overrides)
+    return RunConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# (arch x shape) applicability
+# ---------------------------------------------------------------------------
+def cell_applicable(cfg: ArchConfig, shape: ShapeConfig) -> tuple:
+    """Returns (ok, reason).  long_500k only runs for sub-quadratic archs
+    (full-attention skip recorded in DESIGN.md / EXPERIMENTS.md)."""
+    if shape.name.startswith("long_") and not cfg.subquadratic:
+        return False, "long-context decode needs sub-quadratic attention"
+    return True, ""
+
+
+def cells(include_long_skips: bool = False):
+    """All (arch_name, shape_name) cells; 40 total, minus inapplicable
+    long_500k cells unless ``include_long_skips``."""
+    out = []
+    for a in ARCH_NAMES:
+        cfg = get_arch(a)
+        for s in SHAPES.values():
+            ok, _ = cell_applicable(cfg, s)
+            if ok or include_long_skips:
+                out.append((a, s.name))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for the given cell.
+
+    train:   {"tokens": (gb, seq), "labels": (gb, seq)} (+enc_embeds)
+    prefill: {"tokens": (gb, seq)} (+enc_embeds)
+    decode:  {"tokens": (gb,), "pos": scalar} — the seq_len lives in the
+             cache specs (models.init_cache_specs), not here.
+    """
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        spec = {"tokens": jax.ShapeDtypeStruct((gb, s), i32),
+                "labels": jax.ShapeDtypeStruct((gb, s), i32)}
+        if cfg.encdec:
+            spec["enc_embeds"] = jax.ShapeDtypeStruct(
+                (gb, min(cfg.frontend_len, s), cfg.d_model), jnp.bfloat16)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((gb, s), i32)}
+        if cfg.encdec:
+            spec["enc_embeds"] = jax.ShapeDtypeStruct(
+                (gb, min(cfg.frontend_len, s), cfg.d_model), jnp.bfloat16)
+        return spec
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((gb,), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(shape.kind)
+
+
+__all__ = ["ARCH_NAMES", "ArchConfig", "RunConfig", "SHAPES", "SMOKE_SHAPES",
+           "ShapeConfig", "cell_applicable", "cells", "default_run_config",
+           "get_arch", "get_smoke", "input_specs", "PER_ARCH_RUN"]

@@ -1,0 +1,169 @@
+"""Config dataclasses: architecture, input shapes, run/distribution options."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None    # sliding-window attention width
+    rope_theta: float = 1e4
+
+    # MLA (DeepSeek-V2)
+    mla: bool = False
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 1
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_interleave: int = 1         # every Nth layer is MoE (1 = all)
+    first_dense: int = 0            # leading dense layers (DeepSeek style)
+    capacity_factor: float = 1.25
+
+    # SSM (Mamba2) / hybrid
+    ssm_state: int = 64
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    attn_every: int = 0             # zamba2: shared attention every Nth layer
+
+    # xLSTM
+    slstm_every: int = 0            # every Nth block is sLSTM (0 = none)
+    proj_factor: float = 2.0
+
+    # encoder-decoder
+    encdec: bool = False
+    n_enc_layers: int = 0
+
+    # modality frontend stub ("audio" | "vision" | None): input_specs() then
+    # provides precomputed frame/patch embeddings instead of raw media
+    frontend: Optional[str] = None
+    frontend_len: int = 0           # encoder input length for enc-dec stubs
+
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    mlp_act: str = "swiglu"         # swiglu | gelu | relu
+
+    # --- TP head layout (DESIGN.md §4): jit inputs must shard EVENLY, so
+    # head counts not divisible by the model-axis size are padded (masked,
+    # zero-init -> exact semantics, some wasted FLOPs counted honestly in the
+    # roofline ratio) and GQA kv heads are EXPANDED by integer repetition
+    # (k/v computed once, repeated -> exact semantics, 2x kv-cache bytes).
+    mha_pad_to: int = 0             # MHA: pad q=k=v heads to this count
+    q_group_pad: int = 0            # GQA: pad per-kv-group q count (llama4)
+    kv_repeat: int = 1              # GQA: kv expansion factor
+
+    # compute tiling knobs (hillclimb surface; see EXPERIMENTS.md §Perf)
+    attn_chunk_q: int = 512
+    attn_chunk_k: int = 512
+    ssm_chunk: int = 128
+    xent_chunk: int = 2048
+
+    # sharding priority override: mesh axis -> ordered logical-axis candidates
+    sharding_priority: Optional[dict] = None
+
+    # long_500k applicability (sub-quadratic archs only)
+    subquadratic: bool = False
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def vocab_padded(self, multiple: int = 256) -> int:
+        return -(-self.vocab_size // multiple) * multiple
+
+    # ---- layer pattern for scan-over-units (DESIGN.md §4) ----
+    def layer_pattern(self) -> Tuple[Tuple[str, ...], Tuple[str, ...], int, Tuple[str, ...]]:
+        """Returns (head, unit, n_units, tail) of layer-kind strings."""
+        if self.family in ("ssm",):        # xLSTM
+            if self.slstm_every:
+                unit = tuple("slstm" if (i + 1) % self.slstm_every == 0 else "mlstm"
+                             for i in range(self.slstm_every))
+                assert self.n_layers % self.slstm_every == 0
+                return (), unit, self.n_layers // self.slstm_every, ()
+            return (), ("mlstm",), self.n_layers, ()
+        if self.family == "hybrid":        # zamba2: mamba + shared attn
+            k = self.attn_every
+            n_units, rem = divmod(self.n_layers, k)
+            unit = tuple("mamba" for _ in range(k - 1)) + ("shared_attn",)
+            return (), unit, n_units, tuple("mamba" for _ in range(rem))
+        if self.moe:
+            if self.first_dense:           # deepseek: leading dense layer(s)
+                head = tuple("attn_dense" for _ in range(self.first_dense))
+                return head, ("attn_moe",), self.n_layers - self.first_dense, ()
+            if self.moe_interleave > 1:    # llama4: alternating dense/moe
+                unit = tuple("attn_dense" if i % self.moe_interleave else "attn_moe"
+                             for i in range(self.moe_interleave))
+                n_units, rem = divmod(self.n_layers, self.moe_interleave)
+                assert rem == 0
+                return (), unit, n_units, ()
+            return (), ("attn_moe",), self.n_layers, ()
+        return (), ("attn_dense",), self.n_layers, ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# smoke-scale shapes for CPU tests
+SMOKE_SHAPES = {
+    "train_smoke": ShapeConfig("train_smoke", 64, 4, "train"),
+    "prefill_smoke": ShapeConfig("prefill_smoke", 64, 2, "prefill"),
+    "decode_smoke": ShapeConfig("decode_smoke", 64, 2, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Distribution + optimization options for a training/serving run."""
+    consensus_axis: Optional[str] = "data"   # "data" | "pod" | None (allreduce)
+    topology: str = "ring"                   # ring | torus | complete
+    compressor: str = "blocked_hybrid:block=512,top_j=4"  # math-level spec
+    wire: str = "ternary"                    # wire format: dense|ternary|hybrid|topk|int8
+    wire_block: int = 512
+    wire_top_j: int = 4
+    lazy_mixing: float = 0.25                # lazy factor for metropolis W
+    param_mode: str = "dp_tp"                # dp_tp | fsdp_tp
+    optimizer: str = "sgd"                   # sgd | adam (beyond-paper preconditioner)
+    alpha: float = 0.01                      # DC-DGD step size
+    schedule: str = "constant"               # constant | cor1
+    consensus_dtype: str = "float32"         # dtype of x/y consensus state
+    compute_dtype: str = "bfloat16"
+    kv_dtype: str = "bfloat16"               # serving KV cache: bfloat16|int8
+    gossip_stream: bool = False              # leaf-sequential gossip (memory cap)
+    grad_dtype: str = "float32"              # grad accumulation: float32|bfloat16
+    remat: str = "full"                      # none | full | dots
+    grad_accum: int = 1
+    use_pallas_wire: bool = False            # route wire codec through kernels/
+    unsafe: bool = False                     # override the Theorem-1 SNR gate
+    edge_drop_prob: float = 0.0              # straggler simulation (runtime.fault)

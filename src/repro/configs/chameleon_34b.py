@@ -1,0 +1,25 @@
+"""chameleon-34b [vlm] — early-fusion VQ image tokens (arXiv:2405.09818).
+
+48L, d_model=8192, 64 heads / 8 kv heads, d_ff=22016, vocab 65536 (text +
+VQ image codes in ONE vocabulary — early fusion means the modality frontend
+is the VQ tokenizer, stubbed: input_specs() yields token ids whose trailing
+span represents image tokens).  Full attention: long_500k skipped.
+Hierarchical (pod-consensus) mode: 34B replicated consensus state does not
+fit per-replica.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,   # chameleon uses qk-norm for training stability
+    kv_repeat=2,    # 8 kv heads expanded to 16 for TP-16
+)
+
+SMOKE = ArchConfig(
+    name="chameleon-34b-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160,
+    vocab_size=512,
+    qk_norm=True,
+)

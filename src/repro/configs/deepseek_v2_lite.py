@@ -1,0 +1,30 @@
+"""deepseek-v2-lite-16b [moe] — MLA + fine-grained MoE (arXiv:2405.04434).
+
+27L, d_model=2048, 16 heads, vocab 102400.
+MLA: kv_lora_rank=512, qk_nope=128, qk_rope=64, v_head=128 (the decode cache
+stores the COMPRESSED 512+64 stream).  MoE: 64 routed experts top-6 +
+2 shared experts, expert d_ff=1408; first layer dense with d_ff=10944.
+(The assignment line abbreviates "d_ff=1408" = the EXPERT intermediate size;
+the dense first layer uses the model's 10944 — recorded in DESIGN.md.)
+Full attention: long_500k skipped.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=10944,
+    vocab_size=102400,
+    mla=True, kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+    v_head_dim=128,
+    moe=True, n_experts=64, top_k=6, moe_d_ff=1408, n_shared_experts=2,
+    first_dense=1, capacity_factor=1.25,
+)
+
+SMOKE = ArchConfig(
+    name="deepseek-v2-lite-smoke", family="moe",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512,
+    mla=True, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+    moe=True, n_experts=8, top_k=2, moe_d_ff=32, n_shared_experts=1,
+    first_dense=1, capacity_factor=1.5,
+)

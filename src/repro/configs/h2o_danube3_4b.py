@@ -1,0 +1,25 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix with sliding-window attention
+(arXiv:2401.16818).
+
+24L, d_model=3840, 32 heads / 8 kv heads (head_dim 120), d_ff=10240,
+vocab 32000, window 4096.  SWA is sub-quadratic: long_500k RUNS (rolling
+window-bounded decode cache).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_ff=10240,
+    vocab_size=32000, head_dim=120,
+    window=4096,
+    kv_repeat=2,     # 8 kv heads expanded to 16 for TP-16
+    subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="h2o-danube-3-4b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16,
+    window=32,
+    subquadratic=True,
+)

@@ -1,0 +1,29 @@
+"""llama4-maverick-400b-a17b [moe] — MoE, early fusion
+(hf:meta-llama/Llama-4 family).
+
+48L, d_model=5120, 40 heads / 8 kv heads, d_ff=8192, vocab 202048.
+MoE: 128 experts, top-1, every OTHER layer is MoE (interleave=2 -> 24 MoE
+layers, ~390B expert params + backbone ~= 400B total, 17B active).
+Llama-4 uses sigmoid routing; we approximate with softmax-renormalized
+top-1 (DESIGN.md §Arch-applicability).  Hierarchical (pod) mode.
+Full attention: long_500k skipped.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=8192,
+    vocab_size=202048, head_dim=128,
+    moe=True, n_experts=128, top_k=1, moe_d_ff=8192, moe_interleave=2,
+    capacity_factor=1.25,
+    q_group_pad=6,  # 5 q/kv-group -> 6 (h_eff=48; pad masked, zero-init)
+    kv_repeat=2,    # 8 kv heads expanded to 16 for TP-16
+)
+
+SMOKE = ArchConfig(
+    name="llama4-maverick-smoke", family="moe",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16,
+    moe=True, n_experts=8, top_k=1, moe_d_ff=128, moe_interleave=2,
+    capacity_factor=1.5,
+)

@@ -1,0 +1,23 @@
+"""qwen1.5-32b [dense] — QKV bias (hf:Qwen/Qwen1.5 family).
+
+64L, d_model=5120, 40 heads (MHA: kv=40), d_ff=27392, vocab 152064.
+Too big to replicate per DP replica with consensus state on v5e -> runs in
+hierarchical mode (FSDP within pod, DC-DGD gossip across pods); see
+configs.__init__.PER_ARCH_RUN.  Full attention: long_500k skipped.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40, d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True, rope_theta=1e6,
+    mha_pad_to=48,   # 40 MHA heads -> pad to 48 for TP-16 (masked, zero-init)
+)
+
+SMOKE = ArchConfig(
+    name="qwen1.5-32b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=192,
+    vocab_size=512,
+    qkv_bias=True, rope_theta=1e6,
+)

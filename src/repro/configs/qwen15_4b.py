@@ -1,0 +1,21 @@
+"""qwen1.5-4b [dense] — QKV bias (hf:Qwen/Qwen1.5 family).
+
+40L, d_model=2560, 20 heads (MHA: kv=20), d_ff=6912, vocab 151936.
+Full attention: long_500k skipped.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b", family="dense",
+    n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20, d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True, rope_theta=1e6,
+    mha_pad_to=32,   # 20 MHA heads -> pad to 32 for TP-16 (masked, zero-init)
+)
+
+SMOKE = ArchConfig(
+    name="qwen1.5-4b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512,
+    qkv_bias=True, rope_theta=1e6,
+)

@@ -1,0 +1,21 @@
+"""qwen3-8b [dense] — qk-norm, GQA (hf:Qwen/Qwen3-8B).
+
+36L, d_model=4096, 32 heads / 8 kv heads (head_dim 128), d_ff=12288,
+vocab 151936.  Full attention: long_500k skipped.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=12288,
+    vocab_size=151936, head_dim=128,
+    qk_norm=True, rope_theta=1e6,
+    kv_repeat=2,     # 8 kv heads expanded to 16 for TP-16 (exact semantics)
+)
+
+SMOKE = ArchConfig(
+    name="qwen3-8b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, head_dim=16,
+    qk_norm=True, rope_theta=1e6,
+)

@@ -1,0 +1,26 @@
+"""seamless-m4t-medium [audio] — encoder-decoder, multimodal
+(arXiv:2308.11596).
+
+12L decoder + 12L encoder, d_model=1024, 16 heads, d_ff=4096 (ReLU MLP),
+vocab 256206 (NLLB).  The audio frontend (w2v-BERT conformer feature
+extractor) is a STUB: input_specs() provides precomputed frame embeddings
+(batch, frames, d_model).  Decode = decoder self-attn cache + cross-attn to
+encoder states.  Full attention: long_500k skipped.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium", family="audio",
+    n_layers=12, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+    vocab_size=256206,
+    encdec=True, n_enc_layers=12, mlp_act="relu",
+    frontend="audio", frontend_len=4096,
+)
+
+SMOKE = ArchConfig(
+    name="seamless-m4t-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512,
+    encdec=True, n_enc_layers=2, mlp_act="relu",
+    frontend="audio", frontend_len=64,
+)

@@ -1,0 +1,32 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks (arXiv:2405.04517).
+
+24L, d_model=1024, 4 heads (kv=4), d_ff=0 (block-internal projections only),
+vocab 50304 (GPT-NeoX tokenizer, tied embeddings).  Sub-quadratic: long_500k
+runs.  Block mix: every 6th block is sLSTM (4 sLSTM + 20 mLSTM).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304,
+    slstm_every=6, proj_factor=2.0,
+    tie_embeddings=True,
+    subquadratic=True,
+    # 4 heads / head_dim 512 are not TP-16-shardable; a 350M model is not
+    # worth TP on its state math anyway: replicate heads, shard the d_in
+    # projections ("mlp") + vocab (the real FLOPs) over the model axis.
+    sharding_priority={"heads": None, "head_dim": None},
+)
+
+SMOKE = ArchConfig(
+    name="xlstm-350m-smoke", family="ssm",
+    n_layers=6, d_model=64, n_heads=2, n_kv_heads=2, d_ff=0,
+    vocab_size=512,
+    slstm_every=3, proj_factor=2.0,
+    tie_embeddings=True,
+    subquadratic=True,
+    # like the full config: mLSTM q/k/v axes are ("mlp","heads","head_dim");
+    # without the override both "mlp" and "heads" map to the model axis
+    sharding_priority={"heads": None, "head_dim": None},
+)

@@ -1,0 +1,27 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention block
+(arXiv:2411.15242).
+
+81L, d_model=3584, 32 heads (kv=32), d_ff=14336 (shared block MLP),
+vocab 32000, ssm_state=64.  Every 3rd layer applies the SINGLE weight-shared
+attention+MLP block (true cross-layer sharing; per-layer KV caches).
+Sub-quadratic backbone: long_500k RUNS.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, d_ff=14336,
+    vocab_size=32000, head_dim=112,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, conv_width=4,
+    attn_every=3,
+    subquadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="zamba2-7b-smoke", family="hybrid",
+    n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=512, head_dim=16,
+    ssm_state=16, ssm_head_dim=16, ssm_expand=2, conv_width=4,
+    attn_every=3,
+    subquadratic=True,
+)

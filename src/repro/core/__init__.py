@@ -1,0 +1,8 @@
+"""Core: the paper's contribution — DC-DGD (Algorithm 1), SNR-constrained
+compressors (Def. 1, Examples 1-2, §IV hybrid), consensus topologies and
+Theorem-1 thresholds, hybrid compression planning (Algorithm 2), and the
+baselines the paper compares against (DGD / ADC-DGD / QDGD)."""
+from . import baselines, compressors, consensus, dcdgd, hybrid_greedy, problems
+
+__all__ = ["baselines", "compressors", "consensus", "dcdgd", "hybrid_greedy",
+           "problems"]

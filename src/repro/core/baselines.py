@@ -1,0 +1,157 @@
+"""Baselines the paper compares against (§II, §V): DGD, ADC-DGD, QDGD, and
+centralized gradient descent.  Same stacked-pytree conventions as
+:mod:`repro.core.dcdgd`.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compressors import Compressor, Identity, LowPrecision
+from .dcdgd import _mix, _node_compress
+
+
+# --------------------------------------------------------------------------
+# original DGD (Nedic & Ozdaglar) — uncompressed full-state exchange
+# --------------------------------------------------------------------------
+class DGDState(NamedTuple):
+    x: jax.Array
+    t: jax.Array
+
+
+def dgd_init(params_like) -> DGDState:
+    return DGDState(jax.tree.map(jnp.zeros_like, params_like), jnp.int32(1))
+
+
+def dgd_step(state: DGDState, W, grad_fn, alpha_t) -> DGDState:
+    """x_{t+1} = W x_t - alpha grad f(x_t)."""
+    g = grad_fn(state.x)
+    x = jax.tree.map(lambda wx, gg: wx - alpha_t * gg, _mix(W, state.x), g)
+    return DGDState(x, state.t + 1)
+
+
+# --------------------------------------------------------------------------
+# ADC-DGD (Zhang et al., INFOCOM'19): t^gamma-amplified differential coding
+# --------------------------------------------------------------------------
+class ADCDGDState(NamedTuple):
+    x: jax.Array       # true local iterates
+    xhat: jax.Array    # commonly-known inexact copies
+    t: jax.Array
+    key: jax.Array
+
+
+def adcdgd_init(params_like, key) -> ADCDGDState:
+    z = jax.tree.map(jnp.zeros_like, params_like)
+    return ADCDGDState(z, z, jnp.int32(1), key)
+
+
+def adcdgd_step(state: ADCDGDState, W, grad_fn, alpha_t, gamma: float,
+                comp: Compressor = LowPrecision(bits=8)) -> ADCDGDState:
+    """d_t = x_t - xhat_{t-1}; transmit C(t^gamma d_t); everyone updates
+    xhat_t = xhat_{t-1} + C(t^gamma d_t)/t^gamma;
+    x_{t+1} = W xhat_t - alpha grad f(x_t).
+
+    The t^gamma amplification (gamma > 1/2) shrinks the effective
+    quantization noise but risks overflow (paper §II-2)."""
+    key, sub = jax.random.split(state.key)
+    amp = jnp.asarray(state.t, jnp.float32) ** gamma
+    d = jax.tree.map(lambda a, b: amp * (a - b), state.x, state.xhat)
+    c = _node_compress(comp, sub, d)
+    xhat = jax.tree.map(lambda h, cc: h + cc / amp, state.xhat, c)
+    g = grad_fn(state.x)
+    x = jax.tree.map(lambda wh, gg: wh - alpha_t * gg, _mix(W, xhat), g)
+    return ADCDGDState(x, xhat, state.t + 1, key)
+
+
+# --------------------------------------------------------------------------
+# QDGD (Reisizadeh et al., CDC'18): eps_t-damped quantized aggregation
+# --------------------------------------------------------------------------
+class QDGDState(NamedTuple):
+    x: jax.Array
+    t: jax.Array
+    key: jax.Array
+
+
+def qdgd_init(params_like, key) -> QDGDState:
+    return QDGDState(jax.tree.map(jnp.zeros_like, params_like), jnp.int32(1), key)
+
+
+def qdgd_step(state: QDGDState, W, grad_fn, alpha: float, eps0: float,
+              comp: Compressor = LowPrecision(bits=8)) -> QDGDState:
+    """x_{t+1} = x_t + eps_t (W Q(x_t) - x_t) - eps_t alpha grad f(x_t),
+    eps_t = eps0/sqrt(t) (the paper §II-1 description: eps_t-scaled
+    aggregation of compressed copies + eps_t-scaled gradient step; the timid
+    eps_t * alpha effective step yields the slow O(1/t^{1/4}) rate)."""
+    key, sub = jax.random.split(state.key)
+    eps_t = eps0 / jnp.sqrt(jnp.asarray(state.t, jnp.float32))
+    q = _node_compress(comp, sub, state.x)
+    g = grad_fn(state.x)
+    x = jax.tree.map(
+        lambda xx, wq, gg: xx + eps_t * (wq - xx) - eps_t * alpha * gg,
+        state.x, _mix(W, q), g)
+    return QDGDState(x, state.t + 1, key)
+
+
+# --------------------------------------------------------------------------
+# driver mirroring dcdgd.run for benchmarks
+# --------------------------------------------------------------------------
+def run_baseline(method: str, problem, W: np.ndarray, alpha, n_steps: int,
+                 key: jax.Array, comp: Compressor | None = None,
+                 gamma: float = 1.2, eps0: float = 1.0) -> dict:
+    Wj = jnp.asarray(W, jnp.float32)
+    n = W.shape[0]
+    params_like = jnp.zeros((n, problem.dim), jnp.float32)
+    alpha_fn = alpha if callable(alpha) else (lambda t: alpha)
+    from .compressors import FLOAT_BITS, INT8_BITS
+
+    if method == "dgd":
+        state = dgd_init(params_like)
+        bits_per_step = float(FLOAT_BITS * n * problem.dim)
+
+        @jax.jit
+        def one(state):
+            return dgd_step(state, Wj, problem.grad, alpha_fn(state.t))
+    elif method == "adc-dgd":
+        comp = comp or LowPrecision(bits=8)
+        state = adcdgd_init(params_like, key)
+        bits_per_step = float((FLOAT_BITS + INT8_BITS * problem.dim) * n)
+
+        @jax.jit
+        def one(state):
+            return adcdgd_step(state, Wj, problem.grad, alpha_fn(state.t),
+                               gamma, comp)
+    elif method == "qdgd":
+        comp = comp or LowPrecision(bits=8)
+        state = qdgd_init(params_like, key)
+        bits_per_step = float((FLOAT_BITS + INT8_BITS * problem.dim) * n)
+
+        @jax.jit
+        def one(state):
+            return qdgd_step(state, Wj, problem.grad, alpha_fn(state.t),
+                             eps0, comp)
+    else:
+        raise ValueError(f"unknown baseline {method}")
+
+    @jax.jit
+    def measure(x):
+        xbar = jnp.mean(x, axis=0)
+        return (problem.global_f(xbar),
+                jnp.sum(problem.global_grad(xbar) ** 2),
+                jnp.sum((x - xbar[None, :]) ** 2))
+
+    hist = {"f_bar": [], "grad_norm_sq": [], "consensus_err": [], "bits": []}
+    for _ in range(n_steps):
+        state = one(state)
+        f, gn, ce = measure(state.x)
+        hist["f_bar"].append(float(f))
+        hist["grad_norm_sq"].append(float(gn))
+        hist["consensus_err"].append(float(ce))
+        hist["bits"].append(bits_per_step)
+    out = {k: np.asarray(v) for k, v in hist.items()}
+    out["cum_bits"] = np.cumsum(out["bits"])
+    out["x_final"] = np.asarray(state.x)
+    return out

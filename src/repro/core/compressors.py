@@ -1,0 +1,376 @@
+"""SNR-constrained unbiased stochastic compressors (paper §III-B, §IV).
+
+Definition 1: C(z) = z + eps_z with E[eps_z] = 0 and
+E[||eps_z||^2] <= (1/eta) ||z||^2 for SNR threshold eta.
+
+Two API levels:
+  * math-level ``Compressor.__call__(key, z) -> z_hat`` — the decoded view
+    C(z), jit/vmap-friendly, used by the stacked DC-DGD backend, benchmarks
+    and property tests.  ``expected_bits(z)`` implements the paper's bit
+    accounting (32-bit floats, 2-bit ternary symbols, 1-bit sparsifier zeros,
+    anchor-index overhead per Problem (13)).
+  * wire-level formats live in :mod:`repro.core.wire` / :mod:`repro.kernels`
+    (fixed-shape packed arrays whose bytes are what collectives move).
+
+All compressors operate on 1-D vectors; :func:`tree_compress` extends any of
+them to pytrees leaf-wise (the SNR bound is preserved: summing the per-leaf
+noise inequalities yields the global one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FLOAT_BITS = 32
+TERNARY_BITS = 2
+ZERO_BITS = 1  # sparsifier zero symbol (paper §IV)
+INT8_BITS = 8
+
+
+# --------------------------------------------------------------------------
+# base
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class. Subclasses must be frozen dataclasses (hashable => usable
+    as static args under jit)."""
+
+    name: str = dataclasses.field(default="base", init=False)
+
+    def __call__(self, key: jax.Array, z: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def snr_lower_bound(self, d: int) -> float:
+        """Guaranteed SNR eta (0.0 == no guarantee, e.g. raw ternary)."""
+        raise NotImplementedError
+
+    def expected_bits(self, z: jax.Array) -> jax.Array:
+        """Expected wire bits for input z (paper accounting; scalar)."""
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# identity (original DGD / uncompressed)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    name: str = dataclasses.field(default="identity", init=False)
+
+    def __call__(self, key, z):
+        return z
+
+    def snr_lower_bound(self, d):
+        return float("inf")
+
+    def expected_bits(self, z):
+        return jnp.asarray(FLOAT_BITS * z.size, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Example 1: the sparsifier operator
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Sparsifier(Compressor):
+    """[C(z)]_i = z_i/p w.p. p else 0.  Unbiased; SNR >= p/(1-p)."""
+
+    p: float = 0.5
+    name: str = dataclasses.field(default="sparsifier", init=False)
+
+    def __post_init__(self):
+        assert 0.0 < self.p <= 1.0, f"p must be in (0,1], got {self.p}"
+
+    def __call__(self, key, z):
+        mask = jax.random.bernoulli(key, self.p, z.shape)
+        return jnp.where(mask, z / self.p, 0.0).astype(z.dtype)
+
+    def snr_lower_bound(self, d):
+        return float("inf") if self.p == 1.0 else self.p / (1.0 - self.p)
+
+    def expected_bits(self, z):
+        d = z.size
+        return jnp.asarray(d * (FLOAT_BITS * self.p + ZERO_BITS * (1 - self.p)),
+                           jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Example 2: the ternary operator (TernGrad-style)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Ternary(Compressor):
+    """C(z) = ||z||_inf * sign(z) o b_z, [b_z]_i ~ Bernoulli(|z_i|/||z||_inf).
+
+    Unbiased; noise power sum_i |z_i| (||z||_inf - |z_i|): the SNR is data
+    dependent (Theta(d) for generic inputs) and NOT controllable — exactly
+    the failure mode shown in the paper's Fig. 3 second topology.
+    """
+
+    name: str = dataclasses.field(default="ternary", init=False)
+
+    def __call__(self, key, z):
+        scale = jnp.max(jnp.abs(z))
+        prob = jnp.where(scale > 0, jnp.abs(z) / jnp.maximum(scale, 1e-30), 0.0)
+        b = jax.random.bernoulli(key, prob)
+        return (scale * jnp.sign(z) * b).astype(z.dtype)
+
+    def snr_lower_bound(self, d):
+        return 0.0  # no guarantee
+
+    def expected_bits(self, z):
+        d = z.size
+        return jnp.asarray(FLOAT_BITS + TERNARY_BITS * (d - 1), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# blocked ternary — TPU wire-format adaptation (DESIGN.md §2.2)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockedTernary(Compressor):
+    """Ternary with per-tile anchors (tile = ``block`` elements).
+
+    Noise sum_i |z_i|(a_tile(i) - |z_i|) <= global-anchor ternary noise, so
+    SNR is strictly better, at ~2 bits/elt + one f32 scale per tile.  This is
+    the wire format the Pallas kernels implement (kernels/ternary.py).
+    """
+
+    block: int = 512
+    name: str = dataclasses.field(default="blocked_ternary", init=False)
+
+    def __call__(self, key, z):
+        d = z.shape[-1]
+        pad = (-d) % self.block
+        zp = jnp.pad(z, (0, pad))
+        tiles = zp.reshape(-1, self.block)
+        scale = jnp.max(jnp.abs(tiles), axis=-1, keepdims=True)
+        prob = jnp.where(scale > 0, jnp.abs(tiles) / jnp.maximum(scale, 1e-30), 0.0)
+        b = jax.random.bernoulli(key, prob)
+        out = (scale * jnp.sign(tiles) * b).reshape(-1)[:d]
+        return out.astype(z.dtype)
+
+    def snr_lower_bound(self, d):
+        return 0.0  # data dependent (better than Ternary, still no hard bound)
+
+    def expected_bits(self, z):
+        d = z.size
+        n_tiles = -(-d // self.block)
+        return jnp.asarray(FLOAT_BITS * n_tiles + TERNARY_BITS * d, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# low-precision stochastic quantizer (QSGD-style) — used by QDGD / ADC-DGD
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LowPrecision(Compressor):
+    """Unbiased stochastic uniform quantization to ``2**bits - 1`` levels of
+    ||z||_inf (int8 by default) — the 'low-precision representation' the
+    paper uses for ADC-DGD / QDGD in §V."""
+
+    bits: int = 8
+    name: str = dataclasses.field(default="lowprec", init=False)
+
+    def __call__(self, key, z):
+        levels = 2 ** (self.bits - 1) - 1  # signed range
+        scale = jnp.max(jnp.abs(z))
+        s = jnp.where(scale > 0, levels / jnp.maximum(scale, 1e-30), 0.0)
+        scaled = z * s
+        low = jnp.floor(scaled)
+        frac = scaled - low
+        up = jax.random.bernoulli(key, frac)
+        q = low + up
+        return jnp.where(scale > 0, q / jnp.maximum(s, 1e-30), 0.0).astype(z.dtype)
+
+    def snr_lower_bound(self, d):
+        # per-elt noise <= scale^2/(4 levels^2); ||z||^2 >= scale^2
+        # => eta >= 4 levels^2 / d  (worst case all mass in one coord)
+        levels = 2 ** (self.bits - 1) - 1
+        return 4.0 * levels**2 / d
+
+    def expected_bits(self, z):
+        return jnp.asarray(FLOAT_BITS + self.bits * z.size, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# hybrid compressor (paper §IV) — jittable chain variant
+# --------------------------------------------------------------------------
+def _chain_anchor_assign(m_sorted: jax.Array, C: float):
+    """Greedy anchor chain over descending magnitudes ``m_sorted``.
+
+    Element j can be ternary-coded w.r.t. anchor a iff (12):
+        |z_j| (a - |z_j|) < z_j^2 / C  <=>  |z_j| > a / (1 + 1/C),
+    so a greedy top-down pass makes every element not covered by the current
+    anchor a new anchor.  Returns (anchor_value per elt, is_anchor mask,
+    group_id per elt) in sorted order.
+    """
+    ratio = 1.0 / (1.0 + 1.0 / C)
+
+    def body(a, m):
+        new_anchor = (a < 0) | (m <= a * ratio)
+        a_new = jnp.where(new_anchor, m, a)
+        return a_new, (a_new, new_anchor)
+
+    _, (anchors, is_anchor) = jax.lax.scan(body, jnp.float32(-1.0), m_sorted)
+    group_id = jnp.cumsum(is_anchor.astype(jnp.int32)) - 1
+    return anchors, is_anchor, group_id
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridChain(Compressor):
+    """Hybrid sparsifier+ternary compressor with controllable SNR >= eta
+    (paper §IV), vectorized 'anchor chain' greedy (jittable, O(d log d)).
+
+    Elements are sorted by magnitude; anchor elements are sent exactly
+    (32-bit), their groups ternary-coded (2-bit, condition (12) holds by
+    construction => group noise < ||group||^2 / eta); groups where ternary
+    coding is not cost-effective (paper Alg. 2 step 4) are sparsified with
+    p = eta/(1+eta) (=> sparsifier SNR = p/(1-p) = eta).  Overall SNR >= eta.
+    """
+
+    eta: float = 1.0
+    name: str = dataclasses.field(default="hybrid", init=False)
+
+    def _plan(self, z):
+        """Returns (ternary_mask, anchor_val, anchor_mask, n_groups) aligned
+        with the ORIGINAL element order."""
+        d = z.shape[-1]
+        m = jnp.abs(z).astype(jnp.float32)
+        order = jnp.argsort(-m)  # descending
+        m_sorted = m[order]
+        anchors, is_anchor, gid = _chain_anchor_assign(m_sorted, self.eta)
+        # group sizes; decide ternary vs sparsifier per group (Alg. 2 step 4)
+        sizes = jax.ops.segment_sum(jnp.ones_like(gid, jnp.float32), gid, d)
+        p = self.eta / (1.0 + self.eta)
+        tern_cost_g = FLOAT_BITS + TERNARY_BITS * (sizes - 1.0)
+        sparse_cost_g = (FLOAT_BITS * p + ZERO_BITS * (1 - p)) * sizes
+        tern_better = tern_cost_g < sparse_cost_g
+        elt_tern = tern_better[gid]
+        # zero elements can never be anchors usefully; sparsify them (cost 0 noise)
+        elt_tern = elt_tern & (m_sorted > 0)
+        inv = jnp.argsort(order)
+        # empty group slots have sparse_cost 0 < tern_cost => excluded here
+        n_groups = jnp.sum(tern_better.astype(jnp.int32))
+        return (elt_tern[inv], anchors[inv], (is_anchor & elt_tern)[inv], n_groups)
+
+    def __call__(self, key, z):
+        zf = z.astype(jnp.float32)
+        tern_mask, anchor, anchor_mask, _ = self._plan(zf)
+        k_t, k_s = jax.random.split(key)
+        m = jnp.abs(zf)
+        prob = jnp.where(anchor > 0, m / jnp.maximum(anchor, 1e-30), 0.0)
+        b = jax.random.bernoulli(k_t, jnp.clip(prob, 0.0, 1.0))
+        tern_val = anchor * jnp.sign(zf) * b
+        tern_val = jnp.where(anchor_mask, zf, tern_val)  # anchors sent exactly
+        p = self.eta / (1.0 + self.eta)
+        mask = jax.random.bernoulli(k_s, p, zf.shape)
+        sparse_val = jnp.where(mask, zf / p, 0.0)
+        return jnp.where(tern_mask, tern_val, sparse_val).astype(z.dtype)
+
+    def snr_lower_bound(self, d):
+        return self.eta
+
+    def expected_bits(self, z):
+        zf = z.astype(jnp.float32)
+        tern_mask, _, anchor_mask, n_groups = self._plan(zf)
+        n_tern = jnp.sum(tern_mask & ~anchor_mask)
+        n_anchor = jnp.sum(anchor_mask)
+        n_sparse = zf.size - n_tern - n_anchor
+        p = self.eta / (1.0 + self.eta)
+        idx_bits = jnp.ceil(jnp.log2(jnp.maximum(n_groups, 1) + 1.0))
+        return (FLOAT_BITS * n_anchor
+                + (TERNARY_BITS + idx_bits) * n_tern
+                + (FLOAT_BITS * p + ZERO_BITS * (1 - p)) * n_sparse).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# blocked hybrid — TPU wire-format (ternary plane + per-tile top-j floats)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockedHybrid(Compressor):
+    """Fixed-rate hybrid: per-tile ternary plane + exact float plane for the
+    per-tile top-j outliers (DESIGN.md §2.2).  The per-tile maxima play the
+    role of Alg. 2 anchors at tile granularity; sending the top-j exactly
+    removes the dominant noise contributors, giving a controllable SNR via
+    (block, top_j).  Static shapes => usable on the wire (kernels/hybrid.py).
+    """
+
+    block: int = 512
+    top_j: int = 4
+    name: str = dataclasses.field(default="blocked_hybrid", init=False)
+
+    def __call__(self, key, z):
+        d = z.shape[-1]
+        pad = (-d) % self.block
+        zp = jnp.pad(z.astype(jnp.float32), (0, pad))
+        tiles = zp.reshape(-1, self.block)
+        m = jnp.abs(tiles)
+        # top-j exact per tile
+        thresh = -jnp.sort(-m, axis=-1)[:, self.top_j - 1:self.top_j]
+        exact_mask = m >= jnp.maximum(thresh, 1e-30)
+        # keep exactly <= top_j per tile even under ties: use rank
+        rank = jnp.argsort(jnp.argsort(-m, axis=-1), axis=-1)
+        exact_mask = exact_mask & (rank < self.top_j)
+        scale = jnp.max(jnp.where(exact_mask, 0.0, m), axis=-1, keepdims=True)
+        prob = jnp.where(scale > 0, m / jnp.maximum(scale, 1e-30), 0.0)
+        b = jax.random.bernoulli(key, jnp.clip(prob, 0.0, 1.0))
+        tern = scale * jnp.sign(tiles) * b
+        out = jnp.where(exact_mask, tiles, tern)
+        return out.reshape(-1)[:d].astype(z.dtype)
+
+    def snr_lower_bound(self, d):
+        return 0.0  # data dependent; controlled empirically via (block, top_j)
+
+    def expected_bits(self, z):
+        d = z.size
+        n_tiles = -(-d // self.block)
+        idx_bits = int(np.ceil(np.log2(self.block)))
+        return jnp.asarray(
+            n_tiles * (FLOAT_BITS  # scale
+                       + self.top_j * (FLOAT_BITS + idx_bits))
+            + TERNARY_BITS * d, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# pytree application + registry
+# --------------------------------------------------------------------------
+def tree_compress(comp: Compressor, key: jax.Array, tree):
+    """Apply ``comp`` leaf-wise to a pytree (independent keys per leaf)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [comp(k, leaf.reshape(-1)).reshape(leaf.shape)
+           for k, leaf in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_expected_bits(comp: Compressor, tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return sum(comp.expected_bits(leaf.reshape(-1)) for leaf in leaves)
+
+
+_REGISTRY = {
+    "identity": Identity,
+    "sparsifier": Sparsifier,
+    "ternary": Ternary,
+    "blocked_ternary": BlockedTernary,
+    "lowprec": LowPrecision,
+    "hybrid": HybridChain,
+    "blocked_hybrid": BlockedHybrid,
+}
+
+
+def make_compressor(spec: str) -> Compressor:
+    """Factory from config strings like ``"sparsifier:p=0.8"`` or
+    ``"blocked_hybrid:block=512,top_j=4"``."""
+    name, _, argstr = spec.partition(":")
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    kwargs = {}
+    if argstr:
+        field_types = {f.name: str(f.type) for f in dataclasses.fields(_REGISTRY[name])}
+        for kv in argstr.split(","):
+            k, v = kv.split("=")
+            t = field_types.get(k, "float")
+            kwargs[k] = int(v) if "int" in t else float(v)
+    return _REGISTRY[name](**kwargs)

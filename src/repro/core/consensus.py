@@ -1,0 +1,238 @@
+"""Consensus matrices, spectra, and the paper's convergence thresholds (§III).
+
+A consensus matrix W is doubly stochastic, symmetric, with the network's
+sparsity pattern; its spectrum lies in (-1, 1] with lambda_1 = 1.  The paper's
+key quantities:
+
+  * lambda_N  — smallest eigenvalue; the SNR threshold is
+                eta_min = (1 - lambda_N) / (1 + lambda_N)      (Theorem 1)
+  * beta      — max(|lambda_2|, |lambda_N|), governs consensus mixing (Thm 2/3)
+  * alpha_max — (lambda_N (eta+1) + eta - 1) / (L (1+eta))     (Theorem 1)
+
+`validate_config` enforces these at launch time: a compressor whose guaranteed
+SNR is below eta_min is rejected (the Fig. 1 / Fig. 3 divergence mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+
+# --------------------------------------------------------------------------
+# constructors
+# --------------------------------------------------------------------------
+def metropolis_weights(adj: Array, lazy: float = 0.0) -> Array:
+    """Metropolis–Hastings weights for an undirected graph: symmetric, doubly
+    stochastic for ANY connected graph — the building block for elastic
+    membership changes (DESIGN.md §6).  ``lazy`` mixes in the identity to
+    lift lambda_N: W <- (1-lazy) W + lazy I."""
+    adj = np.asarray(adj, dtype=bool)
+    assert adj.shape[0] == adj.shape[1]
+    np.fill_diagonal(adj, False)
+    assert (adj == adj.T).all(), "graph must be undirected"
+    n = adj.shape[0]
+    deg = adj.sum(1)
+    W = np.zeros((n, n))
+    for i in range(n):
+        for j in range(i + 1, n):
+            if adj[i, j]:
+                W[i, j] = W[j, i] = 1.0 / (1 + max(deg[i], deg[j]))
+    np.fill_diagonal(W, 1.0 - W.sum(1))
+    if lazy:
+        W = (1 - lazy) * W + lazy * np.eye(n)
+    return W
+
+
+def ring_adjacency(n: int, hops: int = 1) -> Array:
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        for h in range(1, hops + 1):
+            adj[i, (i + h) % n] = adj[(i + h) % n, i] = True
+    return adj
+
+
+def torus_adjacency(a: int, b: int) -> Array:
+    """a x b torus; node id = i*b + j. Wrap links along both dims (for b==2 or
+    a==2 the wrap link duplicates the neighbor link; handled by bool adj)."""
+    n = a * b
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(a):
+        for j in range(b):
+            u = i * b + j
+            for v in (((i + 1) % a) * b + j, i * b + (j + 1) % b):
+                if u != v:
+                    adj[u, v] = adj[v, u] = True
+    return adj
+
+
+def complete_adjacency(n: int) -> Array:
+    adj = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def star_adjacency(n: int) -> Array:
+    adj = np.zeros((n, n), dtype=bool)
+    adj[0, 1:] = adj[1:, 0] = True
+    return adj
+
+
+def erdos_adjacency(n: int, p: float, seed: int = 0) -> Array:
+    rng = np.random.default_rng(seed)
+    while True:
+        adj = np.triu(rng.random((n, n)) < p, 1)
+        adj = adj | adj.T
+        if is_connected(adj):
+            return adj
+
+
+def is_connected(adj: Array) -> bool:
+    n = adj.shape[0]
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        u = frontier.pop()
+        for v in np.nonzero(adj[u])[0]:
+            if v not in seen:
+                seen.add(int(v))
+                frontier.append(int(v))
+    return len(seen) == n
+
+
+def ring_consensus(n: int, self_weight: Optional[float] = None) -> Array:
+    """Circle network consensus matrix: self weight w0, neighbors (1-w0)/2."""
+    w0 = 1.0 / 3.0 if self_weight is None else self_weight
+    wn = (1.0 - w0) / 2.0
+    W = np.eye(n) * w0
+    for i in range(n):
+        W[i, (i + 1) % n] += wn
+        W[i, (i - 1) % n] += wn
+    return W
+
+
+# the paper's two 5-node matrices (§V-1)
+W1_PAPER = np.array([
+    [1/5, 2/5, 0, 0, 2/5],
+    [2/5, 1/5, 2/5, 0, 0],
+    [0, 2/5, 1/5, 2/5, 0],
+    [0, 0, 2/5, 1/5, 2/5],
+    [2/5, 0, 0, 2/5, 1/5],
+])
+W2_PAPER = np.array([
+    [1/2, 1/4, 0, 0, 1/4],
+    [1/4, 1/2, 1/4, 0, 0],
+    [0, 1/4, 1/2, 1/4, 0],
+    [0, 0, 1/4, 1/2, 1/4],
+    [1/4, 0, 0, 1/4, 1/2],
+])
+
+
+def fig3_topology_a() -> Array:
+    """10-node sparse graph (chain + few chords), representative of the
+    paper's Fig. 3(a) regime (beta close to 1, lambda_N > 0)."""
+    adj = np.zeros((10, 10), dtype=bool)
+    edges = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 8),
+             (8, 9), (0, 9), (2, 7)]
+    for u, v in edges:
+        adj[u, v] = adj[v, u] = True
+    return metropolis_weights(adj, lazy=0.25)
+
+
+def fig3_topology_b() -> Array:
+    """10-node denser graph, representative of Fig. 3(d) (smaller beta,
+    negative lambda_N => larger SNR threshold)."""
+    adj = np.zeros((10, 10), dtype=bool)
+    edges = [(0, 1), (0, 2), (0, 5), (1, 3), (1, 6), (2, 4), (2, 7), (3, 5),
+             (3, 8), (4, 6), (4, 9), (5, 7), (6, 8), (7, 9), (8, 9), (0, 9),
+             (1, 8), (2, 5)]
+    for u, v in edges:
+        adj[u, v] = adj[v, u] = True
+    return metropolis_weights(adj)
+
+
+# --------------------------------------------------------------------------
+# spectra & thresholds
+# --------------------------------------------------------------------------
+def validate_consensus_matrix(W: Array, adj: Optional[Array] = None,
+                              atol: float = 1e-9) -> None:
+    W = np.asarray(W)
+    n = W.shape[0]
+    assert W.shape == (n, n), "square"
+    assert np.allclose(W, W.T, atol=atol), "symmetric"
+    assert np.allclose(W.sum(0), 1.0, atol=atol), "column stochastic"
+    assert np.allclose(W.sum(1), 1.0, atol=atol), "row stochastic"
+    lam = np.linalg.eigvalsh(W)
+    assert lam[-1] <= 1.0 + 1e-8 and lam[0] > -1.0, "spectrum in (-1, 1]"
+    if adj is not None:
+        off = ~np.eye(n, dtype=bool)
+        assert ((np.abs(W) > atol) & off == adj & off).all(), "sparsity pattern"
+
+
+@dataclasses.dataclass(frozen=True)
+class Spectrum:
+    lambda_2: float
+    lambda_n: float
+    beta: float
+
+    @property
+    def snr_threshold(self) -> float:
+        """eta_min = (1 - lambda_N)/(1 + lambda_N) (Theorem 1)."""
+        return (1.0 - self.lambda_n) / (1.0 + self.lambda_n)
+
+    def max_step_size(self, eta: float, L: float) -> float:
+        """alpha_max = (lambda_N(eta+1) + eta - 1) / (L (1+eta)) (Theorem 1)."""
+        return (self.lambda_n * (eta + 1) + eta - 1) / (L * (1 + eta))
+
+
+def spectrum(W: Array) -> Spectrum:
+    lam = np.sort(np.linalg.eigvalsh(np.asarray(W)))
+    lam_n, lam_2 = float(lam[0]), float(lam[-2])
+    return Spectrum(lambda_2=lam_2, lambda_n=lam_n,
+                    beta=max(abs(lam_2), abs(lam_n)))
+
+
+def sparsifier_p_threshold(W: Array) -> float:
+    """Minimum Bernoulli keep-probability p for the Example-1 sparsifier:
+    p/(1-p) > (1-lambda_N)/(1+lambda_N)  =>  p > (1-lambda_N)/2."""
+    s = spectrum(W)
+    return (1.0 - s.lambda_n) / 2.0
+
+
+def validate_compressor_for_topology(W: Array, snr_lb: float,
+                                     strict: bool = True) -> Tuple[bool, str]:
+    """Launch-time check (DESIGN.md §2.1): compressor guaranteed SNR must
+    clear the Theorem-1 threshold."""
+    s = spectrum(W)
+    ok = snr_lb > s.snr_threshold
+    msg = (f"compressor SNR lower bound {snr_lb:.4g} vs threshold "
+           f"{s.snr_threshold:.4g} (lambda_N={s.lambda_n:.4g})")
+    if strict and not ok:
+        raise ValueError("DC-DGD convergence condition violated: " + msg)
+    return ok, msg
+
+
+# --------------------------------------------------------------------------
+# circulant decomposition — what the gossip backend executes with ppermute
+# --------------------------------------------------------------------------
+def circulant_offsets(W: Array, atol: float = 1e-12):
+    """If W is circulant (ring/symmetric-circle graphs), return
+    [(offset, weight)] s.t. (W x)_i = sum_k w_k x_{(i+off_k) mod n}.
+    Raises if W is not circulant — the gossip backend then falls back to the
+    dense-stacked formulation."""
+    W = np.asarray(W)
+    n = W.shape[0]
+    row0 = W[0]
+    for i in range(n):
+        if not np.allclose(W[i], np.roll(row0, i), atol=atol):
+            raise ValueError("W is not circulant")
+    return [(int(k), float(row0[k])) for k in range(n) if abs(row0[k]) > atol]
+
+
+def torus_consensus(a: int, b: int, lazy: float = 0.0) -> Array:
+    """Metropolis weights on an a x b torus — the multi-pod (pod, data)
+    consensus graph used by the production mesh."""
+    return metropolis_weights(torus_adjacency(a, b), lazy=lazy)

@@ -1,0 +1,172 @@
+"""DC-DGD — Differential-Coded Compressed Decentralized Gradient Descent
+(paper Algorithm 1), stacked-node backend.
+
+All node states are pytrees whose leaves carry a leading node dimension
+``(n_nodes, ...)``.  On a device mesh, that leading dim is sharded over the
+consensus axis so each device group holds exactly one node's copy (see
+``repro.train.trainer`` for the mesh/gossip integration; this module is
+backend-agnostic math, jit/vmap-friendly, and used directly by the paper
+benchmarks and tests).
+
+Update (paper eqs. (3)-(6)):
+    x_t     = x_{t-1} + C(d_t)                      inexact local update
+    y_t     = y_{t-1} + (W (x) I) C(d_t)            gossip aggregation
+    z_{t+1} = y_t - alpha_t grad f(x_t)             local gradient step
+    d_{t+1} = z_{t+1} - x_t                         next differential
+
+Key identity (§III-B): with y_0 = 0, y_t = (W (x) I) x_t, and
+d_{t+1} = -grad L_alpha(x_t) where L_alpha is the Lyapunov function (7) —
+the compression-noise power is proportional to ||grad L_alpha||^2 and
+self-anneals (the "self-compression-noise-power-reduction effect").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compressors import Compressor, Identity
+from . import consensus as cons
+
+PyTree = Any
+GradFn = Callable[[PyTree], PyTree]  # stacked (n, ...) -> stacked (n, ...)
+
+
+class DCDGDState(NamedTuple):
+    x: PyTree   # (n, ...) inexact local copies
+    y: PyTree   # (n, ...) gossip aggregates
+    d: PyTree   # (n, ...) differential to transmit THIS step
+    t: jax.Array  # iteration counter (starts at 1)
+    key: jax.Array
+
+
+def _tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def _node_compress(comp: Compressor, key: jax.Array, tree: PyTree) -> PyTree:
+    """Compress each node's differential independently, leaf-wise.
+
+    Every (node, leaf) pair gets an independent PRNG stream; the compressor
+    itself operates on flat vectors.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        n = leaf.shape[0]
+        node_keys = jax.random.split(k, n)
+        flat = leaf.reshape(n, -1)
+        comp_fn = jax.vmap(lambda kk, v: comp(kk, v))
+        out.append(comp_fn(node_keys, flat).reshape(leaf.shape))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _mix(W: jax.Array, tree: PyTree) -> PyTree:
+    """(W (x) I) applied to a node-stacked pytree."""
+    def mix_leaf(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return (W.astype(flat.dtype) @ flat).reshape(leaf.shape)
+    return jax.tree.map(mix_leaf, tree)
+
+
+def _tree_bits(comp: Compressor, tree: PyTree) -> jax.Array:
+    total = jnp.float32(0.0)
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        total = total + jnp.sum(jax.vmap(comp.expected_bits)(flat))
+    return total
+
+
+def init(grad_fn: GradFn, params_like: PyTree, alpha_1: float,
+         key: jax.Array) -> DCDGDState:
+    """Paper initialization: x_0 = y_0 = z_0 = 0; z_1 = -alpha_1 grad f(0);
+    d_1 = z_1 - x_0.  ``params_like`` provides shapes/dtypes (n, ...)."""
+    zeros = _tree_zeros_like(params_like)
+    g0 = grad_fn(zeros)
+    d1 = jax.tree.map(lambda g: -alpha_1 * g, g0)
+    return DCDGDState(x=zeros, y=zeros, d=d1, t=jnp.int32(1), key=key)
+
+
+def step(state: DCDGDState, W: jax.Array, grad_fn: GradFn, alpha_t: jax.Array,
+         comp: Compressor, track_bits: bool = False
+         ) -> Tuple[DCDGDState, dict]:
+    """One DC-DGD iteration (paper steps 3a-3d). Jittable with ``comp`` and
+    ``track_bits`` static."""
+    key, sub = jax.random.split(state.key)
+    c = _node_compress(comp, sub, state.d)
+    x_new = jax.tree.map(jnp.add, state.x, c)
+    y_new = jax.tree.map(jnp.add, state.y, _mix(W, c))
+    g = grad_fn(x_new)
+    z_next = jax.tree.map(lambda y, gg: y - alpha_t * gg, y_new, g)
+    d_next = jax.tree.map(jnp.subtract, z_next, x_new)
+    aux = {}
+    if track_bits:
+        aux["bits"] = _tree_bits(comp, state.d)
+        # compression noise power ||C(d)-d||^2 — the self-reduction quantity
+        aux["noise_power"] = sum(
+            jnp.sum((a - b) ** 2) for a, b in
+            zip(jax.tree.leaves(c), jax.tree.leaves(state.d)))
+        aux["differential_power"] = sum(
+            jnp.sum(b ** 2) for b in jax.tree.leaves(state.d))
+    return DCDGDState(x=x_new, y=y_new, d=d_next, t=state.t + 1, key=key), aux
+
+
+def run(problem, W: np.ndarray, comp: Compressor, alpha: float | Callable,
+        n_steps: int, key: jax.Array, track_bits: bool = True,
+        validate: bool = False) -> dict:
+    """Convenience driver: runs DC-DGD for ``n_steps`` on ``problem`` (see
+    core.problems.Problem) and returns per-step metric arrays.  Used by the
+    paper benchmarks (Figs. 1 & 3) and integration tests."""
+    if validate:
+        cons.validate_compressor_for_topology(
+            W, comp.snr_lower_bound(problem.dim))
+    Wj = jnp.asarray(W, jnp.float32)
+    n = W.shape[0]
+    params_like = jnp.zeros((n, problem.dim), jnp.float32)
+    alpha_fn = alpha if callable(alpha) else (lambda t: alpha)
+    key, ik = jax.random.split(key)
+    state = init(problem.grad, params_like, float(alpha_fn(1)), ik)
+
+    @partial(jax.jit, static_argnums=())
+    def one(state):
+        a_t = alpha_fn(state.t)
+        new_state, aux = step(state, Wj, problem.grad, a_t, comp,
+                              track_bits=track_bits)
+        xbar = jnp.mean(new_state.x, axis=0)
+        m = {
+            "f_bar": problem.global_f(xbar),
+            "grad_norm_sq": jnp.sum(problem.global_grad(xbar) ** 2),
+            "consensus_err": jnp.sum((new_state.x - xbar[None, :]) ** 2),
+        }
+        m.update(aux)
+        return new_state, m
+
+    history = []
+    for _ in range(n_steps):
+        state, m = one(state)
+        history.append(m)
+    out = {k: np.array([float(h[k]) for h in history]) for k in history[0]}
+    out["x_final"] = np.asarray(state.x)
+    if track_bits:
+        out["cum_bits"] = np.cumsum(out["bits"])
+    return out
+
+
+def corollary1_step_size(f0_minus_fstar: float, beta: float, D: float, N: int,
+                         L: float, eta: float, lambda_n: float):
+    """Cor. 1 diminishing schedule: alpha_t = (C2/t)^{1/3} clipped to the
+    Theorem-1 cap, with C2 = (f(0)-f*) (1-beta)^2 / (D^2 N^2 L)."""
+    C2 = f0_minus_fstar * (1 - beta) ** 2 / (D ** 2 * N ** 2 * L)
+    cap = (lambda_n * (eta + 1) + eta - 1) / (L * (1 + eta))
+
+    def alpha_fn(t):
+        return jnp.minimum((C2 / jnp.maximum(t, 1)) ** (1.0 / 3.0), cap)
+
+    return alpha_fn

@@ -1,0 +1,143 @@
+"""Paper §IV: hybrid compression plan optimization.
+
+Problem (13) chooses the number of ternary anchor groups k and their
+positions to minimize total wire bits; it is bin-packing-equivalent
+(NP-hard).  Algorithm 2 is the paper's greedy heuristic:
+
+  repeat:
+    for every remaining element j: S_j = {k remaining, sorted after j :
+        |z_k| (|z_j| - |z_k|) < z_k^2 / C}           # condition (12)
+    pick the anchor with max |S_j|;
+    commit it as a ternary group iff ternary bits < sparsifier bits for it;
+  sparsify whatever remains.
+
+This module implements Algorithm 2 exactly (host-side numpy — planning is
+data-dependent and variable-length, so it is not jittable; the jittable
+chain variant lives in compressors.HybridChain) plus a brute-force optimal
+planner for small d used by the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .compressors import FLOAT_BITS, TERNARY_BITS, ZERO_BITS
+
+
+@dataclasses.dataclass
+class HybridPlan:
+    """Result of planning on |z| sorted descending."""
+    groups: List[Tuple[int, List[int]]]  # (anchor sorted-index, member sorted-indices incl. anchor)
+    sparse: List[int]                    # sorted-indices using the sparsifier
+    p: float                             # sparsifier keep-probability
+    bits: float                          # objective (13) value
+
+    @property
+    def k(self) -> int:
+        return len(self.groups)
+
+
+def _coverage(m: np.ndarray, j: int, remaining: np.ndarray, C: float) -> np.ndarray:
+    """Indices k in `remaining` coverable by anchor j per condition (12).
+
+    Only elements sorted after the anchor (|z_k| <= |z_j|) are eligible:
+    Bernoulli prob |z_k|/|z_j| must be <= 1.
+    """
+    mk = m[remaining]
+    ok = (mk <= m[j]) & (mk * (m[j] - mk) < mk**2 / C) & (remaining != j)
+    return remaining[ok]
+
+
+def _plan_cost(n_anchors: int, n_tern: int, n_sparse: int, p: float) -> float:
+    """Objective (13) with the paper's §V accounting: 32-bit floats, 2-bit
+    ternary symbols, 1-bit sparsifier zeros, ceil(log2(k+1))-bit group index
+    per ternary-coded element."""
+    idx_bits = math.ceil(math.log2(n_anchors + 1)) if n_anchors else 0
+    return (FLOAT_BITS * n_anchors
+            + (TERNARY_BITS + idx_bits) * n_tern
+            + (FLOAT_BITS * p + ZERO_BITS * (1 - p)) * n_sparse)
+
+
+def greedy_plan(z: np.ndarray, eta: float) -> HybridPlan:
+    """Algorithm 2, verbatim."""
+    z = np.asarray(z, np.float64).reshape(-1)
+    d = z.size
+    order = np.argsort(-np.abs(z), kind="stable")
+    m = np.abs(z)[order]  # descending magnitudes, sorted index space
+    p = eta / (1.0 + eta)  # sparsifier SNR = p/(1-p) = eta
+    remaining = np.arange(d)
+    groups: List[Tuple[int, List[int]]] = []
+    while remaining.size:
+        # inner loop (3.1/3.2): anchor maximizing coverage
+        best_j, best_cov = -1, None
+        for j in remaining:
+            cov = _coverage(m, j, remaining, eta)
+            if best_cov is None or cov.size > best_cov.size:
+                best_j, best_cov = int(j), cov
+        s_i = best_cov.size + 1  # group includes the anchor itself
+        tern_cost = FLOAT_BITS + TERNARY_BITS * (s_i - 1)
+        sparse_cost = (FLOAT_BITS * p + ZERO_BITS * (1 - p)) * s_i
+        if tern_cost < sparse_cost:
+            members = [best_j] + [int(k) for k in best_cov]
+            groups.append((best_j, members))
+            keep = np.ones(d, bool)
+            keep[members] = False
+            remaining = remaining[keep[remaining]]
+        else:
+            break
+    sparse = [int(k) for k in remaining]
+    n_tern = sum(len(g[1]) - 1 for g in groups)
+    bits = _plan_cost(len(groups), n_tern, len(sparse), p)
+    return HybridPlan(groups=groups, sparse=sparse, p=p, bits=bits)
+
+
+def brute_force_plan(z: np.ndarray, eta: float, max_d: int = 12) -> HybridPlan:
+    """Exhaustive search over all anchor subsets (sorted-index space) with
+    feasibility per (12) — exponential, for tests only."""
+    z = np.asarray(z, np.float64).reshape(-1)
+    d = z.size
+    assert d <= max_d, "brute force limited to tiny d"
+    m = np.sort(np.abs(z))[::-1]
+    p = eta / (1.0 + eta)
+    best: Optional[HybridPlan] = None
+    for mask in range(1 << d):
+        anchors = [i for i in range(d) if mask >> i & 1]
+        # assign every non-anchor to a feasible anchor if possible (greedy to
+        # the largest feasible anchor); infeasible ones -> sparsifier
+        members = {a: [a] for a in anchors}
+        sparse = []
+        for i in range(d):
+            if i in members:
+                continue
+            placed = False
+            for a in anchors:
+                if m[i] <= m[a] and m[i] * (m[a] - m[i]) < m[i]**2 / eta:
+                    members[a].append(i)
+                    placed = True
+                    break
+            if not placed:
+                sparse.append(i)
+        n_tern = sum(len(v) - 1 for v in members.values())
+        bits = _plan_cost(len(anchors), n_tern, len(sparse), p)
+        plan = HybridPlan(groups=[(a, v) for a, v in members.items()],
+                          sparse=sparse, p=p, bits=bits)
+        if best is None or plan.bits < best.bits:
+            best = plan
+    return best
+
+
+def plan_noise_power(z: np.ndarray, plan: HybridPlan) -> float:
+    """Worst-case expected compression-noise power of a plan; used to verify
+    the effective SNR >= eta in tests."""
+    z = np.asarray(z, np.float64).reshape(-1)
+    m = np.sort(np.abs(z))[::-1]
+    noise = 0.0
+    for a, mem in plan.groups:
+        for i in mem:
+            if i != a:
+                noise += m[i] * (m[a] - m[i])   # ternary noise (Ex. 2 form)
+    noise += (1.0 / plan.p - 1.0) * sum(m[i]**2 for i in plan.sparse)
+    return noise

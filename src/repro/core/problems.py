@@ -1,0 +1,163 @@
+"""Benchmark/test objectives from the paper's §V plus simple fixtures.
+
+A ``Problem`` bundles per-node objectives f_i with stacked gradient/loss
+evaluation.  Shapes: stacked params are (n_nodes, dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    name: str
+    dim: int
+    n_nodes: int
+    node_f: Callable          # (i-batched) f_i(x_i): (n, dim) -> (n,)
+    L: float                  # gradient Lipschitz estimate (global)
+    f_star: Optional[float] = None  # best-known global optimum value
+
+    def stacked_f(self, x):               # sum_i f_i(x_i)
+        return jnp.sum(self.node_f(x))
+
+    @property
+    def grad(self):
+        return jax.grad(self.stacked_f)   # (n, dim) -> (n, dim) per-node grads
+
+    def global_f(self, xbar):             # f(x) = sum_i f_i(x) at a common x
+        return jnp.sum(self.node_f(jnp.broadcast_to(xbar, (self.n_nodes,) + xbar.shape)))
+
+    @property
+    def global_grad(self):
+        return jax.grad(self.global_f)
+
+
+# --------------------------------------------------------------------------
+# §V-1: five-node mixed convex/non-convex objective (14)
+# --------------------------------------------------------------------------
+def paper_objective_5node(dim: int = 5, seed: int = 0) -> Problem:
+    """f_i = log(1 + (a_i^T x + b_i)^2 / 2) for i=1,2 (non-convex);
+    (a_i^T x - b_i)^2 / 2 for i=3,4,5 (convex); a_i, b_i ~ N(0, I)."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((5, dim)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((5,)), jnp.float32)
+
+    def node_f(x):  # x: (5, dim)
+        u = jnp.sum(A * x, axis=-1)
+        f_nc = jnp.log1p((u + b) ** 2 / 2.0)
+        f_c = (u - b) ** 2 / 2.0
+        sel = jnp.arange(5) < 2
+        return jnp.where(sel, f_nc, f_c)
+
+    # L: convex parts have Hessian a a^T (L_i = ||a_i||^2); the log part's
+    # Hessian is bounded by ||a_i||^2 as well (second deriv of log1p(u^2/2) <= 1)
+    L = float(jnp.max(jnp.sum(A * A, axis=-1)))
+    prob = Problem("paper5node", dim, 5, node_f, L)
+    return dataclasses.replace(prob, f_star=_estimate_f_star(prob, seed))
+
+
+# --------------------------------------------------------------------------
+# §V-3: logistic regression with non-convex regularizer on Spambase-like data
+# --------------------------------------------------------------------------
+def spambase_like_data(n: int = 4601, d: int = 57, seed: int = 7):
+    """Offline stand-in for UCI Spambase (container has no network): seeded
+    synthetic with matched size, logistic ground truth, heavy-tailed features
+    (spam word frequencies are heavy-tailed)."""
+    rng = np.random.default_rng(seed)
+    X = np.abs(rng.standard_normal((n, d))) ** 1.5 * rng.choice(
+        [0.0, 1.0], size=(n, d), p=[0.6, 0.4])
+    X = X / (X.std(0, keepdims=True) + 1e-8)
+    w_true = rng.standard_normal(d) * (rng.random(d) < 0.3)
+    logits = X @ w_true + 0.5 * rng.standard_normal(n)
+    y = (rng.random(n) < 1.0 / (1.0 + np.exp(-logits))).astype(np.float32)
+    return X.astype(np.float32), y
+
+
+def logreg_nonconvex(X: np.ndarray, y: np.ndarray, n_nodes: int = 10,
+                     rho: float = 0.1, iid: bool = False, seed: int = 0
+                     ) -> Problem:
+    """Per-node logistic loss + rho * sum_k x_k^2/(1+x_k^2) (paper §V-3).
+
+    ``iid=False`` splits the data sorted by label (the paper's non-identical
+    local objectives setting); nodes get equal-size contiguous shards.
+    """
+    n, d = X.shape
+    order = np.argsort(y, kind="stable") if not iid else \
+        np.random.default_rng(seed).permutation(n)
+    m = n // n_nodes
+    order = order[: m * n_nodes]
+    Xs = jnp.asarray(X[order].reshape(n_nodes, m, d))
+    ys = jnp.asarray(y[order].reshape(n_nodes, m))
+
+    def node_f(x):  # x: (n_nodes, d)
+        logits = jnp.einsum("nmd,nd->nm", Xs, x)
+        # stable BCE with logits
+        ce = jnp.mean(jnp.maximum(logits, 0) - logits * ys
+                      + jnp.log1p(jnp.exp(-jnp.abs(logits))), axis=-1)
+        reg = rho * jnp.sum(x ** 2 / (1.0 + x ** 2), axis=-1)
+        return ce + reg
+
+    # L <= max_i ||X_i||_F'^2/(4 m) + 2 rho (max curvature of x^2/(1+x^2) = 2)
+    L = float(jnp.max(jnp.sum(Xs * Xs, axis=(1, 2)) / (4 * m))) + 2 * rho
+    prob = Problem("spambase_logreg", d, n_nodes, node_f, L)
+    return dataclasses.replace(prob, f_star=_estimate_f_star(prob, seed))
+
+
+# --------------------------------------------------------------------------
+# simple fixtures
+# --------------------------------------------------------------------------
+def quadratic(n_nodes: int = 4, dim: int = 8, seed: int = 3,
+              cond: float = 10.0) -> Problem:
+    """f_i(x) = 0.5 (x-c_i)^T Q_i (x-c_i): strongly convex, closed-form
+    optimum x* = (sum Q_i)^{-1} sum Q_i c_i."""
+    rng = np.random.default_rng(seed)
+    Qs, cs = [], []
+    for _ in range(n_nodes):
+        U, _ = np.linalg.qr(rng.standard_normal((dim, dim)))
+        ev = np.linspace(1.0, cond, dim)
+        Qs.append(U @ np.diag(ev) @ U.T)
+        cs.append(rng.standard_normal(dim))
+    Q = jnp.asarray(np.stack(Qs), jnp.float32)
+    c = jnp.asarray(np.stack(cs), jnp.float32)
+
+    def node_f(x):
+        delta = x - c
+        return 0.5 * jnp.einsum("nd,nde,ne->n", delta, Q, delta)
+
+    Qsum = np.sum(np.stack(Qs), 0)
+    x_star = np.linalg.solve(Qsum, np.einsum("nde,ne->d", np.stack(Qs),
+                                             np.stack(cs)))
+    f_star = float(0.5 * sum((x_star - cs[i]) @ Qs[i] @ (x_star - cs[i])
+                             for i in range(n_nodes)))
+    L = float(max(np.linalg.eigvalsh(Qi)[-1] for Qi in Qs))
+    return Problem("quadratic", dim, n_nodes, node_f, L, f_star=f_star)
+
+
+def _estimate_f_star(prob: Problem, seed: int, steps: int = 4000) -> float:
+    """Cheap centralized Adam run to estimate f* for error plots."""
+    x = jnp.zeros((prob.dim,), jnp.float32)
+    m = jnp.zeros_like(x)
+    v = jnp.zeros_like(x)
+    g_fn = jax.jit(prob.global_grad)
+    f_fn = jax.jit(prob.global_f)
+    best = float("inf")
+
+    @jax.jit
+    def upd(x, m, v, t):
+        g = g_fn(x)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        return x - 0.05 * mh / (jnp.sqrt(vh) + 1e-8), m, v
+
+    for t in range(1, steps + 1):
+        x, m, v = upd(x, m, v, t)
+        if t % 200 == 0:
+            best = min(best, float(f_fn(x)))
+    return min(best, float(f_fn(x)))

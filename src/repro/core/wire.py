@@ -1,0 +1,318 @@
+"""Fixed-shape packed WIRE formats — what the gossip collectives move.
+
+The math-level compressors (:mod:`repro.core.compressors`) return the decoded
+view C(z); on a TPU mesh the bytes that cross ICI/DCN are what matter, and
+XLA collectives need static shapes.  A :class:`WireFormat` therefore encodes
+a tensor into a pytree of packed arrays whose *sizes embody the compression
+ratio* (2-bit ternary codes packed 4-per-uint8, per-tile scales, fixed-count
+outlier planes), so the dry-run's collective-bytes accounting reflects the
+paper's savings 1:1.
+
+Shape discipline: encode/decode operate on the LAST dim only (tiled in
+blocks of ``block``), preserving all leading dims and therefore the leaf's
+tensor-parallel sharding — no resharding reshape is ever introduced on the
+gossip path.  All formats are unbiased (Definition 1) given the PRNG key,
+except ``TopKWire`` (kept as a deliberately biased baseline, flagged).
+
+Formats:
+  DenseWire          raw f32/bf16 (original DGD)
+  Int8Wire           per-tile scale + stochastic int8 (QDGD/ADC-DGD §V)
+  TernaryWire        per-tile ||.||_inf anchor + 2-bit codes (Ex. 2, blocked)
+  HybridWire         ternary plane + per-tile top-j exact outliers (§IV,
+                     static-shape adaptation; anchors = tile maxima)
+  RandKWire          uniform random-k with d/k scaling (unbiased sparsifier
+                     with fixed wire size; SNR = k/(d-k))
+  TopKWire           exact top-k (biased; baseline only)
+
+Pallas kernels in :mod:`repro.kernels` implement TernaryWire/HybridWire
+encode/decode for TPU; :func:`repro.kernels.ref` reuses these as oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Wire = Dict[str, jax.Array]
+
+
+def _pad_last(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    L = x.shape[-1]
+    pad = (-L) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, L
+
+
+def _tiles(x: jax.Array, block: int) -> jax.Array:
+    """(..., L) -> (..., T, block)"""
+    return x.reshape(x.shape[:-1] + (x.shape[-1] // block, block))
+
+
+def _untile(x: jax.Array) -> jax.Array:
+    return x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
+
+
+def pack2bit(codes: jax.Array) -> jax.Array:
+    """codes (..., L) int32 in {0,1,2} -> uint8 (..., L/4), 4 codes/byte
+    (sequential nibble layout; byte j holds elements 4j..4j+3).
+
+    NOTE: the Pallas kernels use a QUARTER-INTERLEAVED layout instead
+    (sublane-strided shift/or, cheap on the VPU); the two codec stacks are
+    self-consistent and never mix wires.  The jnp gossip codec keeps the
+    reshape form — the interleaved form's slice+concat decode costs an
+    extra full-size int32 temp per neighbor (~+2.8 GiB/device measured on
+    qwen3 train, EXPERIMENTS.md §Perf)."""
+    assert codes.shape[-1] % 4 == 0
+    c = codes.reshape(codes.shape[:-1] + (codes.shape[-1] // 4, 4))
+    shifts = jnp.arange(4, dtype=jnp.int32) * 2
+    return jnp.sum(c << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack2bit(packed: jax.Array) -> jax.Array:
+    """uint8 (..., L/4) -> int32 codes (..., L) (sequential layout)."""
+    shifts = jnp.arange(4, dtype=jnp.uint8) * 2
+    c = (packed[..., None] >> shifts) & 0x3
+    return c.reshape(packed.shape[:-1] + (packed.shape[-1] * 4,)).astype(jnp.int32)
+
+
+def code_to_val(codes: jax.Array) -> jax.Array:
+    """{0,1,2} -> {0., +1., -1.}"""
+    return jnp.where(codes == 1, 1.0, jnp.where(codes == 2, -1.0, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    name: str = dataclasses.field(default="base", init=False)
+    unbiased: bool = dataclasses.field(default=True, init=False)
+
+    def encode(self, key: jax.Array, x: jax.Array) -> Wire:
+        raise NotImplementedError
+
+    def decode(self, wire: Wire, shape: Tuple[int, ...], dtype) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_bits(self, shape: Tuple[int, ...]) -> int:
+        """Exact wire size in bits for a tensor of ``shape`` (sum of encoded
+        array sizes) — this is what the collectives move."""
+        raise NotImplementedError
+
+    def snr_lower_bound(self, d: int) -> float:
+        return 0.0
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DenseWire(WireFormat):
+    dtype: str = "float32"
+    name: str = dataclasses.field(default="dense", init=False)
+
+    def encode(self, key, x):
+        return {"v": x.astype(self.dtype)}
+
+    def decode(self, wire, shape, dtype):
+        return wire["v"].astype(dtype)
+
+    def wire_bits(self, shape):
+        return int(np.prod(shape)) * jnp.dtype(self.dtype).itemsize * 8
+
+    def snr_lower_bound(self, d):
+        return float("inf")
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Int8Wire(WireFormat):
+    """Per-tile ||.||_inf scale + unbiased stochastic int8 (127 levels)."""
+    block: int = 256
+    name: str = dataclasses.field(default="int8", init=False)
+
+    def encode(self, key, x):
+        xp, L = _pad_last(x.astype(jnp.float32), self.block)
+        t = _tiles(xp, self.block)
+        scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+        s = jnp.where(scale > 0, 127.0 / jnp.maximum(scale, 1e-30), 0.0)
+        scaled = t * s
+        low = jnp.floor(scaled)
+        up = jax.random.bernoulli(key, scaled - low)
+        q = jnp.clip(low + up, -127, 127).astype(jnp.int8)
+        return {"q": _untile(q), "scale": scale[..., 0]}
+
+    def decode(self, wire, shape, dtype):
+        t = _tiles(wire["q"].astype(jnp.float32), self.block)
+        out = t * (wire["scale"][..., None] / 127.0)
+        return _untile(out)[..., : shape[-1]].astype(dtype)
+
+    def wire_bits(self, shape):
+        L = shape[-1]
+        lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        Lp = -(-L // self.block) * self.block
+        return lead * (Lp * 8 + (Lp // self.block) * 32)
+
+    def snr_lower_bound(self, d):
+        # worst case: all mass on one coordinate of a tile -> per-elt noise
+        # <= (scale/254)^2 over <= block elements, ||z||^2 >= scale^2
+        return 4.0 * 127.0**2 / self.block
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TernaryWire(WireFormat):
+    """Blocked ternary (Ex. 2 with per-tile anchors): 2-bit codes + one f32
+    scale per tile (~2.06 bits/elt at block=512)."""
+    block: int = 512
+    name: str = dataclasses.field(default="ternary", init=False)
+
+    def encode(self, key, x):
+        xp, L = _pad_last(x.astype(jnp.float32), self.block)
+        t = _tiles(xp, self.block)
+        scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+        prob = jnp.where(scale > 0, jnp.abs(t) / jnp.maximum(scale, 1e-30), 0.0)
+        b = jax.random.bernoulli(key, prob)
+        codes = jnp.where(b, jnp.where(t >= 0, 1, 2), 0).astype(jnp.int32)
+        return {"codes": pack2bit(_untile(codes)), "scale": scale[..., 0]}
+
+    def decode(self, wire, shape, dtype):
+        codes = _tiles(unpack2bit(wire["codes"]), self.block)
+        vals = code_to_val(codes) * wire["scale"][..., None]
+        return _untile(vals)[..., : shape[-1]].astype(dtype)
+
+    def wire_bits(self, shape):
+        L = shape[-1]
+        lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        Lp = -(-L // self.block) * self.block
+        return lead * (Lp * 2 + (Lp // self.block) * 32)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HybridWire(WireFormat):
+    """Static-shape hybrid (§IV adaptation): per tile, the top-j magnitudes
+    are sent exactly (f32 value + int16 index) and the remainder is
+    ternary-coded against the post-outlier tile max.  Tile maxima play the
+    role of Algorithm 2's anchors; (block, top_j) set the SNR/rate trade-off
+    (chosen by core.hybrid_greedy.blocked_plan for a target eta)."""
+    block: int = 512
+    top_j: int = 4
+    name: str = dataclasses.field(default="hybrid", init=False)
+
+    def encode(self, key, x):
+        xp, L = _pad_last(x.astype(jnp.float32), self.block)
+        t = _tiles(xp, self.block)
+        m = jnp.abs(t)
+        _, idx = jax.lax.top_k(m, self.top_j)                   # (..., T, j)
+        outv = jnp.take_along_axis(t, idx, axis=-1)
+        mask = jnp.zeros_like(t, bool)
+        mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
+        rest = jnp.where(mask, 0.0, t)
+        scale = jnp.max(jnp.abs(rest), axis=-1, keepdims=True)
+        prob = jnp.where(scale > 0, jnp.abs(rest) / jnp.maximum(scale, 1e-30), 0.0)
+        b = jax.random.bernoulli(key, prob)
+        codes = jnp.where(b & ~mask, jnp.where(rest >= 0, 1, 2), 0).astype(jnp.int32)
+        return {"codes": pack2bit(_untile(codes)), "scale": scale[..., 0],
+                "out_val": outv, "out_idx": idx.astype(jnp.int16)}
+
+    def decode(self, wire, shape, dtype):
+        codes = _tiles(unpack2bit(wire["codes"]), self.block)
+        vals = code_to_val(codes) * wire["scale"][..., None]
+        vals = jnp.put_along_axis(vals, wire["out_idx"].astype(jnp.int32),
+                                  wire["out_val"], axis=-1, inplace=False)
+        return _untile(vals)[..., : shape[-1]].astype(dtype)
+
+    def wire_bits(self, shape):
+        L = shape[-1]
+        lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        Lp = -(-L // self.block) * self.block
+        T = Lp // self.block
+        return lead * (Lp * 2 + T * 32 + T * self.top_j * (32 + 16))
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RandKWire(WireFormat):
+    """Uniform random-k per tile with (block/k) scaling: unbiased, fixed wire
+    size; SNR >= k/(block-k) (the Ex.-1 sparsifier with p = k/block and
+    deterministic count — noise <= (1/p - 1)||z||^2)."""
+    block: int = 512
+    k: int = 128
+    name: str = dataclasses.field(default="randk", init=False)
+
+    def encode(self, key, x):
+        xp, L = _pad_last(x.astype(jnp.float32), self.block)
+        t = _tiles(xp, self.block)
+        T = t.shape[-2]
+        # independent index sample per tile: permute via random values argsort
+        r = jax.random.uniform(key, t.shape)
+        idx = jnp.argsort(r, axis=-1)[..., : self.k]
+        vals = jnp.take_along_axis(t, idx, axis=-1) * (self.block / self.k)
+        return {"val": vals, "idx": idx.astype(jnp.int16)}
+
+    def decode(self, wire, shape, dtype):
+        idx = wire["idx"].astype(jnp.int32)
+        lead_T = wire["val"].shape[:-1]
+        out = jnp.zeros(lead_T + (self.block,), jnp.float32)
+        out = jnp.put_along_axis(out, idx, wire["val"], axis=-1, inplace=False)
+        return _untile(out)[..., : shape[-1]].astype(dtype)
+
+    def wire_bits(self, shape):
+        L = shape[-1]
+        lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        T = -(-L // self.block)
+        return lead * T * self.k * (32 + 16)
+
+    def snr_lower_bound(self, d):
+        return self.k / max(self.block - self.k, 1)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TopKWire(WireFormat):
+    """Exact top-k per tile.  BIASED (no unbiasedness correction) — kept as a
+    baseline to show why Definition 1 matters; rejected by the config
+    validator unless --unsafe."""
+    block: int = 512
+    k: int = 128
+    name: str = dataclasses.field(default="topk", init=False)
+    unbiased: bool = dataclasses.field(default=False, init=False)
+
+    def encode(self, key, x):
+        xp, L = _pad_last(x.astype(jnp.float32), self.block)
+        t = _tiles(xp, self.block)
+        _, idx = jax.lax.top_k(jnp.abs(t), self.k)
+        vals = jnp.take_along_axis(t, idx, axis=-1)
+        return {"val": vals, "idx": idx.astype(jnp.int16)}
+
+    decode = RandKWire.decode
+    wire_bits = RandKWire.wire_bits
+
+
+# ---------------------------------------------------------------------------
+_WIRES = {
+    "dense": DenseWire,
+    "dense_bf16": lambda **kw: DenseWire(dtype="bfloat16", **kw),
+    "int8": Int8Wire,
+    "ternary": TernaryWire,
+    "hybrid": HybridWire,
+    "randk": RandKWire,
+    "topk": TopKWire,
+}
+
+
+def make_wire(spec: str) -> WireFormat:
+    """'ternary:block=512' / 'hybrid:block=512,top_j=4' / 'randk:k=64' ..."""
+    name, _, argstr = spec.partition(":")
+    if name not in _WIRES:
+        raise ValueError(f"unknown wire format {spec!r}; have {sorted(_WIRES)}")
+    kwargs = {}
+    if argstr:
+        for kv in argstr.split(","):
+            k, v = kv.split("=")
+            kwargs[k] = v if k == "dtype" else int(v)
+    return _WIRES[name](**kwargs)
+
+
+def tree_wire_bits(fmt: WireFormat, tree) -> int:
+    return sum(fmt.wire_bits(leaf.shape) for leaf in jax.tree.leaves(tree))

@@ -1,0 +1,84 @@
+"""Deterministic synthetic LM data pipeline (the container is offline).
+
+Markov-chain token streams with Zipf-distributed transition tables give a
+learnable next-token structure (loss decreases measurably within a few
+hundred steps on a small model).  The NON-IID mode gives every consensus
+node its own transition table mixture — the paper's non-identically-
+distributed local objectives setting (§II item iii) — which is exactly
+where DC-DGD differs from the i.i.d.-only DCD-PSGD.
+
+Determinism: batch(step) is a pure function of (seed, step, node) so a
+restarted run consumes identical data (checkpoint/resume invariant, tested
+in tests/test_ckpt.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    n_nodes: int = 1
+    iid: bool = True
+    seed: int = 0
+    order: int = 1          # Markov order
+    branching: int = 32     # successors per state
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab_size
+        n_tables = 1 if self.iid else self.n_nodes
+        # per-table sparse transition structure: each token -> `branching`
+        # successors with Zipf weights
+        self._succ = rng.integers(0, V, size=(n_tables, V, self.branching))
+        w = 1.0 / np.arange(1, self.branching + 1) ** 1.1
+        self._w = (w / w.sum()).astype(np.float64)
+
+    def _gen_stream(self, rng: np.random.Generator, table: int, length: int
+                    ) -> np.ndarray:
+        succ = self._succ[table]
+        out = np.empty(length + 1, np.int32)
+        out[0] = rng.integers(0, self.vocab_size)
+        choices = rng.choice(self.branching, size=length, p=self._w)
+        noise = rng.random(length) < 0.05  # 5% uniform noise
+        rand_tok = rng.integers(0, self.vocab_size, size=length)
+        for t in range(length):
+            out[t + 1] = rand_tok[t] if noise[t] else succ[out[t], choices[t]]
+        return out
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        """tokens/labels (global_batch, seq_len); row blocks of size
+        global_batch/n_nodes belong to consecutive nodes."""
+        b, s = self.global_batch, self.seq_len
+        per = b // max(self.n_nodes, 1)
+        toks = np.empty((b, s), np.int32)
+        labs = np.empty((b, s), np.int32)
+        for row in range(b):
+            node = min(row // max(per, 1), self.n_nodes - 1)
+            table = 0 if self.iid else node
+            rng = np.random.default_rng(
+                (self.seed * 1_000_003 + step) * 97 + row)
+            stream = self._gen_stream(rng, table, s)
+            toks[row] = stream[:-1]
+            labs[row] = stream[1:]
+        return {"tokens": toks, "labels": labs}
+
+
+def make_batch_specs(cfg, shape, dtype_tokens=np.int32):
+    """ShapeDtypeStructs matching SyntheticLMData.batch (mirror of
+    configs.input_specs for the train kind)."""
+    import jax.numpy as jnp
+    gb, s = shape.global_batch, shape.seq_len
+    spec = {"tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((gb, s), jnp.int32)}
+    if cfg.encdec:
+        spec["enc_embeds"] = jax.ShapeDtypeStruct(
+            (gb, min(cfg.frontend_len, s), cfg.d_model), jnp.bfloat16)
+    return spec

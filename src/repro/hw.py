@@ -1,0 +1,47 @@
+"""Hardware constants for the roofline model (TPU v5e target).
+
+The container executes on CPU; these constants describe the TARGET chip used
+by the §Roofline analysis (EXPERIMENTS.md). All values per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s
+    hbm_bandwidth: float    # bytes/s
+    ici_link_bandwidth: float  # bytes/s per link
+    hbm_bytes: int          # capacity
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    hbm_bytes=16 * 1024**3,
+)
+
+DEFAULT_CHIP = TPU_V5E
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                   n_chips: int, chip: ChipSpec = DEFAULT_CHIP) -> dict:
+    """Three roofline terms (seconds) per EXPERIMENTS.md §Roofline.
+
+    ``hlo_flops``/``hlo_bytes`` are whole-program totals from
+    ``compiled.cost_analysis()``; ``collective_bytes`` is the summed operand
+    size of all collective ops parsed from the HLO.
+    """
+    compute = hlo_flops / (n_chips * chip.peak_flops_bf16)
+    memory = hlo_bytes / (n_chips * chip.hbm_bandwidth)
+    collective = collective_bytes / (n_chips * chip.ici_link_bandwidth)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    bound = max(compute, memory, collective)
+    terms["roofline_fraction"] = 0.0 if bound == 0 else compute / bound
+    return terms

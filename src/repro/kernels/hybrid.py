@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for the blocked-hybrid wire codec (paper §IV adapted,
+DESIGN.md §2.2): per tile, the top-j magnitudes go out EXACT (f32 value +
+int32 index) and the remainder is ternary-coded against the post-outlier
+tile max — tile maxima are Algorithm 2's anchors at tile granularity.
+
+Top-j selection runs as j in-register max+mask passes over the VMEM tile
+(j <= 8; selection sort beats a full sort for tiny j on the VPU).  The
+decode scatters outliers with a one-hot iota compare (no gather needed).
+Same quarter-interleaved 2-bit packing as kernels/ternary.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ternary import DEFAULT_BLOCK, TILE_R, _uniform_from_bits
+
+
+def _hybrid_encode_kernel(x_ref, rnd_ref, codes_ref, scale_ref, oval_ref,
+                          oidx_ref, *, block: int, top_j: int):
+    x = x_ref[...].astype(jnp.float32)                 # (tr, B)
+    tr = x.shape[0]
+    m = jnp.abs(x)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    rem = m
+    ovals, oidxs = [], []
+    for _ in range(top_j):                             # selection passes
+        mx = jnp.max(rem, axis=-1, keepdims=True)      # (tr, 1)
+        # leftmost argmax via masked iota
+        is_mx = rem >= mx
+        idx = jnp.min(jnp.where(is_mx, lanes, block), axis=-1, keepdims=True)
+        hit = lanes == idx
+        ovals.append(jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True))
+        oidxs.append(idx)
+        rem = jnp.where(hit, -1.0, rem)                # remove from pool
+    out_mask = rem < 0                                 # outlier positions
+    scale = jnp.max(jnp.where(out_mask, 0.0, m), axis=-1, keepdims=True)
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    prob = jnp.where(out_mask, 0.0, m * inv)
+    u = _uniform_from_bits(rnd_ref[...])
+    take = u < prob
+    codes = jnp.where(take, jnp.where(x >= 0, 1, 2), 0).astype(jnp.uint32)
+    q = block // 4
+    packed = (codes[:, 0:q]
+              | (codes[:, q:2 * q] << 2)
+              | (codes[:, 2 * q:3 * q] << 4)
+              | (codes[:, 3 * q:4 * q] << 6))
+    codes_ref[...] = packed.astype(jnp.uint8)
+    scale_ref[...] = scale
+    oval_ref[...] = jnp.concatenate(ovals, axis=-1)    # (tr, j)
+    oidx_ref[...] = jnp.concatenate(oidxs, axis=-1).astype(jnp.int32)
+
+
+def hybrid_encode(x: jax.Array, rnd_bits: jax.Array, *,
+                  block: int = DEFAULT_BLOCK, top_j: int = 4,
+                  tile_r: int = TILE_R, interpret: bool = False):
+    """x: (R, block); returns (packed (R, B/4) u8, scale (R,1) f32,
+    out_val (R, j) f32, out_idx (R, j) i32)."""
+    R, B = x.shape
+    assert B == block and B % 512 == 0
+    tile_r = min(tile_r, R)
+    assert R % tile_r == 0
+    grid = (R // tile_r,)
+    return pl.pallas_call(
+        functools.partial(_hybrid_encode_kernel, block=block, top_j=top_j),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, B // 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, top_j), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, top_j), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, B // 4), jnp.uint8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, top_j), jnp.float32),
+            jax.ShapeDtypeStruct((R, top_j), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, rnd_bits)
+
+
+def _hybrid_decode_axpy_kernel(codes_ref, scale_ref, oval_ref, oidx_ref,
+                               acc_ref, out_ref, *, block: int, top_j: int,
+                               weight: float):
+    packed = codes_ref[...].astype(jnp.uint32)
+    scale = scale_ref[...]
+    quarters = []
+    for qshift in range(4):
+        c = (packed >> (2 * qshift)) & 0x3
+        quarters.append(jnp.where(c == 1, 1.0, jnp.where(c == 2, -1.0, 0.0)))
+    vals = jnp.concatenate(quarters, axis=-1) * scale  # (tr, B)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    for j in range(top_j):                             # scatter outliers
+        hit = lanes == oidx_ref[:, j][:, None]
+        vals = jnp.where(hit, oval_ref[:, j][:, None], vals)
+    out_ref[...] = acc_ref[...] + weight * vals
+
+
+def hybrid_decode_axpy(codes, scales, out_val, out_idx, acc, weight: float, *,
+                       block: int = DEFAULT_BLOCK, tile_r: int = TILE_R,
+                       interpret: bool = False) -> jax.Array:
+    R, Bq = codes.shape
+    B = Bq * 4
+    assert B == block
+    top_j = out_val.shape[-1]
+    tile_r = min(tile_r, R)
+    assert R % tile_r == 0
+    grid = (R // tile_r,)
+    return pl.pallas_call(
+        functools.partial(_hybrid_decode_axpy_kernel, block=block,
+                          top_j=top_j, weight=weight),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, B // 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, top_j), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, top_j), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, B), jnp.float32),
+        interpret=interpret,
+    )(codes, scales, out_val, out_idx, acc)

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas wire codecs.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs as jax ops, validating the exact same code path that
+Mosaic compiles on TPU.  ``encode_leaf``/``decode_axpy_leaf`` adapt arbitrary
+(..., L) leaves to the (R, block) kernel layout (pad + reshape, preserving
+leading-dim sharding as in core.wire).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hybrid as H
+from . import ternary as T
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_rows(x: jax.Array, block: int) -> Tuple[jax.Array, Tuple[int, ...], int]:
+    L = x.shape[-1]
+    pad = (-L) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    rows = x.reshape(-1, block)
+    r_pad = (-rows.shape[0]) % T.TILE_R
+    if r_pad:
+        rows = jnp.pad(rows, ((0, r_pad), (0, 0)))
+    return rows, x.shape[:-1], r_pad
+
+
+@partial(jax.jit, static_argnames=("block",))
+def ternary_encode(x: jax.Array, key: jax.Array, *, block: int = 512):
+    rows, lead, r_pad = _to_rows(x, block)
+    bits = jax.random.bits(key, rows.shape, jnp.uint32)
+    codes, scales = T.ternary_encode(rows, bits, block=block,
+                                     interpret=_interpret())
+    return {"codes": codes, "scale": scales}
+
+
+@partial(jax.jit, static_argnames=("block", "weight"))
+def ternary_decode_axpy(wire, acc_rows: jax.Array, weight: float, *,
+                        block: int = 512):
+    return T.ternary_decode_axpy(wire["codes"], wire["scale"], acc_rows,
+                                 weight, block=block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block", "top_j"))
+def hybrid_encode(x: jax.Array, key: jax.Array, *, block: int = 512,
+                  top_j: int = 4):
+    rows, lead, r_pad = _to_rows(x, block)
+    bits = jax.random.bits(key, rows.shape, jnp.uint32)
+    codes, scales, oval, oidx = H.hybrid_encode(
+        rows, bits, block=block, top_j=top_j, interpret=_interpret())
+    return {"codes": codes, "scale": scales, "out_val": oval,
+            "out_idx": oidx}
+
+
+@partial(jax.jit, static_argnames=("block", "weight"))
+def hybrid_decode_axpy(wire, acc_rows: jax.Array, weight: float, *,
+                       block: int = 512):
+    return H.hybrid_decode_axpy(wire["codes"], wire["scale"],
+                                wire["out_val"], wire["out_idx"], acc_rows,
+                                weight, block=block, interpret=_interpret())

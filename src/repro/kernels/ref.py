@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas wire codecs — element-exact references
+(same quarter-interleaved packing, same RNG-bit -> uniform mapping, same
+leftmost-argmax tie-breaking) used by tests/test_kernels.py allclose sweeps.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    mant = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    return jax.lax.bitcast_convert_type(mant, jnp.float32) - 1.0
+
+
+def pack2bit_qi(codes: jax.Array) -> jax.Array:
+    """quarter-interleaved 2-bit pack: (..., B) int in {0,1,2} -> (..., B/4)
+    uint8 where byte j holds elements [j, B/4+j, B/2+j, 3B/4+j]."""
+    B = codes.shape[-1]
+    q = B // 4
+    c = codes.astype(jnp.uint32)
+    packed = (c[..., 0:q] | (c[..., q:2 * q] << 2)
+              | (c[..., 2 * q:3 * q] << 4) | (c[..., 3 * q:4 * q] << 6))
+    return packed.astype(jnp.uint8)
+
+
+def unpack2bit_qi(packed: jax.Array) -> jax.Array:
+    p = packed.astype(jnp.uint32)
+    qs = [(p >> (2 * k)) & 0x3 for k in range(4)]
+    return jnp.concatenate(qs, axis=-1).astype(jnp.int32)
+
+
+def code_vals(codes: jax.Array) -> jax.Array:
+    return jnp.where(codes == 1, 1.0, jnp.where(codes == 2, -1.0, 0.0))
+
+
+def ternary_encode_ref(x: jax.Array, rnd_bits: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    x = x.astype(jnp.float32)
+    m = jnp.abs(x)
+    scale = jnp.max(m, axis=-1, keepdims=True)
+    prob = jnp.where(scale > 0, m / jnp.maximum(scale, 1e-30), 0.0)
+    take = uniform_from_bits(rnd_bits) < prob
+    codes = jnp.where(take, jnp.where(x >= 0, 1, 2), 0)
+    return pack2bit_qi(codes), scale
+
+
+def ternary_decode_axpy_ref(codes, scales, acc, weight: float) -> jax.Array:
+    vals = code_vals(unpack2bit_qi(codes)) * scales
+    return acc + weight * vals
+
+
+def hybrid_encode_ref(x: jax.Array, rnd_bits: jax.Array, top_j: int):
+    x = x.astype(jnp.float32)
+    R, B = x.shape
+    m = jnp.abs(x)
+    lanes = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32), x.shape)
+    rem = m
+    ovals, oidxs = [], []
+    for _ in range(top_j):
+        mx = jnp.max(rem, axis=-1, keepdims=True)
+        idx = jnp.min(jnp.where(rem >= mx, lanes, B), axis=-1, keepdims=True)
+        hit = lanes == idx
+        ovals.append(jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True))
+        oidxs.append(idx)
+        rem = jnp.where(hit, -1.0, rem)
+    out_mask = rem < 0
+    scale = jnp.max(jnp.where(out_mask, 0.0, m), axis=-1, keepdims=True)
+    prob = jnp.where(out_mask, 0.0,
+                     jnp.where(scale > 0, m / jnp.maximum(scale, 1e-30), 0.0))
+    take = uniform_from_bits(rnd_bits) < prob
+    codes = jnp.where(take, jnp.where(x >= 0, 1, 2), 0)
+    return (pack2bit_qi(codes), scale,
+            jnp.concatenate(ovals, -1), jnp.concatenate(oidxs, -1))
+
+
+def hybrid_decode_axpy_ref(codes, scales, out_val, out_idx, acc,
+                           weight: float) -> jax.Array:
+    vals = code_vals(unpack2bit_qi(codes)) * scales
+    R, B = vals.shape
+    lanes = jnp.arange(B, dtype=jnp.int32)
+    for j in range(out_val.shape[-1]):
+        hit = lanes[None, :] == out_idx[:, j][:, None]
+        vals = jnp.where(hit, out_val[:, j][:, None], vals)
+    return acc + weight * vals

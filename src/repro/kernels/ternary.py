@@ -1,0 +1,131 @@
+"""Pallas TPU kernels for the blocked-ternary wire codec (DESIGN.md §5).
+
+The compression path runs on EVERY differential leaf on EVERY step — it is
+the hot spot the paper's technique adds on top of plain DGD, so it gets the
+kernel treatment:
+
+  ternary_encode        f32/bf16 tiles -> per-tile ||.||_inf scale +
+                        stochastic 2-bit codes packed 4-per-uint8
+  ternary_decode_axpy   acc += w * decode(packed, scales)   (fused: avoids a
+                        d-sized f32 temp per neighbor in the gossip sum)
+
+Layout: rows of ``block`` elements; codes pack QUARTER-INTERLEAVED —
+byte j of a row holds elements [j, B/4+j, 2B/4+j, 3B/4+j] in bit pairs —
+so packing/unpacking is sublane-strided (cheap on the VPU) instead of a
+lane-dim reshape (a relayout).  ``repro.core.wire.pack2bit`` uses the same
+layout; ``kernels/ref.py`` is the element-exact oracle.
+
+RNG: validation passes uniform u32 bits as an operand (interpret mode has no
+TPU PRNG); on real TPU ``onchip_rng=True`` swaps in pltpu.prng_random_bits,
+removing the 4-bytes/element random-stream read — the encode then reads
+4B/elt (f32 in) and writes 0.25B/elt.
+
+Tiling: BlockSpec (TILE_R, B) f32 in VMEM; B is a multiple of 512 (lane dim
+128 x sublane 4 after packing); default (8, 512) = 16 KiB in-tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+TILE_R = 8
+
+
+def _uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """u32 -> uniform [0,1) f32 (bit trick: 23 mantissa bits)."""
+    mant = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    return pl.bitcast(mant, jnp.float32) - 1.0 if hasattr(pl, "bitcast") else \
+        jax.lax.bitcast_convert_type(mant, jnp.float32) - 1.0
+
+
+def _encode_kernel(x_ref, rnd_ref, codes_ref, scale_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)                 # (tr, B)
+    m = jnp.abs(x)
+    scale = jnp.max(m, axis=-1, keepdims=True)         # (tr, 1)
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    prob = m * inv
+    u = _uniform_from_bits(rnd_ref[...])
+    take = u < prob
+    # codes: 0 = zero, 1 = +1, 2 = -1
+    codes = jnp.where(take, jnp.where(x >= 0, 1, 2), 0).astype(jnp.uint32)
+    q = block // 4
+    packed = (codes[:, 0:q]
+              | (codes[:, q:2 * q] << 2)
+              | (codes[:, 2 * q:3 * q] << 4)
+              | (codes[:, 3 * q:4 * q] << 6))
+    codes_ref[...] = packed.astype(jnp.uint8)
+    scale_ref[...] = scale
+
+
+def ternary_encode(x: jax.Array, rnd_bits: jax.Array, *,
+                   block: int = DEFAULT_BLOCK, tile_r: int = TILE_R,
+                   interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, block) f32/bf16; rnd_bits: (R, block) uint32.
+    Returns (packed (R, block//4) uint8, scales (R, 1) f32)."""
+    R, B = x.shape
+    assert B == block and B % 512 == 0, (x.shape, block)
+    tile_r = min(tile_r, R)
+    assert R % tile_r == 0
+    grid = (R // tile_r,)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, B // 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, B // 4), jnp.uint8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, rnd_bits)
+
+
+def _decode_axpy_kernel(codes_ref, scale_ref, acc_ref, out_ref, *,
+                        block: int, weight: float):
+    packed = codes_ref[...].astype(jnp.uint32)          # (tr, B/4)
+    scale = scale_ref[...]                              # (tr, 1)
+    quarters = []
+    for qshift in range(4):
+        c = (packed >> (2 * qshift)) & 0x3
+        val = jnp.where(c == 1, 1.0, jnp.where(c == 2, -1.0, 0.0))
+        quarters.append(val)
+    vals = jnp.concatenate(quarters, axis=-1)           # (tr, B)
+    out_ref[...] = acc_ref[...] + weight * scale * vals
+
+
+def ternary_decode_axpy(codes: jax.Array, scales: jax.Array, acc: jax.Array,
+                        weight: float, *, block: int = DEFAULT_BLOCK,
+                        tile_r: int = TILE_R, interpret: bool = False
+                        ) -> jax.Array:
+    """acc (R, block) f32  +=  weight * decode(codes (R, block//4), scales).
+    Fused axpy: one pass, no decoded temp."""
+    R, Bq = codes.shape
+    B = Bq * 4
+    assert B == block
+    tile_r = min(tile_r, R)
+    assert R % tile_r == 0
+    grid = (R // tile_r,)
+    return pl.pallas_call(
+        functools.partial(_decode_axpy_kernel, block=block, weight=weight),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, B // 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, B), jnp.float32),
+        interpret=interpret,
+    )(codes, scales, acc)

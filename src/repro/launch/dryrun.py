@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record roofline inputs.
+
+The two lines ABOVE the docstring run before any jax import — jax locks the
+device count at first init.  Only this entrypoint forces 512 host devices;
+tests/benches keep seeing 1.
+
+Per cell (arch x shape x mesh):
+    * build the step (train_step / prefill / serve_step per shape kind)
+      with the arch's distribution defaults (configs.PER_ARCH_RUN),
+    * .lower().compile()  — proves the sharding config is coherent,
+    * record compiled.memory_analysis()  (fits-in-HBM evidence),
+      compiled.cost_analysis()           (FLOPs/bytes for §Roofline),
+      summed collective operand bytes    (parsed from partitioned HLO),
+    * write artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--skip-done]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import jax
+    from ..configs import (SHAPES, cell_applicable, default_run_config,
+                           get_arch)
+    from ..train import make_server, make_trainer
+    from .hlo_stats import analyze, cost_summary, memory_summary
+    from .mesh import make_production_mesh
+
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+           "tag": tag, "status": None}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    run = default_run_config(arch_name, **(overrides or {}))
+    n_chips = mesh.size
+
+    t0 = time.time()
+    if shape.kind == "train":
+        tr = make_trainer(mesh, cfg, run, shape)
+        lowered = tr.lower_train_step()
+        rec["wire_stats"] = tr.wire_stats()
+        rec["consensus"] = {"axes": list(tr.consensus_axes),
+                            "n_nodes": tr.n_nodes,
+                            "snr_check": list(getattr(tr, "snr_check", (None, ""))),
+                            "mode": tr.plan.mode if tr.plan else None}
+    else:
+        sv = make_server(mesh, cfg, run, shape)
+        lowered = sv.lower_serve_step()
+        rec["window_bounded"] = sv.window_bounded
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = memory_summary(compiled)
+    cost = cost_summary(compiled)
+    txt = compiled.as_text()
+    stats = analyze(txt)   # trip-count-weighted per-device flops/bytes/coll
+
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        run_config={k: v for k, v in dataclasses.asdict(run).items()},
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=mem, cost=cost,
+        hlo_flops_per_device=stats["flops"],
+        hlo_hbm_bytes_per_device=stats["hbm_bytes"],
+        collectives=stats["collectives"],
+        unknown_trip_counts=stats["unknown_trip_counts"],
+        bytes_per_device_gib=mem["total_hbm_bytes"] / 2**30,
+    )
+    print(f"[{arch_name} x {shape_name} x {mesh_kind}] "
+          f"compile {t_compile:.1f}s | "
+          f"{rec['bytes_per_device_gib']:.2f} GiB/dev | "
+          f"{stats['flops']:.3e} flops/dev | "
+          f"{stats['collectives']['total']:.3e} coll B/dev")
+    return rec
+
+
+def artifact_path(arch: str, shape: str, mesh: str, tag: str = "") -> Path:
+    sfx = f"__{tag}" if tag else ""
+    return ARTIFACTS / f"{arch}__{shape}__{mesh}{sfx}.json"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for perf variants")
+    ap.add_argument("--override", action="append", default=[],
+                    help="RunConfig overrides k=v (e.g. wire=dense)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    from ..configs import SHAPES, ARCH_NAMES
+    cells = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for a, s, m in cells:
+        out = artifact_path(a, s, m, args.tag)
+        if args.skip_done and out.exists():
+            continue
+        try:
+            rec = run_cell(a, s, m, overrides, args.tag)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {"arch": a, "shape": s, "mesh": m, "tag": args.tag,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            failures += 1
+            print(f"[{a} x {s} x {m}] FAILED: {e}", file=sys.stderr)
+        out.write_text(json.dumps(rec, indent=1, default=str))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

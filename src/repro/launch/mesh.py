@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests and benches must keep seeing
+1 CPU device; only launch/dryrun.py forces 512 host devices (and does so
+before any jax import).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one 256-chip v5e pod; 2x16x16 = two pods (512 chips).
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    DC-DGD consensus runs over ("pod","data") (paper-faithful node=replica
+    mode) or ("pod",) (hierarchical FSDP-per-pod mode) — see train.trainer.
+    """
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — the "
+            f"dry-run entrypoint (launch/dryrun.py) must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE "
+            f"any jax import")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(dev_array, axes,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Small mesh for multi-device CPU tests (subprocesses set
+    xla_force_host_platform_device_count themselves)."""
+    import jax
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(dev_array, axes,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,122 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen3-8b ...``
+
+Runs real steps on whatever devices exist (CPU smoke, a TPU slice in
+production — mesh dims shrink to fit), with checkpoint/resume, periodic
+metrics, the Theorem-1 config gate, and optional straggler simulation.
+For the 512-chip production mesh use launch/dryrun.py (this container
+cannot execute 512-way programs, only compile them).
+"""
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--mesh", default="auto",
+                    help="'auto' | 'DxM' | 'PxDxM' (e.g. 4x2, 2x2x2)")
+    ap.add_argument("--consensus", default="data",
+                    choices=["data", "pod", "none"])
+    ap.add_argument("--wire", default="ternary:block=512")
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--alpha", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="constant")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--unsafe", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from ..configs import get_arch, get_smoke
+    from ..configs.base import RunConfig, ShapeConfig
+    from ..data import SyntheticLMData
+    from ..train import make_trainer
+    from .mesh import make_test_mesh
+
+    n_dev = len(jax.devices())
+    if args.mesh == "auto":
+        if n_dev >= 8:
+            shape, axes = (n_dev // 2, 2), ("data", "model")
+        elif n_dev > 1:
+            shape, axes = (n_dev, 1), ("data", "model")
+        else:
+            shape, axes = (1, 1), ("data", "model")
+    else:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        shape = dims
+    mesh = make_test_mesh(shape, axes)
+
+    arch = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    shape_cfg = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    run = RunConfig(
+        consensus_axis=None if args.consensus == "none" else args.consensus,
+        wire=args.wire, topology=args.topology, optimizer=args.optimizer,
+        alpha=args.alpha, schedule=args.schedule, grad_accum=args.grad_accum,
+        unsafe=args.unsafe)
+
+    tr = make_trainer(mesh, arch, run, shape_cfg)
+    print(f"mesh={dict(zip(axes, shape))} consensus={tr.consensus_axes} "
+          f"nodes={tr.n_nodes} snr={getattr(tr, 'snr_check', None)}")
+    if tr.node_mode:
+        print(f"wire: {tr.wire_stats()}")
+
+    state = tr.init_state(0)
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        from ..ckpt import CheckpointManager
+        mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+        if args.resume:
+            restored, manifest = mgr.resume(state)
+            if restored is not None:
+                state = restored
+                start_step = manifest["step"]
+                print(f"resumed from step {start_step}")
+
+    step_fn = tr.jit_train_step()
+    data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=args.seq_len,
+                           global_batch=args.global_batch,
+                           n_nodes=max(tr.n_nodes, 1), iid=args.iid)
+    history = []
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        for i in range(start_step, args.steps):
+            state, m = step_fn(state, data.batch(i))
+            if (i + 1) % args.log_every == 0 or i == args.steps - 1:
+                row = {k: float(v) for k, v in m.items()}
+                row["step"] = i + 1
+                row["wall_s"] = round(time.time() - t0, 2)
+                history.append(row)
+                print(f"step {i+1:5d} loss {row['loss']:.4f} "
+                      f"gnorm {row['grad_norm']:.3f} "
+                      f"noise/diff {row.get('noise_power', 0) / max(row.get('diff_power', 1), 1e-9):.3f}"
+                      if 'noise_power' in row else
+                      f"step {i+1:5d} loss {row['loss']:.4f}")
+            if mgr:
+                mgr.maybe_save(i + 1, state, extra={"loss": float(m["loss"])})
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(json.dumps(history, indent=1))
+    print(f"done: {args.steps - start_step} steps in {time.time()-t0:.1f}s; "
+          f"final loss {history[-1]['loss']:.4f}" if history else "done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+from .transformer import (alloc_cache, cache_axes, decode_step,
+                          init_cache_specs, init_model, loss_fn, model_axes,
+                          prefill)
+
+__all__ = ["alloc_cache", "cache_axes", "decode_step", "init_cache_specs",
+           "init_model", "loss_fn", "model_axes", "prefill"]

@@ -1,0 +1,756 @@
+"""Core transformer layers: norms, RoPE, tiled attention (GQA / sliding
+window / qk-norm / qkv-bias / cross), MLA (DeepSeek-V2), MLPs, embeddings.
+
+Conventions
+-----------
+* Params are plain nested dicts; every ``init_*`` has a matching ``*_axes``
+  returning the same structure with tuples of *logical* axis names
+  (see :mod:`repro.pshard`).
+* Activations are (batch, seq, d_model); attention internals use
+  (batch, heads, seq, head_dim).
+* Compute dtype follows the activations; softmax statistics and norm
+  accumulation are f32.
+
+Tiled attention
+---------------
+``tiled_attention`` is a flash-style online-softmax attention evaluated as a
+``lax.scan`` over (q-chunk, k-chunk) tile pairs.  The pair list is built
+*statically* from the causal/window structure, so no FLOPs are spent on
+fully-masked tiles (a plain masked implementation wastes ~2x on causal
+prefill and ~seq/window x on sliding-window).  Accumulators live at full
+output size; each step updates one q-chunk row block via dynamic slices.
+This is the pure-jnp oracle of the attention path and the form the dry-run
+lowers; it maps 1:1 onto a Pallas grid if kernelized later.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..pshard import lshard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def init_rms_norm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm_axes() -> Params:
+    return {"scale": ("embed",)}
+
+
+def layer_norm(x, weight, bias, eps=1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# tiled flash attention (pure jnp, static tile pair list)
+# ---------------------------------------------------------------------------
+def _tile_pairs(n_q: int, n_k: int, *, causal: bool, qc: int, kc: int,
+                window: Optional[int], q_offset: int = 0):
+    """Static (qi, ki) tile list with TOKEN-unit causal/window pruning
+    (supports rectangular qc != kc tiles).  ``q_offset`` is the absolute
+    position of q token 0."""
+    pairs = []
+    for qi in range(n_q):
+        q_lo = q_offset + qi * qc
+        q_hi = q_lo + qc - 1
+        for ki in range(n_k):
+            k_lo = ki * kc
+            k_hi = k_lo + kc - 1
+            if causal and k_lo > q_hi:
+                continue  # entire k tile is in the future
+            if window is not None and k_hi <= q_lo - window:
+                continue  # entire k tile is outside every q row's window
+            pairs.append((qi, ki))
+    return np.asarray(pairs, np.int32)
+
+
+def tiled_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, qc: int = 512, kc: int = 512,
+                    k_len: Optional[jax.Array] = None) -> jax.Array:
+    """Online-softmax attention over static tile pairs.
+
+    q: (b, h, sq, hd);  k, v: (b, kvh, sk, hd) with h = kvh * group.
+    ``q_offset``: absolute position of q[0] (q tokens are k positions
+    [q_offset, q_offset+sq)).  ``k_len``: optional dynamic valid-k length
+    (decode against a partially-filled cache).
+    Returns (b, h, sq, hd) in q.dtype.
+    """
+    b, h, sq, hd = q.shape
+    _, kvh, sk, _ = k.shape
+    hd_v = v.shape[-1]  # may differ from qk head_dim (MLA)
+    group = h // kvh
+    orig_sq = sq
+
+    pad_q = (-sq) % qc
+    pad_k = (-sk) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        sk += pad_k
+    n_q, n_k = sq // qc, sk // kc
+    pairs = _tile_pairs(n_q, n_k, causal=causal, qc=qc, kc=kc, window=window,
+                        q_offset=q_offset if (causal or window) else 0)
+
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kvh, group, sq, hd)
+
+    # accumulators: f32, full output size
+    acc = jnp.zeros((b, kvh, group, sq, hd_v), jnp.float32)
+    m = jnp.full((b, kvh, group, sq), -jnp.inf, jnp.float32)
+    l = jnp.zeros((b, kvh, group, sq), jnp.float32)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair[0], pair[1]
+        qs, ks = qi * qc, ki * kc
+        q_t = jax.lax.dynamic_slice_in_dim(qg, qs, qc, axis=3)      # (b,kvh,g,qc,hd)
+        k_t = jax.lax.dynamic_slice_in_dim(k, ks, kc, axis=2)       # (b,kvh,kc,hd)
+        v_t = jax.lax.dynamic_slice_in_dim(v, ks, kc, axis=2)
+        s = jnp.einsum("bKgqh,bKkh->bKgqk", q_t, k_t,
+                       preferred_element_type=jnp.float32) * scale
+        # positions by arithmetic on the traced tile starts (avoids slicing
+        # constant arange arrays, which XLA constant-folds into hoisted
+        # stacked buffers)
+        qp = q_offset + qs + jnp.arange(qc)
+        kp = ks + jnp.arange(kc)
+        mask = jnp.ones((qc, kc), bool)
+        if causal:
+            mask &= qp[:, None] >= kp[None, :]
+        if window is not None:
+            mask &= kp[None, :] > qp[:, None] - window
+        mask &= (kp < (sk - pad_k if k_len is None else k_len))[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_t = jax.lax.dynamic_slice_in_dim(m, qs, qc, axis=3)
+        l_t = jax.lax.dynamic_slice_in_dim(l, qs, qc, axis=3)
+        a_t = jax.lax.dynamic_slice_in_dim(acc, qs, qc, axis=3)
+        m_new = jnp.maximum(m_t, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_t), jnp.exp(m_t - m_safe), 0.0)
+        l_new = l_t * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bKgqk,bKkh->bKgqh", p.astype(v_t.dtype), v_t,
+                        preferred_element_type=jnp.float32)
+        a_new = a_t * corr[..., None] + pv
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, qs, axis=3)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, qs, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, qs, axis=3)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(b, h, sq, hd_v)[:, :, :orig_sq, :]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_len: jax.Array, *, window: Optional[int] = None
+                     ) -> jax.Array:
+    """Single-position attention: q (b, h, 1, hd) vs cache k/v (b, kvh, S, hd)
+    valid up to ``k_len``.  Plain softmax (scores are tiny)."""
+    b, h, one, hd = q.shape
+    _, kvh, S, _ = k.shape
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, one, hd)
+    s = jnp.einsum("bKgqh,bKkh->bKgqk", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    kp = jnp.arange(S)
+    mask = kp < k_len
+    if window is not None:
+        mask &= kp >= k_len - window
+    s = jnp.where(mask[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgqk,bKkh->bKgqh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, one, hd).astype(q.dtype)
+
+
+def decode_attention_rolling(q, k, v, pos_arr: jax.Array, pos: jax.Array, *,
+                             window: int) -> jax.Array:
+    """Decode against a rolling window-bounded cache: slot validity/masking
+    comes from the per-slot absolute positions ``pos_arr`` (init -1)."""
+    b, h, one, hd = q.shape
+    _, kvh, S, _ = k.shape
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, one, hd)
+    s = jnp.einsum("bKgqh,bKkh->bKgqk", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    mask = (pos_arr >= 0) & (pos_arr > pos - window) & (pos_arr <= pos)
+    s = jnp.where(mask[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgqk,bKkh->bKgqh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, one, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard (GQA) attention block
+# ---------------------------------------------------------------------------
+def head_layout(cfg):
+    """Effective (stored/computed) head layout under the TP divisibility
+    rules (base.py).  Returns dict with:
+      h_eff    — stored q/o head count (>= n_heads; pad positions masked)
+      kvh_st   — stored k/v head count (= n_kv_heads, or padded for MHA)
+      kvh_eff  — k/v head count AFTER kv_repeat expansion (cache layout)
+      q_mask   — None or bool (h_eff,): True at real q head positions
+    For GQA with q_group_pad, real q heads sit at positions
+    kv*group_pad + [0, group_real) — interleaved so the q->kv mapping under
+    the expanded layout stays exact (q head i uses expanded kv slot
+    i // (h_eff/kvh_eff), whose real kv is slot // kv_repeat = i // group_pad).
+    """
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    if cfg.mha_pad_to:
+        assert kvh == h, "mha_pad_to only for MHA"
+        h_eff = kvh_st = cfg.mha_pad_to
+        q_mask = np.arange(h_eff) < h
+        return dict(h_eff=h_eff, kvh_st=kvh_st, kvh_eff=kvh_st,
+                    q_mask=q_mask if h_eff > h else None)
+    group_real = h // kvh
+    group_pad = cfg.q_group_pad or group_real
+    h_eff = kvh * group_pad
+    kvh_eff = kvh * cfg.kv_repeat
+    assert h_eff % kvh_eff == 0, (h_eff, kvh_eff)
+    q_mask = (np.arange(h_eff) % group_pad < group_real) \
+        if group_pad > group_real else None
+    return dict(h_eff=h_eff, kvh_st=kvh, kvh_eff=kvh_eff, q_mask=q_mask)
+
+
+def init_attention(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    lay = head_layout(cfg)
+    h, kvh = lay["h_eff"], lay["kvh_st"]
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), d),
+        "wk": _dense_init(ks[1], (d, kvh, hd), d),
+        "wv": _dense_init(ks[2], (d, kvh, hd), d),
+        "wo": _dense_init(ks[3], (h, hd, d), h * hd),
+    }
+    if lay["q_mask"] is not None:
+        qm = jnp.asarray(lay["q_mask"], jnp.float32)
+        p["wq"] = p["wq"] * qm[None, :, None]
+        p["wo"] = p["wo"] * qm[:, None, None]
+        if cfg.mha_pad_to:
+            p["wk"] = p["wk"] * qm[None, :, None]
+            p["wv"] = p["wv"] * qm[None, :, None]
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kvh, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kvh, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def attention_axes(cfg) -> Params:
+    # k/v weights are stored at the REAL kv head count; when that count is
+    # not TP-divisible (kv_repeat > 1 marks those archs) they are small and
+    # stored replicated over the model axis ("kv_stored" -> None) — the
+    # EXPANDED kv activations/caches still shard evenly over "model".
+    kvn = "kv_heads" if cfg.kv_repeat == 1 else "kv_stored"
+    kve = "embed" if cfg.kv_repeat == 1 else "kv_embed"
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": (kve, kvn, "head_dim"),
+        "wv": (kve, kvn, "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads", "head_dim")
+        p["bk"] = (kvn, "head_dim")
+        p["bv"] = (kvn, "head_dim")
+    if cfg.qk_norm:
+        p["q_norm"] = ("head_dim",)
+        p["k_norm"] = ("head_dim",)
+    return p
+
+
+def _project_qkv(p: Params, cfg, x: jax.Array, positions: jax.Array):
+    """x: (b, s, d) -> q (b, h_eff, s, hd), k/v (b, kvh_eff, s, hd), roped.
+    k/v are computed at the REAL kv head count and expanded by kv_repeat
+    (exact GQA semantics, evenly-shardable layout)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)[None, :, None, :]
+        k = k + p["bk"].astype(dt)[None, :, None, :]
+        v = v + p["bv"].astype(dt)[None, :, None, :]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=1)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=1)
+    q = lshard(q, "batch", "heads", "seq", "head_dim")
+    k = lshard(k, "batch", "kv_heads", "seq", "head_dim")
+    v = lshard(v, "batch", "kv_heads", "seq", "head_dim")
+    return q, k, v
+
+
+def attention_apply(p: Params, cfg, x: jax.Array, *, positions: jax.Array,
+                    cache: Optional[Params] = None,
+                    q_offset: Any = 0, qc: int = 512, kc: int = 512
+                    ) -> Tuple[jax.Array, Optional[Params]]:
+    """Self-attention.  Modes:
+      cache None                -> training/prefill-without-cache (causal)
+      cache w/ x.shape[1] > 1   -> prefill: fill cache, causal attention
+      cache w/ x.shape[1] == 1  -> decode step at position ``q_offset``
+    Returns (out (b,s,d), updated cache or None).
+    """
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    new_cache = None
+    if cache is None:
+        out = tiled_attention(q, k, v, causal=True, window=cfg.window,
+                              qc=min(qc, s), kc=min(kc, s))
+    elif s > 1:  # prefill
+        if cache["k"].dtype == jnp.int8:
+            kq8, ks8 = _quantize_kv(k)
+            vq8, vs8 = _quantize_kv(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq8, 0, axis=2),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq8, 0, axis=2),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks8, 0, axis=2),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs8, 0, axis=2),
+                "len": jnp.int32(s)}
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=2)
+            new_cache = {"k": ck, "v": cv, "len": jnp.int32(s)}
+        out = tiled_attention(q, k, v, causal=True, window=cfg.window,
+                              qc=min(qc, s), kc=min(kc, s))
+    else:  # decode
+        pos = q_offset  # dynamic scalar (absolute position)
+        S = cache["k"].shape[2]
+        if "pos" in cache:
+            # rolling window-bounded cache (S == window+1 slots): write at
+            # pos % S, mask by stored absolute positions
+            slot = jnp.mod(pos, S)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+            pos_arr = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos[None].astype(jnp.int32), slot, axis=0)
+            new_cache = {"k": ck, "v": cv, "pos": pos_arr, "len": pos + 1}
+            out = decode_attention_rolling(q, ck.astype(q.dtype),
+                                           cv.astype(q.dtype), pos_arr, pos,
+                                           window=cfg.window)
+        elif cache["k"].dtype == jnp.int8:
+            kq8, ks8 = _quantize_kv(k)
+            vq8, vs8 = _quantize_kv(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq8, pos, axis=2),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq8, pos, axis=2),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks8, pos, axis=2),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs8, pos, axis=2),
+                "len": pos + 1}
+            out = decode_attention_q8(
+                q, new_cache["k"], new_cache["k_scale"], new_cache["v"],
+                new_cache["v_scale"], pos + 1, window=cfg.window)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+            new_cache = {"k": ck, "v": cv, "len": pos + 1}
+            out = decode_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                   pos + 1, window=cfg.window)
+    lay = head_layout(cfg)
+    if lay["q_mask"] is not None:
+        # zero pad-head outputs: keeps pad weights at zero (no grad flow)
+        out = out * jnp.asarray(lay["q_mask"], out.dtype)[None, :, None, None]
+    dt = x.dtype
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dt))
+    return lshard(y, "batch", "seq", "embed"), new_cache
+
+
+def attention_cache_spec(cfg, batch: int, max_seq: int, dtype):
+    """Cache shapes (EXPANDED kv layout: kvh_eff heads so the cache shards
+    evenly over the model axis).  Sliding-window decode can use a rolling
+    window+1-slot cache instead (transformer.init_cache_specs).
+
+    dtype == int8: quantized KV (per-token-head ||.||_inf scales, ~1.6%
+    overhead at hd=128) — §Perf iteration B; the 32k-deep MHA caches are
+    infeasible at bf16 (qwen1.5-32b: 25.8 GiB/device)."""
+    kvh, hd = head_layout(cfg)["kvh_eff"], cfg.resolved_head_dim()
+    S = max_seq
+    spec = {
+        "k": jax.ShapeDtypeStruct((batch, kvh, S, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, kvh, S, hd), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if dtype == jnp.int8:
+        spec["k_scale"] = jax.ShapeDtypeStruct((batch, kvh, S), jnp.float32)
+        spec["v_scale"] = jax.ShapeDtypeStruct((batch, kvh, S), jnp.float32)
+    return spec
+
+
+def _quantize_kv(k: jax.Array):
+    """(b, kvh, s, hd) -> (int8 codes, (b, kvh, s) f32 scales)."""
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(k.astype(jnp.float32)
+                  / jnp.maximum(scale, 1e-20)[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def decode_attention_q8(q: jax.Array, kq, ks, vq, vs, k_len, *,
+                        window=None, chunk: int = 4096) -> jax.Array:
+    """Decode against an int8 cache, scanning seq chunks with online
+    softmax — dequantized chunks never materialize the full cache."""
+    b, h, one, hd = q.shape
+    _, kvh, S, _ = kq.shape
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, hd).astype(jnp.float32)
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, i):
+        m, l, acc = carry
+        s0 = i * chunk
+        kc = jax.lax.dynamic_slice_in_dim(kq, s0, chunk, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(vq, s0, chunk, axis=2)
+        ksc = jax.lax.dynamic_slice_in_dim(ks, s0, chunk, axis=2)
+        vsc = jax.lax.dynamic_slice_in_dim(vs, s0, chunk, axis=2)
+        kf = kc.astype(jnp.float32) * ksc[..., None]
+        s = jnp.einsum("bKgh,bKkh->bKgk", qg, kf,
+                       preferred_element_type=jnp.float32) * scale
+        pos = s0 + jnp.arange(chunk)
+        mask = pos < k_len
+        if window is not None:
+            mask &= pos > k_len - 1 - window
+        s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask[None, None, None, :],
+                      jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        vf = vc.astype(jnp.float32) * vsc[..., None]
+        pv = jnp.einsum("bKgk,bKkh->bKgh", p, vf,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l * corr + jnp.sum(p, -1),
+                acc * corr[..., None] + pv), None
+
+    m0 = jnp.full((b, kvh, group), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group), jnp.float32)
+    a0 = jnp.zeros((b, kvh, group, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, 1, hd).astype(q.dtype)
+
+
+def attention_cache_axes(*, int8: bool = False):
+    ax = {"k": ("batch", "kv_heads", "cache_seq", "head_dim"),
+          "v": ("batch", "kv_heads", "cache_seq", "head_dim"),
+          "len": None}
+    if int8:
+        ax["k_scale"] = ("batch", "kv_heads", "cache_seq")
+        ax["v_scale"] = ("batch", "kv_heads", "cache_seq")
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec decoder)
+# ---------------------------------------------------------------------------
+def init_cross_attention(key, cfg) -> Params:
+    return init_attention(key, dataclasses.replace(cfg, qk_norm=False, qkv_bias=False))
+
+
+def cross_attention_axes(cfg):
+    return {k: v for k, v in attention_axes(
+        dataclasses.replace(cfg, qk_norm=False, qkv_bias=False)).items()}
+
+
+def cross_attention_apply(p: Params, cfg, x: jax.Array, enc_kv: Params
+                          ) -> jax.Array:
+    """x: (b, sq, d) queries; enc_kv: {"k","v"} (b, kvh, sk, hd) precomputed
+    from encoder output (no RoPE on cross attention)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    q = lshard(q, "batch", "heads", "seq", "head_dim")
+    out = tiled_attention(q, enc_kv["k"].astype(dt), enc_kv["v"].astype(dt),
+                          causal=False, qc=min(512, q.shape[2]),
+                          kc=min(512, enc_kv["k"].shape[2]))
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dt))
+    return lshard(y, "batch", "seq", "embed")
+
+
+def cross_kv(p: Params, cfg, enc_out: jax.Array) -> Params:
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wv"].astype(dt))
+    return {"k": lshard(k, "batch", "kv_heads", "seq", "head_dim"),
+            "v": lshard(v, "batch", "kv_heads", "seq", "head_dim")}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2), with absorbed decode
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _dense_init(ks[0], (d, h, dn + dr), d),          # no q-lora (V2-Lite)
+        "w_dkv": _dense_init(ks[1], (d, r + dr), d),           # down: c_kv + k_rope
+        "kv_norm": jnp.ones((r,), jnp.float32),
+        "w_uk": _dense_init(ks[2], (r, h, dn), r),             # up: keys (nope)
+        "w_uv": _dense_init(ks[3], (r, h, dv), r),             # up: values
+        "wo": _dense_init(ks[4], (h, dv, d), h * dv),
+    }
+
+
+def mla_axes(cfg) -> Params:
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "w_dkv": ("embed", "kv_lora"),
+        "kv_norm": ("kv_lora",),
+        "w_uk": ("kv_lora", "heads", "head_dim"),
+        "w_uv": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def mla_apply(p: Params, cfg, x: jax.Array, *, positions: jax.Array,
+              cache: Optional[Params] = None, q_offset: Any = 0,
+              qc: int = 512, kc: int = 512) -> Tuple[jax.Array, Optional[Params]]:
+    """MLA.  Cache stores the COMPRESSED (c_kv, k_rope) stream (the paper's
+    KV-cache saving); decode uses the absorbed form  q_nope @ W_uk  so scores
+    are taken directly against c_kv (rank-r dots, no per-head K expansion).
+    """
+    b, s, d = x.shape
+    dt = x.dtype
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    h = cfg.n_heads
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))
+    c_kv, k_rope = dkv[..., :r], dkv[..., r:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.rms_eps)
+    k_rope = apply_rope(k_rope[:, None, :, :], positions[:, None, :],
+                        cfg.rope_theta)  # (b,1,s,dr) shared across heads
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    new_cache = None
+
+    if cache is not None and s == 1:
+        pos = q_offset
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype), pos, axis=1)
+        new_cache = {"c_kv": cc, "k_rope": cr, "len": pos + 1}
+        # absorbed: q_r = q_nope @ W_uk  -> (b,h,1,r)
+        q_r = jnp.einsum("bhsk,rhk->bhsr", q_nope, p["w_uk"].astype(dt))
+        s_nope = jnp.einsum("bhsr,bTr->bhsT", q_r, cc.astype(dt),
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bhsk,bTk->bhsT", q_rope, cr.astype(dt),
+                            preferred_element_type=jnp.float32)
+        logits = (s_nope + s_rope) * scale
+        S = cc.shape[1]
+        mask = jnp.arange(S) < pos + 1
+        logits = jnp.where(mask[None, None, None, :], logits, -jnp.inf)
+        pr = jax.nn.softmax(logits, axis=-1)
+        # absorbed values: (p @ c_kv) @ W_uv
+        ctx = jnp.einsum("bhsT,bTr->bhsr", pr.astype(dt), cc.astype(dt))
+        out = jnp.einsum("bhsr,rhk->bhsk", ctx, p["w_uv"].astype(dt))
+    else:
+        # train/prefill: expand keys/values per head, run tiled attention
+        k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, p["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bhsk", c_kv, p["w_uv"].astype(dt))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, h, s, dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q_full = lshard(q_full, "batch", "heads", "seq", "head_dim")
+        k_full = lshard(k_full, "batch", "heads", "seq", "head_dim")
+        # pad v to qk dim for shared tiled kernel? no — tiled_attention allows
+        # different value dim via separate v head_dim
+        out = tiled_attention(q_full, k_full, v, causal=True,
+                              qc=min(qc, s), kc=min(kc, s))
+        if cache is not None:  # prefill: write compressed stream
+            cc = jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+            cr = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype), 0, axis=1)
+            new_cache = {"c_kv": cc, "k_rope": cr, "len": jnp.int32(s)}
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dt))
+    return lshard(y, "batch", "seq", "embed"), new_cache
+
+
+def mla_cache_spec(cfg, batch: int, max_seq: int, dtype):
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_seq, cfg.qk_rope_dim), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def mla_cache_axes():
+    return {"c_kv": ("batch", "cache_seq", "kv_lora"),
+            "k_rope": ("batch", "cache_seq", None), "len": None}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, f: int, act: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"w_gate": _dense_init(ks[0], (d, f), d),
+                "w_up": _dense_init(ks[1], (d, f), d),
+                "w_down": _dense_init(ks[2], (f, d), f)}
+    return {"w_up": _dense_init(ks[0], (d, f), d),
+            "w_down": _dense_init(ks[1], (f, d), f)}
+
+
+def mlp_axes(act: str = "swiglu") -> Params:
+    if act == "swiglu":
+        return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                "w_down": ("mlp", "embed")}
+    return {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str = "swiglu") -> jax.Array:
+    dt = x.dtype
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        hmid = jax.nn.silu(g) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        hmid = jax.nn.relu(u) if act == "relu" else jax.nn.gelu(u)
+    hmid = lshard(hmid, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", hmid, p["w_down"].astype(dt))
+    return lshard(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab_padded: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab_padded, d), jnp.float32) * 0.02}
+
+
+def embedding_axes() -> Params:
+    return {"table": ("vocab", "embed")}
+
+
+def embed_apply(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    out = p["table"].astype(dtype)[tokens]
+    return lshard(out, "batch", "seq", "embed")
+
+
+def init_unembed(key, d: int, vocab_padded: int) -> Params:
+    return {"w": _dense_init(key, (d, vocab_padded), d)}
+
+
+def unembed_axes() -> Params:
+    return {"w": ("embed", "vocab")}
+
+
+# ---------------------------------------------------------------------------
+# chunked softmax cross-entropy (never materializes full [tokens, vocab])
+# ---------------------------------------------------------------------------
+def chunked_xent(x: jax.Array, w_unembed: jax.Array, labels: jax.Array,
+                 *, chunk: int = 2048, vocab_size: Optional[int] = None,
+                 z_loss: float = 0.0) -> jax.Array:
+    """x: (T, d) final hiddens; labels: (T,) int32.  Scans token chunks,
+    computing logits chunk-by-chunk; returns mean NLL (+ z-loss)."""
+    T, d = x.shape
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+    n_chunks = x.shape[0] // chunk
+    xc = x.reshape(n_chunks, chunk, d)
+    lc = labels.reshape(n_chunks, chunk)
+    vpad = w_unembed.shape[1]
+
+    def body(tot, xl):
+        xi, li = xl
+        logits = jnp.einsum("td,dv->tv", xi, w_unembed.astype(xi.dtype))
+        logits = lshard(logits, "seq", "vocab").astype(jnp.float32)
+        if vocab_size is not None and vocab_size < vpad:
+            pad_mask = jnp.arange(vpad) < vocab_size
+            logits = jnp.where(pad_mask[None, :], logits, -jnp.inf)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        li_safe = jnp.maximum(li, 0)
+        true_logit = jnp.take_along_axis(logits, li_safe[:, None], axis=-1)[:, 0]
+        nll = lse - true_logit
+        if z_loss:
+            nll = nll + z_loss * lse**2
+        valid = li >= 0
+        return (tot[0] + jnp.sum(jnp.where(valid, nll, 0.0)),
+                tot[1] + jnp.sum(valid.astype(jnp.float32))), None
+
+    (loss_sum, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                        (xc, lc))
+    return loss_sum / jnp.maximum(count, 1.0)

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel for train /
+prefill and O(1)-state recurrent for decode.
+
+Recurrence (per head h, head channel p, state channel n):
+    a_t   = exp(-softplus(dt_t + dt_bias) * exp(A_log))        scalar per head
+    H_t   = a_t H_{t-1} + dt_t * B_t (x) x_t                   H: (p, n)
+    y_t   = C_t . H_t + D * x_t
+
+Training uses the chunked SSD decomposition: within a chunk of length L the
+output is an attention-like masked matmul  Y = (C B^T o decay) X  (MXU
+friendly); across chunks a short ``lax.scan`` carries the (h, p, n) state.
+Memory per chunk step is O(b h L^2), bounded by the chunk size — the
+sub-quadratic property that makes long_500k run for SSM archs.
+
+Projections are kept per-stream (w_z/w_x/w_B/w_C/w_dt + per-stream causal
+conv) rather than one fused in_proj so each stream's head-aligned dim can be
+tensor-sharded cleanly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..pshard import lshard
+from .layers import _dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_state, cfg.conv_width
+
+
+def init_mamba2(key, cfg) -> Params:
+    d = cfg.d_model
+    d_inner, h, n, w = ssm_dims(cfg)
+    g = 1  # single B/C group
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": _dense_init(ks[0], (d, d_inner), d),
+        "w_x": _dense_init(ks[1], (d, d_inner), d),
+        "w_B": _dense_init(ks[2], (d, g * n), d),
+        "w_C": _dense_init(ks[3], (d, g * n), d),
+        "w_dt": _dense_init(ks[4], (d, h), d),
+        "conv_x": jax.random.normal(ks[5], (w, d_inner), jnp.float32) * 0.1,
+        "conv_B": jax.random.normal(ks[6], (w, g * n), jnp.float32) * 0.1,
+        "conv_C": jax.random.normal(ks[7], (w, g * n), jnp.float32) * 0.1,
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "w_out": _dense_init(ks[8], (d_inner, d), d_inner),
+    }
+
+
+def mamba2_axes(cfg) -> Params:
+    return {
+        "w_z": ("embed", "mlp"), "w_x": ("embed", "mlp"),
+        "w_B": ("embed", None), "w_C": ("embed", None),
+        "w_dt": ("embed", "heads"),
+        "conv_x": ("conv", "mlp"), "conv_B": ("conv", None),
+        "conv_C": ("conv", None),
+        "A_log": ("heads",), "D": ("heads",), "dt_bias": ("heads",),
+        "norm": ("mlp",), "w_out": ("mlp", "embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (b, s, c); w: (width, c).
+    ``state``: (b, width-1, c) left context (decode); returns (y, new state).
+    """
+    b, s, c = x.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((b, width - 1, c), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + s, :] * w[i].astype(x.dtype) for i in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunk_scan(xh, B, C, dt, la, chunk: int):
+    """Chunked SSD.  xh: (b,s,h,p); B,C: (b,s,n); dt,la: (b,s,h)
+    (la = log decay, <= 0).  Returns y: (b,s,h,p) f32, final state (b,h,p,n).
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // L
+    # reshape to chunks and move chunk axis to front for scan
+    def chunked(t, extra):
+        return jnp.moveaxis(t.reshape((b, nc, L) + extra), 1, 0)
+    xh_c = chunked(xh, (h, p))    # (nc,b,L,h,p)
+    B_c = chunked(B, (n,))
+    C_c = chunked(C, (n,))
+    dt_c = chunked(dt, (h,))
+    la_c = chunked(la, (h,))
+
+    def body(H, inp):
+        xx, BB, CC, dd, ll = inp     # (b,L,h,p) (b,L,n) (b,L,n) (b,L,h) (b,L,h)
+        cum = jnp.cumsum(ll, axis=1)                      # (b,L,h)
+        total = cum[:, -1:, :]                            # (b,1,h)
+        # ---- intra-chunk (attention-like) ----
+        CB = jnp.einsum("bln,bmn->blm", CC, BB,
+                        preferred_element_type=jnp.float32)  # (b,L,L)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (b,L,M,h)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        M = jnp.where(mask[None, :, :, None], decay, 0.0) * CB[..., None]
+        y_intra = jnp.einsum("blmh,bmh,bmhp->blhp", M, dd, xx,
+                             preferred_element_type=jnp.float32)
+        # ---- inter-chunk: contribution of carried state ----
+        y_inter = jnp.einsum("bln,bhpn->blhp", CC, H,
+                             preferred_element_type=jnp.float32)
+        y_inter = y_inter * jnp.exp(cum)[..., None]        # decay from chunk start
+        # ---- new carried state ----
+        w_state = jnp.exp(total - cum) * dd                # (b,L,h)
+        H_new = jnp.exp(total)[:, 0, :, None, None] * H + jnp.einsum(
+            "blh,blhp,bln->bhpn", w_state, xx, BB,
+            preferred_element_type=jnp.float32)
+        return H_new, y_intra + y_inter
+
+    H0 = jnp.zeros((b, h, p, n), jnp.float32)
+    H_final, y = jax.lax.scan(body, H0, (xh_c, B_c, C_c, dt_c, la_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, nc * L, h, p)[:, :s]
+    return y, H_final
+
+
+def mamba2_apply(p: Params, cfg, x: jax.Array, *, cache: Optional[Params] = None,
+                 chunk: int = 128) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (b, s, d).  cache (decode/prefill-carry): {"H": (b,h,hd,n) f32,
+    "conv_x"/"conv_B"/"conv_C": rolling conv states, "len": scalar}."""
+    b, s, d = x.shape
+    dt_ = x.dtype
+    d_inner, h, n, w = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_))
+    Bs = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt_))
+    Cs = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt_))
+    dts = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_))
+    z = lshard(z, "batch", "seq", "mlp")
+    xs = lshard(xs, "batch", "seq", "mlp")
+
+    cs_x = cache["conv_x"] if cache is not None else None
+    cs_B = cache["conv_B"] if cache is not None else None
+    cs_C = cache["conv_C"] if cache is not None else None
+    xs, ns_x = _causal_conv(xs, p["conv_x"], cs_x)
+    Bs, ns_B = _causal_conv(Bs, p["conv_B"], cs_B)
+    Cs, ns_C = _causal_conv(Cs, p["conv_C"], cs_C)
+
+    dt_act = jax.nn.softplus(dts.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))  # (b,s,h)
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    la = -dt_act * A                                              # log decay
+
+    xh = xs.reshape(b, s, h, hd)
+    xh = lshard(xh, "batch", "seq", "heads", "head_dim")
+
+    if cache is not None and s == 1:
+        H = cache["H"]
+        a = jnp.exp(la[:, 0, :])                                  # (b,h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_act[:, 0], xh[:, 0].astype(jnp.float32),
+                         Bs[:, 0].astype(jnp.float32))
+        H_new = a[:, :, None, None] * H + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cs[:, 0].astype(jnp.float32), H_new)
+        y = y.reshape(b, 1, h, hd)
+        new_cache = {"H": H_new, "conv_x": ns_x, "conv_B": ns_B,
+                     "conv_C": ns_C, "len": cache["len"] + 1}
+    else:
+        Bf = Bs.astype(jnp.float32)
+        Cf = Cs.astype(jnp.float32)
+        y, H_final = _ssd_chunk_scan(xh.astype(jnp.float32), Bf, Cf, dt_act,
+                                     la, chunk)
+        new_cache = None
+        if cache is not None:  # prefill: persist final state + conv tails
+            new_cache = {"H": H_final, "conv_x": ns_x, "conv_B": ns_B,
+                         "conv_C": ns_C, "len": jnp.int32(s)}
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, -1, d_inner).astype(dt_)
+    y = y * jax.nn.silu(z[:, : y.shape[1]])
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    return lshard(out, "batch", "seq", "embed"), new_cache
+
+
+def mamba2_cache_spec(cfg, batch: int, dtype):
+    d_inner, h, n, w = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    return {
+        "H": jax.ShapeDtypeStruct((batch, h, hd, n), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, w - 1, d_inner), dtype),
+        "conv_B": jax.ShapeDtypeStruct((batch, w - 1, n), dtype),
+        "conv_C": jax.ShapeDtypeStruct((batch, w - 1, n), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def mamba2_cache_axes():
+    return {"H": ("batch", "heads", "head_dim", "state"),
+            "conv_x": ("batch", "conv", "mlp"),
+            "conv_B": ("batch", "conv", None),
+            "conv_C": ("batch", "conv", None),
+            "len": None}

@@ -1,0 +1,617 @@
+"""Model assembly: heterogeneous block stacks under scan-over-layers, with
+remat, weight-shared blocks (zamba2), MoE aux-loss accumulation, encoder-
+decoder wiring, KV/SSM caches, and the train / prefill / decode entrypoints.
+
+Layer layout comes from ``ArchConfig.layer_pattern()``: a (head, unit,
+n_units, tail) decomposition.  The repeating ``unit`` (a tuple of block
+kinds) is scanned with per-position params stacked over ``n_units`` — HLO
+size stays O(unit) regardless of depth (81-layer zamba2 compiles the same
+HLO as a 3-layer stack).  ``shared_attn`` blocks read their params from a
+closure (true cross-layer weight sharing) while their caches stay per-layer.
+
+Public API (all pure functions over plain-dict params):
+    init_model / model_axes
+    loss_fn(params, cfg, batch)            -> (loss, metrics)
+    init_cache_specs(cfg, batch, max_seq)  -> ShapeDtypeStruct tree
+    prefill(params, cfg, batch)            -> (last_logits, cache)
+    decode_step(params, cfg, tokens, cache, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..pshard import lshard
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+
+Params = Dict[str, Any]
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+def _zero_aux():
+    return {k: jnp.float32(0.0) for k in AUX_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# single block init/axes/apply by kind
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg, kind: str, *, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn_dense", "attn_moe", "shared_attn", "enc_attn"):
+        p = {"ln1": L.init_rms_norm(d), "ln2": L.init_rms_norm(d)}
+        p["attn"] = L.init_mla(ks[0], cfg) if cfg.mla else L.init_attention(ks[0], cfg)
+        if kind == "attn_moe":
+            p["moe"] = M.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_act)
+        if cross:
+            p["ln_x"] = L.init_rms_norm(d)
+            p["cross"] = L.init_cross_attention(ks[2], cfg)
+        return p
+    if kind == "mamba":
+        return {"ln1": L.init_rms_norm(d), "mamba": S.init_mamba2(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"ln1": L.init_rms_norm(d), "mlstm": X.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": L.init_rms_norm(d), "slstm": X.init_slstm(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def _block_axes(cfg, kind: str, *, cross: bool = False) -> Params:
+    if kind in ("attn_dense", "attn_moe", "shared_attn", "enc_attn"):
+        p = {"ln1": L.rms_norm_axes(), "ln2": L.rms_norm_axes()}
+        p["attn"] = L.mla_axes(cfg) if cfg.mla else L.attention_axes(cfg)
+        if kind == "attn_moe":
+            p["moe"] = M.moe_axes(cfg)
+        else:
+            p["mlp"] = L.mlp_axes(cfg.mlp_act)
+        if cross:
+            p["ln_x"] = L.rms_norm_axes()
+            p["cross"] = L.cross_attention_axes(cfg)
+        return p
+    if kind == "mamba":
+        return {"ln1": L.rms_norm_axes(), "mamba": S.mamba2_axes(cfg)}
+    if kind == "mlstm":
+        return {"ln1": L.rms_norm_axes(), "mlstm": X.mlstm_axes(cfg)}
+    if kind == "slstm":
+        return {"ln1": L.rms_norm_axes(), "slstm": X.slstm_axes(cfg)}
+    raise ValueError(kind)
+
+
+def _apply_block(p: Params, cfg, kind: str, x: jax.Array, *,
+                 positions, cache=None, q_offset=0, causal=True,
+                 enc_kv=None) -> Tuple[jax.Array, Any, Dict]:
+    """Returns (x, new_cache, aux)."""
+    aux = _zero_aux()
+    new_cache = None
+    qc, kc = cfg.attn_chunk_q, cfg.attn_chunk_k
+
+    if kind in ("attn_dense", "attn_moe", "shared_attn", "enc_attn"):
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.rms_eps)
+        if h.shape[1] > 1:
+            # SP->TP boundary: gather seq (clean all-gather of (b,s,d))
+            h = lshard(h, "batch", "seq", "embed")
+        sub_cache = cache.get("attn") if cache is not None else None
+        if cfg.mla:
+            a, c = L.mla_apply(p["attn"], cfg, h, positions=positions,
+                               cache=sub_cache, q_offset=q_offset, qc=qc, kc=kc)
+        elif kind == "enc_attn":
+            # bidirectional: tiled attention without causal mask
+            q, k, v = L._project_qkv(p["attn"], cfg, h, positions)
+            o = L.tiled_attention(q, k, v, causal=False,
+                                  qc=min(qc, h.shape[1]), kc=min(kc, h.shape[1]))
+            a = jnp.einsum("bhsk,hkd->bsd", o, p["attn"]["wo"].astype(h.dtype))
+            c = None
+        else:
+            a, c = L.attention_apply(p["attn"], cfg, h, positions=positions,
+                                     cache=sub_cache, q_offset=q_offset,
+                                     qc=qc, kc=kc)
+        x = x + a
+        if "cross" in p and enc_kv is not None:
+            hx = L.rms_norm(x, p["ln_x"]["scale"], cfg.rms_eps)
+            x = x + L.cross_attention_apply(p["cross"], cfg, hx, enc_kv)
+        h2 = L.rms_norm(x, p["ln2"]["scale"], cfg.rms_eps)
+        if h2.shape[1] > 1:
+            h2 = lshard(h2, "batch", "seq", "embed")
+        if kind == "attn_moe":
+            mo, maux = M.moe_apply(p["moe"], cfg, h2)
+            aux = {k: aux[k] + maux.get(k, 0.0) for k in AUX_KEYS}
+            x = x + mo
+        else:
+            x = x + L.mlp_apply(p["mlp"], h2, cfg.mlp_act)
+        new_cache = {"attn": c} if c is not None else None
+    elif kind == "mamba":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.rms_eps)
+        if h.shape[1] > 1:
+            h = lshard(h, "batch", "seq", "embed")
+        o, c = S.mamba2_apply(p["mamba"], cfg, h, cache=(
+            cache.get("mamba") if cache is not None else None),
+            chunk=cfg.ssm_chunk)
+        x = x + o
+        new_cache = {"mamba": c} if c is not None else None
+    elif kind == "mlstm":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.rms_eps)
+        if h.shape[1] > 1:
+            h = lshard(h, "batch", "seq", "embed")
+        o, c = X.mlstm_apply(p["mlstm"], cfg, h, cache=(
+            cache.get("mlstm") if cache is not None else None),
+            chunk=cfg.ssm_chunk)
+        x = x + o
+        new_cache = {"mlstm": c} if c is not None else None
+    elif kind == "slstm":
+        h = L.rms_norm(x, p["ln1"]["scale"], cfg.rms_eps)
+        if h.shape[1] > 1:
+            h = lshard(h, "batch", "seq", "embed")
+        o, c = X.slstm_apply(p["slstm"], cfg, h, cache=(
+            cache.get("slstm") if cache is not None else None))
+        x = x + o
+        new_cache = {"slstm": c} if c is not None else None
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _block_cache_spec(cfg, kind: str, batch: int, max_seq: int, dtype,
+                      *, window_bounded: bool = False):
+    if kind in ("attn_dense", "attn_moe", "shared_attn"):
+        if cfg.mla:
+            # the MLA stream is already ~10x compressed — keep bf16
+            mla_dt = jnp.bfloat16 if dtype == jnp.int8 else dtype
+            return {"attn": L.mla_cache_spec(cfg, batch, max_seq, mla_dt)}
+        if window_bounded and cfg.window:
+            # rolling caches are window-bounded (tiny) — bf16 regardless
+            wdt = jnp.bfloat16 if dtype == jnp.int8 else dtype
+            spec = dict(L.attention_cache_spec(cfg, batch, max_seq, wdt))
+            spec.pop("k_scale", None)
+            spec.pop("v_scale", None)
+            S_w = cfg.window + 1
+            spec["k"] = jax.ShapeDtypeStruct(
+                spec["k"].shape[:2] + (S_w,) + spec["k"].shape[3:], wdt)
+            spec["v"] = jax.ShapeDtypeStruct(
+                spec["v"].shape[:2] + (S_w,) + spec["v"].shape[3:], wdt)
+            spec["pos"] = jax.ShapeDtypeStruct((S_w,), jnp.int32)
+            return {"attn": spec}
+        return {"attn": L.attention_cache_spec(cfg, batch, max_seq, dtype)}
+    if kind == "mamba":
+        ssm_dt = jnp.bfloat16 if dtype == jnp.int8 else dtype
+        return {"mamba": S.mamba2_cache_spec(cfg, batch, ssm_dt)}
+    if kind == "mlstm":
+        return {"mlstm": X.mlstm_cache_spec(cfg, batch)}
+    if kind == "slstm":
+        return {"slstm": X.slstm_cache_spec(cfg, batch)}
+    raise ValueError(kind)
+
+
+def _block_cache_axes(cfg, kind: str, *, window_bounded: bool = False,
+                      kv_int8: bool = False):
+    if kind in ("attn_dense", "attn_moe", "shared_attn"):
+        if cfg.mla:
+            return {"attn": L.mla_cache_axes()}
+        if window_bounded and cfg.window:
+            ax = dict(L.attention_cache_axes(int8=False))
+            ax["pos"] = None
+            return {"attn": ax}
+        return {"attn": dict(L.attention_cache_axes(int8=kv_int8))}
+    if kind == "mamba":
+        return {"mamba": S.mamba2_cache_axes()}
+    if kind == "mlstm":
+        return {"mlstm": X.mlstm_cache_axes()}
+    if kind == "slstm":
+        return {"slstm": X.slstm_cache_axes()}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full model init / axes
+# ---------------------------------------------------------------------------
+def init_model(key, cfg) -> Params:
+    head, unit, n_units, tail = cfg.layer_pattern()
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": L.init_embedding(keys[0], cfg.vocab_padded(), cfg.d_model)}
+
+    p["head_blocks"] = [
+        _init_block(k, cfg, kind)
+        for k, kind in zip(jax.random.split(keys[1], max(len(head), 1)), head)]
+
+    def stack_init(k, kind):
+        ks = jax.random.split(k, n_units)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_init_block(kk, cfg, kind, cross=cfg.encdec)
+                              for kk in ks])
+
+    if "shared_attn" in unit:
+        p["shared"] = _init_block(keys[2], cfg, "shared_attn")
+    unit_keys = jax.random.split(keys[3], max(len(unit), 1))
+    p["units"] = [None if kind == "shared_attn" else stack_init(k, kind)
+                  for k, kind in zip(unit_keys, unit)]
+
+    p["tail_blocks"] = [
+        _init_block(k, cfg, kind)
+        for k, kind in zip(jax.random.split(keys[4], max(len(tail), 1)), tail)]
+
+    p["final_norm"] = L.init_rms_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_unembed(keys[5], cfg.d_model, cfg.vocab_padded())
+
+    if cfg.encdec:
+        ek = jax.random.split(keys[6], cfg.n_enc_layers + 1)
+        enc_cfg = dataclasses.replace(cfg, encdec=False)
+        enc_stack = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_init_block(k, enc_cfg, "enc_attn") for k in ek[:-1]])
+        p["enc"] = {"units": enc_stack, "final_norm": L.init_rms_norm(cfg.d_model)}
+    return p
+
+
+def model_axes(cfg) -> Params:
+    head, unit, n_units, tail = cfg.layer_pattern()
+    ax: Params = {"embed": L.embedding_axes()}
+    ax["head_blocks"] = [_block_axes(cfg, kind) for kind in head]
+
+    def stacked_axes(kind):
+        base = _block_axes(cfg, kind, cross=cfg.encdec)
+        return jax.tree.map(lambda names: (None,) + names, base,
+                            is_leaf=lambda t: isinstance(t, tuple)
+                            and all(isinstance(e, (str, type(None))) for e in t))
+
+    if "shared_attn" in unit:
+        ax["shared"] = _block_axes(cfg, "shared_attn")
+    ax["units"] = [None if kind == "shared_attn" else stacked_axes(kind)
+                   for kind in unit]
+    ax["tail_blocks"] = [_block_axes(cfg, kind) for kind in tail]
+    ax["final_norm"] = L.rms_norm_axes()
+    if not cfg.tie_embeddings:
+        ax["unembed"] = L.unembed_axes()
+    if cfg.encdec:
+        enc_cfg = dataclasses.replace(cfg, encdec=False)
+        base = _block_axes(enc_cfg, "enc_attn")
+        ax["enc"] = {
+            "units": jax.tree.map(
+                lambda names: (None,) + names, base,
+                is_leaf=lambda t: isinstance(t, tuple)
+                and all(isinstance(e, (str, type(None))) for e in t)),
+            "final_norm": L.rms_norm_axes()}
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# backbone: scan over units
+# ---------------------------------------------------------------------------
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def _seq_shard(x: jax.Array) -> jax.Array:
+    """Sequence-parallel constraint on the residual stream (the remat-saved
+    scan carry).  Skipped for single-token decode."""
+    if x.ndim == 3 and x.shape[1] > 1:
+        return lshard(x, "batch", "seq_resid", "embed")
+    return x
+
+
+def _run_stack(params: Params, cfg, x: jax.Array, *, positions,
+               caches=None, q_offset=0, enc_kv=None, remat: str = "full",
+               dtype=jnp.bfloat16):
+    """Head blocks -> scanned units -> tail blocks.  ``caches`` mirrors the
+    block structure ({"head": [...], "units": [per-pos stacked], "tail": [...]})
+    or None.  Returns (x, new_caches, aux)."""
+    head, unit, n_units, tail = cfg.layer_pattern()
+    aux = _zero_aux()
+    new_caches = {"head": [], "units": [], "tail": []} if caches is not None else None
+
+    def cast(t):
+        return jax.tree.map(lambda w: w.astype(dtype)
+                            if jnp.issubdtype(w.dtype, jnp.floating) else w, t)
+
+    x = _seq_shard(x)
+    for i, kind in enumerate(head):
+        c = caches["head"][i] if caches is not None else None
+        x, nc, a = _apply_block(cast(params["head_blocks"][i]), cfg, kind, x,
+                                positions=positions, cache=c,
+                                q_offset=q_offset, enc_kv=enc_kv)
+        x = _seq_shard(x)
+        aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+        if caches is not None:
+            new_caches["head"].append(nc)
+
+    if n_units > 0 and unit:
+        shared = cast(params.get("shared")) if "shared_attn" in unit else None
+        # caches ride in the scan CARRY and are updated via in-place
+        # dynamic slicing — threading them through xs/ys makes XLA's
+        # copy-insertion materialize a full extra cache (one cache-sized
+        # temp measured on every 32k decode cell; EXPERIMENTS.md §Perf)
+        has_cache = caches is not None
+
+        def unit_body(carry, xs):
+            x, aux, ucaches, idx = carry
+            unit_params = xs
+            new_ucaches = []
+            for pos, kind in enumerate(unit):
+                bp = shared if kind == "shared_attn" else cast(unit_params[pos])
+                c = (jax.tree.map(
+                    lambda t: jax.lax.dynamic_index_in_dim(
+                        t, idx, keepdims=False), ucaches[pos])
+                    if has_cache else None)
+                x, nc, a = _apply_block(bp, cfg, kind, x, positions=positions,
+                                        cache=c, q_offset=q_offset,
+                                        enc_kv=enc_kv)
+                x = _seq_shard(x)
+                aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+                new_ucaches.append(nc)
+            if has_cache:
+                ucaches = [jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new.astype(full.dtype), idx, axis=0),
+                    ucaches[pos2], new_ucaches[pos2])
+                    for pos2 in range(len(unit))]
+            return (x, aux, ucaches, idx + 1), None
+
+        body = _remat(unit_body, remat)
+        # shared positions scan a size-n_units dummy so xs stay aligned
+        xs_params = [jnp.zeros((n_units,)) if k == "shared_attn"
+                     else params["units"][i] for i, k in enumerate(unit)]
+        carry_caches = caches["units"] if has_cache else [None] * len(unit)
+        (x, aux, carry_caches, _), _ = jax.lax.scan(
+            body, (x, aux, carry_caches, jnp.int32(0)), xs_params)
+        if has_cache:
+            new_caches["units"] = carry_caches
+
+    for i, kind in enumerate(tail):
+        c = caches["tail"][i] if caches is not None else None
+        x, nc, a = _apply_block(cast(params["tail_blocks"][i]), cfg, kind, x,
+                                positions=positions, cache=c,
+                                q_offset=q_offset, enc_kv=enc_kv)
+        aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+        if caches is not None:
+            new_caches["tail"].append(nc)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# encoder (enc-dec archs)
+# ---------------------------------------------------------------------------
+def _run_encoder(params: Params, cfg, enc_embeds: jax.Array, *,
+                 remat: str = "full", dtype=jnp.bfloat16):
+    """enc_embeds: (b, frames, d) from the modality-frontend stub."""
+    enc_cfg = dataclasses.replace(cfg, encdec=False)
+    b, s, _ = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = enc_embeds.astype(dtype)
+
+    def cast(t):
+        return jax.tree.map(lambda w: w.astype(dtype)
+                            if jnp.issubdtype(w.dtype, jnp.floating) else w, t)
+
+    def body(x, blk):
+        x, _, _ = _apply_block(cast(blk), enc_cfg, "enc_attn", x,
+                               positions=positions)
+        return _seq_shard(x), None
+
+    x, _ = jax.lax.scan(_remat(body, remat), x, params["enc"]["units"])
+    return L.rms_norm(x, params["enc"]["final_norm"]["scale"].astype(dtype),
+                      cfg.rms_eps)
+
+
+def _encoder_cross_kv(params: Params, cfg, enc_out: jax.Array):
+    """Precompute per-(scanned)-layer cross K/V from encoder output.  The
+    decoder's cross weights live in the scanned unit params; vmap over the
+    layer dim computes all layers' K/V in one batched einsum."""
+    cross_stacked = params["units"][0]["cross"]  # (n_units, ...)
+    dt = enc_out.dtype
+
+    def one(cp):
+        return L.cross_kv(cast_tree(cp, dt), cfg, enc_out)
+
+    return jax.vmap(one, in_axes=(0,))(cross_stacked)
+
+
+def cast_tree(t, dtype):
+    return jax.tree.map(lambda w: w.astype(dtype)
+                        if jnp.issubdtype(w.dtype, jnp.floating) else w, t)
+
+
+# ---------------------------------------------------------------------------
+# public entrypoints
+# ---------------------------------------------------------------------------
+def loss_fn(params: Params, cfg, batch: Dict[str, jax.Array], *,
+            remat: str = "full", dtype=jnp.bfloat16,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token LM loss.  batch: {"tokens": (b,s) int32, "labels": (b,s)
+    int32 (-1 = masked)} plus "enc_embeds" for enc-dec archs."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_apply(cast_tree(params["embed"], dtype), tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    if cfg.encdec:
+        enc_out = _run_encoder(params, cfg, batch["enc_embeds"],
+                               remat=remat, dtype=dtype)
+        # per-layer cross K/V, stacked over n_units, consumed one slice per
+        # scan step inside the decoder
+        enc_kv = _encoder_cross_kv(params, cfg, enc_out)
+        x, aux = _run_decoder_with_cross(params, cfg, x, positions, enc_kv,
+                                         remat=remat, dtype=dtype)
+    else:
+        x, _, aux = _run_stack(params, cfg, x, positions=positions,
+                               remat=remat, dtype=dtype)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"].astype(dtype), cfg.rms_eps)
+    w_un = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["unembed"]["w"])
+    loss = L.chunked_xent(x.reshape(b * s, -1), w_un,
+                          batch["labels"].reshape(-1),
+                          chunk=cfg.xent_chunk, vocab_size=cfg.vocab_size)
+    metrics = dict(aux)
+    total = loss + aux_weight * (aux["moe_lb_loss"] + aux["moe_z_loss"])
+    metrics["nll"] = loss
+    return total, metrics
+
+
+def _run_decoder_with_cross(params, cfg, x, positions, enc_kv_stacked, *,
+                            remat, dtype, caches=None, q_offset=0):
+    """Decoder stack for enc-dec: the scanned unit consumes one layer's cross
+    K/V per step (stacked over n_units, passed through scan xs)."""
+    head, unit, n_units, tail = cfg.layer_pattern()
+    assert head == () and tail == () and len(unit) == 1, \
+        "enc-dec uses a homogeneous decoder stack"
+    aux = _zero_aux()
+
+    def cast(t):
+        return cast_tree(t, dtype)
+
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        x, aux, ucache, idx = carry
+        blk, kv = xs
+        c = (jax.tree.map(lambda t: jax.lax.dynamic_index_in_dim(
+            t, idx, keepdims=False), ucache) if has_cache else None)
+        x, nc, a = _apply_block(cast(blk), cfg, unit[0], x,
+                                positions=positions, cache=c,
+                                q_offset=q_offset,
+                                enc_kv=cast(kv))
+        x = _seq_shard(x)
+        aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+        if has_cache:
+            ucache = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), idx, axis=0), ucache, nc)
+        return (x, aux, ucache, idx + 1), None
+
+    carry_cache = caches["units"][0] if has_cache else None
+    (x, aux, carry_cache, _), _ = jax.lax.scan(
+        _remat(body, remat), (x, aux, carry_cache, jnp.int32(0)),
+        (params["units"][0], enc_kv_stacked))
+    new_caches = None
+    if has_cache:
+        new_caches = {"head": [], "units": [carry_cache], "tail": []}
+    return (x, aux) if caches is None else (x, aux, new_caches)
+
+
+def init_cache_specs(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                     *, window_bounded: bool = False):
+    """ShapeDtypeStruct tree for the decode cache (allocate with
+    jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs))."""
+    head, unit, n_units, tail = cfg.layer_pattern()
+    spec = {
+        "head": [_block_cache_spec(cfg, k, batch, max_seq, dtype,
+                                   window_bounded=window_bounded) for k in head],
+        "units": [jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_units,) + s.shape, s.dtype),
+            _block_cache_spec(cfg, k, batch, max_seq, dtype,
+                              window_bounded=window_bounded)) for k in unit],
+        "tail": [_block_cache_spec(cfg, k, batch, max_seq, dtype,
+                                   window_bounded=window_bounded) for k in tail],
+    }
+    if cfg.encdec:
+        # cross K/V (per scanned layer) computed at prefill from the encoder
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim()
+        spec["cross_kv"] = {
+            "k": jax.ShapeDtypeStruct((n_units, batch, kvh, cfg.frontend_len, hd), dtype),
+            "v": jax.ShapeDtypeStruct((n_units, batch, kvh, cfg.frontend_len, hd), dtype),
+        }
+    return spec
+
+
+def cache_axes(cfg, *, window_bounded: bool = False, kv_int8: bool = False):
+    head, unit, n_units, tail = cfg.layer_pattern()
+
+    def stacked(ax):
+        return jax.tree.map(lambda names: ((None,) + names) if names else None,
+                            ax, is_leaf=lambda t: t is None or (
+                                isinstance(t, tuple) and all(
+                                    isinstance(e, (str, type(None))) for e in t)))
+
+    def bca(k):
+        return _block_cache_axes(cfg, k, window_bounded=window_bounded,
+                                 kv_int8=kv_int8)
+
+    ax = {
+        "head": [bca(k) for k in head],
+        "units": [stacked(bca(k)) for k in unit],
+        "tail": [bca(k) for k in tail],
+    }
+    if cfg.encdec:
+        ax["cross_kv"] = {"k": (None, "batch", "kv_heads", None, "head_dim"),
+                          "v": (None, "batch", "kv_heads", None, "head_dim")}
+    return ax
+
+
+def alloc_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                *, window_bounded: bool = False):
+    specs = init_cache_specs(cfg, batch, max_seq, dtype,
+                             window_bounded=window_bounded)
+    # "pos" leaves (rolling-window slot positions) start at -1 = empty
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: (jnp.full(s.shape, -1, s.dtype)
+                      if any(getattr(k, "key", None) == "pos" for k in p)
+                      else jnp.zeros(s.shape, s.dtype)), specs)
+
+
+def prefill(params: Params, cfg, batch: Dict[str, jax.Array], cache, *,
+            remat: str = "full", dtype=jnp.bfloat16):
+    """Run the prompt through the model, filling ``cache``.  Returns
+    (logits_last (b, vocab), cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_apply(cast_tree(params["embed"], dtype), tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    if cfg.encdec:
+        enc_out = _run_encoder(params, cfg, batch["enc_embeds"],
+                               remat=remat, dtype=dtype)
+        enc_kv = _encoder_cross_kv(params, cfg, enc_out)
+        x, _, new_caches = _run_decoder_with_cross(
+            params, cfg, x, positions, enc_kv, remat=remat, dtype=dtype,
+            caches={"units": [cache["units"][0]], "head": [], "tail": []})
+        new_caches["cross_kv"] = enc_kv
+    else:
+        x, new_caches, _ = _run_stack(params, cfg, x, positions=positions,
+                                      caches=cache, remat=remat, dtype=dtype)
+    x = L.rms_norm(x[:, -1:], params["final_norm"]["scale"].astype(dtype),
+                   cfg.rms_eps)
+    w_un = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["unembed"]["w"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w_un.astype(dtype))[:, 0]
+    return logits.astype(jnp.float32), new_caches
+
+
+def decode_step(params: Params, cfg, tokens: jax.Array, cache, pos, *,
+                dtype=jnp.bfloat16):
+    """One decode step.  tokens: (b,) int32; pos: scalar int32 (absolute
+    position being written).  Returns (logits (b, vocab), cache)."""
+    b = tokens.shape[0]
+    x = L.embed_apply(cast_tree(params["embed"], dtype), tokens[:, None], dtype)
+    positions = jnp.broadcast_to(pos[None, None] if jnp.ndim(pos) == 0
+                                 else pos, (b, 1)).astype(jnp.int32)
+
+    if cfg.encdec:
+        enc_kv = cache["cross_kv"]
+        x, _, new_caches = _run_decoder_with_cross(
+            params, cfg, x, positions, enc_kv, remat="none", dtype=dtype,
+            caches={"units": [cache["units"][0]], "head": [], "tail": []},
+            q_offset=pos)
+        new_caches["cross_kv"] = enc_kv
+    else:
+        x, new_caches, _ = _run_stack(params, cfg, x, positions=positions,
+                                      caches=cache, q_offset=pos,
+                                      remat="none", dtype=dtype)
+    x = L.rms_norm(x, params["final_norm"]["scale"].astype(dtype), cfg.rms_eps)
+    w_un = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["unembed"]["w"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w_un.astype(dtype))[:, 0]
+    return logits.astype(jnp.float32), new_caches

@@ -1,0 +1,323 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel
+training like linear attention) and sLSTM (scalar memory, recurrent scan).
+
+mLSTM per head (head_dim = hd):
+    m_t = max(logsig(f~_t) + m_{t-1}, i~_t)                 stabilizer
+    C_t = f'_t C_{t-1} + i'_t v_t k_t^T                     C: (hd, hd)
+    n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = o_t o ( C_t q_t / max(|n_t^T q_t|, exp(-m_t)) )
+with f' = exp(logsig(f~) + m_{t-1} - m_t), i' = exp(i~ - m_t).  Training uses
+the chunkwise form (TFLA-style): intra-chunk masked (q k^T o decay) v matmul
+plus an inter-chunk carried (C, n, m) state — same skeleton as Mamba2's SSD
+scan, with the extra running-max stabilizer and normalizer row.
+
+sLSTM is inherently recurrent (head-block-diagonal recurrence matrices) and
+runs as a ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..pshard import lshard
+from .layers import _dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def xlstm_dims(cfg):
+    d_in = int(cfg.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = d_in // h
+    return d_in, h, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg) -> Params:
+    d = cfg.d_model
+    d_in, h, hd = xlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _dense_init(ks[0], (d, d_in), d),
+        "w_gate": _dense_init(ks[1], (d, d_in), d),
+        "wq": _dense_init(ks[2], (d_in, h, hd), d_in),
+        "wk": _dense_init(ks[3], (d_in, h, hd), d_in),
+        "wv": _dense_init(ks[4], (d_in, h, hd), d_in),
+        "w_if": _dense_init(ks[5], (d, 2 * h), d),
+        "b_if": jnp.concatenate([jnp.full((h,), -3.0), jnp.full((h,), 3.0)]),
+        "out_norm": jnp.ones((d_in,), jnp.float32),
+        "w_down": _dense_init(ks[6], (d_in, d), d_in),
+    }
+
+
+def mlstm_axes(cfg) -> Params:
+    return {
+        "w_up": ("embed", "mlp"), "w_gate": ("embed", "mlp"),
+        "wq": ("mlp", "heads", "head_dim"), "wk": ("mlp", "heads", "head_dim"),
+        "wv": ("mlp", "heads", "head_dim"),
+        "w_if": ("embed", "heads"), "b_if": ("heads",),
+        "out_norm": ("mlp",), "w_down": ("mlp", "embed"),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk: int):
+    """q,k,v: (b,s,h,hd) f32; log_f (logsigmoid of forget preact), log_i:
+    (b,s,h).  Returns h_out (b,s,h,hd) f32 and final (C, n, m) state."""
+    b, s, h, hd = q.shape
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        padf = lambda t, fill=0.0: jnp.pad(
+            t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2), constant_values=fill)
+        q, k, v = padf(q), padf(k), padf(v)
+        log_f = padf(log_f)           # pad f~=0 -> keeps state, harmless
+        log_i = padf(log_i, -1e30)    # pad i -> -inf: no contribution
+    nc = q.shape[1] // L
+    ch = lambda t: jnp.moveaxis(t.reshape((b, nc, L) + t.shape[2:]), 1, 0)
+    qc, kc, vc, fc, ic = ch(q), ch(k), ch(v), ch(log_f), ch(log_i)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def body(carry, inp):
+        C, n, m = carry               # (b,h,hd,hd), (b,h,hd), (b,h)
+        qq, kk, vv, ff, ii = inp      # (b,L,h,hd) x3, (b,L,h) x2
+        fcum = jnp.cumsum(ff, axis=1)                     # (b,L,h)
+        # per-position stabilizer: max(intra contributions, carried state)
+        # intra candidate: max_j<=i (fcum_i - fcum_j + ii_j)
+        g = ii - fcum                                     # (b,L,h)
+        g_runmax = jax.lax.cummax(g, axis=1)
+        m_intra = fcum + g_runmax
+        m_state = fcum + m[:, None, :]
+        m_new = jnp.maximum(m_intra, m_state)             # (b,L,h)
+        # intra-chunk masked decay matrix
+        Dlog = (fcum[:, :, None, :] - fcum[:, None, :, :]
+                + ii[:, None, :, :] - m_new[:, :, None, :])   # (b,L,M,h)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(mask[None, :, :, None], jnp.exp(Dlog), 0.0)
+        S = jnp.einsum("blhd,bmhd->blmh", qq, kk,
+                       preferred_element_type=jnp.float32) * scale
+        h_intra = jnp.einsum("blmh,bmhd->blhd", S * D, vv,
+                             preferred_element_type=jnp.float32)
+        n_intra = jnp.einsum("blmh,bmhd->blhd", D, kk,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: carried state, decayed from chunk start
+        w_in = jnp.exp(fcum + m[:, None, :] - m_new)      # (b,L,h)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qq, C,
+                             preferred_element_type=jnp.float32) * scale
+        h_num = h_intra + h_inter * w_in[..., None]
+        n_tot = n_intra + n[:, None, :, :] * w_in[..., None]
+        denom = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", qq, n_tot)
+                                    * scale), jnp.exp(-m_new))
+        h_out = h_num / denom[..., None]
+        # new carried state
+        ftot = fcum[:, -1, :]                              # (b,h)
+        m_next = jnp.maximum(ftot + m, ftot + g_runmax[:, -1, :])
+        w_st = jnp.exp(ftot[:, None, :] - fcum + ii - m_next[:, None, :])  # (b,L,h)
+        C_new = (jnp.exp(ftot + m - m_next)[:, :, None, None] * C
+                 + jnp.einsum("blh,blhd,blhe->bhde", w_st, kk, vv,
+                              preferred_element_type=jnp.float32))
+        n_new = (jnp.exp(ftot + m - m_next)[:, :, None] * n
+                 + jnp.einsum("blh,blhd->bhd", w_st, kk))
+        return (C_new, n_new, m_next), h_out
+
+    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, fc, ic))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, nc * L, h, hd)[:, :s]
+    return hs, (C, n, m)
+
+
+def mlstm_apply(p: Params, cfg, x: jax.Array, *,
+                cache: Optional[Params] = None, chunk: int = 128
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    dt = x.dtype
+    d_in, h, hd = xlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(dt))
+    gate = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(dt))
+    up = lshard(up, "batch", "seq", "mlp")
+    q = jnp.einsum("bse,ehk->bshk", up, p["wq"].astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bse,ehk->bshk", up, p["wk"].astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bse,ehk->bshk", up, p["wv"].astype(dt)).astype(jnp.float32)
+    q = lshard(q, "batch", "seq", "heads", "head_dim")
+    k = lshard(k, "batch", "seq", "heads", "head_dim")
+    v = lshard(v, "batch", "seq", "heads", "head_dim")
+    gif = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32),
+                     p["w_if"].astype(jnp.float32)) + p["b_if"]
+    log_i, f_pre = gif[..., :h], gif[..., h:]
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    if cache is not None and s == 1:
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        ii, ff = log_i[:, 0], log_f[:, 0]                 # (b,h)
+        m_new = jnp.maximum(ff + m, ii)
+        fp = jnp.exp(ff + m - m_new)
+        ip = jnp.exp(ii - m_new)
+        C_new = fp[:, :, None, None] * C + ip[:, :, None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k[:, 0], v[:, 0])
+        n_new = fp[:, :, None] * n + ip[:, :, None] * k[:, 0]
+        scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+        num = jnp.einsum("bhd,bhde->bhe", q[:, 0], C_new) * scale
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, 0], n_new)
+                                  * scale), jnp.exp(-m_new))
+        hs = (num / den[..., None])[:, None]              # (b,1,h,hd)
+        new_cache = {"C": C_new, "n": n_new, "m": m_new,
+                     "len": cache["len"] + 1}
+    else:
+        hs, (C, n, m) = _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"C": C, "n": n, "m": m, "len": jnp.int32(s)}
+
+    y = hs.reshape(b, -1, d_in).astype(dt)
+    y = rms_norm(y, p["out_norm"], cfg.rms_eps)
+    y = y * jax.nn.silu(gate[:, : y.shape[1]])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(dt))
+    return lshard(out, "batch", "seq", "embed"), new_cache
+
+
+def mlstm_cache_spec(cfg, batch: int):
+    d_in, h, hd = xlstm_dims(cfg)
+    return {"C": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, h, hd), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+            "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def mlstm_cache_axes():
+    return {"C": ("batch", "heads", "head_dim", None),
+            "n": ("batch", "heads", "head_dim"),
+            "m": ("batch", "heads"), "len": None}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    # 4 gates (z, i, f, o): input weights (d, 4, h, hd), recurrent
+    # block-diagonal per head (4, h, hd, hd)
+    f_up = int(cfg.proj_factor * d)
+    return {
+        "w_in": _dense_init(ks[0], (d, 4, h, hd), d),
+        "r": jax.random.normal(ks[1], (4, h, hd, hd), jnp.float32) / jnp.sqrt(hd),
+        "b": jnp.concatenate([jnp.zeros((2, h, hd)),
+                              jnp.full((1, h, hd), 3.0),      # f bias
+                              jnp.zeros((1, h, hd))], 0),
+        "w_up": _dense_init(ks[2], (d, f_up), d),
+        "w_down": _dense_init(ks[3], (f_up, d), f_up),
+    }
+
+
+def slstm_axes(cfg) -> Params:
+    # sLSTM state math is replicated across the model axis (tiny per-step
+    # matmuls; TP would emit one small all-reduce per timestep).  Only the
+    # post-block MLP is tensor-sharded.
+    return {"w_in": ("embed", None, None, None),
+            "r": (None, None, None, None),
+            "b": (None, None, None),
+            "w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+
+
+def _slstm_cell(p, zifo, state):
+    """One step.  zifo: (b,4,h,hd) input preactivations; state tuple."""
+    c, n, m, h_prev = state
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, p["r"].astype(h_prev.dtype))
+    pre = zifo.astype(jnp.float32) + rec.astype(jnp.float32) + p["b"]
+    z = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(f_t + m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_t + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(p: Params, cfg, x: jax.Array, *,
+                cache: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    dt = x.dtype
+    h = cfg.n_heads
+    hd = d // h
+    zifo = jnp.einsum("bsd,dghk->bsghk", x, p["w_in"].astype(dt))  # (b,s,4,h,hd)
+
+    if cache is not None and s == 1:
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+        state = _slstm_cell(p, zifo[:, 0], state)
+        hs = state[3][:, None]
+        new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                     "h": state[3], "len": cache["len"] + 1}
+    else:
+        z0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h, hd), -1e30, jnp.float32)
+        init = (z0, z0, m0, z0)
+
+        def body(state, x_t):
+            zi, valid = x_t
+            st = _slstm_cell(p, zi, state)
+            # padded steps are identity on the carried state
+            st = jax.tree.map(lambda new, old: jnp.where(valid, new, old),
+                              st, state)
+            return st, st[3]
+
+        # sqrt-spacing checkpointed scan-over-scan: the backward of a plain
+        # per-step scan saves O(seq) per-step states (~GBs at seq 4k); the
+        # nested form saves only the outer-chunk carries and recomputes
+        # inside (§Perf iteration F)
+        chunk = 1
+        while chunk * chunk < s:
+            chunk *= 2
+        pad = (-s) % chunk
+        zs = jnp.moveaxis(zifo, 1, 0)                     # (s,b,4,h,hd)
+        valid = jnp.arange(s + pad) < s
+        if pad:
+            zs = jnp.concatenate(
+                [zs, jnp.zeros((pad,) + zs.shape[1:], zs.dtype)], 0)
+        n_outer = zs.shape[0] // chunk
+        zs = zs.reshape((n_outer, chunk) + zs.shape[1:])
+        valid = valid.reshape(n_outer, chunk)
+
+        @jax.checkpoint
+        def outer(state, xt):
+            st, hh = jax.lax.scan(body, state, xt)
+            return st, hh
+
+        state, hs = jax.lax.scan(outer, init, (zs, valid))
+        hs = hs.reshape((n_outer * chunk,) + hs.shape[2:])[:s]
+        hs = jnp.moveaxis(hs, 0, 1)                       # (b,s,h,hd)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                         "h": state[3], "len": jnp.int32(s)}
+
+    y = hs.reshape(b, -1, d).astype(dt)
+    # post-up/down projection (xLSTM sLSTM block MLP)
+    u = jnp.einsum("bsd,df->bsf", y, p["w_up"].astype(dt))
+    u = lshard(jax.nn.gelu(u), "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", u, p["w_down"].astype(dt))
+    return lshard(out, "batch", "seq", "embed"), new_cache
+
+
+def slstm_cache_spec(cfg, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    sd = jax.ShapeDtypeStruct((batch, h, hd), jnp.float32)
+    return {"c": sd, "n": sd, "m": sd, "h": sd,
+            "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def slstm_cache_axes():
+    a = ("batch", "heads", "head_dim")
+    return {"c": a, "n": a, "m": a, "h": a, "len": None}

@@ -1,0 +1,5 @@
+from .optimizers import (adamw_dir, init_opt_state, sgd_dir, update_direction)
+from .schedules import make_schedule
+
+__all__ = ["adamw_dir", "init_opt_state", "make_schedule", "sgd_dir",
+           "update_direction"]

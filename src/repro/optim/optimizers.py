@@ -1,0 +1,71 @@
+"""Optimizers as UPDATE-DIRECTION producers.
+
+DC-DGD's gradient step (paper eq. 5) is  z = y - alpha_t * g.  The framework
+generalizes g to a preconditioned direction u(g, state) so the same consensus
+machinery runs plain SGD (paper-faithful) or a local AdamW preconditioner
+(beyond-paper; standard practice in decentralized DL, flagged experimental in
+DESIGN.md §2.3).  All functions are pytree-wise and jit-friendly; in
+node-stacked training the leaves carry a leading node dim and every node
+keeps its own moments (no cross-node state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    m: PyTree           # first moment (adam) or momentum (sgd)
+    v: PyTree           # second moment (adam only; empty tuple for sgd)
+    count: jax.Array
+
+
+def init_opt_state(optimizer: str, params: PyTree) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    if optimizer == "adam":
+        return OptState(m=zeros, v=jax.tree.map(jnp.zeros_like, params),
+                        count=jnp.int32(0))
+    if optimizer in ("sgd", "momentum"):
+        m = zeros if optimizer == "momentum" else ()
+        return OptState(m=m, v=(), count=jnp.int32(0))
+    raise ValueError(optimizer)
+
+
+def sgd_dir(grads: PyTree, state: OptState, *, momentum: float = 0.0
+            ) -> Tuple[PyTree, OptState]:
+    if momentum and state.m != ():
+        m = jax.tree.map(lambda mm, g: momentum * mm + g, state.m, grads)
+        return m, OptState(m=m, v=(), count=state.count + 1)
+    return grads, OptState(m=state.m, v=(), count=state.count + 1)
+
+
+def adamw_dir(grads: PyTree, state: OptState, params: PyTree, *,
+              b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+              weight_decay: float = 0.0) -> Tuple[PyTree, OptState]:
+    cnt = state.count + 1
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+    c1 = 1.0 - b1 ** cnt.astype(jnp.float32)
+    c2 = 1.0 - b2 ** cnt.astype(jnp.float32)
+
+    def direction(mm, vv, p):
+        u = (mm / c1) / (jnp.sqrt(vv / c2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p
+        return u
+
+    return (jax.tree.map(direction, m, v, params),
+            OptState(m=m, v=v, count=cnt))
+
+
+def update_direction(optimizer: str, grads: PyTree, state: OptState,
+                     params: PyTree, **kw) -> Tuple[PyTree, OptState]:
+    if optimizer == "adam":
+        return adamw_dir(grads, state, params, **kw)
+    if optimizer == "momentum":
+        return sgd_dir(grads, state, momentum=kw.get("momentum", 0.9))
+    return sgd_dir(grads, state)

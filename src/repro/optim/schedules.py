@@ -1,0 +1,48 @@
+"""Step-size schedules, including the paper's Corollary-1 rate.
+
+Theorem 1 caps the constant step at
+    alpha_max = (lambda_N (eta+1) + eta - 1) / (L (1+eta))
+and Corollary 1 achieves O(1/t^{2/3}) with
+    alpha_t = (C2 / t)^{1/3},  C2 = (f(0)-f*) (1-beta)^2 / (D^2 N^2 L),
+clipped to alpha_max.  For LM training L/D/f* are unknown a priori; the
+`cor1` schedule therefore takes (alpha0, cap) and applies the t^{-1/3}
+decay shape — the paper-faithful *rate*, with empirical constants.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, alpha: float, *, cap: Optional[float] = None,
+                  warmup: int = 0, total: int = 0) -> Callable:
+    cap = cap if cap is not None else alpha
+
+    def constant(t):
+        return jnp.float32(alpha)
+
+    def cor1(t):
+        a = alpha * (1.0 / jnp.maximum(t.astype(jnp.float32), 1.0)) ** (1.0 / 3.0)
+        return jnp.minimum(a, cap)
+
+    def cosine(t):
+        tt = jnp.clip((t.astype(jnp.float32) - warmup) / max(total - warmup, 1),
+                      0.0, 1.0)
+        a = 0.5 * alpha * (1 + jnp.cos(jnp.pi * tt))
+        return a
+
+    def rsqrt(t):
+        return alpha / jnp.sqrt(jnp.maximum(t.astype(jnp.float32), 1.0))
+
+    table = {"constant": constant, "cor1": cor1, "cosine": cosine,
+             "rsqrt": rsqrt}
+    if kind not in table:
+        raise ValueError(f"unknown schedule {kind}")
+    base = table[kind]
+    if warmup and kind != "cosine":
+        def with_warmup(t):
+            w = jnp.minimum(t.astype(jnp.float32) / max(warmup, 1), 1.0)
+            return w * base(t)
+        return with_warmup
+    return base

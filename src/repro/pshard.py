@@ -1,0 +1,180 @@
+"""Logical-axis sharding: the one place where model code meets mesh axes.
+
+Model code annotates activations/params with *logical* axis names
+("batch", "heads", "mlp", ...).  A thread-local :class:`AxisRules` mapping
+(set by the trainer / server / dryrun builders before tracing) resolves them
+to physical mesh axes.  This is what makes hillclimbing a config change:
+swapping the sharding scheme = swapping the rules dict, not the model.
+
+Two mapping tables live in a rules object:
+  * ``compute`` — how activations / in-layer weights are laid out for math.
+  * ``storage`` — how params are laid out at rest (e.g. FSDP adds a "data"
+    dim on ``embed``/``mlp`` weight axes; compute rules strip it again,
+    which is exactly the GSPMD all-gather-per-layer FSDP pattern).
+
+Under node-stacked DC-DGD training the model is wrapped in
+``jax.vmap(..., spmd_axis_name=<consensus axes>)``: JAX then prepends the
+consensus mesh axes to every constraint emitted here, so the same model code
+serves both the per-node and the serving (un-stacked) programs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    compute: Mapping[str, MeshAxes]
+    storage: Mapping[str, MeshAxes]
+    enabled: bool = True
+
+    def spec(self, names: Sequence[Optional[str]], table: str = "compute") -> P:
+        tab = getattr(self, table)
+        return P(*[tab.get(n) if n else None for n in names])
+
+
+# ---------------------------------------------------------------------------
+# default rule sets (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+def default_rules(*, batch_axes: MeshAxes = "data", fsdp: bool = False,
+                  seq_axis: MeshAxes = None, expert_axis: MeshAxes = "model",
+                  tensor_axis: MeshAxes = "model") -> AxisRules:
+    """Build the standard rule set.
+
+    batch_axes: which mesh axes shard the batch dim of activations.  For
+      node-stacked DC-DGD this is None (the consensus axes are consumed by
+      the vmap'd node dim); for serving / allreduce-DP it is ("pod","data")
+      or "data".
+    fsdp: shard big weight matrices' "embed"/"mlp_in" dims over "data" at
+      rest (hierarchical mode for models too big to replicate per replica).
+    """
+    compute = {
+        "batch": batch_axes,
+        "seq": seq_axis,
+        "embed": None,
+        "heads": tensor_axis,
+        "kv_heads": tensor_axis,
+        "kv_stored": None,   # un-expanded kv head dim (not TP-divisible)
+        # contracting dim of the un-expanded kv projections: stored SHARDED
+        # over the tensor axis (so the 6 param-shaped consensus/optimizer
+        # state copies stay sharded), gathered at compute (a few MB/layer)
+        "kv_embed": None,
+        "head_dim": None,
+        "mlp": tensor_axis,
+        "moe_mlp": tensor_axis if expert_axis is None else None,
+        "vocab": tensor_axis,
+        # Megatron-style sequence parallelism for the residual stream: the
+        # saved per-layer activations (the scan carry under remat) shard
+        # their seq dim over the tensor axis; XLA inserts the all-gather /
+        # reduce-scatter pair at block boundaries.  16x less HBM for saved
+        # activations at no extra collective volume vs the plain TP
+        # all-reduce it replaces.
+        "seq_resid": tensor_axis,
+        "experts": expert_axis,
+        "kv_lora": None,
+        "state": None,
+        "conv": None,
+        "cache_seq": None,
+        "frames": seq_axis,
+    }
+    storage = dict(compute)
+    storage["kv_embed"] = tensor_axis
+    if fsdp:
+        # weights at rest carry an extra data-sharded dim; compute rules
+        # re-gather them per layer (FSDP).  Expert weights already shard
+        # "embed" over data — "moe_mlp" must stay unsharded (a mesh axis can
+        # appear in at most one PartitionSpec dim).
+        storage["embed"] = "data"
+        storage["head_dim"] = None
+        storage["moe_mlp"] = None
+        storage["mlp"] = tensor_axis
+        storage["kv_embed"] = ("data", tensor_axis) if tensor_axis else "data"
+    return AxisRules(compute=compute, storage=storage)
+
+
+NO_RULES = AxisRules(compute={}, storage={}, enabled=False)
+
+_tls = threading.local()
+
+
+def current_rules() -> AxisRules:
+    return getattr(_tls, "rules", NO_RULES)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules):
+    prev = current_rules()
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+# ---------------------------------------------------------------------------
+# constraint helpers
+# ---------------------------------------------------------------------------
+def lshard(x: jax.Array, *names: Optional[str], table: str = "compute"):
+    """Constrain ``x`` to the mesh axes the current rules assign to the
+    logical axis ``names``.  The emitted spec is CLOSED: a dim whose logical
+    axis maps to None is pinned replicated (this is what makes e.g. the
+    sequence-parallel <-> tensor-parallel boundary a clean all-gather
+    instead of a propagation-chosen reshard deep inside attention)."""
+    rules = current_rules()
+    if not rules.enabled:
+        return x
+    if _ambient_mesh_empty():
+        return x
+    spec = rules.spec(names, table)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _ambient_mesh_empty() -> bool:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return m is None or m.empty
+    except Exception:
+        return True
+
+
+def tree_lshard(tree, axes_tree, table: str = "compute"):
+    """Apply :func:`lshard` leaf-wise given a parallel tree of logical-axis
+    tuples (``None`` entries skip the leaf)."""
+    rules = current_rules()
+    if not rules.enabled:
+        return tree
+
+    def one(x, names):
+        if names is None:
+            return x
+        return lshard(x, *names, table=table)
+
+    return jax.tree.map(one, tree, axes_tree,
+                        is_leaf=lambda t: t is None or (isinstance(t, tuple)
+                        and all(isinstance(e, (str, type(None))) for e in t)))
+
+
+def logical_to_sharding(axes_tree, mesh, table: str = "storage",
+                        rules: Optional[AxisRules] = None,
+                        prepend: Tuple[str, ...] = ()):
+    """Turn a tree of logical-axis tuples into NamedShardings on ``mesh``
+    (used for in_shardings / checkpoint layouts).  ``prepend`` adds leading
+    mesh axes (the node dim of stacked DC-DGD state)."""
+    rules = rules or current_rules()
+
+    def one(names):
+        spec = rules.spec(names, table)
+        full = P(*(list(prepend) + list(spec)))
+        return jax.sharding.NamedSharding(mesh, full)
+
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda t: isinstance(t, tuple)
+                        and all(isinstance(e, (str, type(None))) for e in t))

@@ -1,0 +1,5 @@
+from .elastic import Membership, rebuild_consensus
+from .fault import StragglerSim, drop_renormalize_plan
+
+__all__ = ["Membership", "rebuild_consensus", "StragglerSim",
+           "drop_renormalize_plan"]

@@ -1,0 +1,92 @@
+"""Straggler / link-failure mitigation for the gossip exchange.
+
+DC-DGD's blast radius on a slow or dead link is O(1) — neighbor-local — vs
+the global barrier of an all-reduce.  Mitigation implemented here:
+
+DROP-AND-RENORMALIZE (default): if a neighbor's packet misses the step
+deadline, the edge is skipped for this step and its weight folded into the
+self-weight.  Drops are sampled per undirected OFFSET CLASS (both directions
+of a circulant offset drop together) so the effective W_t stays SYMMETRIC
+and DOUBLY STOCHASTIC every step — convergence under such time-varying
+consensus matrices follows the standard B-connectivity argument, and the
+self-noise-reduction property is untouched (each node still decodes
+exactly the packets it received).
+
+The alternative (stale-differential substitution: reuse C(d_{j,t-1}) once)
+is intentionally NOT the default: it needs one cached decoded packet per
+neighbor (O(deg) x param memory) — the drop-renormalize rule is free.
+
+``StragglerSim`` drives the simulation in tests/benchmarks: deterministic
+per-(step, offset-class) Bernoulli outages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.gossip import GossipPlan
+
+
+def drop_renormalize_plan(plan: GossipPlan, dropped_classes: Sequence[int]
+                          ) -> List[Tuple[Tuple[int, ...], float]]:
+    """Effective offset/weight list for a step where the given offset
+    classes (indices into plan.offsets) are out.  An UNDIRECTED link outage
+    kills both directions, so each dropped offset's NEGATION (mod the torus
+    dims) is dropped with it — the effective W_t stays symmetric AND doubly
+    stochastic (tests/test_gossip_multidevice.py)."""
+    offsets = list(plan.offsets)
+    self_idx = next(i for i, (off, _) in enumerate(offsets)
+                    if all(o == 0 for o in off))
+    dropped_offsets = set()
+    for i in dropped_classes:
+        if i == self_idx:
+            continue
+        off = offsets[i][0]
+        dropped_offsets.add(off)
+        dropped_offsets.add(tuple((-o) % d for o, d in zip(off, plan.dims)))
+    out = []
+    extra_self = 0.0
+    for off, w in offsets:
+        if off in dropped_offsets and any(o != 0 for o in off):
+            extra_self += w
+            continue
+        out.append((off, w))
+    return [(off, w + extra_self if all(o == 0 for o in off) else w)
+            for off, w in out]
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSim:
+    """Deterministic outage schedule: offset class k is out at step t iff
+    hash-bernoulli(seed, t, k) < prob."""
+    prob: float = 0.0
+    seed: int = 0
+
+    def dropped(self, step: int, n_classes: int) -> List[int]:
+        if self.prob <= 0:
+            return []
+        rng = np.random.default_rng((self.seed * 1_000_003 + step))
+        return [k for k in range(n_classes) if rng.random() < self.prob]
+
+
+def gossip_with_outages(plan: GossipPlan, sim: StragglerSim, step: int,
+                        key: jax.Array, d_local):
+    """gossip_exchange under a simulated outage schedule (host-side plan
+    selection — the per-step offset list is static w.r.t. jit because the
+    caller re-traces per outage pattern in tests; production would use a
+    small set of pre-compiled patterns)."""
+    import dataclasses as dc
+
+    from ..core import gossip as G
+
+    nz = [i for i, (off, _) in enumerate(plan.offsets)
+          if any(o != 0 for o in off)]
+    dropped = [nz[k] for k in sim.dropped(step, len(nz))
+               if k < len(nz)]
+    eff = drop_renormalize_plan(plan, dropped)
+    eff_plan = dc.replace(plan, offsets=tuple(eff))
+    return G.gossip_exchange(eff_plan, key, d_local), dropped

@@ -1,0 +1,4 @@
+from .trainer import TrainState, Trainer, make_trainer
+from .serve import Server, make_server
+
+__all__ = ["TrainState", "Trainer", "make_trainer", "Server", "make_server"]

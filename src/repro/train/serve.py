@@ -1,0 +1,172 @@
+"""Serving step builders: prefill + decode against sharded KV/SSM caches.
+
+Serving uses UN-stacked params (one consensus-complete model — in a real
+deployment the post-training consensus mean).  Sharding:
+  * params: storage rules (TP over "model"; big archs keep the FSDP "data"
+    dim and gather per layer — required for the 400B-class configs where
+    even bf16 weights exceed a model-row's HBM),
+  * batch / cache batch dim: over the DP axes (("pod","data") multi-pod),
+    falling back to replicated when global_batch < dp size (long_500k b=1),
+  * KV caches: expanded-kv head layout over "model" (models.layers).
+
+``decode_32k`` / ``long_500k`` lower ``serve_step`` = ONE decode position
+against a seq_len-deep cache, per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, RunConfig, ShapeConfig
+from ..models import (cache_axes, decode_step, init_cache_specs, init_model,
+                      model_axes, prefill)
+from ..pshard import AxisRules, default_rules, use_rules
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Server:
+    mesh: Any
+    arch: ArchConfig
+    run: RunConfig
+    shape: ShapeConfig
+    window_bounded: bool = False   # rolling SWA cache for long-context decode
+
+    def __post_init__(self):
+        mesh_axes = self.mesh.axis_names
+        dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+        total = int(np.prod([self.mesh.shape[a] for a in dp])) if dp else 1
+        gb = self.shape.global_batch
+        batch_axes = dp if (dp and gb % total == 0) else None
+        fsdp = self.run.param_mode == "fsdp_tp"
+        rules = default_rules(batch_axes=batch_axes, fsdp=fsdp)
+        if self.arch.sharding_priority:
+            comp = dict(rules.compute); comp.update(self.arch.sharding_priority)
+            stor = dict(rules.storage); stor.update(self.arch.sharding_priority)
+            rules = AxisRules(compute=comp, storage=stor)
+        # SWA archs at long-context decode: window+1-slot rolling cache
+        if (self.shape.kind == "decode" and self.arch.window
+                and self.shape.seq_len > 4 * self.arch.window):
+            self.window_bounded = True
+        # batch-unshardable decode (long_500k b=1): shard the cache SEQ dim
+        # over the idle dp axes instead — flash-decoding layout; GSPMD turns
+        # the softmax/PV over the sharded seq into partial reductions + tiny
+        # all-reduces (§Perf iteration C).  Rolling (window-bounded) caches
+        # are tiny and have a non-divisible window+1 seq dim — skip.
+        if (batch_axes is None and dp and self.shape.kind == "decode"
+                and not self.window_bounded):
+            comp = dict(rules.compute)
+            comp["cache_seq"] = dp if len(dp) > 1 else dp[0]
+            rules = AxisRules(compute=comp, storage=dict(rules.storage))
+        self.rules = rules
+
+    # ------------------------------------------------------------------
+    def _spec_tree(self, axes_tree, table="storage"):
+        rules = self.rules
+
+        def one(names):
+            if names is None:
+                return P()
+            return P(*[getattr(rules, table).get(n) if n else None
+                       for n in names])
+
+        return jax.tree.map(one, axes_tree,
+                            is_leaf=lambda t: t is None or (
+                                isinstance(t, tuple) and all(
+                                    isinstance(e, (str, type(None))) for e in t)))
+
+    def param_specs(self):
+        return self._spec_tree(model_axes(self.arch), "storage")
+
+    @property
+    def kv_dtype(self):
+        return jnp.int8 if self.run.kv_dtype == "int8" else jnp.bfloat16
+
+    def cache_specs_shardings(self):
+        return self._spec_tree(
+            cache_axes(self.arch, window_bounded=self.window_bounded,
+                       kv_int8=(self.kv_dtype == jnp.int8)),
+            "compute")
+
+    def cache_struct(self):
+        return init_cache_specs(self.arch, self.shape.global_batch,
+                                self.shape.seq_len, self.kv_dtype,
+                                window_bounded=self.window_bounded)
+
+    def param_struct(self):
+        """Serving weights are bf16 (inference needs no f32 master — §Perf
+        iteration A: halves parameter HBM on every serve cell)."""
+        with use_rules(self.rules):
+            st = jax.eval_shape(lambda k: init_model(k, self.arch),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), st)
+
+    # ------------------------------------------------------------------
+    def build_prefill(self):
+        arch, rules = self.arch, self.rules
+
+        def fn(params, batch, cache):
+            with use_rules(rules):
+                return prefill(params, arch, batch, cache)
+
+        return fn
+
+    def build_decode(self):
+        arch, rules = self.arch, self.rules
+
+        def fn(params, tokens, cache, pos):
+            with use_rules(rules):
+                return decode_step(params, arch, tokens, cache, pos)
+
+        return fn
+
+    def jit_decode(self, donate: bool = True):
+        psh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                           self.param_specs(), is_leaf=lambda t: isinstance(t, P))
+        csh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                           self.cache_specs_shardings(),
+                           is_leaf=lambda t: isinstance(t, P))
+        tok_sh = NamedSharding(self.mesh, P())
+        return jax.jit(self.build_decode(),
+                       in_shardings=(psh, tok_sh, csh, NamedSharding(self.mesh, P())),
+                       out_shardings=(None, csh),
+                       donate_argnums=(2,) if donate else ())
+
+    def jit_prefill(self, donate: bool = True):
+        psh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                           self.param_specs(), is_leaf=lambda t: isinstance(t, P))
+        csh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                           self.cache_specs_shardings(),
+                           is_leaf=lambda t: isinstance(t, P))
+        return jax.jit(self.build_prefill(),
+                       in_shardings=(psh, None, csh),
+                       out_shardings=(None, csh),
+                       donate_argnums=(2,) if donate else ())
+
+    # ------------------------------------------------------------------
+    def lower_serve_step(self):
+        """Lower the step this shape's kind dictates (dry-run path).  Cache
+        donation is on — the serving loop aliases the cache in place."""
+        from ..configs import input_specs
+        spec = input_specs(self.arch, self.shape)
+        with jax.set_mesh(self.mesh):
+            if self.shape.kind == "prefill":
+                return self.jit_prefill(donate=True).lower(
+                    self.param_struct(), spec, self.cache_struct())
+            assert self.shape.kind == "decode"
+            return self.jit_decode(donate=True).lower(
+                self.param_struct(), spec["tokens"], self.cache_struct(),
+                spec["pos"])
+
+
+def make_server(mesh, arch, run, shape) -> Server:
+    return Server(mesh=mesh, arch=arch, run=run, shape=shape)

@@ -1,0 +1,444 @@
+"""Trainer: DC-DGD as the data-parallel synchronization layer of LM training.
+
+Modes (RunConfig.consensus_axis):
+  "data"  — paper-faithful: consensus nodes = the DP replicas (the "data"
+            mesh axis; x ("pod","data") in multi-pod).  Params carry a
+            leading node dim; the model runs under
+            jax.vmap(..., spmd_axis_name=<consensus axes>) so one program
+            computes every node's forward/backward.  Gossip = shard_map
+            ppermute of PACKED compressed differentials (core.gossip).
+  "pod"   — hierarchical: node = pod.  Inside a node the batch shards over
+            "data" and params shard FSDP-style over ("data","model"); exact
+            gradient all-reduce intra-pod (GSPMD), DC-DGD gossip across the
+            slow inter-pod links only.  This is the paper's motivating
+            regime (satellites <-> slow RF ~ pods <-> DCN) at 1000+ nodes.
+  None    — centralized baseline: standard all-reduce data parallelism.
+
+Memory: the paper stores three per-node tensors (x, y, z).  We carry TWO —
+x and the residual s := y - x — via the algebraic restructuring
+    g   = grad f(x_t)                       (per node)
+    d   = s_t - alpha_t * u(g)              (u = SGD dir or local AdamW)
+    c   = C(d)            (wire-encoded once; all receivers decode the same)
+    x'  = x + c
+    s'  = s + (W (x) I) c - c
+which reproduces Algorithm 1 exactly (with y_0 = W x_0 => s_0 = 0) and cuts
+consensus-state HBM by a third — recorded as a beyond-paper contribution in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, RunConfig, ShapeConfig
+from ..core import consensus as cons
+from ..core import gossip as G
+from ..core.wire import DenseWire, make_wire
+from ..models import init_model, loss_fn, model_axes
+from ..optim import init_opt_state, make_schedule, update_direction
+from ..pshard import AxisRules, default_rules, use_rules
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    x: PyTree            # params (node-stacked under consensus modes)
+    s: PyTree            # DC-DGD residual y - x ((), when allreduce)
+    opt: Any             # OptState (leaves node-stacked too)
+    step: jax.Array
+    key: jax.Array
+
+
+def _tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tree_scale(a, c):
+    return jax.tree.map(lambda t: t * c, a)
+
+
+@dataclasses.dataclass
+class Trainer:
+    mesh: Any
+    arch: ArchConfig
+    run: RunConfig
+    shape: ShapeConfig
+
+    # resolved at __post_init__
+    consensus_axes: Tuple[str, ...] = ()
+    n_nodes: int = 1
+    rules: AxisRules = None
+    plan: Optional[G.GossipPlan] = None
+    wire_bits_per_step: int = 0
+
+    def __post_init__(self):
+        mesh_axes = self.mesh.axis_names
+        ca = self.run.consensus_axis
+        if ca == "data":
+            self.consensus_axes = tuple(a for a in ("pod", "data")
+                                        if a in mesh_axes)
+        elif ca == "pod":
+            self.consensus_axes = ("pod",) if "pod" in mesh_axes else ()
+        else:
+            self.consensus_axes = ()
+        self.n_nodes = int(np.prod([self.mesh.shape[a]
+                                    for a in self.consensus_axes])) \
+            if self.consensus_axes else 1
+
+        fsdp = self.run.param_mode == "fsdp_tp"
+        if self.node_mode:
+            # batch inside a node: sharded over the NON-consensus dp axes
+            inner_dp = tuple(a for a in ("pod", "data")
+                             if a in mesh_axes and a not in self.consensus_axes)
+            batch_axes = inner_dp if inner_dp else None
+        else:
+            batch_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+        rules = default_rules(batch_axes=batch_axes, fsdp=fsdp)
+        if self.arch.sharding_priority:
+            comp = dict(rules.compute); comp.update(self.arch.sharding_priority)
+            stor = dict(rules.storage); stor.update(self.arch.sharding_priority)
+            rules = AxisRules(compute=comp, storage=stor)
+        self.rules = rules
+
+        if self.node_mode:
+            fmt = make_wire(self.run.wire)
+            self.plan = G.make_plan(self.mesh, self.consensus_axes, fmt,
+                                    topology=self.run.topology,
+                                    lazy=self.run.lazy_mixing)
+            self._validate_snr()
+        else:
+            self.snr_check = (True, "single node: exact update")
+
+    # ------------------------------------------------------------------
+    @property
+    def node_mode(self) -> bool:
+        # a single-node "consensus" (pod-consensus on a one-pod mesh)
+        # degenerates to exact DGD == plain data-parallel training: use the
+        # allreduce path and carry NO consensus state
+        return bool(self.consensus_axes) and self.n_nodes > 1
+
+    def _validate_snr(self):
+        """Launch-time Theorem-1 gate (the Fig. 1 / Fig. 3 divergence mode).
+
+        Policy: a format with a known SNR lower bound BELOW the topology
+        threshold is a config error (raise unless run.unsafe).  Formats with
+        no guaranteed bound (raw/blocked ternary, hybrid, biased topk) get a
+        recorded warning — exactly the paper's point that ternary is "not a
+        safe choice" (§V-3); the hybrid's (block, top_j) should be set via
+        hybrid_greedy.blocked_plan for the target eta."""
+        if self.n_nodes <= 1:
+            self.snr_check = (True, "single node: exact update")
+            return
+        fmt = self.plan.fmt
+        snr = fmt.snr_lower_bound(1)
+        s = cons.spectrum(self.plan.W)
+        thr = s.snr_threshold
+        if snr == 0.0:
+            self.snr_check = (False, f"{fmt.name}: no guaranteed SNR bound "
+                              f"(threshold {thr:.3g}); convergence is "
+                              f"data-dependent (paper §V-3)")
+        elif snr <= thr:
+            msg = (f"{fmt.name}: guaranteed SNR {snr:.3g} <= threshold "
+                   f"{thr:.3g} (lambda_N={s.lambda_n:.3g})")
+            self.snr_check = (False, msg)
+            if not self.run.unsafe:
+                raise ValueError(f"[{self.arch.name}] Theorem-1 violation: "
+                                 f"{msg}; set unsafe=True to override")
+        else:
+            self.snr_check = (True, f"{fmt.name}: SNR {snr:.3g} > "
+                              f"threshold {thr:.3g}")
+
+    # ------------------------------------------------------------------
+    # shardings
+    # ------------------------------------------------------------------
+    def param_logical_axes(self):
+        return model_axes(self.arch)
+
+    def _spec_tree(self, axes_tree, table="storage", prepend=()):
+        rules = self.rules
+
+        def one(names):
+            if names is None:
+                return P(*([None] * 0))
+            spec = [rules.__getattribute__(table).get(n) if n else None
+                    for n in names]
+            return P(*(list(prepend) + spec))
+
+        return jax.tree.map(one, axes_tree,
+                            is_leaf=lambda t: t is None or (
+                                isinstance(t, tuple) and all(
+                                    isinstance(e, (str, type(None))) for e in t)))
+
+    def param_specs(self) -> PyTree:
+        prepend = ((tuple(self.consensus_axes),) if self.node_mode else ())
+        return self._spec_tree(self.param_logical_axes(), "storage", prepend)
+
+    def batch_spec(self) -> PyTree:
+        if self.node_mode:
+            lead = tuple(self.consensus_axes)
+        else:
+            lead = tuple(a for a in ("pod", "data")
+                         if a in self.mesh.axis_names)
+        gb = self.shape.global_batch
+        total = int(np.prod([self.mesh.shape[a] for a in lead])) if lead else 1
+        if gb % max(total, 1):
+            lead = ()
+        spec = {"tokens": P(lead if lead else None),
+                "labels": P(lead if lead else None)}
+        if self.arch.encdec:
+            spec["enc_embeds"] = P(lead if lead else None)
+        return spec
+
+    def state_specs(self) -> "TrainState":
+        ps = self.param_specs()
+        opt_m = ps if self.run.optimizer in ("adam", "momentum") else ()
+        opt_v = ps if self.run.optimizer == "adam" else ()
+        from ..optim.optimizers import OptState
+        return TrainState(
+            x=ps, s=(ps if self.node_mode else ()),
+            opt=OptState(m=opt_m, v=opt_v, count=P()),
+            step=P(), key=P())
+
+    def state_shardings(self):
+        return jax.tree.map(lambda spec: NamedSharding(self.mesh, spec),
+                            self.state_specs(),
+                            is_leaf=lambda t: isinstance(t, P))
+
+    # ------------------------------------------------------------------
+    # state init
+    # ------------------------------------------------------------------
+    def init_state_fn(self) -> Callable[[jax.Array], TrainState]:
+        arch, run, n = self.arch, self.run, self.n_nodes
+        node_mode = self.node_mode
+
+        def init(key: jax.Array) -> TrainState:
+            with use_rules(self.rules):
+                p = init_model(key, arch)
+            if node_mode:
+                # identical copy per node (x_0 common => s_0 = y_0 - x_0 = 0
+                # with y_0 = W x_0)
+                p = jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), p)
+                s = jax.tree.map(jnp.zeros_like, p)
+            else:
+                s = ()
+            opt = init_opt_state(run.optimizer, p)
+            return TrainState(x=p, s=s, opt=opt, step=jnp.int32(0), key=key)
+
+        return init
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        init = self.init_state_fn()
+        shardings = self.state_shardings()
+        with jax.set_mesh(self.mesh):
+            return jax.jit(init, out_shardings=shardings)(
+                jax.random.PRNGKey(seed))
+
+    def state_struct(self) -> TrainState:
+        return jax.eval_shape(self.init_state_fn(),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    # ------------------------------------------------------------------
+    # the step
+    # ------------------------------------------------------------------
+    def build_train_step(self):
+        arch, run, shape = self.arch, self.run, self.shape
+        schedule = make_schedule(run.schedule, run.alpha)
+        rules = self.rules
+        accum = max(run.grad_accum, 1)
+        dtype = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
+        n = self.n_nodes
+
+        g_dtype = (jnp.bfloat16 if run.grad_dtype == "bfloat16"
+                   else jnp.float32)
+
+        def per_node_grad(x_i, batch_i):
+            """loss+grads for one node, with microbatch accumulation.
+            grad_dtype=bfloat16 halves the two live gradient trees during
+            accumulation — required headroom for the 400B config."""
+            def one_micro(mb):
+                def lf(p):
+                    return loss_fn(p, arch, mb, remat=run.remat, dtype=dtype)
+                (l, metrics), g = jax.value_and_grad(lf, has_aux=True)(x_i)
+                return l, metrics, jax.tree.map(
+                    lambda t: t.astype(g_dtype), g)
+
+            if accum == 1:
+                return one_micro(batch_i)
+
+            def split(t):
+                return t.reshape((accum, t.shape[0] // accum) + t.shape[1:])
+
+            mbs = jax.tree.map(split, batch_i)
+
+            def body(carry, mb):
+                l0, g0 = carry
+                l, metrics, g = one_micro(mb)
+                return (l0 + l, _tree_add(g0, g)), metrics
+
+            zeros_g = jax.tree.map(
+                lambda t: jnp.zeros(t.shape, g_dtype), x_i)
+            (l, g), metrics = jax.lax.scan(body, (jnp.float32(0), zeros_g), mbs)
+            metrics = jax.tree.map(lambda t: t[-1], metrics)
+            return l / accum, metrics, _tree_scale(g, 1.0 / accum)
+
+        if self.node_mode:
+            param_specs = self.param_specs()
+            spmd_axes = (self.consensus_axes if len(self.consensus_axes) > 1
+                         else self.consensus_axes[0])
+            if run.gossip_stream:
+                # §Perf iteration E: leaf-sequential gossip + FUSED x/s
+                # update.  One shard_map per leaf chained with optimization
+                # barriers: at most one leaf's (d, wire, c, agg) transients
+                # are live, and each gradient leaf dies right after its
+                # update — gossip-phase temp HBM drops from O(3x params) to
+                # O(max leaf).
+                leaf_specs, spec_tree = jax.tree_util.tree_flatten(
+                    param_specs, is_leaf=lambda t: isinstance(t, P))
+                leaf_fns = [G.build_gossip_fn(self.plan, self.mesh, sp)
+                            for sp in leaf_specs]
+
+                def gossip_update(key, alpha_t, x, s, u):
+                    xs = spec_tree.flatten_up_to(x)
+                    ss = spec_tree.flatten_up_to(s)
+                    us = spec_tree.flatten_up_to(u)
+                    x_out, s_out = [], []
+                    diff_p = jnp.float32(0)
+                    noise_p = jnp.float32(0)
+                    token = jnp.zeros((), jnp.float32)
+                    for i, fn in enumerate(leaf_fns):
+                        u_i, token = jax.lax.optimization_barrier(
+                            (us[i], token))
+                        d_i = ss[i] - alpha_t * u_i.astype(ss[i].dtype)
+                        c, a = fn(jax.random.fold_in(key, i), d_i)
+                        x_out.append(xs[i] + c.astype(xs[i].dtype))
+                        s_out.append(ss[i] + (a - c).astype(ss[i].dtype))
+                        diff_p += jnp.sum(d_i.astype(jnp.float32) ** 2)
+                        noise_p += jnp.sum((c.astype(jnp.float32)
+                                            - d_i.astype(jnp.float32)) ** 2)
+                        token = (a.ravel()[0] * 0.0).astype(jnp.float32)
+                    return (jax.tree.unflatten(spec_tree, x_out),
+                            jax.tree.unflatten(spec_tree, s_out),
+                            diff_p, noise_p)
+            else:
+                gossip_fn = G.build_gossip_fn(self.plan, self.mesh,
+                                              param_specs)
+
+                def gossip_update(key, alpha_t, x, s, u):
+                    d = jax.tree.map(lambda ss, uu: ss - alpha_t *
+                                     uu.astype(ss.dtype), s, u)
+                    c_own, agg = gossip_fn(key, d)
+                    x_new = _tree_add(x, c_own)
+                    s_new = jax.tree.map(lambda a, b, c: a + b - c,
+                                         s, agg, c_own)
+                    diff_p = sum(jnp.sum(t.astype(jnp.float32) ** 2)
+                                 for t in jax.tree.leaves(d))
+                    noise_p = sum(
+                        jnp.sum((a.astype(jnp.float32)
+                                 - b.astype(jnp.float32)) ** 2)
+                        for a, b in zip(jax.tree.leaves(c_own),
+                                        jax.tree.leaves(d)))
+                    return x_new, s_new, diff_p, noise_p
+
+            def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+                key, k_gossip = jax.random.split(state.key)
+                gb = batch["tokens"].shape[0]
+                per = gb // n
+
+                def to_nodes(t):
+                    return t.reshape((n, per) + t.shape[1:])
+
+                nb = jax.tree.map(to_nodes, batch)
+                with use_rules(rules):
+                    vg = jax.vmap(per_node_grad, spmd_axis_name=spmd_axes)
+                    loss, metrics, grads = vg(state.x, nb)
+                alpha_t = schedule(state.step + 1)
+                u, opt = update_direction(run.optimizer, grads, state.opt,
+                                          state.x)
+                x_new, s_new, diff_p, noise_p = gossip_update(
+                    k_gossip, alpha_t, state.x, state.s, u)
+                out_metrics = {
+                    "loss": jnp.mean(loss),
+                    "alpha": alpha_t,
+                    "grad_norm": jnp.sqrt(sum(
+                        jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(grads))),
+                    # self-noise-reduction observables (paper §III-B)
+                    "diff_power": diff_p,
+                    "noise_power": noise_p,
+                }
+                out_metrics.update({k: jnp.mean(v) for k, v in metrics.items()})
+                return TrainState(x=x_new, s=s_new, opt=opt,
+                                  step=state.step + 1, key=key), out_metrics
+        else:
+            def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+                key, _ = jax.random.split(state.key)
+                with use_rules(rules):
+                    loss, metrics, grads = per_node_grad(state.x, batch)
+                alpha_t = schedule(state.step + 1)
+                u, opt = update_direction(run.optimizer, grads, state.opt,
+                                          state.x)
+                x_new = jax.tree.map(lambda p, uu: p - alpha_t * uu,
+                                     state.x, u)
+                out_metrics = {"loss": loss, "alpha": alpha_t,
+                               "grad_norm": jnp.sqrt(sum(
+                                   jnp.sum(g.astype(jnp.float32) ** 2)
+                                   for g in jax.tree.leaves(grads)))}
+                out_metrics.update({k: jnp.mean(v) for k, v in metrics.items()})
+                return TrainState(x=x_new, s=(), opt=opt,
+                                  step=state.step + 1, key=key), out_metrics
+
+        return step_fn
+
+    def jit_train_step(self, donate: bool = True):
+        step_fn = self.build_train_step()
+        shardings = self.state_shardings()
+        batch_sh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                                self.batch_spec(),
+                                is_leaf=lambda t: isinstance(t, P))
+        return jax.jit(step_fn,
+                       in_shardings=(shardings, batch_sh),
+                       out_shardings=(shardings, None),
+                       donate_argnums=(0,) if donate else ())
+
+    # ------------------------------------------------------------------
+    def lower_train_step(self, batch_struct=None):
+        """AOT-lower against ShapeDtypeStructs only (the dry-run path).
+        State donation is on — the deployed step aliases x/s/opt in place."""
+        from ..data.pipeline import make_batch_specs
+        batch_struct = batch_struct or make_batch_specs(self.arch, self.shape)
+        with jax.set_mesh(self.mesh):
+            return self.jit_train_step(donate=True).lower(
+                self.state_struct(), batch_struct)
+
+    def wire_stats(self) -> Dict[str, float]:
+        """Static per-step communication accounting."""
+        if not self.node_mode or self.n_nodes <= 1:
+            return {"wire_bits_per_node_step": 0.0, "compression_ratio": 0.0}
+        shapes = jax.tree.map(lambda t: t.shape,
+                              jax.eval_shape(self.init_state_fn(),
+                                             jax.ShapeDtypeStruct((2,), jnp.uint32)).x)
+        # per-node leaf shapes (strip node dim)
+        leaf_shapes = [s[1:] for s in jax.tree.leaves(
+            shapes, is_leaf=lambda t: isinstance(t, tuple))]
+        dense_bits = sum(int(np.prod(s)) * 32 for s in leaf_shapes)
+        fmt = self.plan.fmt
+        bits = sum(fmt.wire_bits(s) for s in leaf_shapes)
+        n_out = sum(1 for off, _ in self.plan.offsets
+                    if any(o != 0 for o in off)) if self.plan.mode == "circulant" \
+            else self.n_nodes - 1
+        return {"wire_bits_per_node_step": float(bits),
+                "dense_bits_per_node_step": float(dense_bits),
+                "neighbors": float(n_out),
+                "compression_ratio": float(dense_bits / max(bits, 1))}
+
+
+def make_trainer(mesh, arch: ArchConfig, run: RunConfig, shape: ShapeConfig
+                 ) -> Trainer:
+    return Trainer(mesh=mesh, arch=arch, run=run, shape=shape)

@@ -1,0 +1,156 @@
+"""Checkpoint/restart + elastic membership tests."""
+import dataclasses
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, latest_step, restore, save
+from repro.core import consensus as cons
+from repro.core.compressors import Sparsifier
+from repro.core import dcdgd, problems
+from repro.runtime.elastic import Membership, apply_state_plan, \
+    rebuild_consensus
+
+
+class TestCheckpoint:
+    def _state(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {"x": {"w": jax.random.normal(k, (4, 8, 3)),
+                      "b": jnp.zeros((4, 3))},
+                "s": {"w": jax.random.normal(k, (4, 8, 3)) * 0.1,
+                      "b": jnp.zeros((4, 3))},
+                "step": jnp.int32(7)}
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        st = self._state()
+        save(tmp_path, 7, st)
+        assert latest_step(tmp_path) == 7
+        back, manifest = restore(tmp_path, 7, jax.eval_shape(lambda: st))
+        assert manifest["step"] == 7
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomic_no_partial_visible(self, tmp_path):
+        st = self._state()
+        save(tmp_path, 1, st)
+        # orphaned tmp dirs are invisible to latest_step
+        (tmp_path / "step_00000002.tmp-zzz").mkdir()
+        assert latest_step(tmp_path) == 1
+
+    def test_retention(self, tmp_path):
+        st = self._state()
+        for s in (1, 2, 3, 4, 5):
+            save(tmp_path, s, st, retain=2)
+        steps = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+        assert len(steps) == 2 and steps[-1].endswith("5")
+
+    def test_manager_resume(self, tmp_path):
+        st = self._state()
+        mgr = CheckpointManager(str(tmp_path), every=2)
+        assert mgr.maybe_save(1, st) is None
+        assert mgr.maybe_save(2, st) is not None
+        back, manifest = mgr.resume(jax.eval_shape(lambda: st))
+        assert manifest["step"] == 2
+
+    def test_elastic_reshard_restore(self, tmp_path):
+        """4-node checkpoint restores into a 6-node trainer: x leaves become
+        the consensus mean, s leaves zero."""
+        st = self._state()
+        save(tmp_path, 3, st)
+        target = {"x": {"w": jax.ShapeDtypeStruct((6, 8, 3), jnp.float32),
+                        "b": jax.ShapeDtypeStruct((6, 3), jnp.float32)},
+                  "s": {"w": jax.ShapeDtypeStruct((6, 8, 3), jnp.float32),
+                        "b": jax.ShapeDtypeStruct((6, 3), jnp.float32)},
+                  "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        back, _ = restore(tmp_path, 3, target, n_nodes_from=4, n_nodes_to=6)
+        mean = np.asarray(st["x"]["w"]).mean(0)
+        for row in np.asarray(back["x"]["w"]):
+            np.testing.assert_allclose(row, mean, rtol=1e-6)
+        assert np.abs(np.asarray(back["s"]["w"])).max() == 0
+
+
+class TestElastic:
+    def test_membership_rebuild_keeps_double_stochastic(self):
+        m = Membership(node_ids=list(range(8)), topology="ring")
+        cons.validate_consensus_matrix(m.W)
+        plan = m.leave(3)
+        cons.validate_consensus_matrix(m.W)
+        assert m.n == 7 and plan["keep_rows"] == [0, 1, 2, 4, 5, 6, 7]
+        plan = m.join(99)
+        cons.validate_consensus_matrix(m.W)
+        assert m.n == 8 and plan["init_from"] == 6
+
+    def test_thresholds_recomputed(self):
+        m = Membership(node_ids=list(range(10)), topology="ring")
+        info = rebuild_consensus(m, snr_lb=4.0)
+        assert info["ok"] and "eta_min" in info
+        # a sparse ring of 10 has a mild threshold; complete graph milder
+        m2 = Membership(node_ids=list(range(10)), topology="complete")
+        info2 = rebuild_consensus(m2, snr_lb=4.0)
+        assert info2["eta_min"] <= info["eta_min"] + 1e-9
+
+    def test_join_leave_convergence_cycle(self):
+        """Full cycle on a quadratic: converge with 4 nodes, node joins
+        (copy-neighbor init), keeps converging; node leaves, still OK.
+        Constant-step DC-DGD converges to an error ball (Thm. 3), so the
+        assertions are RELATIVE improvements over the start point."""
+        prob4 = problems.quadratic(n_nodes=4, dim=6, seed=1)
+        comp = Sparsifier(p=0.8)
+        m = Membership(node_ids=[0, 1, 2, 3], topology="ring")
+        x = jnp.zeros((4, 6))
+        s = jnp.zeros((4, 6))
+        key = jax.random.PRNGKey(0)
+
+        def steps(prob, W, x, s, key, n_iter, alpha=0.02):
+            Wj = jnp.asarray(W, jnp.float32)
+            for _ in range(n_iter):
+                g = prob.grad(x)
+                d = s - alpha * g
+                key, sub = jax.random.split(key)
+                c = dcdgd._node_compress(comp, sub, d)
+                x = x + c
+                s = s + dcdgd._mix(Wj, c) - c
+            return x, s, key
+
+        def gsq(prob, x):
+            return float(jnp.sum(prob.global_grad(jnp.mean(x, 0)) ** 2))
+
+        g0 = gsq(prob4, x)
+        x, s, key = steps(prob4, m.W, x, s, key, 300)
+
+        plan = m.join(4)
+        prob5 = problems.quadratic(n_nodes=5, dim=6, seed=1)
+        x, s = apply_state_plan(x, s, plan)
+        assert x.shape[0] == 5
+        g5_start = gsq(prob5, x)
+        x, s, key = steps(prob5, m.W, x, s, key, 400)
+        g5 = gsq(prob5, x)
+
+        plan = m.leave(2)
+        x, s = apply_state_plan(x, s, plan)
+        prob4b = problems.quadratic(n_nodes=4, dim=6, seed=1)
+        g4_start = gsq(prob4b, x)   # the objective CHANGED with the node set
+        x, s, key = steps(prob4b, m.W, x, s, key, 400)
+        g4 = gsq(prob4b, x)
+        # big relative improvement after each membership change
+        assert g5 < 0.2 * max(g5_start, 1e-9) + 0.05 * g0, (g5, g5_start, g0)
+        assert g4 < 0.25 * max(g4_start, 1e-9) + 0.05 * g0, (g4, g4_start, g0)
+
+    def test_topology_degradation_breaks_theorem1_gate(self):
+        """A compressor tuned to a dense graph violates the threshold when
+        the graph thins (link failures) — the gate must catch it.
+        (A Metropolis ring's lambda_N is -1/3 for any n, so pure GROWTH
+        keeps the threshold constant; the dangerous transition is density.)"""
+        m = Membership(node_ids=list(range(8)), topology="complete", lazy=0.0)
+        snr = 1.1 * m.spectrum.snr_threshold   # tuned to the dense graph
+        assert rebuild_consensus(m, snr)["ok"]
+        m.topology = "ring"                     # links degraded to a ring
+        m._rebuild()
+        assert m.spectrum.snr_threshold > snr
+        with pytest.raises(RuntimeError):
+            rebuild_consensus(m, snr)

@@ -1,0 +1,138 @@
+"""Property tests for SNR-constrained compressors (paper Definition 1) and
+the fixed-shape wire formats — unbiasedness and SNR bounds via hypothesis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import (BlockedHybrid, BlockedTernary, HybridChain,
+                                    Identity, LowPrecision, Sparsifier,
+                                    Ternary, make_compressor)
+from repro.core.wire import (DenseWire, HybridWire, Int8Wire, RandKWire,
+                             TernaryWire, TopKWire, make_wire)
+
+N_MC = 400  # Monte-Carlo samples for moment checks
+
+
+def mc_moments(fn, x, n=N_MC):
+    outs = np.stack([np.asarray(fn(jax.random.PRNGKey(i), x))
+                     for i in range(n)])
+    return outs.mean(0), outs.var(0).sum()
+
+
+vec = st.integers(3, 80).flatmap(
+    lambda d: st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                       min_size=d, max_size=d))
+
+
+@settings(max_examples=12, deadline=None)
+@given(vec, st.sampled_from([0.3, 0.5, 0.8]))
+def test_sparsifier_unbiased_and_snr(v, p):
+    """Ex. 1: E[C(z)] = z and E||eps||^2 <= (1-p)/p ||z||^2."""
+    z = jnp.asarray(v, jnp.float32)
+    comp = Sparsifier(p=p)
+    mean, var = mc_moments(lambda k, x: comp(k, x), z)
+    nz = float(jnp.sum(z**2))
+    tol = 6 * np.sqrt(var / N_MC + 1e-12)
+    assert np.abs(mean - np.asarray(z)).sum() <= tol + 1e-4
+    # exact noise power: (1/p - 1) ||z||^2
+    expect_var = (1 / p - 1) * nz
+    assert var <= expect_var * 1.35 + 1e-3
+    assert comp.snr_lower_bound(len(v)) == pytest.approx(p / (1 - p))
+
+
+@settings(max_examples=12, deadline=None)
+@given(vec)
+def test_ternary_unbiased_and_noise_power(v):
+    """Ex. 2: unbiased; noise power == sum |z_i|(||z||_inf - |z_i|)."""
+    z = jnp.asarray(v, jnp.float32)
+    comp = Ternary()
+    mean, var = mc_moments(lambda k, x: comp(k, x), z)
+    scale = float(jnp.max(jnp.abs(z)))
+    expect = float(jnp.sum(jnp.abs(z) * (scale - jnp.abs(z))))
+    tol = 6 * np.sqrt(var / N_MC + 1e-9) + 1e-4
+    assert np.abs(mean - np.asarray(z)).sum() <= tol * len(v)
+    assert var <= expect * 1.4 + 1e-3
+    assert var >= expect * 0.6 - 1e-3
+
+
+@settings(max_examples=8, deadline=None)
+@given(vec, st.sampled_from([0.5, 1.0, 2.0]))
+def test_hybrid_chain_snr_guarantee(v, eta):
+    """§IV: the hybrid compressor's noise power respects ||z||^2 / eta."""
+    z = jnp.asarray(v, jnp.float32)
+    comp = HybridChain(eta=eta)
+    mean, var = mc_moments(lambda k, x: comp(k, x), z, n=300)
+    nz = float(jnp.sum(z**2))
+    assert var <= nz / eta * 1.45 + 1e-3          # MC slack
+    tol = 6 * np.sqrt(var / 300 + 1e-9) + 1e-4
+    assert np.abs(mean - np.asarray(z)).sum() <= tol * len(v)
+    assert comp.snr_lower_bound(len(v)) == eta
+
+
+def test_blocked_ternary_noise_never_worse_than_global():
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (2048,)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(1), (2048,)))
+    glob = Ternary()
+    blk = BlockedTernary(block=256)
+    _, var_g = mc_moments(lambda k, x: glob(k, x), z, n=150)
+    _, var_b = mc_moments(lambda k, x: blk(k, x), z, n=150)
+    assert var_b <= var_g * 1.05
+
+
+def test_registry_roundtrip():
+    for spec in ["identity", "sparsifier:p=0.8", "ternary",
+                 "blocked_ternary:block=256", "lowprec:bits=8",
+                 "hybrid:eta=2.0", "blocked_hybrid:block=256,top_j=2"]:
+        c = make_compressor(spec)
+        z = jnp.arange(1, 100, dtype=jnp.float32)
+        out = c(jax.random.PRNGKey(0), z)
+        assert out.shape == z.shape
+
+
+# ---------------------------------------------------------------------------
+# wire formats
+# ---------------------------------------------------------------------------
+WIRES = ["dense", "int8:block=64", "ternary:block=64",
+         "hybrid:block=64,top_j=4", "randk:block=64,k=16"]
+
+
+@pytest.mark.parametrize("spec", WIRES + ["topk:block=64,k=16"])
+@pytest.mark.parametrize("shape", [(130,), (3, 64), (2, 5, 70)])
+def test_wire_shape_roundtrip(spec, shape):
+    fmt = make_wire(spec)
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    w = fmt.encode(jax.random.PRNGKey(1), x)
+    y = fmt.decode(w, x.shape, x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert np.isfinite(np.asarray(y)).all()
+    assert fmt.wire_bits(shape) > 0
+
+
+@pytest.mark.parametrize("spec", WIRES)
+def test_wire_unbiased(spec):
+    fmt = make_wire(spec)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 3
+    if spec == "dense":  # deterministic: exact, not just unbiased
+        y = fmt.decode(fmt.encode(jax.random.PRNGKey(0), x), x.shape, x.dtype)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+        return
+    outs = np.stack([np.asarray(fmt.decode(fmt.encode(jax.random.PRNGKey(i), x),
+                                           x.shape, x.dtype))
+                     for i in range(N_MC)])
+    err = np.abs(outs.mean(0) - np.asarray(x)).max()
+    spread = outs.std(0).max() / np.sqrt(N_MC)
+    assert err <= 6 * spread + 1e-5, f"{spec}: bias {err} vs {spread}"
+
+
+def test_wire_bits_reflect_compression():
+    shape = (4, 4096)
+    dense = make_wire("dense").wire_bits(shape)
+    tern = make_wire("ternary:block=512").wire_bits(shape)
+    hyb = make_wire("hybrid:block=512,top_j=4").wire_bits(shape)
+    int8 = make_wire("int8:block=512").wire_bits(shape)
+    assert tern < dense / 12            # ~2.06 bits vs 32
+    assert tern < hyb < int8 < dense    # §IV cost ordering

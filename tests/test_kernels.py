@@ -1,0 +1,96 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret=True vs the
+pure-jnp oracles in kernels/ref.py (element-exact), plus statistical
+unbiasedness of the full encode->decode roundtrip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import hybrid as H, ref as R, ternary as T
+from repro.kernels import ops
+
+
+SHAPES = [(8, 512), (32, 512), (8, 1024), (64, 2048)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ternary_encode_matches_ref(shape, dtype):
+    Rr, B = shape
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3).astype(dtype)
+    bits = jax.random.bits(jax.random.PRNGKey(1), shape, jnp.uint32)
+    c1, s1 = T.ternary_encode(x, bits, block=B, interpret=True)
+    c2, s2 = R.ternary_encode_ref(x, bits)
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+    assert c1.dtype == jnp.uint8 and c1.shape == (Rr, B // 4)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("weight", [1.0, 0.25, -0.6])
+def test_ternary_decode_axpy_matches_ref(shape, weight):
+    Rr, B = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 2
+    bits = jax.random.bits(jax.random.PRNGKey(1), shape, jnp.uint32)
+    codes, scales = R.ternary_encode_ref(x, bits)
+    acc = jax.random.normal(jax.random.PRNGKey(2), shape)
+    y1 = T.ternary_decode_axpy(codes, scales, acc, weight, block=B,
+                               interpret=True)
+    y2 = R.ternary_decode_axpy_ref(codes, scales, acc, weight)
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("top_j", [2, 4, 8])
+def test_hybrid_matches_ref(shape, top_j):
+    Rr, B = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 3
+    bits = jax.random.bits(jax.random.PRNGKey(1), shape, jnp.uint32)
+    h1 = H.hybrid_encode(x, bits, block=B, top_j=top_j, interpret=True)
+    h2 = R.hybrid_encode_ref(x, bits, top_j)
+    for a, b in zip(h1, h2):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), rtol=1e-6)
+    acc = jax.random.normal(jax.random.PRNGKey(2), shape)
+    z1 = H.hybrid_decode_axpy(*h1, acc, 0.4, block=B, interpret=True)
+    z2 = R.hybrid_decode_axpy_ref(*h2, acc, 0.4)
+    np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-6)
+
+
+def test_hybrid_outliers_are_exact():
+    """top-j elements must decode EXACTLY (the §IV anchor property)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 5
+    bits = jax.random.bits(jax.random.PRNGKey(1), (8, 512), jnp.uint32)
+    codes, scale, oval, oidx = H.hybrid_encode(x, bits, block=512, top_j=4,
+                                               interpret=True)
+    dec = R.hybrid_decode_axpy_ref(codes, scale, oval, oidx,
+                                   jnp.zeros_like(x), 1.0)
+    xm = np.abs(np.asarray(x))
+    for r in range(8):
+        top = np.argsort(-xm[r])[:4]
+        np.testing.assert_allclose(np.asarray(dec)[r, top],
+                                   np.asarray(x)[r, top], rtol=1e-6)
+
+
+def test_roundtrip_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 2
+    outs = []
+    for i in range(300):
+        bits = jax.random.bits(jax.random.PRNGKey(i), x.shape, jnp.uint32)
+        c, s = R.ternary_encode_ref(x, bits)
+        outs.append(np.asarray(R.ternary_decode_axpy_ref(
+            c, s, jnp.zeros_like(x), 1.0)))
+    mean = np.stack(outs).mean(0)
+    spread = np.stack(outs).std(0).max() / np.sqrt(300)
+    assert np.abs(mean - np.asarray(x)).max() < 6 * spread + 1e-4
+
+
+def test_ops_wrappers_padding():
+    """ops.* adapt arbitrary (..., L) leaves to the kernel row layout."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 700))
+    w = ops.ternary_encode(x, jax.random.PRNGKey(1), block=512)
+    assert w["codes"].dtype == jnp.uint8
+    h = ops.hybrid_encode(x, jax.random.PRNGKey(1), block=512, top_j=4)
+    assert h["out_idx"].dtype == jnp.int32

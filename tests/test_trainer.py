@@ -1,0 +1,158 @@
+"""Single-device trainer invariants: config resolution, SNR gate, state
+structures, checkpoint-through-trainer roundtrip, data determinism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (PER_ARCH_RUN, SHAPES, cell_applicable,
+                           default_run_config, get_arch, get_smoke,
+                           input_specs)
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.data import SyntheticLMData
+from repro.launch.mesh import make_test_mesh
+from repro.train import make_trainer
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return make_test_mesh((1, 1), ("data", "model"))
+
+
+def test_consensus_axis_resolution(mesh1):
+    arch = get_smoke("qwen3-8b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    tr = make_trainer(mesh1, arch, RunConfig(consensus_axis="data"), shape)
+    assert tr.consensus_axes == ("data",) and tr.n_nodes == 1
+    tr2 = make_trainer(mesh1, arch, RunConfig(consensus_axis=None), shape)
+    assert not tr2.node_mode
+    # pod consensus without a pod axis degrades to 0 nodes -> allreduce-like
+    tr3 = make_trainer(mesh1, arch, RunConfig(consensus_axis="pod"), shape)
+    assert tr3.n_nodes == 1 and not tr3.node_mode
+
+
+def test_snr_gate_raises_on_bad_randk(devices8):
+    out = devices8("""
+        import jax
+        from repro.configs import get_smoke
+        from repro.configs.base import RunConfig, ShapeConfig
+        from repro.train import make_trainer
+        mesh = jax.make_mesh((8, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        arch = get_smoke("qwen3-8b")
+        shape = ShapeConfig("t", 32, 8, "train")
+        # randk with k << block has a tiny guaranteed SNR -> must be gated
+        try:
+            make_trainer(mesh, arch,
+                         RunConfig(consensus_axis="data", topology="ring",
+                                   lazy_mixing=0.0, wire="randk:block=512,k=8"),
+                         shape)
+            raise SystemExit("gate did not fire")
+        except ValueError as e:
+            assert "Theorem-1" in str(e)
+        # unsafe overrides
+        tr = make_trainer(mesh, arch,
+                          RunConfig(consensus_axis="data", topology="ring",
+                                    lazy_mixing=0.0,
+                                    wire="randk:block=512,k=8", unsafe=True),
+                          shape)
+        assert tr.snr_check[0] is False
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_single_node_uses_exact_wire(mesh1):
+    arch = get_smoke("qwen3-8b")
+    tr = make_trainer(mesh1, arch, RunConfig(consensus_axis="data",
+                                             wire="ternary:block=512"),
+                      ShapeConfig("t", 32, 4, "train"))
+    # n_nodes == 1 degenerates to the exact allreduce path: no gossip plan,
+    # no consensus state
+    assert tr.plan is None and not tr.node_mode
+    assert tr.snr_check[0] is True and "exact" in tr.snr_check[1]
+
+
+def test_state_struct_matches_init(mesh1):
+    arch = get_smoke("xlstm-350m")
+    tr = make_trainer(mesh1, arch,
+                      RunConfig(consensus_axis=None, optimizer="adam"),
+                      ShapeConfig("t", 32, 4, "train"))
+    struct = tr.state_struct()
+    state = tr.init_state(0)
+    a = jax.tree.map(lambda s: (s.shape, str(s.dtype)), struct)
+    b = jax.tree.map(lambda s: (s.shape, str(jnp.asarray(s).dtype)), state)
+    assert jax.tree.all(jax.tree.map(lambda x, y: x == y, a, b))
+
+
+def test_trainer_ckpt_resume_identical(mesh1, tmp_path):
+    """train 6 steps = train 3, checkpoint, restore, train 3 (bitwise, since
+    data and RNG derive from (seed, step))."""
+    from repro.ckpt import restore, save
+    arch = get_smoke("qwen1.5-4b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    run = RunConfig(consensus_axis=None, optimizer="adam", alpha=0.01)
+    tr = make_trainer(mesh1, arch, run, shape)
+    data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=32,
+                           global_batch=4)
+    step = tr.jit_train_step(donate=False)
+
+    with jax.set_mesh(tr.mesh):
+        s_a = tr.init_state(0)
+        for i in range(6):
+            s_a, _ = step(s_a, data.batch(i))
+
+        s_b = tr.init_state(0)
+        for i in range(3):
+            s_b, _ = step(s_b, data.batch(i))
+        save(tmp_path, 3, s_b)
+        s_c, _ = restore(tmp_path, 3, jax.eval_shape(lambda: s_b))
+        for i in range(3, 6):
+            s_c, _ = step(s_c, data.batch(i))
+
+    for pa, pc in zip(jax.tree.leaves(s_a.x), jax.tree.leaves(s_c.x)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pc))
+
+
+def test_data_pipeline_determinism_and_noniid():
+    d1 = SyntheticLMData(vocab_size=256, seq_len=64, global_batch=8,
+                         n_nodes=4, iid=False, seed=3)
+    d2 = SyntheticLMData(vocab_size=256, seq_len=64, global_batch=8,
+                         n_nodes=4, iid=False, seed=3)
+    b1, b2 = d1.batch(17), d2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # non-iid: different nodes see different transition structure
+    diid = SyntheticLMData(vocab_size=256, seq_len=64, global_batch=8,
+                           n_nodes=4, iid=True, seed=3)
+    assert not np.array_equal(diid.batch(17)["tokens"], b1["tokens"])
+
+
+def test_cells_and_applicability():
+    from repro.configs import cells
+    all_cells = cells(include_long_skips=True)
+    assert len(all_cells) == 40
+    runnable = cells()
+    skipped = set(all_cells) - set(runnable)
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {a for a, _ in skipped} == {
+        "qwen1.5-4b", "qwen3-8b", "qwen1.5-32b", "chameleon-34b",
+        "llama4-maverick-400b-a17b", "deepseek-v2-lite-16b",
+        "seamless-m4t-medium"}
+
+
+def test_input_specs_shapes():
+    for arch_name in ("qwen3-8b", "seamless-m4t-medium"):
+        cfg = get_arch(arch_name)
+        for sname, shape in SHAPES.items():
+            spec = input_specs(cfg, shape)
+            if shape.kind == "train":
+                assert spec["tokens"].shape == (shape.global_batch,
+                                                shape.seq_len)
+            if shape.kind == "decode":
+                assert spec["tokens"].shape == (shape.global_batch,)
+            if cfg.encdec and shape.kind != "decode":
+                assert "enc_embeds" in spec
