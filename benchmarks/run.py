@@ -12,16 +12,17 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,roofline,wire")
+                    help="comma list: fig1,fig2,fig3,fig4,roofline,wire")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
-                   roofline, wire_micro)
+                   fig4_adaptive, roofline, wire_micro)
     suites = {
         "fig1": fig1_convergence.main,
         "fig2": fig2_compressors.main,
         "fig3": fig3_realworld.main,
+        "fig4": fig4_adaptive.main,
         "wire": wire_micro.main,
         "roofline": roofline.main,
     }

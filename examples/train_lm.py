@@ -20,6 +20,7 @@ from pathlib import Path
 
 import jax
 
+from repro.compat import set_mesh
 from repro.configs import get_smoke
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.data import SyntheticLMData
@@ -78,7 +79,7 @@ def main():
     if args.ckpt:
         from repro.ckpt import CheckpointManager
         mgr = CheckpointManager(args.ckpt, every=100)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(args.steps):
             state, m = step_fn(state, data.batch(i))
             if (i + 1) % 10 == 0:

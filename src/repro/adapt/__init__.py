@@ -1,0 +1,77 @@
+"""Adaptive communication: online wire-format control from live SNR
+telemetry.
+
+The paper's hybrid compressor (§IV) solves the rate/SNR trade-off ONCE,
+offline, against worst-case bounds.  Its own key insight — the
+self-noise-reduction effect, compression-noise power ∝ ||grad L_alpha||^2
+and therefore decaying over training — makes the optimal compression ratio
+a moving target: early steps need conservative wires, late steps can ship
+far fewer bits at the same SNR margin.  This subsystem closes that loop:
+
+  telemetry.py  — jit-friendly ring buffer + EMA of per-layer differential
+                  power ||d||^2 and realized noise power ||C(d)-d||^2 (both
+                  already computed on the DC-DGD wire path); effective
+                  measured SNR = diff/noise.
+  controller.py — RateController: at a configurable cadence, re-solves the
+                  §IV optimization ONLINE — a greedy knapsack over per-layer
+                  (format, block, top_j/k) candidates (with
+                  core.hybrid_greedy.blocked_plan as the inner oracle for
+                  the hybrid rung) minimizing total wire bits subject to the
+                  measured SNR staying above the Theorem-1 bar of the ACTIVE
+                  graph.
+  plan_bank.py  — bounded LRU of pre-built plans / jitted step functions
+                  keyed by the discrete wire ladder: switching formats is a
+                  dictionary lookup, never an unbounded recompile.
+  policies.py   — pluggable schedules (fixed, step-decay, SNR-feedback,
+                  model-based controller); static behavior is a policy
+                  instance, so centralized / dense paths are untouched.
+  runner.py     — adaptive DC-DGD driver (drop-in for core.dcdgd.run) used
+                  by benchmarks/fig4_adaptive.py and the e2e tests.
+
+The wire ladder
+---------------
+A ladder is an ORDERED tuple of codec specs, conservative -> aggressive,
+e.g. the trainer default::
+
+    ("dense",                       # 32 bits/elt, SNR = inf (exact)
+     "int8:block=256",              # ~8 bits/elt, guaranteed SNR ~ 252
+     "hybrid:block=256,top_j=16",   # ~5 bits/elt, measured SNR only
+     "hybrid:block=512,top_j=4",    # ~2.4 bits/elt
+     "ternary:block=512")           # ~2.06 bits/elt, the paper's Ex. 2
+
+Rung order encodes the designer's rate preference; the CONTROLLER decides
+feasibility: a rung is selectable iff its guaranteed SNR lower bound clears
+eta_min (always-safe anchors like dense/int8), or its closed-form expected
+SNR evaluated on the live differential clears eta_min * margin (headroom
+exploitation — e.g. running ternary, which has NO worst-case guarantee,
+while its measured SNR is provably above the bar).
+
+The eta_min gate
+----------------
+eta_min = (1 - lambda_N) / (1 + lambda_N) of the active consensus matrix —
+the same Theorem-1 threshold `consensus.validate_compressor_for_topology`
+enforces at launch.  The controller is constructed via
+``RateController.for_topology(W, ladder)``, which requires at least one
+rung with a GUARANTEED bound above eta_min (the retreat anchor) and raises
+the identical launch-gate error otherwise.  Selection never drops a layer
+below eta_min even under the aggregate knapsack relaxation, and the
+SNR-feedback policy force-climbs the ladder whenever the measured SNR of
+the active wire dips under the floor — so adaptation can only ever run
+FASTER than the static valid configuration, never outside the paper's
+convergence conditions.
+"""
+from .controller import (Decision, RateController, Rung, hybrid_rung_for,
+                         ladder_from_specs)
+from .plan_bank import PlanBank
+from .policies import (ControllerPolicy, FixedPolicy, Policy,
+                       SNRFeedbackPolicy, StepDecayPolicy)
+from .runner import adaptive_run, bits_to_target
+from .telemetry import TelemetrySnapshot, TelemetryState, init, snapshot, update
+
+__all__ = [
+    "Decision", "RateController", "Rung", "hybrid_rung_for",
+    "ladder_from_specs", "PlanBank", "ControllerPolicy", "FixedPolicy",
+    "Policy", "SNRFeedbackPolicy", "StepDecayPolicy", "adaptive_run",
+    "bits_to_target", "TelemetrySnapshot", "TelemetryState", "init",
+    "snapshot", "update",
+]

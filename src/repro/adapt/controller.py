@@ -1,0 +1,323 @@
+"""Online rate controller: re-solves the paper's rate/SNR trade-off (§IV)
+against LIVE telemetry instead of worst-case bounds.
+
+A :class:`WireLadder` is an ordered set of candidate codecs ("rungs"), from
+conservative (dense — infinite SNR, 32 bits/elt) to aggressive (ternary —
+~2 bits/elt, no guaranteed SNR).  A rung wraps either a math-level
+:class:`repro.core.compressors.Compressor` or a packed
+:class:`repro.core.wire.WireFormat`; both expose
+
+  * ``expected_noise_power(z)`` — closed-form E||C(z)-z||^2 on the live
+    differential z (every unbiased codec here has an analytic conditional
+    noise power, so candidate SNRs are evaluated EXACTLY, no Monte-Carlo),
+  * ``snr_lower_bound(d)``      — the worst-case guarantee (Theorem 1 gate).
+
+:class:`RateController` picks, per layer, the cheapest rung that keeps the
+measured SNR above ``eta_min * margin`` (eta_min = the Theorem-1 threshold
+``(1-lambda_N)/(1+lambda_N)`` of the ACTIVE consensus graph, the same bar
+``consensus.validate_compressor_for_topology`` enforces at launch).  A rung
+whose guaranteed bound already clears eta_min is always feasible — measured
+feasibility only ever ADDS candidates, so the controller can exploit
+headroom (e.g. run ternary while its live SNR is provably above the bar)
+but can never select below the theory floor; every decision is recorded in
+``controller.log`` for audit.
+
+``select_joint`` is the greedy knapsack of ISSUE/§IV: per-layer feasible
+minima first (a per-layer SNR floor is sufficient for the aggregate
+Definition-1 ratio, since noise_l <= diff_l/eta summed gives
+sum(noise) <= sum(diff)/eta), then a refinement pass that downgrades the
+layers with the best bits-saved-per-noise-added ratio while the AGGREGATE
+measured SNR stays above the bar — reusing
+``core.hybrid_greedy.blocked_plan`` as the inner oracle to synthesize the
+hybrid rung's (block, top_j) for the target eta when requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import consensus as cons
+from ..core import hybrid_greedy
+from ..core.compressors import Compressor, make_compressor
+from ..core.wire import WireFormat, make_wire
+
+
+# ---------------------------------------------------------------------------
+# rungs & ladders
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One wire-ladder candidate: a spec string plus its codec object."""
+    spec: str
+    codec: Any  # Compressor | WireFormat
+
+    def guaranteed_snr(self, d: int) -> float:
+        return float(self.codec.snr_lower_bound(d))
+
+    def expected_bits(self, z: np.ndarray) -> float:
+        z = np.asarray(z)
+        if isinstance(self.codec, WireFormat):
+            return float(self.codec.wire_bits(z.shape))
+        return float(self.codec.expected_bits(z.reshape(-1)))
+
+    def expected_noise(self, z: np.ndarray) -> Optional[float]:
+        """Closed-form expected noise on z; None when the codec has no
+        analytic form (controller then falls back to the guarantee)."""
+        try:
+            return float(self.codec.expected_noise_power(np.asarray(z)))
+        except NotImplementedError:
+            return None
+
+
+def ladder_from_specs(specs: Sequence[str], level: str = "compressor"
+                      ) -> Tuple[Rung, ...]:
+    """Build rungs from config strings; ``level`` picks the codec registry
+    ("compressor" = math-level, "wire" = packed formats)."""
+    make = make_compressor if level == "compressor" else make_wire
+    return tuple(Rung(spec=s, codec=make(s)) for s in specs)
+
+
+def hybrid_rung_for(z: np.ndarray, eta: float, level: str = "compressor"
+                    ) -> Optional[Rung]:
+    """Synthesize a fixed-rate hybrid rung tuned for the sample via the
+    Algorithm-2-style grid oracle (hybrid_greedy.blocked_plan)."""
+    plan = hybrid_greedy.blocked_plan(z, eta)
+    if plan is None:
+        return None
+    spec = plan.spec_for(level)
+    if level == "wire":
+        from ..core.wire import HybridWire
+        codec = HybridWire(block=plan.block, top_j=plan.top_j)
+    else:
+        from ..core.compressors import BlockedHybrid
+        codec = BlockedHybrid(block=plan.block, top_j=plan.top_j)
+    return Rung(spec=spec, codec=codec)
+
+
+# ---------------------------------------------------------------------------
+# decisions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    step: int
+    layer: int
+    spec: str
+    predicted_snr: float       # measured-model SNR of the chosen rung on z
+    guaranteed_snr: float
+    bits: float                # expected wire bits of the chosen rung on z
+    eta_bar: float             # the bar this decision was solved against
+    reason: str                # "measured" | "guaranteed" | "fallback"
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RateController:
+    """Greedy bits-minimizer subject to the Theorem-1 SNR bar.
+
+    ``eta_min`` must be the ACTIVE graph's threshold — use
+    :meth:`for_topology` so the bar and the launch gate
+    (``validate_compressor_for_topology``) can never disagree.
+    """
+    ladder: Tuple[Rung, ...]
+    eta_min: float
+    margin: float = 1.25        # safety factor on measured feasibility
+    synthesize_hybrid: bool = True   # grow the candidate set with a
+    # (block, top_j) hybrid tuned to the live sample by the Algorithm-2-style
+    # grid oracle (hybrid_greedy.blocked_plan) at each selection
+    level: str = "compressor"        # which codec registry specs target
+    log: List[Decision] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def for_topology(cls, W: np.ndarray, ladder: Tuple[Rung, ...],
+                     margin: float = 1.25, synthesize_hybrid: bool = True,
+                     level: str = "compressor", dim: int = 1
+                     ) -> "RateController":
+        """Controller bound to consensus matrix W.  Requires at least one
+        rung whose GUARANTEED SNR clears the Theorem-1 bar (the safe anchor
+        the controller can always retreat to) — enforced with the same check
+        as the launch gate.  ``dim`` is the layer size the anchor must hold
+        at: several bounds are dimension-dependent (e.g. LowPrecision's
+        4 levels^2 / d), so validating at the default d=1 would accept
+        anchors that are worthless at real sizes — pass the actual
+        differential dimension."""
+        eta_min = cons.spectrum(W).snr_threshold
+        anchors = [r for r in ladder
+                   if r.guaranteed_snr(dim) > eta_min]
+        if not anchors:
+            # surface the launch-gate error message for the best rung
+            best = max(ladder, key=lambda r: r.guaranteed_snr(dim))
+            cons.validate_compressor_for_topology(W, best.guaranteed_snr(dim))
+        return cls(ladder=tuple(ladder), eta_min=eta_min, margin=margin,
+                   synthesize_hybrid=synthesize_hybrid, level=level)
+
+    # -- single layer ------------------------------------------------------
+    @property
+    def bar(self) -> float:
+        return self.eta_min * self.margin
+
+    def _candidates(self, z: np.ndarray) -> Tuple[Rung, ...]:
+        """The static ladder plus, when enabled, a hybrid rung tuned to this
+        sample by the blocked_plan inner oracle."""
+        if not self.synthesize_hybrid:
+            return self.ladder
+        extra = hybrid_rung_for(np.asarray(z, np.float32).reshape(-1),
+                                self.bar, level=self.level)
+        return self.ladder + ((extra,) if extra is not None else ())
+
+    def _evaluate(self, z: np.ndarray) -> List[dict]:
+        """Per-rung (bits, predicted snr, noise, feasible) on sample z."""
+        z = np.asarray(z, np.float32)
+        d = z.reshape(-1).size
+        power = float((z.astype(np.float64) ** 2).sum())
+        rows = []
+        for i, rung in enumerate(self._candidates(z)):
+            g = rung.guaranteed_snr(d)
+            noise = rung.expected_noise(z)
+            if noise is None:
+                # no analytic model: trust only the worst-case guarantee
+                noise = power / g if g > 0 and math.isfinite(g) else np.inf
+                pred = g
+            else:
+                pred = power / noise if noise > 0 else float("inf")
+            feasible = (g > self.eta_min) or (pred >= self.bar)
+            rows.append(dict(idx=i, rung=rung, bits=rung.expected_bits(z),
+                             pred=pred, guaranteed=g, noise=noise,
+                             feasible=feasible))
+        return rows
+
+    def select(self, z: np.ndarray, step: int = 0, layer: int = 0
+               ) -> Decision:
+        """Cheapest rung whose SNR clears the bar on the live sample z.
+
+        Monotone by construction: a sample with more measured headroom can
+        only enlarge the feasible set, so chosen bits never increase as
+        measured SNR increases."""
+        rows = self._evaluate(z)
+        feas = [r for r in rows if r["feasible"]]
+        if feas:
+            pick = min(feas, key=lambda r: (r["bits"], -r["pred"]))
+            reason = ("guaranteed" if pick["guaranteed"] > self.eta_min
+                      else "measured")
+        else:
+            # nothing clears the bar (degenerate sample / over-aggressive
+            # ladder): retreat to the most conservative rung by SNR
+            pick = max(rows, key=lambda r: (
+                r["guaranteed"] if math.isfinite(r["guaranteed"]) else 1e30,
+                r["pred"] if math.isfinite(r["pred"]) else 1e30))
+            reason = "fallback"
+        dec = Decision(step=step, layer=layer, spec=pick["rung"].spec,
+                       predicted_snr=float(pick["pred"]),
+                       guaranteed_snr=float(pick["guaranteed"]),
+                       bits=float(pick["bits"]), eta_bar=self.bar,
+                       reason=reason)
+        self.log.append(dec)
+        return dec
+
+    def select_stacked(self, z_stack: np.ndarray, step: int = 0,
+                       layer: int = 0) -> Decision:
+        """Select for a node-stacked differential (n_nodes, dim): each node
+        encodes independently, so candidate noise sums over nodes and the
+        constraint is the network-total Definition-1 ratio."""
+        z_stack = np.asarray(z_stack, np.float32)
+        n = z_stack.shape[0]
+        power = float((z_stack.astype(np.float64) ** 2).sum())
+        best = None
+        # the synthesized hybrid is solved on node 0's differential as the
+        # representative sample, then costed across ALL nodes like any rung
+        for i, rung in enumerate(self._candidates(z_stack[0])):
+            g = rung.guaranteed_snr(z_stack.shape[-1])
+            noises = [rung.expected_noise(z_stack[j]) for j in range(n)]
+            if any(v is None for v in noises):
+                noise = power / g if g > 0 and math.isfinite(g) else np.inf
+            else:
+                noise = float(sum(noises))
+            pred = power / noise if noise > 0 else float("inf")
+            bits = sum(rung.expected_bits(z_stack[j]) for j in range(n))
+            feasible = (g > self.eta_min) or (pred >= self.bar)
+            row = dict(rung=rung, bits=bits, pred=pred, guaranteed=g,
+                       feasible=feasible)
+            if feasible and (best is None or
+                             (bits, -pred) < (best["bits"], -best["pred"])):
+                best = row
+        if best is None:
+            return self.select(z_stack.reshape(-1), step=step, layer=layer)
+        dec = Decision(step=step, layer=layer, spec=best["rung"].spec,
+                       predicted_snr=float(best["pred"]),
+                       guaranteed_snr=float(best["guaranteed"]),
+                       bits=float(best["bits"]), eta_bar=self.bar,
+                       reason=("guaranteed" if best["guaranteed"] > self.eta_min
+                               else "measured"))
+        self.log.append(dec)
+        return dec
+
+    # -- multi-layer greedy knapsack --------------------------------------
+    def select_joint(self, probes: Sequence[np.ndarray], step: int = 0
+                     ) -> List[Decision]:
+        """Per-layer selection plus a global greedy-knapsack refinement.
+
+        Phase 1 solves each layer at the per-layer bar (sufficient for the
+        aggregate bound).  Phase 2 greedily downgrades layers — best
+        bits-saved / noise-added first — as long as the AGGREGATE measured
+        SNR stays above the bar AND every layer keeps predicted SNR above
+        eta_min itself (never below the theory floor)."""
+        evals = [self._evaluate(np.asarray(z, np.float32)) for z in probes]
+        powers = [float((np.asarray(z, np.float64) ** 2).sum())
+                  for z in probes]
+        choice = []
+        for rows in evals:
+            feas = [r for r in rows if r["feasible"]]
+            pick = (min(feas, key=lambda r: (r["bits"], -r["pred"]))
+                    if feas else
+                    max(rows, key=lambda r: (
+                        r["guaranteed"] if math.isfinite(r["guaranteed"])
+                        else 1e30,
+                        r["pred"] if math.isfinite(r["pred"]) else 1e30)))
+            choice.append(pick)
+
+        total_power = sum(powers)
+        # phase 2: exploit cross-layer slack on the aggregate ratio
+        improved = True
+        while improved:
+            improved = False
+            total_noise = sum(min(c["noise"], 1e30) for c in choice)
+            best_move, best_ratio = None, 0.0
+            for li, rows in enumerate(evals):
+                cur = choice[li]
+                for r in rows:
+                    if r["bits"] >= cur["bits"]:
+                        continue
+                    if not (r["pred"] > self.eta_min
+                            or r["guaranteed"] > self.eta_min):
+                        continue  # never below the theory floor per layer
+                    new_noise = total_noise - cur["noise"] + r["noise"]
+                    agg = (total_power / new_noise if new_noise > 0
+                           else float("inf"))
+                    if agg < self.bar:
+                        continue
+                    ratio = (cur["bits"] - r["bits"]) / max(
+                        r["noise"] - cur["noise"], 1e-30)
+                    if ratio > best_ratio:
+                        best_ratio, best_move = ratio, (li, r)
+            if best_move is not None:
+                li, r = best_move
+                choice[li] = r
+                improved = True
+
+        out = []
+        for li, pick in enumerate(choice):
+            reason = ("guaranteed" if pick["guaranteed"] > self.eta_min else
+                      ("measured" if pick["feasible"] or
+                       pick["pred"] > self.eta_min else "fallback"))
+            dec = Decision(step=step, layer=li, spec=pick["rung"].spec,
+                           predicted_snr=float(pick["pred"]),
+                           guaranteed_snr=float(pick["guaranteed"]),
+                           bits=float(pick["bits"]), eta_bar=self.bar,
+                           reason=reason)
+            self.log.append(dec)
+            out.append(dec)
+        return out

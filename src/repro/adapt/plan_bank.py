@@ -1,0 +1,58 @@
+"""Bounded bank of pre-built execution plans keyed by wire spec.
+
+Switching wire formats mid-run must never cost an unbounded recompile: the
+discrete wire ladder has a handful of rungs, so every (spec -> jitted step /
+gossip fn / GossipPlan) pair is built at most once and served from an LRU
+dict afterwards.  The bank counts builds vs hits so tests (and the
+benchmark harness) can assert that a REPEATED switch is a dictionary
+lookup, not a compilation.
+
+The bank is deliberately generic — the value builder is injected — so the
+same class backs
+  * the DC-DGD runner (spec -> jitted one-step closure),
+  * the trainer (spec -> jitted train step with the gossip plan swapped),
+  * raw GossipPlan caches in tooling.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Tuple
+
+
+class PlanBank:
+    """LRU cache of built plans: ``get(spec)`` builds on first use only."""
+
+    def __init__(self, build: Callable[[str], Any], max_size: int = 8):
+        assert max_size >= 1
+        self._build = build
+        self._max = max_size
+        self._cache: "OrderedDict[str, Any]" = OrderedDict()
+        self.builds = 0   # build() invocations (compilations)
+        self.hits = 0     # lookups served from cache
+        self.evictions = 0
+
+    def get(self, spec: str) -> Any:
+        if spec in self._cache:
+            self._cache.move_to_end(spec)
+            self.hits += 1
+            return self._cache[spec]
+        value = self._build(spec)
+        self.builds += 1
+        self._cache[spec] = value
+        if len(self._cache) > self._max:
+            self._cache.popitem(last=False)
+            self.evictions += 1
+        return value
+
+    def __contains__(self, spec: str) -> bool:
+        return spec in self._cache
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def specs(self) -> Tuple[str, ...]:
+        return tuple(self._cache)
+
+    def stats(self) -> Dict[str, int]:
+        return {"builds": self.builds, "hits": self.hits,
+                "evictions": self.evictions, "size": len(self._cache)}

@@ -1,0 +1,147 @@
+"""Pluggable wire-selection policies.
+
+A policy maps (step, telemetry snapshot) -> the wire spec to run next (or
+None = keep the current one).  Static behavior is just another policy
+instance (:class:`FixedPolicy`), so the centralized / dense / non-adaptive
+paths never branch on "is adaptation on" — they run a policy that never
+switches.
+
+  FixedPolicy        — the static baseline; never switches.
+  StepDecayPolicy    — open-loop ladder schedule keyed on step thresholds
+                       (the classic "conservative early, cheap late" shape,
+                       no feedback).
+  SNRFeedbackPolicy  — closed-loop hysteresis on the MEASURED SNR of the
+                       active wire (the telemetry's geometric-mean per-step
+                       ratio — robust to the orders-of-magnitude power
+                       swings of early training): climbs to the safe end
+                       when the live SNR approaches the Theorem-1 bar,
+                       steps down the ladder when there is ample headroom.
+                       Works with telemetry alone (no analytic codec model
+                       needed), so it is the trainer-side default.
+  ControllerPolicy   — model-based: defers to a RateController re-solving
+                       the rate/SNR knapsack on a live probe of the actual
+                       differential (the DC-DGD runner default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .controller import RateController
+from .telemetry import TelemetrySnapshot
+
+
+class Policy:
+    """Base: stateful selectors; ``decide`` returns a spec or None (keep)."""
+
+    def initial_spec(self) -> str:
+        raise NotImplementedError
+
+    def decide(self, step: int, snap: Optional[TelemetrySnapshot]
+               ) -> Optional[str]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class FixedPolicy(Policy):
+    spec: str
+
+    def initial_spec(self) -> str:
+        return self.spec
+
+    def decide(self, step, snap):
+        return None
+
+
+@dataclasses.dataclass
+class StepDecayPolicy(Policy):
+    """``schedule`` = ((step_from, spec), ...) sorted ascending; the active
+    spec is the last entry whose threshold is <= step."""
+    schedule: Tuple[Tuple[int, str], ...]
+
+    def __post_init__(self):
+        assert self.schedule and self.schedule[0][0] == 0, \
+            "schedule must start at step 0"
+        assert list(self.schedule) == sorted(self.schedule), \
+            "schedule must be sorted by step"
+
+    def initial_spec(self) -> str:
+        return self.schedule[0][1]
+
+    def decide(self, step, snap):
+        spec = self.schedule[0][1]
+        for thresh, s in self.schedule:
+            if step >= thresh:
+                spec = s
+        return spec
+
+
+@dataclasses.dataclass
+class SNRFeedbackPolicy(Policy):
+    """Hysteresis ladder walker on measured SNR.
+
+    ``ladder`` is ordered conservative -> aggressive.  With the live
+    aggregate SNR s of the ACTIVE wire and bar b = eta_min * margin:
+      * s <  b            -> climb one rung toward conservative (index-1);
+      * s >= b * upgrade  -> step one rung toward aggressive (index+1);
+      * otherwise hold.
+    ``upgrade`` > 1 creates the hysteresis band that prevents flapping; a
+    climb is also forced whenever the measured SNR dips below eta_min
+    itself, regardless of cadence.
+    """
+    ladder: Tuple[str, ...]
+    eta_min: float
+    margin: float = 1.25
+    upgrade: float = 2.0
+    cadence: int = 25
+    start_index: int = 0
+    index: int = dataclasses.field(default=-1)
+
+    def __post_init__(self):
+        assert self.ladder
+        if self.index < 0:
+            self.index = self.start_index
+
+    def initial_spec(self) -> str:
+        return self.ladder[self.index]
+
+    def decide(self, step, snap):
+        if snap is None or snap.count == 0:
+            return None
+        bar = self.eta_min * self.margin
+        s = snap.feedback_snr
+        if s < self.eta_min:
+            # emergency climb: measured SNR below the Theorem-1 floor
+            self.index = max(self.index - 1, 0)
+            return self.ladder[self.index]
+        if step % max(self.cadence, 1):
+            return None
+        if s < bar:
+            self.index = max(self.index - 1, 0)
+        elif s >= bar * self.upgrade:
+            self.index = min(self.index + 1, len(self.ladder) - 1)
+        return self.ladder[self.index]
+
+
+@dataclasses.dataclass
+class ControllerPolicy(Policy):
+    """Model-based: at each cadence, probe the live differential and let the
+    RateController re-solve the knapsack (closed-form candidate SNRs)."""
+    controller: RateController
+    probe_fn: Callable[[], np.ndarray]   # () -> live stacked differential
+    cadence: int = 25
+    initial: Optional[str] = None
+
+    def initial_spec(self) -> str:
+        if self.initial is not None:
+            return self.initial
+        dec = self.controller.select_stacked(self.probe_fn(), step=0)
+        return dec.spec
+
+    def decide(self, step, snap):
+        if step % max(self.cadence, 1):
+            return None
+        dec = self.controller.select_stacked(self.probe_fn(), step=step)
+        return dec.spec

@@ -1,0 +1,138 @@
+"""Adaptive DC-DGD driver: the stacked-node algorithm of ``core.dcdgd``
+with the compressor re-chosen online from live SNR telemetry.
+
+Mirrors :func:`repro.core.dcdgd.run` (same metrics arrays, so existing
+benchmark plotting works unchanged) plus:
+
+  * a :class:`~repro.adapt.plan_bank.PlanBank` of jitted one-step closures
+    keyed by compressor spec — a wire switch is a dict lookup, and a
+    repeated switch never recompiles;
+  * per-step telemetry (differential power / realized noise power) folded
+    into a :class:`~repro.adapt.telemetry.TelemetryState`;
+  * at every ``cadence`` steps the policy decides the next wire; the
+    model-based default probes the live differential ``state.d`` and lets
+    the :class:`~repro.adapt.controller.RateController` re-solve the
+    bits/SNR knapsack against the active graph's Theorem-1 bar;
+  * a ``wire_log`` of (step, spec, predicted SNR) switch records and the
+    full controller decision log for audit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import consensus as cons
+from ..core import dcdgd
+from ..core.compressors import Compressor, make_compressor
+from . import telemetry as tm
+from .controller import RateController, ladder_from_specs
+from .plan_bank import PlanBank
+from .policies import ControllerPolicy, Policy
+
+
+def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
+                 alpha, n_steps: int, key: jax.Array, *,
+                 margin: float = 1.25, cadence: int = 25,
+                 policy: Optional[Policy] = None,
+                 ema_decay: float = 0.9, window: int = 32,
+                 bank_size: int = 8) -> dict:
+    """Run adaptive DC-DGD for ``n_steps``; see module docstring.
+
+    ``ladder_specs`` are ``make_compressor`` strings ordered conservative ->
+    aggressive; ``policy=None`` builds the model-based ControllerPolicy over
+    a RateController validated for this W (raises, exactly like the launch
+    gate, if no rung's guaranteed SNR clears the Theorem-1 bar).
+    """
+    Wj = jnp.asarray(W, jnp.float32)
+    n = W.shape[0]
+    params_like = jnp.zeros((n, problem.dim), jnp.float32)
+    alpha_fn = alpha if callable(alpha) else (lambda t: alpha)
+    key, ik = jax.random.split(key)
+    state = dcdgd.init(problem.grad, params_like, float(alpha_fn(1)), ik)
+
+    def build_step(spec: str) -> Callable:
+        comp = make_compressor(spec)
+
+        @jax.jit
+        def one(st):
+            a_t = alpha_fn(st.t)
+            new_state, aux = dcdgd.step(st, Wj, problem.grad, a_t, comp,
+                                        track_bits=True)
+            xbar = jnp.mean(new_state.x, axis=0)
+            m = {
+                "f_bar": problem.global_f(xbar),
+                "grad_norm_sq": jnp.sum(problem.global_grad(xbar) ** 2),
+                "consensus_err": jnp.sum((new_state.x - xbar[None, :]) ** 2),
+            }
+            m.update(aux)
+            return new_state, m
+
+        return one
+
+    bank = PlanBank(build_step, max_size=bank_size)
+
+    controller = None
+    if policy is None:
+        ladder = ladder_from_specs(ladder_specs, level="compressor")
+        controller = RateController.for_topology(W, ladder, margin=margin,
+                                                 dim=problem.dim)
+        policy = ControllerPolicy(
+            controller=controller,
+            probe_fn=lambda: np.asarray(state.d),
+            cadence=cadence)
+
+    tel = tm.init(n_layers=1, window=window)
+    active = policy.initial_spec()
+    wire_log = [(0, active,
+                 controller.log[-1].predicted_snr if controller and
+                 controller.log else float("nan"))]
+
+    history = []
+    specs_per_step = []
+    for i in range(n_steps):
+        step_fn = bank.get(active)
+        state, m = step_fn(state)
+        tel = tm.update(tel, m["differential_power"], m["noise_power"],
+                        decay=ema_decay)
+        history.append(m)
+        specs_per_step.append(active)
+        if policy is not None and (i + 1) < n_steps:
+            # the probe_fn closure reads the loop's live ``state`` binding,
+            # so it already points at the current differential; snapshots
+            # are cheap scalars off-cadence, full per-layer at cadence
+            at_cadence = (i + 1) % max(cadence, 1) == 0
+            snap = (tm.snapshot(tel, decay=ema_decay) if at_cadence
+                    else tm.total_snapshot(tel, decay=ema_decay))
+            nxt = policy.decide(i + 1, snap)
+            if nxt is not None and nxt != active:
+                active = nxt
+                wire_log.append(
+                    (i + 1, active,
+                     controller.log[-1].predicted_snr if controller and
+                     controller.log else float("nan")))
+
+    out = {k: np.array([float(h[k]) for h in history]) for k in history[0]}
+    out["x_final"] = np.asarray(state.x)
+    out["cum_bits"] = np.cumsum(out["bits"])
+    out["wire_log"] = wire_log
+    out["spec_per_step"] = specs_per_step
+    out["bank_stats"] = bank.stats()
+    if controller is not None:
+        out["decisions"] = list(controller.log)
+        out["eta_min"] = controller.eta_min
+    return out
+
+
+def bits_to_target(result: dict, target: float, key: str = "f_bar",
+                   f_star: float = 0.0) -> Optional[float]:
+    """Cumulative wire bits spent until ``key - f_star`` first drops below
+    ``target`` (None if never reached) — the benchmark's figure of merit."""
+    vals = np.asarray(result[key]) - f_star
+    hit = np.nonzero(vals <= target)[0]
+    if hit.size == 0:
+        return None
+    return float(result["cum_bits"][hit[0]])

@@ -1,0 +1,157 @@
+"""Live SNR telemetry for the adaptive communication controller.
+
+Accumulates, per layer (= gossiped pytree leaf), the two quantities the
+DC-DGD step already computes on the wire path:
+
+  * differential power      ||d_l||^2
+  * realized noise power    ||C(d_l) - d_l||^2
+
+and maintains (i) an EMA of each (smoothing the per-step stochastic
+realization of the compressor), and (ii) a fixed-size ring buffer of raw
+samples for host-side windowed statistics.  Everything in
+:class:`TelemetryState` is a fixed-shape jax array, so :func:`update` can
+live INSIDE the jitted training step; :func:`snapshot` pulls a host-side
+numpy view once per controller cadence.
+
+The effective (measured) SNR of the active wire is
+``diff_power / noise_power`` — the paper's Definition-1 ratio evaluated on
+the live differential.  Its EMA is what the feedback policies compare
+against the Theorem-1 bar eta_min.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TelemetryState(NamedTuple):
+    """Jit-friendly accumulator (all leaves fixed-shape arrays)."""
+    diff_ema: jax.Array      # (n_layers,) EMA of ||d_l||^2
+    noise_ema: jax.Array     # (n_layers,) EMA of ||C(d_l)-d_l||^2
+    log_snr_ema: jax.Array   # () log-space EMA of the per-step AGGREGATE
+    # ratio sum(diff)/sum(noise).  Powers swing by orders of magnitude over
+    # training (the self-noise-reduction effect plus init transients), so a
+    # linear EMA of powers is dominated by the largest sample for dozens of
+    # steps; the geometric mean of the scale-free per-step ratio is the
+    # robust smoother the feedback policies key off.
+    ring_diff: jax.Array     # (window, n_layers) raw sample ring
+    ring_noise: jax.Array    # (window, n_layers)
+    count: jax.Array         # int32 total updates (ring slot = count % window)
+
+
+# per-step ratios are clipped into this range before the log-EMA so an
+# exactly-zero noise step (dense wire) stays finite
+_LOG_SNR_CLIP = (1e-12, 1e12)
+
+
+def init(n_layers: int, window: int = 32) -> TelemetryState:
+    return TelemetryState(
+        diff_ema=jnp.zeros((n_layers,), jnp.float32),
+        noise_ema=jnp.zeros((n_layers,), jnp.float32),
+        log_snr_ema=jnp.float32(0.0),
+        ring_diff=jnp.zeros((window, n_layers), jnp.float32),
+        ring_noise=jnp.zeros((window, n_layers), jnp.float32),
+        count=jnp.int32(0),
+    )
+
+
+def update(state: TelemetryState, diff_power: jax.Array,
+           noise_power: jax.Array, decay: float = 0.9) -> TelemetryState:
+    """Fold one step's per-layer powers in (jittable; ``decay`` static).
+
+    EMA is stored un-corrected (``ema_t = decay ema_{t-1} + (1-decay) x_t``
+    from ema_0 = 0); :func:`snapshot` applies the ``1 - decay^t`` bias
+    correction so early snapshots are unbiased rather than zero-dragged.
+    """
+    d = jnp.asarray(diff_power, jnp.float32).reshape(-1)
+    n = jnp.asarray(noise_power, jnp.float32).reshape(-1)
+    window = state.ring_diff.shape[0]
+    slot = state.count % window
+    inst = jnp.clip(jnp.sum(d) / jnp.maximum(jnp.sum(n), _LOG_SNR_CLIP[0]),
+                    *_LOG_SNR_CLIP)
+    return TelemetryState(
+        diff_ema=decay * state.diff_ema + (1.0 - decay) * d,
+        noise_ema=decay * state.noise_ema + (1.0 - decay) * n,
+        log_snr_ema=decay * state.log_snr_ema
+        + (1.0 - decay) * jnp.log(inst),
+        ring_diff=state.ring_diff.at[slot].set(d),
+        ring_noise=state.ring_noise.at[slot].set(n),
+        count=state.count + 1,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySnapshot:
+    """Host-side view for the controller (all numpy, one per cadence)."""
+    diff_power: np.ndarray     # (n_layers,) bias-corrected EMA
+    noise_power: np.ndarray    # (n_layers,)
+    snr: np.ndarray            # (n_layers,) diff/noise (inf where noise==0)
+    window_diff: np.ndarray    # (n_layers,) plain mean over the filled ring
+    window_noise: np.ndarray
+    count: int
+    geo_snr: float = float("nan")   # bias-corrected geometric-mean SNR
+
+    @property
+    def total_snr(self) -> float:
+        """Aggregate measured SNR sum(diff)/sum(noise) — the Definition-1
+        ratio of the whole gossiped differential."""
+        tn = float(self.noise_power.sum())
+        return float(self.diff_power.sum()) / tn if tn > 0 else float("inf")
+
+    @property
+    def feedback_snr(self) -> float:
+        """The SNR the feedback policies key off: the geometric-mean
+        per-step ratio when tracked (robust to the orders-of-magnitude
+        power swings of early training), else the power-EMA ratio."""
+        return self.geo_snr if np.isfinite(self.geo_snr) else self.total_snr
+
+    @property
+    def min_snr(self) -> float:
+        return float(self.snr.min()) if self.snr.size else float("inf")
+
+
+def total_snapshot(state: TelemetryState, decay: float = 0.9
+                   ) -> TelemetrySnapshot:
+    """Cheap per-step view for the training hot loop: only the two EMA
+    totals cross to host (scalar syncs), the ring buffers stay on device.
+    The feedback policies only need ``total_snr``/``count`` off-cadence, so
+    this avoids materializing (window, n_layers) arrays every step — use
+    :func:`snapshot` at controller cadence for the full per-layer view."""
+    count = int(state.count)
+    corr = 1.0 - decay ** max(count, 1)
+    d = float(jnp.sum(state.diff_ema)) / corr
+    n = float(jnp.sum(state.noise_ema)) / corr
+    arr_d = np.array([d])
+    arr_n = np.array([n])
+    snr = np.array([d / n if n > 0 else np.inf])
+    geo = float(np.exp(float(state.log_snr_ema) / corr)) if count else \
+        float("nan")
+    return TelemetrySnapshot(diff_power=arr_d, noise_power=arr_n, snr=snr,
+                             window_diff=arr_d, window_noise=arr_n,
+                             count=count, geo_snr=geo)
+
+
+def snapshot(state: TelemetryState, decay: float = 0.9) -> TelemetrySnapshot:
+    count = int(state.count)
+    corr = 1.0 - decay ** max(count, 1)
+    diff = np.asarray(state.diff_ema) / corr
+    noise = np.asarray(state.noise_ema) / corr
+    with np.errstate(divide="ignore", invalid="ignore"):
+        snr = np.where(noise > 0, diff / np.maximum(noise, 1e-30), np.inf)
+    window = state.ring_diff.shape[0]
+    filled = min(count, window)
+    if filled:
+        wd = np.asarray(state.ring_diff)[:filled].mean(0)
+        wn = np.asarray(state.ring_noise)[:filled].mean(0)
+    else:
+        wd = np.zeros_like(diff)
+        wn = np.zeros_like(noise)
+    geo = float(np.exp(float(state.log_snr_ema) / corr)) if count else \
+        float("nan")
+    return TelemetrySnapshot(diff_power=diff, noise_power=noise, snr=snr,
+                             window_diff=wd, window_noise=wn, count=count,
+                             geo_snr=geo)

@@ -1,0 +1,71 @@
+"""JAX version compatibility shims.
+
+The codebase targets the modern mesh/shard_map API surface
+(``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``,
+``jax.shard_map(..., check_vma=...)``); the installed JAX may predate any of
+these.  Every call site routes through this module instead of feature-probing
+inline:
+
+  * :func:`make_mesh` — build a ``Mesh`` from (shape, axes[, devices]),
+    passing ``axis_types=Auto`` only when the installed JAX understands it.
+  * :func:`set_mesh` — context manager activating a mesh for jit; falls back
+    to the classic ``with mesh:`` context on older JAX.
+  * :func:`shard_map` — ``jax.shard_map`` when present, else
+    ``jax.experimental.shard_map.shard_map`` with ``check_vma`` mapped onto
+    the legacy ``check_rep`` kwarg.
+
+Keep this module import-light: it must not touch device state at import time
+(tests rely on seeing 1 CPU device until they opt in).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _axis_types_kw(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` when supported, else ``{}``."""
+    import jax
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
+              devices: Optional[Sequence] = None):
+    """Build a ``jax.sharding.Mesh`` over the first ``prod(shape)`` devices
+    (or the explicit ``devices``), with Auto axis types when available."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices for mesh {shape}, "
+                           f"have {len(devices)}")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, tuple(axes), **_axis_types_kw(len(axes)))
+
+
+def set_mesh(mesh):
+    """Context manager that activates ``mesh``: ``jax.set_mesh`` on modern
+    JAX, the mesh's own context manager otherwise."""
+    import jax
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` if present; else the ``jax.experimental`` one with
+    ``check_vma`` translated to the legacy ``check_rep``."""
+    import jax
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -14,7 +14,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from .base import SHAPES, SMOKE_SHAPES, ArchConfig, RunConfig, ShapeConfig
+from .base import (SHAPES, SMOKE_SHAPES, AdaptConfig, ArchConfig,
+                   RunConfig, ShapeConfig)
 from . import (chameleon_34b, deepseek_v2_lite, h2o_danube3_4b,
                llama4_maverick, qwen15_4b, qwen15_32b, qwen3_8b,
                seamless_m4t_medium, xlstm_350m, zamba2_7b)
@@ -140,6 +141,6 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtype
     raise ValueError(shape.kind)
 
 
-__all__ = ["ARCH_NAMES", "ArchConfig", "RunConfig", "SHAPES", "SMOKE_SHAPES",
+__all__ = ["ARCH_NAMES", "AdaptConfig", "ArchConfig", "RunConfig", "SHAPES", "SMOKE_SHAPES",
            "ShapeConfig", "cell_applicable", "cells", "default_run_config",
            "get_arch", "get_smoke", "input_specs", "PER_ARCH_RUN"]

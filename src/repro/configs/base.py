@@ -144,6 +144,29 @@ SMOKE_SHAPES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Online communication control (repro.adapt): retune the gossip wire
+    from live SNR telemetry at a fixed cadence.  ``ladder`` is ordered
+    conservative -> aggressive; the controller only ever selects a rung
+    whose guaranteed or measured SNR clears the active graph's Theorem-1
+    bar eta_min (times ``margin`` for measured feasibility)."""
+    enabled: bool = False
+    interval: int = 50                  # retune cadence (steps)
+    ladder: Tuple[str, ...] = (
+        "dense",                        # exact anchor (SNR = inf)
+        "int8:block=256",               # guaranteed-SNR quantizer
+        "hybrid:block=256,top_j=16",
+        "hybrid:block=512,top_j=4",
+        "ternary:block=512",            # cheapest; measured-SNR only
+    )
+    margin: float = 1.25                # safety factor on eta_min
+    upgrade: float = 2.0                # hysteresis for stepping down
+    ema_decay: float = 0.9
+    window: int = 32                    # telemetry ring size
+    bank_size: int = 8                  # max pre-built gossip plans kept
+
+
+@dataclasses.dataclass(frozen=True)
 class RunConfig:
     """Distribution + optimization options for a training/serving run."""
     consensus_axis: Optional[str] = "data"   # "data" | "pod" | None (allreduce)
@@ -167,3 +190,4 @@ class RunConfig:
     use_pallas_wire: bool = False            # route wire codec through kernels/
     unsafe: bool = False                     # override the Theorem-1 SNR gate
     edge_drop_prob: float = 0.0              # straggler simulation (runtime.fault)
+    adapt: AdaptConfig = AdaptConfig()       # online wire control (repro.adapt)

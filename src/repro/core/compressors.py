@@ -33,6 +33,28 @@ INT8_BITS = 8
 
 
 # --------------------------------------------------------------------------
+# shared closed-form noise kernels (math-level compressors AND the packed
+# wire formats in core.wire implement the same blocked codecs; keep the
+# expected-noise algebra in exactly one place.  hybrid_greedy keeps a numpy
+# mirror of _tiled_hybrid_noise for its host-side grid search — these three
+# are cross-checked by the Monte-Carlo tests in tests/test_adapt.py)
+# --------------------------------------------------------------------------
+def tiled_ternary_noise(m_tiles: jax.Array) -> jax.Array:
+    """E-noise of per-tile-anchored ternary: sum |z|(a_tile - |z|) over
+    tiles of |z| shaped (..., block)."""
+    scale = jnp.max(m_tiles, axis=-1, keepdims=True)
+    return jnp.sum(m_tiles * (scale - m_tiles))
+
+
+def tiled_hybrid_noise(m_tiles: jax.Array, top_j: int) -> jax.Array:
+    """E-noise of the fixed-rate hybrid: per tile the top_j magnitudes go
+    exact, the rest are ternary-coded against the post-outlier max."""
+    rank = jnp.argsort(jnp.argsort(-m_tiles, axis=-1), axis=-1)
+    rest = jnp.where(rank < top_j, 0.0, m_tiles)
+    return tiled_ternary_noise(rest)
+
+
+# --------------------------------------------------------------------------
 # base
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +75,23 @@ class Compressor:
         """Expected wire bits for input z (paper accounting; scalar)."""
         raise NotImplementedError
 
+    def expected_noise_power(self, z: jax.Array) -> jax.Array:
+        """Closed-form E||C(z) - z||^2 for THIS input z (scalar, jittable).
+
+        This is the controller's prediction oracle (repro.adapt): every
+        compressor here is unbiased with an analytic conditional noise
+        power, so the live SNR of a CANDIDATE format on the current
+        differential can be evaluated exactly without Monte-Carlo."""
+        raise NotImplementedError
+
+    def expected_snr(self, z: jax.Array) -> jax.Array:
+        """||z||^2 / E||C(z)-z||^2 on this input (inf when noise is 0)."""
+        zf = z.astype(jnp.float32)
+        power = jnp.sum(zf ** 2)
+        noise = self.expected_noise_power(zf)
+        return jnp.where(noise > 0, power / jnp.maximum(noise, 1e-30),
+                         jnp.float32(jnp.inf))
+
 
 # --------------------------------------------------------------------------
 # identity (original DGD / uncompressed)
@@ -69,6 +108,9 @@ class Identity(Compressor):
 
     def expected_bits(self, z):
         return jnp.asarray(FLOAT_BITS * z.size, jnp.float32)
+
+    def expected_noise_power(self, z):
+        return jnp.float32(0.0)
 
 
 # --------------------------------------------------------------------------
@@ -95,6 +137,10 @@ class Sparsifier(Compressor):
         d = z.size
         return jnp.asarray(d * (FLOAT_BITS * self.p + ZERO_BITS * (1 - self.p)),
                            jnp.float32)
+
+    def expected_noise_power(self, z):
+        # E[(z/p B - z)^2] = z^2 (1-p)/p per element
+        return (1.0 / self.p - 1.0) * jnp.sum(z.astype(jnp.float32) ** 2)
 
 
 # --------------------------------------------------------------------------
@@ -123,6 +169,11 @@ class Ternary(Compressor):
     def expected_bits(self, z):
         d = z.size
         return jnp.asarray(FLOAT_BITS + TERNARY_BITS * (d - 1), jnp.float32)
+
+    def expected_noise_power(self, z):
+        # E[(a sign(z) B - z)^2] = |z|(a - |z|) per element (Ex. 2 form)
+        m = jnp.abs(z.astype(jnp.float32))
+        return jnp.sum(m * (jnp.max(m) - m))
 
 
 # --------------------------------------------------------------------------
@@ -159,6 +210,13 @@ class BlockedTernary(Compressor):
         n_tiles = -(-d // self.block)
         return jnp.asarray(FLOAT_BITS * n_tiles + TERNARY_BITS * d, jnp.float32)
 
+    def expected_noise_power(self, z):
+        d = z.shape[-1]
+        pad = (-d) % self.block
+        m = jnp.abs(jnp.pad(z.astype(jnp.float32), (0, pad))) \
+            .reshape(-1, self.block)
+        return tiled_ternary_noise(m)
+
 
 # --------------------------------------------------------------------------
 # low-precision stochastic quantizer (QSGD-style) — used by QDGD / ADC-DGD
@@ -191,6 +249,17 @@ class LowPrecision(Compressor):
 
     def expected_bits(self, z):
         return jnp.asarray(FLOAT_BITS + self.bits * z.size, jnp.float32)
+
+    def expected_noise_power(self, z):
+        # stochastic rounding: per-element noise frac(1-frac)/s^2
+        levels = 2 ** (self.bits - 1) - 1
+        zf = z.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(zf))
+        s = jnp.where(scale > 0, levels / jnp.maximum(scale, 1e-30), 0.0)
+        frac = zf * s - jnp.floor(zf * s)
+        return jnp.where(scale > 0,
+                         jnp.sum(frac * (1.0 - frac))
+                         / jnp.maximum(s, 1e-30) ** 2, 0.0)
 
 
 # --------------------------------------------------------------------------
@@ -283,6 +352,16 @@ class HybridChain(Compressor):
                 + (TERNARY_BITS + idx_bits) * n_tern
                 + (FLOAT_BITS * p + ZERO_BITS * (1 - p)) * n_sparse).astype(jnp.float32)
 
+    def expected_noise_power(self, z):
+        zf = z.astype(jnp.float32)
+        tern_mask, anchor, anchor_mask, _ = self._plan(zf)
+        m = jnp.abs(zf)
+        tern_noise = jnp.where(tern_mask & ~anchor_mask,
+                               m * (anchor - m), 0.0)
+        p = self.eta / (1.0 + self.eta)
+        sparse_noise = jnp.where(tern_mask, 0.0, (1.0 / p - 1.0) * zf ** 2)
+        return jnp.sum(tern_noise + sparse_noise)
+
 
 # --------------------------------------------------------------------------
 # blocked hybrid — TPU wire-format (ternary plane + per-tile top-j floats)
@@ -330,6 +409,13 @@ class BlockedHybrid(Compressor):
             n_tiles * (FLOAT_BITS  # scale
                        + self.top_j * (FLOAT_BITS + idx_bits))
             + TERNARY_BITS * d, jnp.float32)
+
+    def expected_noise_power(self, z):
+        d = z.shape[-1]
+        pad = (-d) % self.block
+        m = jnp.abs(jnp.pad(z.astype(jnp.float32), (0, pad))) \
+            .reshape(-1, self.block)
+        return tiled_hybrid_noise(m, self.top_j)
 
 
 # --------------------------------------------------------------------------

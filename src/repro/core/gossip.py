@@ -216,7 +216,7 @@ def build_gossip_fn(plan: GossipPlan, mesh, d_specs: PyTree
     ``d_specs``: PartitionSpec tree for the STACKED d (leading node dim over
     the consensus axes).  Returns fn(key, d_stacked) -> (c_own, agg) stacked.
     """
-    from jax import shard_map
+    from ..compat import shard_map
 
     def body(key, d_stacked):
         # strip the (local size 1) node dim

@@ -129,6 +129,85 @@ def brute_force_plan(z: np.ndarray, eta: float, max_d: int = 12) -> HybridPlan:
     return best
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockedPlan:
+    """Chosen fixed-rate hybrid wire parameters for a target SNR."""
+    block: int
+    top_j: int
+    snr: float                 # predicted ||z||^2 / E-noise on the sample
+    bits: float                # wire bits for the sample's length
+    eta: float                 # the SNR target it was solved for
+
+    @property
+    def spec(self) -> str:
+        """Wire-level spec (core.wire registry naming)."""
+        return self.spec_for("wire")
+
+    def spec_for(self, level: str) -> str:
+        """Registry-correct spec: the same format is 'hybrid' in the wire
+        registry and 'blocked_hybrid' in the math-level compressor one."""
+        name = "hybrid" if level == "wire" else "blocked_hybrid"
+        return f"{name}:block={self.block},top_j={self.top_j}"
+
+
+def _blocked_hybrid_noise(z: np.ndarray, block: int, top_j: int) -> float:
+    """Closed-form expected noise of the (block, top_j) fixed-rate hybrid on
+    sample z: per tile the top-j go exact, the rest are ternary-coded against
+    the post-outlier tile max.
+
+    Host-side numpy mirror of ``compressors.tiled_hybrid_noise`` (kept in
+    numpy so the grid search stays off the jax dispatch path; the two are
+    cross-checked via the Monte-Carlo tests in tests/test_adapt.py)."""
+    d = z.size
+    pad = (-d) % block
+    m = np.abs(np.pad(np.asarray(z, np.float64).reshape(-1),
+                      (0, pad))).reshape(-1, block)
+    rank = np.argsort(np.argsort(-m, axis=-1), axis=-1)
+    rest = np.where(rank < top_j, 0.0, m)
+    scale = rest.max(axis=-1, keepdims=True)
+    return float((rest * (scale - rest)).sum())
+
+
+def _blocked_hybrid_bits(d: int, block: int, top_j: int) -> float:
+    n_tiles = -(-d // block)
+    idx_bits = math.ceil(math.log2(block)) if block > 1 else 1
+    return (n_tiles * (FLOAT_BITS + top_j * (FLOAT_BITS + idx_bits))
+            + TERNARY_BITS * d)
+
+
+def blocked_plan(z: np.ndarray, eta: float,
+                 blocks: Tuple[int, ...] = (32, 64, 128, 256, 512),
+                 top_js: Tuple[int, ...] = (1, 2, 4, 8, 16),
+                 ) -> Optional[BlockedPlan]:
+    """Pick the cheapest fixed-rate hybrid wire (block, top_j) whose
+    closed-form expected SNR on the sample ``z`` clears ``eta``.
+
+    This is the static-shape counterpart of Algorithm 2 (the wire needs
+    fixed array sizes, so the greedy anchor search collapses to a small grid
+    over tile size and exact-outlier count), and the inner oracle of the
+    adapt controller's knapsack (repro.adapt.controller).  Returns None when
+    no candidate is feasible — callers then fall back to a format with a
+    guaranteed SNR bound (sparsifier / dense).
+    """
+    z = np.asarray(z, np.float64).reshape(-1)
+    d = z.size
+    power = float((z ** 2).sum())
+    cands = []
+    for b in blocks:
+        for j in top_js:
+            if j >= b or b > max(d, 1):
+                continue
+            noise = _blocked_hybrid_noise(z, b, j)
+            snr = power / noise if noise > 0 else float("inf")
+            if snr >= eta:
+                cands.append(BlockedPlan(block=b, top_j=j, snr=snr,
+                                         bits=_blocked_hybrid_bits(d, b, j),
+                                         eta=eta))
+    if not cands:
+        return None
+    return min(cands, key=lambda c: (c.bits, -c.snr))
+
+
 def plan_noise_power(z: np.ndarray, plan: HybridPlan) -> float:
     """Worst-case expected compression-noise power of a plan; used to verify
     the effective SNR >= eta in tests."""

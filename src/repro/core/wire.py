@@ -103,6 +103,21 @@ class WireFormat:
     def snr_lower_bound(self, d: int) -> float:
         return 0.0
 
+    def expected_noise_power(self, x: jax.Array) -> jax.Array:
+        """Closed-form E||decode(encode(x)) - x||^2 for THIS input (scalar,
+        jittable) — the adapt controller's candidate-SNR oracle.  Formats
+        without an analytic form may leave this unimplemented; the
+        controller then falls back to snr_lower_bound / measured feedback."""
+        raise NotImplementedError
+
+    def expected_snr(self, x: jax.Array) -> jax.Array:
+        """||x||^2 / E-noise on this input (inf when noise is 0)."""
+        xf = x.astype(jnp.float32)
+        power = jnp.sum(xf ** 2)
+        noise = self.expected_noise_power(xf)
+        return jnp.where(noise > 0, power / jnp.maximum(noise, 1e-30),
+                         jnp.float32(jnp.inf))
+
 
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +136,12 @@ class DenseWire(WireFormat):
 
     def snr_lower_bound(self, d):
         return float("inf")
+
+    def expected_noise_power(self, x):
+        if self.dtype == "float32":
+            return jnp.float32(0.0)
+        # bf16 round-to-nearest: |err| <= 2^-8 |x| per element
+        return jnp.sum((x.astype(jnp.float32) * 2.0 ** -8) ** 2)
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +178,15 @@ class Int8Wire(WireFormat):
         # <= (scale/254)^2 over <= block elements, ||z||^2 >= scale^2
         return 4.0 * 127.0**2 / self.block
 
+    def expected_noise_power(self, x):
+        xp, _ = _pad_last(x.astype(jnp.float32), self.block)
+        t = _tiles(xp, self.block)
+        scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+        s = jnp.where(scale > 0, 127.0 / jnp.maximum(scale, 1e-30), 0.0)
+        frac = t * s - jnp.floor(t * s)
+        return jnp.sum(jnp.where(
+            scale > 0, frac * (1.0 - frac) / jnp.maximum(s, 1e-30) ** 2, 0.0))
+
 
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +215,11 @@ class TernaryWire(WireFormat):
         lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
         Lp = -(-L // self.block) * self.block
         return lead * (Lp * 2 + (Lp // self.block) * 32)
+
+    def expected_noise_power(self, x):
+        from .compressors import tiled_ternary_noise
+        xp, _ = _pad_last(x.astype(jnp.float32), self.block)
+        return tiled_ternary_noise(jnp.abs(_tiles(xp, self.block)))
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +264,12 @@ class HybridWire(WireFormat):
         T = Lp // self.block
         return lead * (Lp * 2 + T * 32 + T * self.top_j * (32 + 16))
 
+    def expected_noise_power(self, x):
+        from .compressors import tiled_hybrid_noise
+        xp, _ = _pad_last(x.astype(jnp.float32), self.block)
+        return tiled_hybrid_noise(jnp.abs(_tiles(xp, self.block)),
+                                  self.top_j)
+
 
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -265,6 +306,11 @@ class RandKWire(WireFormat):
 
     def snr_lower_bound(self, d):
         return self.k / max(self.block - self.k, 1)
+
+    def expected_noise_power(self, x):
+        # uniform keep-k of a tile: E[(b/k X - x)^2] summed = (b/k - 1)||x||^2
+        return (self.block / self.k - 1.0) * jnp.sum(
+            x.astype(jnp.float32) ** 2)
 
 
 # ---------------------------------------------------------------------------

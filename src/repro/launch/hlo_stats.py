@@ -374,10 +374,18 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     return analyze(hlo_text)["collectives"]
 
 
-def cost_summary(compiled) -> Dict[str, float]:
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across jaxlib versions: older
+    runtimes return a one-element list of per-partition dicts, newer ones the
+    dict itself (and some omit keys entirely — callers get {} then)."""
     ca = compiled.cost_analysis()
     if isinstance(ca, (list, tuple)):
-        ca = ca[0]
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = xla_cost_analysis(compiled)
     return {
         "flops_xla_unweighted": float(ca.get("flops", 0.0)),
         "transcendentals": float(ca.get("transcendentals", 0.0)),

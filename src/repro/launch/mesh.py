@@ -11,6 +11,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = one 256-chip v5e pod; 2x16x16 = two pods (512 chips).
@@ -23,25 +25,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
-    devices = jax.devices()
-    if len(devices) < n:
+    if len(jax.devices()) < n:
         raise RuntimeError(
-            f"need {n} devices for mesh {shape}, have {len(devices)} — the "
-            f"dry-run entrypoint (launch/dryrun.py) must set "
+            f"need {n} devices for mesh {shape}, have {len(jax.devices())} — "
+            f"the dry-run entrypoint (launch/dryrun.py) must set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE "
             f"any jax import")
-    dev_array = np.asarray(devices[:n]).reshape(shape)
-    from jax.sharding import Mesh
-    return Mesh(dev_array, axes,
-                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Small mesh for multi-device CPU tests (subprocesses set
     xla_force_host_platform_device_count themselves)."""
-    import jax
-    n = int(np.prod(shape))
-    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
-    from jax.sharding import Mesh
-    return Mesh(dev_array, axes,
-                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -38,13 +38,22 @@ def main(argv=None):
     ap.add_argument("--unsafe", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--adapt", action="store_true",
+                    help="retune the gossip wire online from SNR telemetry")
+    ap.add_argument("--adapt-interval", type=int, default=50)
+    ap.add_argument("--adapt-ladder", default="",
+                    help="semicolon-separated wire specs, conservative->"
+                         "aggressive (specs contain commas); default: "
+                         "AdaptConfig.ladder")
+    ap.add_argument("--adapt-margin", type=float, default=1.25)
     args = ap.parse_args(argv)
 
     import jax
     import numpy as np
 
+    from ..compat import set_mesh
     from ..configs import get_arch, get_smoke
-    from ..configs.base import RunConfig, ShapeConfig
+    from ..configs.base import AdaptConfig, RunConfig, ShapeConfig
     from ..data import SyntheticLMData
     from ..train import make_trainer
     from .mesh import make_test_mesh
@@ -65,11 +74,16 @@ def main(argv=None):
 
     arch = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     shape_cfg = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    adapt_kw = {"enabled": args.adapt, "interval": args.adapt_interval,
+                "margin": args.adapt_margin}
+    if args.adapt_ladder:
+        adapt_kw["ladder"] = tuple(
+            s.strip() for s in args.adapt_ladder.split(";") if s.strip())
     run = RunConfig(
         consensus_axis=None if args.consensus == "none" else args.consensus,
         wire=args.wire, topology=args.topology, optimizer=args.optimizer,
         alpha=args.alpha, schedule=args.schedule, grad_accum=args.grad_accum,
-        unsafe=args.unsafe)
+        unsafe=args.unsafe, adapt=AdaptConfig(**adapt_kw))
 
     tr = make_trainer(mesh, arch, run, shape_cfg)
     print(f"mesh={dict(zip(axes, shape))} consensus={tr.consensus_axes} "
@@ -90,19 +104,75 @@ def main(argv=None):
                 start_step = manifest["step"]
                 print(f"resumed from step {start_step}")
 
-    step_fn = tr.jit_train_step()
+    adapt_on = run.adapt.enabled and tr.node_mode
+    if adapt_on:
+        from ..adapt import SNRFeedbackPolicy
+        from ..adapt import telemetry as tm
+        from ..core import consensus as cons
+        eta_min = cons.spectrum(tr.plan.W).snr_threshold
+        # the configured wire is the run's starting rung if it is on the
+        # ladder; otherwise start at the conservative end
+        ladder = run.adapt.ladder
+        from ..core.wire import make_wire
+        fmts = [make_wire(s) for s in ladder]  # fail fast on a typo'd rung
+        # Theorem-1 gate, same bar as the static path (_validate_snr): the
+        # ladder must contain a retreat anchor whose GUARANTEED SNR clears
+        # eta_min — data-dependent rungs are the adaptive premise, but the
+        # feedback policy needs a provably-safe rung to climb back to
+        if not run.unsafe and not any(
+                f.snr_lower_bound(1) > eta_min for f in fmts):
+            raise ValueError(
+                f"Theorem-1 violation: no adapt-ladder rung has a "
+                f"guaranteed SNR above the threshold {eta_min:.3g} "
+                f"(ladder {list(ladder)}); add a safe anchor (e.g. 'dense') "
+                f"or set --unsafe to override")
+        start = ladder.index(run.wire) if run.wire in ladder else 0
+        policy = SNRFeedbackPolicy(
+            ladder=ladder, eta_min=eta_min, margin=run.adapt.margin,
+            upgrade=run.adapt.upgrade, cadence=run.adapt.interval,
+            start_index=start)
+        bank = tr.wire_bank(max_size=run.adapt.bank_size, donate=True)
+        from jax.sharding import PartitionSpec
+        n_leaves = len(jax.tree.leaves(
+            tr.param_specs(), is_leaf=lambda t: isinstance(t, PartitionSpec)))
+        tel = tm.init(n_layers=n_leaves, window=run.adapt.window)
+        active = policy.initial_spec()
+        step_fn = bank.get(active)
+        print(f"adapt: eta_min={eta_min:.3g} ladder={list(ladder)} "
+              f"start={active!r}")
+    else:
+        step_fn = tr.jit_train_step()
     data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=args.seq_len,
                            global_batch=args.global_batch,
                            n_nodes=max(tr.n_nodes, 1), iid=args.iid)
     history = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(start_step, args.steps):
             state, m = step_fn(state, data.batch(i))
+            wire_used = active if adapt_on else None  # wire that RAN step i
+            if adapt_on:
+                tel = tm.update(tel, m["diff_power_leaves"],
+                                m["noise_power_leaves"],
+                                decay=run.adapt.ema_decay)
+                # off-cadence steps only need the EMA totals (two scalar
+                # syncs); the full per-layer snapshot stays at cadence
+                at_cadence = (i + 1) % max(run.adapt.interval, 1) == 0
+                snap = (tm.snapshot(tel, run.adapt.ema_decay) if at_cadence
+                        else tm.total_snapshot(tel, run.adapt.ema_decay))
+                nxt = policy.decide(i + 1, snap)
+                if nxt is not None and nxt != active:
+                    print(f"adapt: step {i+1} wire {active!r} -> {nxt!r} "
+                          f"(measured SNR {snap.total_snr:.3g})")
+                    active = nxt
+                    step_fn = bank.get(active)
             if (i + 1) % args.log_every == 0 or i == args.steps - 1:
-                row = {k: float(v) for k, v in m.items()}
+                row = {k: float(v) for k, v in m.items()
+                       if np.ndim(v) == 0}
                 row["step"] = i + 1
                 row["wall_s"] = round(time.time() - t0, 2)
+                if adapt_on:
+                    row["wire"] = wire_used
                 history.append(row)
                 print(f"step {i+1:5d} loss {row['loss']:.4f} "
                       f"gnorm {row['grad_norm']:.3f} "
@@ -111,6 +181,8 @@ def main(argv=None):
                       f"step {i+1:5d} loss {row['loss']:.4f}")
             if mgr:
                 mgr.maybe_save(i + 1, state, extra={"loss": float(m["loss"])})
+    if adapt_on:
+        print(f"adapt: bank {bank.stats()}")
     if args.metrics_out:
         Path(args.metrics_out).write_text(json.dumps(history, indent=1))
     print(f"done: {args.steps - start_step} steps in {time.time()-t0:.1f}s; "

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import set_mesh
 from ..configs.base import ArchConfig, RunConfig, ShapeConfig
 from ..models import (cache_axes, decode_step, init_cache_specs, init_model,
                       model_axes, prefill)
@@ -158,7 +159,7 @@ class Server:
         donation is on — the serving loop aliases the cache in place."""
         from ..configs import input_specs
         spec = input_specs(self.arch, self.shape)
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             if self.shape.kind == "prefill":
                 return self.jit_prefill(donate=True).lower(
                     self.param_struct(), spec, self.cache_struct())

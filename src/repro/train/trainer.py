@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import set_mesh
 from ..configs.base import ArchConfig, RunConfig, ShapeConfig
 from ..core import consensus as cons
 from ..core import gossip as G
@@ -236,7 +237,7 @@ class Trainer:
     def init_state(self, seed: int = 0) -> TrainState:
         init = self.init_state_fn()
         shardings = self.state_shardings()
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             return jax.jit(init, out_shardings=shardings)(
                 jax.random.PRNGKey(seed))
 
@@ -247,7 +248,11 @@ class Trainer:
     # ------------------------------------------------------------------
     # the step
     # ------------------------------------------------------------------
-    def build_train_step(self):
+    def build_train_step(self, plan: Optional[G.GossipPlan] = None):
+        """``plan=None`` uses the launch-time gossip plan; the adapt
+        controller passes an override with the same topology but a
+        different wire format (see ``train_step_for_wire``)."""
+        plan = plan if plan is not None else self.plan
         arch, run, shape = self.arch, self.run, self.shape
         schedule = make_schedule(run.schedule, run.alpha)
         rules = self.rules
@@ -301,7 +306,7 @@ class Trainer:
                 # O(max leaf).
                 leaf_specs, spec_tree = jax.tree_util.tree_flatten(
                     param_specs, is_leaf=lambda t: isinstance(t, P))
-                leaf_fns = [G.build_gossip_fn(self.plan, self.mesh, sp)
+                leaf_fns = [G.build_gossip_fn(plan, self.mesh, sp)
                             for sp in leaf_specs]
 
                 def gossip_update(key, alpha_t, x, s, u):
@@ -309,8 +314,7 @@ class Trainer:
                     ss = spec_tree.flatten_up_to(s)
                     us = spec_tree.flatten_up_to(u)
                     x_out, s_out = [], []
-                    diff_p = jnp.float32(0)
-                    noise_p = jnp.float32(0)
+                    diff_l, noise_l = [], []
                     token = jnp.zeros((), jnp.float32)
                     for i, fn in enumerate(leaf_fns):
                         u_i, token = jax.lax.optimization_barrier(
@@ -319,15 +323,15 @@ class Trainer:
                         c, a = fn(jax.random.fold_in(key, i), d_i)
                         x_out.append(xs[i] + c.astype(xs[i].dtype))
                         s_out.append(ss[i] + (a - c).astype(ss[i].dtype))
-                        diff_p += jnp.sum(d_i.astype(jnp.float32) ** 2)
-                        noise_p += jnp.sum((c.astype(jnp.float32)
-                                            - d_i.astype(jnp.float32)) ** 2)
+                        diff_l.append(jnp.sum(d_i.astype(jnp.float32) ** 2))
+                        noise_l.append(jnp.sum((c.astype(jnp.float32)
+                                                - d_i.astype(jnp.float32)) ** 2))
                         token = (a.ravel()[0] * 0.0).astype(jnp.float32)
                     return (jax.tree.unflatten(spec_tree, x_out),
                             jax.tree.unflatten(spec_tree, s_out),
-                            diff_p, noise_p)
+                            jnp.stack(diff_l), jnp.stack(noise_l))
             else:
-                gossip_fn = G.build_gossip_fn(self.plan, self.mesh,
+                gossip_fn = G.build_gossip_fn(plan, self.mesh,
                                               param_specs)
 
                 def gossip_update(key, alpha_t, x, s, u):
@@ -337,14 +341,15 @@ class Trainer:
                     x_new = _tree_add(x, c_own)
                     s_new = jax.tree.map(lambda a, b, c: a + b - c,
                                          s, agg, c_own)
-                    diff_p = sum(jnp.sum(t.astype(jnp.float32) ** 2)
-                                 for t in jax.tree.leaves(d))
-                    noise_p = sum(
+                    diff_l = jnp.stack([
+                        jnp.sum(t.astype(jnp.float32) ** 2)
+                        for t in jax.tree.leaves(d)])
+                    noise_l = jnp.stack([
                         jnp.sum((a.astype(jnp.float32)
                                  - b.astype(jnp.float32)) ** 2)
                         for a, b in zip(jax.tree.leaves(c_own),
-                                        jax.tree.leaves(d)))
-                    return x_new, s_new, diff_p, noise_p
+                                        jax.tree.leaves(d))])
+                    return x_new, s_new, diff_l, noise_l
 
             def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
                 key, k_gossip = jax.random.split(state.key)
@@ -361,7 +366,7 @@ class Trainer:
                 alpha_t = schedule(state.step + 1)
                 u, opt = update_direction(run.optimizer, grads, state.opt,
                                           state.x)
-                x_new, s_new, diff_p, noise_p = gossip_update(
+                x_new, s_new, diff_l, noise_l = gossip_update(
                     k_gossip, alpha_t, state.x, state.s, u)
                 out_metrics = {
                     "loss": jnp.mean(loss),
@@ -369,9 +374,12 @@ class Trainer:
                     "grad_norm": jnp.sqrt(sum(
                         jnp.sum(g.astype(jnp.float32) ** 2)
                         for g in jax.tree.leaves(grads))),
-                    # self-noise-reduction observables (paper §III-B)
-                    "diff_power": diff_p,
-                    "noise_power": noise_p,
+                    # self-noise-reduction observables (paper §III-B);
+                    # per-leaf vectors feed the adapt telemetry
+                    "diff_power": jnp.sum(diff_l),
+                    "noise_power": jnp.sum(noise_l),
+                    "diff_power_leaves": diff_l,
+                    "noise_power_leaves": noise_l,
                 }
                 out_metrics.update({k: jnp.mean(v) for k, v in metrics.items()})
                 return TrainState(x=x_new, s=s_new, opt=opt,
@@ -396,8 +404,9 @@ class Trainer:
 
         return step_fn
 
-    def jit_train_step(self, donate: bool = True):
-        step_fn = self.build_train_step()
+    def jit_train_step(self, donate: bool = True,
+                       plan: Optional[G.GossipPlan] = None):
+        step_fn = self.build_train_step(plan)
         shardings = self.state_shardings()
         batch_sh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
                                 self.batch_spec(),
@@ -413,7 +422,7 @@ class Trainer:
         State donation is on — the deployed step aliases x/s/opt in place."""
         from ..data.pipeline import make_batch_specs
         batch_struct = batch_struct or make_batch_specs(self.arch, self.shape)
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             return self.jit_train_step(donate=True).lower(
                 self.state_struct(), batch_struct)
 
@@ -437,6 +446,29 @@ class Trainer:
                 "dense_bits_per_node_step": float(dense_bits),
                 "neighbors": float(n_out),
                 "compression_ratio": float(dense_bits / max(bits, 1))}
+
+    # ------------------------------------------------------------------
+    # adaptive communication (repro.adapt)
+    # ------------------------------------------------------------------
+    def plan_for_wire(self, spec: str) -> G.GossipPlan:
+        """The launch plan with only the wire format swapped — topology, W
+        and offsets stay identical, so the Theorem-1 bar is unchanged."""
+        assert self.node_mode, "wire switching needs an active gossip plan"
+        return dataclasses.replace(self.plan, fmt=make_wire(spec))
+
+    def train_step_for_wire(self, spec: str, donate: bool = False):
+        """Jitted train step with the gossip wire overridden to ``spec``."""
+        return self.jit_train_step(donate=donate,
+                                   plan=self.plan_for_wire(spec))
+
+    def wire_bank(self, max_size: int = 8, donate: bool = False):
+        """Bounded LRU of jitted train steps keyed by wire spec — the
+        adapt controller switches formats through this, so a repeated
+        switch is a dictionary lookup, never a recompile."""
+        from ..adapt.plan_bank import PlanBank
+        return PlanBank(
+            lambda spec: self.train_step_for_wire(spec, donate=donate),
+            max_size=max_size)
 
 
 def make_trainer(mesh, arch: ArchConfig, run: RunConfig, shape: ShapeConfig

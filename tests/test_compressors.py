@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compressors import (BlockedHybrid, BlockedTernary, HybridChain,

@@ -1,6 +1,7 @@
 """Consensus-matrix machinery + the paper's greedy Algorithm 2."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import consensus as cons

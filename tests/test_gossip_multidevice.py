@@ -8,15 +8,17 @@ import pytest
 
 from conftest import run_in_devices
 
+pytestmark = pytest.mark.multidevice
+
 
 def test_gossip_equals_dense_mixing():
     out = run_in_devices(8, """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
         from jax.sharding import PartitionSpec as P
         from repro.core.wire import make_wire
         from repro.core.gossip import make_plan, build_gossip_fn
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("pod", "data"))
         key = jax.random.PRNGKey(0)
         fmt = make_wire("hybrid:block=64,top_j=2")
         plan = make_plan(mesh, ("pod", "data"), fmt)
@@ -39,11 +41,11 @@ def test_gossip_equals_dense_mixing():
 def test_collective_permute_carries_packed_bytes():
     out = run_in_devices(8, """
         import jax, jax.numpy as jnp, re
+        from repro.compat import make_mesh, set_mesh
         from jax.sharding import PartitionSpec as P
         from repro.core.wire import make_wire
         from repro.core.gossip import make_plan, build_gossip_fn
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         fmt = make_wire("ternary:block=512")
         plan = make_plan(mesh, ("data",), fmt)
         d = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 4, 2048))}
@@ -68,11 +70,11 @@ def test_collective_permute_carries_packed_bytes():
 def test_straggler_drop_renormalize():
     out = run_in_devices(8, """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
         from repro.core.wire import DenseWire
         from repro.core.gossip import make_plan, mesh_consensus_matrix
         from repro.runtime.fault import drop_renormalize_plan, StragglerSim
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         plan = make_plan(mesh, ("data",), DenseWire())
         nz = [i for i, (o, w) in enumerate(plan.offsets) if any(o)]
         eff = drop_renormalize_plan(plan, [nz[0]])
@@ -95,12 +97,12 @@ def test_straggler_drop_renormalize():
 def test_trainer_node_mode_loss_decreases():
     out = run_in_devices(8, """
         import jax
+        from repro.compat import make_mesh, set_mesh
         from repro.configs import get_smoke
         from repro.configs.base import RunConfig, ShapeConfig
         from repro.train import make_trainer
         from repro.data import SyntheticLMData
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         arch = get_smoke("qwen3-8b")
         shape = ShapeConfig("t", 64, 8, "train")
         run = RunConfig(consensus_axis="data", wire="hybrid:block=64,top_j=4",
@@ -111,7 +113,7 @@ def test_trainer_node_mode_loss_decreases():
         step = tr.jit_train_step()
         data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=64,
                                global_batch=8, n_nodes=4, iid=False)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             losses = []
             for i in range(15):
                 state, m = step(state, data.batch(i))
@@ -127,12 +129,12 @@ def test_trainer_node_mode_loss_decreases():
 def test_fsdp_pod_consensus_mode():
     out = run_in_devices(8, """
         import jax
+        from repro.compat import make_mesh, set_mesh
         from repro.configs import get_smoke
         from repro.configs.base import RunConfig, ShapeConfig
         from repro.train import make_trainer
         from repro.data import SyntheticLMData
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         arch = get_smoke("qwen1.5-32b")
         shape = ShapeConfig("t", 64, 8, "train")
         run = RunConfig(consensus_axis="pod", param_mode="fsdp_tp",
@@ -144,7 +146,7 @@ def test_fsdp_pod_consensus_mode():
         data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=64,
                                global_batch=8, n_nodes=2)
         losses = []
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             for i in range(16):
                 state, m = step(state, data.batch(i))
                 losses.append(float(m["loss"]))

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import set_mesh
 from repro.configs import (PER_ARCH_RUN, SHAPES, cell_applicable,
                            default_run_config, get_arch, get_smoke,
                            input_specs)
@@ -33,14 +34,15 @@ def test_consensus_axis_resolution(mesh1):
     assert tr3.n_nodes == 1 and not tr3.node_mode
 
 
+@pytest.mark.multidevice
 def test_snr_gate_raises_on_bad_randk(devices8):
     out = devices8("""
         import jax
+        from repro.compat import make_mesh, set_mesh
         from repro.configs import get_smoke
         from repro.configs.base import RunConfig, ShapeConfig
         from repro.train import make_trainer
-        mesh = jax.make_mesh((8, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((8, 1), ("data", "model"))
         arch = get_smoke("qwen3-8b")
         shape = ShapeConfig("t", 32, 8, "train")
         # randk with k << block has a tiny guaranteed SNR -> must be gated
@@ -99,7 +101,7 @@ def test_trainer_ckpt_resume_identical(mesh1, tmp_path):
                            global_batch=4)
     step = tr.jit_train_step(donate=False)
 
-    with jax.set_mesh(tr.mesh):
+    with set_mesh(tr.mesh):
         s_a = tr.init_state(0)
         for i in range(6):
             s_a, _ = step(s_a, data.batch(i))
