@@ -13,11 +13,17 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,fig4,roofline,wire")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI probe: gossip-step microbenchmark "
+                         "only (refreshes artifacts/bench/BENCH_gossip.json)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
                    fig4_adaptive, roofline, wire_micro)
+    if args.smoke:
+        print("==== gossip (smoke) ====", flush=True)
+        return wire_micro.main(smoke=True)
     suites = {
         "fig1": fig1_convergence.main,
         "fig2": fig2_compressors.main,

@@ -1,27 +1,52 @@
-"""Wire-codec microbenchmark: wall-time per call of the math-level
-compressors, the fixed-shape wire codecs, and the Pallas kernels
-(interpret=True on CPU — correctness-path timing, not TPU performance), plus
-the static bits-per-element table that drives communication accounting.
+"""Wire microbenchmarks.
+
+Section 1 (codec micro): wall-time per call of the fixed-shape wire codecs
+and the Pallas kernels (interpret=True on CPU — correctness-path timing,
+not TPU performance), plus the static bits-per-element table that drives
+communication accounting.  -> artifacts/bench/wire_micro.json
+
+Section 2 (gossip step): the per-leaf vs FLAT-WIRE gossip exchange on an
+8-virtual-device ring — static collective-op counts and collective bytes
+from the partitioned HLO (launch.hlo_stats), wall time per gossip step,
+and a bit-exactness check, at equal wire bits.  Runs in a subprocess so the
+device count doesn't leak into the parent.  -> artifacts/bench/BENCH_gossip.json
+
+``python -m benchmarks.wire_micro [--gossip-only]`` or via benchmarks.run
+(``--smoke`` = gossip section only, seconds on CPU).
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.wire import make_wire
-from repro.kernels import ops
-
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+SRC = Path(__file__).resolve().parent.parent / "src"
 
-D = 1 << 18   # 256k elements
+D = 1 << 18   # 256k elements (codec micro)
+
+N_DEVICES = 8
+# layer-stack-like differential tree (6 layers x 4 leaf kinds = 24 leaves)
+# with ragged last dims (not all multiples of the wire block) and row
+# counts that don't divide the kernel tile — the regime the flat path is
+# for: per-leaf gossip pays O(leaves x offsets) collective dispatches,
+# flat pays O(offsets)
+GOSSIP_LEAVES = {
+    f"layer{i}.{nm}": shape
+    for i in range(6)
+    for nm, shape in (("wq", (8, 520)), ("wk", (4, 1100)),
+                      ("emb", (2048,)), ("mlp", (8, 700)))
+}
+GOSSIP_WIRE = "ternary:block=512"
+GOSSIP_STEPS = 20
 
 
 def timeit(fn, *args, n=5):
+    import jax
     fn(*args)  # compile
     t0 = time.perf_counter()
     for _ in range(n):
@@ -30,8 +55,11 @@ def timeit(fn, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
-    ART.mkdir(parents=True, exist_ok=True)
+def codec_micro():
+    import jax
+    from repro.core.wire import make_wire
+    from repro.kernels import ops
+
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (D,))
     rows = []
@@ -44,13 +72,167 @@ def main():
         bits = fmt.wire_bits(x.shape) / D
         rows.append({"codec": spec, "us": us, "bits_per_elt": bits})
         print(f"wire_micro,{spec},{us:.1f},{bits:.2f},{32/bits:.1f}")
-    x2 = x.reshape(-1, 512)
-    us = timeit(lambda: ops.ternary_encode(x2.reshape(-1), key, block=512))
+    us = timeit(lambda: ops.ternary_encode(x, key, block=512))
     print(f"wire_micro,pallas_ternary_encode(interp),{us:.1f},2.06,15.5")
     rows.append({"codec": "pallas_ternary_interp", "us": us})
     (ART / "wire_micro.json").write_text(json.dumps(rows, indent=1))
-    return 0
+
+
+# ---------------------------------------------------------------------------
+# gossip-step section (runs as a child process with 8 virtual CPU devices)
+# ---------------------------------------------------------------------------
+def _gossip_child(out_path: str, steps: int) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh
+    from repro.core.gossip import (build_gossip_fn, make_plan,
+                                   plan_wire_bits_per_step)
+    from repro.core.wire import make_wire
+    from repro.launch.hlo_stats import analyze
+
+    mesh = make_mesh((N_DEVICES,), ("data",))
+    key = jax.random.PRNGKey(0)
+    d = {}
+    for i, (name, shape) in enumerate(sorted(GOSSIP_LEAVES.items())):
+        d[name] = jax.random.normal(jax.random.PRNGKey(i), (N_DEVICES,) + shape)
+    specs = {k: P(*(("data",) + (None,) * (len(s)))) for k, s in
+             sorted(GOSSIP_LEAVES.items())}
+    fmt = make_wire(GOSSIP_WIRE)
+
+    variants = {
+        "leaf": dict(wire_path="leaf"),
+        "flat": dict(wire_path="flat"),
+        "flat_pallas": dict(wire_path="flat", use_pallas=True),
+    }
+    out = {"config": {"devices": N_DEVICES, "wire": GOSSIP_WIRE,
+                      "leaves": {k: list(v) for k, v in GOSSIP_LEAVES.items()},
+                      "topology": "ring", "steps_timed": steps},
+           "paths": {}}
+    results = {}
+    bits = {}
+    for name, kw in variants.items():
+        plan = make_plan(mesh, ("data",), fmt, **kw)
+        fn = jax.jit(build_gossip_fn(plan, mesh, specs))
+        compiled = fn.lower(key, d).compile()
+        stats = analyze(compiled.as_text())
+        coll = stats["collectives"]
+        counts = coll["counts"]
+        c_own, agg = fn(key, d)
+        jax.block_until_ready((c_own, agg))
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            c_own, agg = fn(key, d)
+        jax.block_until_ready((c_own, agg))
+        us = (time.perf_counter() - t0) / steps * 1e6
+        results[name] = (c_own, agg)
+        bits[name] = plan_wire_bits_per_step(
+            plan, jax.tree.map(lambda t: jax.ShapeDtypeStruct(
+                t.shape[1:], t.dtype), d))
+        out["paths"][name] = {
+            "collective_permutes": counts.get("collective-permute", 0),
+            "collective_ops_total": int(sum(counts.values())),
+            "collective_bytes": float(coll["total"]),
+            "wall_us_per_step": us,
+            "wire_bits_per_node_step": bits[name],
+        }
+
+    ref_c, ref_a = results["leaf"]
+    out["bit_exact"] = {
+        name: bool(all(
+            np.array_equal(np.asarray(ref_c[k]), np.asarray(c[k])) and
+            np.array_equal(np.asarray(ref_a[k]), np.asarray(a[k]))
+            for k in ref_c))
+        for name, (c, a) in results.items() if name != "leaf"}
+    out["wire_bits_equal"] = bool(len(set(bits.values())) == 1)
+    leaf, flat = out["paths"]["leaf"], out["paths"]["flat"]
+    out["ratios"] = {
+        "collective_ops_leaf_over_flat":
+            leaf["collective_ops_total"] / max(flat["collective_ops_total"], 1),
+        "collective_permutes_leaf_over_flat":
+            leaf["collective_permutes"] / max(flat["collective_permutes"], 1),
+        "walltime_leaf_over_flat":
+            leaf["wall_us_per_step"] / max(flat["wall_us_per_step"], 1e-9),
+    }
+    Path(out_path).write_text(json.dumps(out, indent=1))
+
+
+def gossip_main(steps: int = GOSSIP_STEPS,
+                enforce_walltime: bool = True) -> int:
+    """Run the gossip-step comparison in a child process (so the forced
+    8-device CPU topology can't leak into the parent's jax), merge the
+    result into artifacts/bench/BENCH_gossip.json, print the CSV.
+
+    Deterministic properties (collective-op ratio, bit-exactness, equal
+    wire bits) always gate the return code; the wall-time comparison gates
+    only when ``enforce_walltime`` (the deliberate full run — the smoke
+    probe runs on every test invocation, where 5-step timings on a shared
+    CPU are too noisy to fail CI on)."""
+    ART.mkdir(parents=True, exist_ok=True)
+    out_path = ART / "BENCH_gossip.json"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={N_DEVICES} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = str(SRC) + (os.pathsep + env["PYTHONPATH"]
+                                    if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.wire_micro", "--gossip-child",
+         "--out", str(out_path), "--steps", str(steps)],
+        cwd=str(Path(__file__).resolve().parent.parent),
+        capture_output=True, text=True, timeout=1200, env=env)
+    if proc.returncode != 0:
+        print(proc.stdout)
+        print(proc.stderr, file=sys.stderr)
+        print("wire_micro,gossip,SUITE_ERROR")
+        return 1
+    data = json.loads(out_path.read_text())
+    print("name,path,coll_permutes,coll_ops,coll_bytes,us_per_step,"
+          "wire_bits,bit_exact")
+    for name, row in data["paths"].items():
+        exact = data["bit_exact"].get(name, "ref")
+        print(f"gossip_step,{name},{row['collective_permutes']},"
+              f"{row['collective_ops_total']},"
+              f"{row['collective_bytes']:.0f},"
+              f"{row['wall_us_per_step']:.0f},"
+              f"{row['wire_bits_per_node_step']},{exact}")
+    r = data["ratios"]
+    print(f"gossip_step,ratios,collective_ops x{r['collective_ops_leaf_over_flat']:.1f},"
+          f"walltime x{r['walltime_leaf_over_flat']:.2f}")
+    ok = (data["wire_bits_equal"]
+          and all(data["bit_exact"].values())
+          and r["collective_ops_leaf_over_flat"] >= 3.0)
+    if not ok:
+        print("gossip_step,REGRESSION: flat path did not beat per-leaf "
+              "(see BENCH_gossip.json)")
+    if r["walltime_leaf_over_flat"] <= 1.0:
+        print("gossip_step,WALLTIME-WARNING: flat step not faster than "
+              f"per-leaf (x{r['walltime_leaf_over_flat']:.2f})")
+        if enforce_walltime:
+            ok = False
+    return 0 if ok else 1
+
+
+def main(smoke: bool = False):
+    ART.mkdir(parents=True, exist_ok=True)
+    rc = gossip_main(steps=5 if smoke else GOSSIP_STEPS,
+                     enforce_walltime=not smoke)
+    if not smoke:
+        codec_micro()
+    return rc
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gossip-child", action="store_true")
+    ap.add_argument("--gossip-only", action="store_true")
+    ap.add_argument("--out", default=str(ART / "BENCH_gossip.json"))
+    ap.add_argument("--steps", type=int, default=GOSSIP_STEPS)
+    args = ap.parse_args()
+    if args.gossip_child:
+        _gossip_child(args.out, args.steps)
+        raise SystemExit(0)
+    if args.gossip_only:
+        raise SystemExit(gossip_main(steps=args.steps))
     raise SystemExit(main())

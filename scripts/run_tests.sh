@@ -19,5 +19,16 @@ if [[ "${1:-}" == "--fast" ]]; then
     ARGS=(-m "not multidevice" "${@:2}")
 fi
 
+# || rc=$? keeps going under set -e so the perf artifact refreshes even
+# when tests fail (a nonzero rc from either stage still fails the run)
+rc=0
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    exec python -m pytest -x -q "${ARGS[@]}"
+    python -m pytest -x -q "${ARGS[@]}" || rc=$?
+
+# refresh the gossip-step perf artifact (artifacts/bench/BENCH_gossip.json)
+# on every run: seconds-scale; fails the run on a DETERMINISTIC flat-path
+# regression (collective ops / bit-exactness / wire bits)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --smoke || rc=$?
+
+exit $rc

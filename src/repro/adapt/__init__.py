@@ -62,9 +62,9 @@ convergence conditions.
 """
 from .controller import (Decision, RateController, Rung, hybrid_rung_for,
                          ladder_from_specs)
-from .plan_bank import PlanBank
-from .policies import (ControllerPolicy, FixedPolicy, Policy,
-                       SNRFeedbackPolicy, StepDecayPolicy)
+from .plan_bank import PlanBank, rung_key
+from .policies import (ControllerPolicy, FixedPolicy, PerLeafSNRPolicy,
+                       Policy, SNRFeedbackPolicy, StepDecayPolicy)
 from .runner import adaptive_run, bits_to_target
 from .telemetry import TelemetrySnapshot, TelemetryState, init, snapshot, update
 

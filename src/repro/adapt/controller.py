@@ -321,3 +321,12 @@ class RateController:
             self.log.append(dec)
             out.append(dec)
         return out
+
+    def select_joint_specs(self, probes: Sequence[np.ndarray], step: int = 0
+                           ) -> Tuple[str, ...]:
+        """``select_joint`` as a RUNG VECTOR (one spec per layer, layer
+        order) — the plan-bank key for a mixed flat-wire gossip plan: feed
+        it to ``Trainer.train_step_for_wire`` / ``PlanBank.get`` (via
+        ``plan_bank.rung_key``) and the per-leaf assignments compose into
+        one flat row buffer with one rung group per distinct spec."""
+        return tuple(d.spec for d in self.select_joint(probes, step=step))

@@ -1,37 +1,60 @@
-"""Bounded bank of pre-built execution plans keyed by wire spec.
+"""Bounded bank of pre-built execution plans keyed by wire spec — or, for
+the flat-wire gossip path, by a PER-LEAF RUNG VECTOR.
 
 Switching wire formats mid-run must never cost an unbounded recompile: the
-discrete wire ladder has a handful of rungs, so every (spec -> jitted step /
+discrete wire ladder has a handful of rungs, so every (key -> jitted step /
 gossip fn / GossipPlan) pair is built at most once and served from an LRU
 dict afterwards.  The bank counts builds vs hits so tests (and the
 benchmark harness) can assert that a REPEATED switch is a dictionary
 lookup, not a compilation.
 
+Keys are any hashable the injected builder understands: a single spec
+string, or a tuple of per-leaf specs (use :func:`rung_key` to normalize a
+controller's ``select_joint`` decision list) — each distinct rung vector is
+its own jitted flat plan.
+
 The bank is deliberately generic — the value builder is injected — so the
 same class backs
   * the DC-DGD runner (spec -> jitted one-step closure),
-  * the trainer (spec -> jitted train step with the gossip plan swapped),
+  * the trainer (spec or rung vector -> jitted train step with the gossip
+    plan swapped),
   * raw GossipPlan caches in tooling.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Hashable, Sequence, Tuple, Union
+
+Key = Union[str, Tuple[str, ...]]
+
+
+def rung_key(specs: Union[str, Sequence[str]]) -> Key:
+    """Normalize a wire selection to a bank key: a single spec string stays
+    a string; a per-leaf assignment (one spec per gossiped leaf, or a list
+    of ``controller.Decision``) becomes a tuple of spec strings.  A vector
+    whose rungs are all identical collapses to the single-spec key, so the
+    uniform plan is shared."""
+    if isinstance(specs, str):
+        return specs
+    out = tuple(getattr(s, "spec", s) for s in specs)
+    if out and all(s == out[0] for s in out):
+        return out[0]
+    return out
 
 
 class PlanBank:
-    """LRU cache of built plans: ``get(spec)`` builds on first use only."""
+    """LRU cache of built plans: ``get(key)`` builds on first use only."""
 
-    def __init__(self, build: Callable[[str], Any], max_size: int = 8):
+    def __init__(self, build: Callable[[Key], Any], max_size: int = 8):
         assert max_size >= 1
         self._build = build
         self._max = max_size
-        self._cache: "OrderedDict[str, Any]" = OrderedDict()
+        self._cache: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.builds = 0   # build() invocations (compilations)
         self.hits = 0     # lookups served from cache
         self.evictions = 0
 
-    def get(self, spec: str) -> Any:
+    def get(self, spec: Key) -> Any:
         if spec in self._cache:
             self._cache.move_to_end(spec)
             self.hits += 1
@@ -44,13 +67,13 @@ class PlanBank:
             self.evictions += 1
         return value
 
-    def __contains__(self, spec: str) -> bool:
+    def __contains__(self, spec: Key) -> bool:
         return spec in self._cache
 
     def __len__(self) -> int:
         return len(self._cache)
 
-    def specs(self) -> Tuple[str, ...]:
+    def specs(self) -> Tuple[Key, ...]:
         return tuple(self._cache)
 
     def stats(self) -> Dict[str, int]:

@@ -18,6 +18,10 @@ switches.
                        steps down the ladder when there is ample headroom.
                        Works with telemetry alone (no analytic codec model
                        needed), so it is the trainer-side default.
+  PerLeafSNRPolicy   — SNRFeedbackPolicy per gossiped leaf: every leaf
+                       walks the ladder on its own measured SNR; decisions
+                       are rung VECTORS that the flat-wire gossip path
+                       composes into one mixed row buffer.
   ControllerPolicy   — model-based: defers to a RateController re-solving
                        the rate/SNR knapsack on a live probe of the actual
                        differential (the DC-DGD runner default).
@@ -123,6 +127,63 @@ class SNRFeedbackPolicy(Policy):
         elif s >= bar * self.upgrade:
             self.index = min(self.index + 1, len(self.ladder) - 1)
         return self.ladder[self.index]
+
+
+@dataclasses.dataclass
+class PerLeafSNRPolicy(Policy):
+    """Per-leaf hysteresis ladder walker — the trainer-path counterpart of
+    ``RateController.select_joint`` when only telemetry (no probe of the
+    live differential) is available.
+
+    Every gossiped leaf walks the ladder independently on ITS measured SNR
+    (telemetry tracks per-leaf diff/noise powers), with the same
+    climb/hold/step-down hysteresis as :class:`SNRFeedbackPolicy`; the
+    aggregate measured SNR dipping below eta_min forces every leaf one rung
+    toward the conservative end.  Decisions are RUNG VECTORS (tuple of
+    specs, leaf order) — plan-bank keys for mixed flat-wire plans; a
+    uniform vector is collapsed by ``plan_bank.rung_key`` so it shares the
+    single-spec plan.
+    """
+    ladder: Tuple[str, ...]
+    eta_min: float
+    n_leaves: int = 1
+    margin: float = 1.25
+    upgrade: float = 2.0
+    cadence: int = 25
+    start_index: int = 0
+    indices: List[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        assert self.ladder and self.n_leaves >= 1
+        if not self.indices:
+            self.indices = [self.start_index] * self.n_leaves
+
+    def _vector(self) -> Tuple[str, ...]:
+        return tuple(self.ladder[i] for i in self.indices)
+
+    def initial_spec(self) -> Tuple[str, ...]:
+        return self._vector()
+
+    def decide(self, step, snap):
+        if snap is None or snap.count == 0:
+            return None
+        if snap.feedback_snr < self.eta_min:
+            # aggregate emergency climb: Definition-1 ratio below the floor
+            self.indices = [max(i - 1, 0) for i in self.indices]
+            return self._vector()
+        if step % max(self.cadence, 1):
+            return None
+        if snap.n_layers != self.n_leaves:
+            return None          # off-cadence scalar snapshot: no per-leaf view
+        bar = self.eta_min * self.margin
+        for li in range(self.n_leaves):
+            s = float(snap.snr[li])
+            if s < bar:
+                self.indices[li] = max(self.indices[li] - 1, 0)
+            elif s >= bar * self.upgrade:
+                self.indices[li] = min(self.indices[li] + 1,
+                                       len(self.ladder) - 1)
+        return self._vector()
 
 
 @dataclasses.dataclass

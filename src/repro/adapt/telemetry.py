@@ -113,6 +113,13 @@ class TelemetrySnapshot:
     def min_snr(self) -> float:
         return float(self.snr.min()) if self.snr.size else float("inf")
 
+    @property
+    def n_layers(self) -> int:
+        """Per-layer resolution of this snapshot: full cadence snapshots
+        carry one slot per gossiped leaf (what PerLeafSNRPolicy keys its
+        rung vectors off); cheap off-cadence total_snapshots carry 1."""
+        return int(self.snr.size)
+
 
 def total_snapshot(state: TelemetryState, decay: float = 0.9
                    ) -> TelemetrySnapshot:

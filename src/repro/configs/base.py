@@ -187,7 +187,12 @@ class RunConfig:
     grad_dtype: str = "float32"              # grad accumulation: float32|bfloat16
     remat: str = "full"                      # none | full | dots
     grad_accum: int = 1
-    use_pallas_wire: bool = False            # route wire codec through kernels/
+    wire_path: str = "flat"                  # gossip execution: "flat" fuses the
+    # differential tree into one (R, block) row buffer (one codec pass per
+    # rung group, one ppermute per wire part per neighbor offset, fused
+    # decode-axpy); "leaf" is the per-leaf reference loop (parity oracle)
+    use_pallas_wire: bool = False            # flat path: Pallas codec kernels
+    # (interpret mode on CPU; bit-exact with the jnp codecs either way)
     unsafe: bool = False                     # override the Theorem-1 SNR gate
     edge_drop_prob: float = 0.0              # straggler simulation (runtime.fault)
     adapt: AdaptConfig = AdaptConfig()       # online wire control (repro.adapt)

@@ -9,6 +9,23 @@ it puts the compressed byte count (not the decoded f32s) on the ICI/DCN
 links, so the dry-run's collective-bytes roofline term reflects the
 compression ratio 1:1.
 
+Two executions of the same semantics (``GossipPlan.wire_path``):
+
+  * ``"flat"`` (default, the hot path): the differential pytree is
+    flattened into ONE padded (R, block) row buffer
+    (:class:`repro.core.wire.FlatWirePlan`), leaves grouped by wire rung.
+    Encode is one codec pass per rung group (the Pallas kernels behind
+    ``use_pallas``, interpret mode on CPU), each neighbor offset moves one
+    packed buffer per wire part (ONE ppermute instead of one per leaf), and
+    neighbors accumulate through the fused decode-axpy kernel so no d-sized
+    f32 decode temp is materialized.  Per-leaf rungs (``leaf_fmts``)
+    compose into a single mixed flat buffer — rung groups are just row
+    ranges.  Bit-exact with the per-leaf path for f32 trees under the same
+    PRNG key (see core.wire's flat-wire notes).
+  * ``"leaf"``: the reference per-leaf loop (L encodes, L×K ppermutes, one
+    decode temp per neighbor) — kept as the parity oracle and for formats
+    or dtypes outside the flat contract.
+
 Graph support:
   * circulant graphs on the consensus axes (ring; 2D torus over
     ("pod","data")) — one ppermute per neighbor offset, arbitrary offsets
@@ -17,9 +34,9 @@ Graph support:
   * arbitrary W — dense fallback: all-gather the wire, decode all, mix with
     the local W row (used for the paper's small irregular graphs).
 
-Everything (encode -> permute -> decode/accumulate) lives inside ONE
-shard_map region, so tiling is shard-local by construction and no resharding
-reshape ever appears on the gossip path.
+Everything (flatten -> encode -> permute -> decode/accumulate) lives inside
+ONE shard_map region, so tiling is shard-local by construction and no
+resharding reshape ever appears on the gossip path.
 """
 from __future__ import annotations
 
@@ -32,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from . import wire as wirelib
 from .wire import WireFormat, tree_wire_bits
 from . import consensus as cons
 
@@ -124,15 +142,31 @@ class GossipPlan:
     offsets: Tuple[Tuple[Tuple[int, ...], float], ...]  # circulant
     W: Optional[np.ndarray]          # dense fallback (and spectra)
     fmt: WireFormat
+    # per-leaf wire rungs (tree-flatten order); None = plan.fmt everywhere.
+    # The flat path composes mixed rungs into one buffer; the leaf path
+    # encodes each leaf with its own rung.
+    leaf_fmts: Optional[Tuple[WireFormat, ...]] = None
+    wire_path: str = "flat"          # "flat" | "leaf"
+    use_pallas: bool = False         # flat path: Pallas codec kernels
 
     @property
     def spectrum(self):
         return cons.spectrum(self.W)
 
+    def fmts_for(self, n_leaves: int) -> Tuple[WireFormat, ...]:
+        if self.leaf_fmts is not None:
+            assert len(self.leaf_fmts) == n_leaves, \
+                (len(self.leaf_fmts), n_leaves)
+            return self.leaf_fmts
+        return (self.fmt,) * n_leaves
+
 
 def make_plan(mesh, consensus_axes: Tuple[str, ...], fmt: WireFormat,
               topology: str = "ring", lazy: float = 0.25,
-              W: Optional[np.ndarray] = None) -> GossipPlan:
+              W: Optional[np.ndarray] = None,
+              leaf_fmts: Optional[Sequence[WireFormat]] = None,
+              wire_path: str = "flat",
+              use_pallas: bool = False) -> GossipPlan:
     dims = _axis_sizes(mesh, consensus_axes)
     n = int(np.prod(dims))
     if W is None:
@@ -144,7 +178,9 @@ def make_plan(mesh, consensus_axes: Tuple[str, ...], fmt: WireFormat,
         offs = ()
         mode = "dense"
     return GossipPlan(consensus_axes=tuple(consensus_axes), dims=dims,
-                      n_nodes=n, mode=mode, offsets=offs, W=W, fmt=fmt)
+                      n_nodes=n, mode=mode, offsets=offs, W=W, fmt=fmt,
+                      leaf_fmts=tuple(leaf_fmts) if leaf_fmts else None,
+                      wire_path=wire_path, use_pallas=use_pallas)
 
 
 def _leaf_encode(fmt: WireFormat, key: jax.Array, leaf: jax.Array):
@@ -153,18 +189,22 @@ def _leaf_encode(fmt: WireFormat, key: jax.Array, leaf: jax.Array):
 
 def gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
                     ) -> Tuple[PyTree, PyTree]:
-    """MANUAL-collective body: to be called INSIDE shard_map (or inside a
-    jax.vmap-free single-device test with n_nodes==1).
+    """Per-leaf MANUAL-collective body: to be called INSIDE shard_map (or
+    inside a jax.vmap-free single-device test with n_nodes==1).
 
     d_local: the local node's differential (node dim already stripped).
     Returns (c_own, agg) with agg_i = sum_j W_ij C(d_j), both local.
+    This is the reference loop (one encode + K ppermutes per leaf, one
+    decode temp per neighbor); :func:`flat_gossip_exchange` is the fused
+    equivalent.
     """
-    fmt = plan.fmt
     leaves, treedef = jax.tree.flatten(d_local)
+    fmts = plan.fmts_for(len(leaves))
     keys = jax.random.split(key, len(leaves))
-    wires = [_leaf_encode(fmt, k, leaf) for k, leaf in zip(keys, leaves)]
-    c_own = [fmt.decode(w, leaf.shape, leaf.dtype)
-             for w, leaf in zip(wires, leaves)]
+    wires = [_leaf_encode(f, k, leaf)
+             for f, k, leaf in zip(fmts, keys, leaves)]
+    c_own = [f.decode(w, leaf.shape, leaf.dtype)
+             for f, w, leaf in zip(fmts, wires, leaves)]
 
     if plan.n_nodes == 1:
         agg = c_own
@@ -182,8 +222,8 @@ def gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
             perm = offset_perm(plan.dims, off)
             moved = [jax.tree.map(lambda t: jax.lax.ppermute(t, axis, perm), wr)
                      for wr in wires]
-            acc = [a + w * fmt.decode(mw, leaf.shape, leaf.dtype).astype(jnp.float32)
-                   for a, mw, leaf in zip(acc, moved, leaves)]
+            acc = [a + w * f.decode(mw, leaf.shape, leaf.dtype).astype(jnp.float32)
+                   for a, f, mw, leaf in zip(acc, fmts, moved, leaves)]
         agg = [a.astype(leaf.dtype) for a, leaf in zip(acc, leaves)]
     else:
         # dense fallback: all-gather wire, mix with local W row
@@ -191,15 +231,111 @@ def gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
         my = _my_node_index(plan)
         row = Wj[my]                                   # (n,)
         acc = []
-        for wr, leaf in zip(wires, leaves):
+        for wr, f, leaf in zip(wires, fmts, leaves):
             gathered = jax.tree.map(
                 lambda t: jax.lax.all_gather(t, axis, axis=0, tiled=False), wr)
             # decode each node's wire and mix
-            dec = jax.vmap(lambda w1: fmt.decode(w1, leaf.shape, jnp.float32)
+            dec = jax.vmap(lambda w1, f=f: f.decode(w1, leaf.shape, jnp.float32)
                            )(gathered)
             acc.append(jnp.einsum("n,n...->...", row, dec).astype(leaf.dtype))
         agg = acc
     return jax.tree.unflatten(treedef, c_own), jax.tree.unflatten(treedef, agg)
+
+
+def flat_gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
+                         ) -> Tuple[PyTree, PyTree]:
+    """Fused flat-wire gossip body (same contract as
+    :func:`gossip_exchange`, same results bit-for-bit on f32 trees).
+
+    The differential tree becomes ONE (R, block) row buffer; each rung
+    group is one codec pass (Pallas behind ``plan.use_pallas``); each
+    neighbor offset moves one packed buffer per wire part; neighbor
+    accumulation is the fused decode-axpy (no d-sized f32 decode temp).
+    """
+    from ..kernels import ops as kops
+
+    leaves, treedef = jax.tree.flatten(d_local)
+    fmts = plan.fmts_for(len(leaves))
+    fplan = wirelib.make_flat_plan([l.shape for l in leaves],
+                                   [l.dtype for l in leaves], fmts)
+    buf = wirelib.flatten_rows(fplan, leaves)
+    bits = wirelib.rng_rows(fplan, key)
+    # Pallas codecs only on the circulant accumulate path (the dense
+    # fallback needs a full per-node decode anyway, and the kernel's
+    # quarter-interleaved packing must stay within one codec stack).
+    # f32 segments only: the fused axpy accumulates neighbors in raw f32
+    # and cannot replay the per-neighbor leaf-dtype rounding the per-leaf
+    # path applies — non-f32 groups fall back to the jnp rows codec, which
+    # rounds through cast_rows_like and preserves the parity contract.
+    def _f32_group(gi: int) -> bool:
+        return all(jnp.dtype(s.dtype) == jnp.float32
+                   for s in fplan.group_segments(gi))
+
+    pallas = [plan.use_pallas and plan.mode == "circulant"
+              and kops.pallas_supported(g.fmt, fplan.block)
+              and _f32_group(gi)
+              for gi, g in enumerate(fplan.groups)]
+
+    wires: Dict[int, Any] = {}
+    for gi, g in enumerate(fplan.groups):
+        rows = buf[g.row_start:g.row_start + g.rows]
+        if pallas[gi]:
+            wires[gi] = kops.encode_rows(g.fmt, rows, bits[gi])
+        else:
+            u = wirelib.uniform_from_bits(bits[gi]) \
+                if wirelib.needs_rng(g.fmt) else None
+            wires[gi] = wirelib.row_encode(g.fmt, rows, u)
+
+    c_rows = [kops.decode_rows(g.fmt, wires[gi]) if pallas[gi]
+              else wirelib.row_decode(g.fmt, wires[gi])
+              for gi, g in enumerate(fplan.groups)]
+    c_tree = jax.tree.unflatten(treedef,
+                                wirelib.unflatten_rows(fplan, c_rows))
+
+    if plan.n_nodes == 1:
+        return c_tree, c_tree
+
+    axis = plan.consensus_axes if len(plan.consensus_axes) > 1 else \
+        plan.consensus_axes[0]
+
+    if plan.mode == "circulant":
+        acc = [jnp.zeros((g.rows, fplan.block), jnp.float32)
+               for g in fplan.groups]
+        c_cast = [wirelib.cast_rows_like(fplan, gi, r)
+                  for gi, r in enumerate(c_rows)]
+        for off, w in plan.offsets:
+            if all(o == 0 for o in off):
+                acc = [a + w * c for a, c in zip(acc, c_cast)]
+                continue
+            perm = offset_perm(plan.dims, off)
+            # ONE tree-map over the whole wire dict: one ppermute per wire
+            # part, not one per leaf
+            moved = jax.tree.map(
+                lambda t: jax.lax.ppermute(t, axis, perm), wires)
+            for gi, g in enumerate(fplan.groups):
+                if pallas[gi]:
+                    acc[gi] = kops.decode_axpy_rows(g.fmt, moved[gi],
+                                                    acc[gi], w)
+                else:
+                    dec = wirelib.row_decode(g.fmt, moved[gi])
+                    acc[gi] = acc[gi] + w * wirelib.cast_rows_like(
+                        fplan, gi, dec)
+        agg_rows = acc
+    else:
+        Wj = jnp.asarray(plan.W, jnp.float32)
+        my = _my_node_index(plan)
+        row = Wj[my]
+        agg_rows = []
+        for gi, g in enumerate(fplan.groups):
+            gathered = jax.tree.map(
+                lambda t: jax.lax.all_gather(t, axis, axis=0, tiled=False),
+                wires[gi])
+            dec = jax.vmap(lambda w1, f=g.fmt: wirelib.row_decode(f, w1)
+                           )(gathered)
+            agg_rows.append(jnp.einsum("n,n...->...", row, dec))
+    agg_tree = jax.tree.unflatten(treedef,
+                                  wirelib.unflatten_rows(fplan, agg_rows))
+    return c_tree, agg_tree
 
 
 def _my_node_index(plan: GossipPlan) -> jax.Array:
@@ -211,12 +347,17 @@ def _my_node_index(plan: GossipPlan) -> jax.Array:
 
 def build_gossip_fn(plan: GossipPlan, mesh, d_specs: PyTree
                     ) -> Callable[[jax.Array, PyTree], Tuple[PyTree, PyTree]]:
-    """Wrap :func:`gossip_exchange` in shard_map for node-stacked trees.
+    """Wrap the gossip body in shard_map for node-stacked trees.
 
     ``d_specs``: PartitionSpec tree for the STACKED d (leading node dim over
     the consensus axes).  Returns fn(key, d_stacked) -> (c_own, agg) stacked.
+    ``plan.wire_path`` selects the fused flat-wire body ("flat", default)
+    or the per-leaf reference loop ("leaf").
     """
     from ..compat import shard_map
+
+    exchange = (flat_gossip_exchange if plan.wire_path == "flat"
+                else gossip_exchange)
 
     def body(key, d_stacked):
         # strip the (local size 1) node dim
@@ -225,7 +366,7 @@ def build_gossip_fn(plan: GossipPlan, mesh, d_specs: PyTree
         k = key
         for a in mesh.axis_names:
             k = jax.random.fold_in(k, jax.lax.axis_index(a))
-        c_own, agg = gossip_exchange(plan, k, d_local)
+        c_own, agg = exchange(plan, k, d_local)
         lift = lambda t: t.reshape((1,) + t.shape)
         return jax.tree.map(lift, c_own), jax.tree.map(lift, agg)
 
@@ -239,8 +380,18 @@ def build_gossip_fn(plan: GossipPlan, mesh, d_specs: PyTree
 
 def plan_wire_bits_per_step(plan: GossipPlan, d_tree_shapes: PyTree) -> int:
     """Total bits transmitted per node per iteration (encode once, send to
-    each neighbor — paper accounting counts the broadcast once per link)."""
-    one = tree_wire_bits(plan.fmt, d_tree_shapes)
+    each neighbor — paper accounting counts the broadcast once per link).
+    Flat-path plans are costed from the flat row layout (the padded rows
+    ARE what the collectives move), per-leaf plans from the leaf shapes;
+    the two agree whenever every rung's block equals the row width."""
+    leaves = jax.tree.leaves(d_tree_shapes,
+                             is_leaf=lambda t: isinstance(t, tuple))
+    shapes = [tuple(getattr(l, "shape", l)) for l in leaves]
+    fmts = plan.fmts_for(len(shapes))
+    if plan.wire_path == "flat":
+        one = wirelib.flat_tree_wire_bits(fmts, shapes)
+    else:
+        one = sum(f.wire_bits(s) for f, s in zip(fmts, shapes))
     if plan.mode == "circulant":
         n_out = sum(1 for off, _ in plan.offsets if any(o != 0 for o in off))
     else:

@@ -24,8 +24,17 @@ Formats:
                      with fixed wire size; SNR = k/(d-k))
   TopKWire           exact top-k (biased; baseline only)
 
+FLAT WIRE (the gossip hot path): the bottom of this module lays a whole
+differential pytree out as ONE padded (R, block) row buffer
+(:class:`FlatWirePlan` + flatten/unflatten/rng helpers + explicit-RNG row
+codecs), leaves grouped by their wire rung, so core.gossip can encode the
+tree in one codec pass per rung group and move one packed buffer per wire
+part per neighbor — bit-exact with the per-leaf path for f32 trees under
+the same PRNG key.
+
 Pallas kernels in :mod:`repro.kernels` implement TernaryWire/HybridWire
-encode/decode for TPU; :func:`repro.kernels.ref` reuses these as oracles.
+encode/decode-axpy on the flat row layout for TPU (interpret mode on CPU);
+:func:`repro.kernels.ref` reuses these as oracles.
 """
 from __future__ import annotations
 
@@ -362,3 +371,293 @@ def make_wire(spec: str) -> WireFormat:
 
 def tree_wire_bits(fmt: WireFormat, tree) -> int:
     return sum(fmt.wire_bits(leaf.shape) for leaf in jax.tree.leaves(tree))
+
+
+# ===========================================================================
+# FLAT WIRE: the whole differential tree as ONE padded (R, block) row buffer
+# ===========================================================================
+# ``FlatWirePlan`` is the static metadata of the flat-wire gossip path
+# (core.gossip.flat_gossip_exchange): every leaf of the differential pytree
+# maps to a contiguous run of ``block``-wide rows, leaves are grouped by
+# their wire rung (so a rung group is ONE codec pass / ONE Pallas launch),
+# and the collectives move one packed buffer per wire part instead of one
+# per leaf.  All reshapes happen on the shard-LOCAL leaf inside shard_map,
+# so the leaf-level sharding contract of the per-leaf path is preserved —
+# no resharding reshape is introduced.
+#
+# Bit-exactness contract: for float32 trees the flat path reproduces the
+# per-leaf ``gossip_exchange`` EXACTLY under the same PRNG key.  This works
+# because (i) a leaf's (..., T, b) tiles are precisely its flat rows when
+# padded_last is a multiple of the format block b, (ii) :func:`rng_rows`
+# replays each leaf's own ``random.bits(split(key, L)[l], ...)`` stream
+# (jax's ``bernoulli(key, p)`` IS ``uniform(key, shape) < p``, and
+# ``uniform`` is the (bits >> 9 | 0x3f800000) - 1 mantissa trick on the same
+# stream), and (iii) the row codecs use the identical arithmetic
+# expressions as the per-leaf formats (division-form probabilities, same
+# reduction orders).
+
+_NO_RNG = ("dense", "topk")
+
+
+def needs_rng(fmt: WireFormat) -> bool:
+    return fmt.name not in _NO_RNG
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """u32 -> uniform [0,1) f32 — jax.random.uniform's exact mapping."""
+    mant = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    return jax.lax.bitcast_convert_type(mant, jnp.float32) - 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSegment:
+    """One leaf's contiguous row range inside the flat buffer."""
+    index: int                 # leaf position in jax.tree flatten order
+    shape: Tuple[int, ...]     # original (shard-local) leaf shape
+    dtype: str                 # restored on unflatten
+    group: int                 # index into FlatWirePlan.groups
+    row_start: int             # absolute first row in the flat buffer
+    rows: int                  # lead * padded_last // block
+    lead: int                  # prod(shape[:-1])
+    last: int                  # shape[-1]
+    padded_last: int           # last padded up to a multiple of the row width
+
+
+@dataclasses.dataclass(frozen=True)
+class RungGroup:
+    """A maximal run of rows sharing one wire rung — one codec pass."""
+    fmt: WireFormat
+    row_start: int
+    rows: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatWirePlan:
+    """Static flatten/unflatten metadata keyed by (leaf shapes, rung
+    vector): built once per trace, hashable, cacheable."""
+    block: int                     # row width B (lcm of the rung blocks)
+    segments: Tuple[LeafSegment, ...]   # ordered by row_start
+    groups: Tuple[RungGroup, ...]
+    n_leaves: int
+    total_rows: int
+
+    def group_segments(self, gi: int) -> Tuple[LeafSegment, ...]:
+        return tuple(s for s in self.segments if s.group == gi)
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)
+
+
+def make_flat_plan(leaf_shapes, leaf_dtypes, leaf_fmts,
+                   block: Optional[int] = None) -> FlatWirePlan:
+    """Lay the leaves out as rows, grouped by wire rung (first-appearance
+    order; tree order within a group).  ``block`` defaults to the lcm of
+    the rung blocks so every format tile sits inside one row."""
+    fmts = list(leaf_fmts)
+    assert len(fmts) == len(leaf_shapes) == len(leaf_dtypes)
+    if block is None:
+        block = 1
+        for f in fmts:
+            block = _lcm(block, int(getattr(f, "block", 1)))
+        if block == 1:            # dense/blockless-only tree
+            block = 512
+    for f in fmts:
+        b = int(getattr(f, "block", 1))
+        if block % b:
+            raise ValueError(f"row width {block} not a multiple of "
+                             f"{f.name} block {b}")
+    order: Dict[WireFormat, list] = {}
+    for i, f in enumerate(fmts):
+        order.setdefault(f, []).append(i)
+    segments, groups = [], []
+    row = 0
+    for gi, (fmt, idxs) in enumerate(order.items()):
+        gstart = row
+        for i in idxs:
+            shape = tuple(leaf_shapes[i]) or (1,)
+            lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+            last = int(shape[-1])
+            padded = -(-last // block) * block
+            rows = lead * padded // block
+            segments.append(LeafSegment(
+                index=i, shape=tuple(leaf_shapes[i]), dtype=str(leaf_dtypes[i]),
+                group=gi, row_start=row, rows=rows, lead=lead, last=last,
+                padded_last=padded))
+            row += rows
+        groups.append(RungGroup(fmt=fmt, row_start=gstart, rows=row - gstart))
+    return FlatWirePlan(block=block, segments=tuple(segments),
+                        groups=tuple(groups), n_leaves=len(fmts),
+                        total_rows=row)
+
+
+def flatten_rows(plan: FlatWirePlan, leaves) -> jax.Array:
+    """leaves (tree order) -> ONE (total_rows, block) f32 buffer."""
+    parts = []
+    for seg in plan.segments:
+        x = leaves[seg.index].astype(jnp.float32).reshape(seg.lead, seg.last)
+        if seg.padded_last > seg.last:
+            x = jnp.pad(x, ((0, 0), (0, seg.padded_last - seg.last)))
+        parts.append(x.reshape(-1, plan.block))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def unflatten_rows(plan: FlatWirePlan, group_rows) -> list:
+    """Per-group (rows, block) f32 buffers -> leaves (tree order), original
+    shapes/dtypes restored, padding stripped."""
+    out = [None] * plan.n_leaves
+    for seg in plan.segments:
+        g = plan.groups[seg.group]
+        off = seg.row_start - g.row_start
+        r = group_rows[seg.group][off:off + seg.rows]
+        x = r.reshape(seg.lead, seg.padded_last)[:, :seg.last]
+        out[seg.index] = x.reshape(seg.shape).astype(seg.dtype)
+    return out
+
+
+def flat_tree_wire_bits(leaf_fmts, leaf_shapes, block: Optional[int] = None
+                        ) -> int:
+    """Exact bits the FLAT path's collectives move for one encode of the
+    tree: per rung group, the (rows, block) row slice costed under the
+    group's format.  For a rung whose own block equals the shared row
+    width this matches the per-leaf accounting exactly; mixed-block and
+    dense/blockless rungs pay their row padding honestly (the padded rows
+    ARE transmitted)."""
+    fmts = list(leaf_fmts)
+    plan = make_flat_plan(leaf_shapes, ["float32"] * len(fmts), fmts,
+                          block=block)
+    return sum(g.fmt.wire_bits((g.rows, plan.block)) for g in plan.groups)
+
+
+def rng_rows(plan: FlatWirePlan, key: jax.Array) -> list:
+    """Per-group (rows, block) uint32 bit buffers replaying the EXACT
+    per-leaf RNG streams of ``gossip_exchange`` (leaf l draws from
+    ``jax.random.split(key, n_leaves)[l]`` at the leaf's own padded tile
+    shape; the extra flat padding region gets zero bits, which decode to
+    probability-0 takes)."""
+    keys = jax.random.split(key, plan.n_leaves)
+    parts = [[] for _ in plan.groups]
+    for seg in plan.segments:
+        fmt = plan.groups[seg.group].fmt
+        if needs_rng(fmt):
+            b = int(getattr(fmt, "block", plan.block))
+            lpb = -(-seg.last // b) * b
+            bits = jax.random.bits(keys[seg.index], (seg.lead, lpb),
+                                   jnp.uint32)
+            if lpb < seg.padded_last:
+                bits = jnp.pad(bits, ((0, 0), (0, seg.padded_last - lpb)))
+            bits = bits.reshape(-1, plan.block)
+        else:
+            bits = jnp.zeros((seg.rows, plan.block), jnp.uint32)
+        parts[seg.group].append(bits)
+    return [p[0] if len(p) == 1 else jnp.concatenate(p, axis=0)
+            for p in parts]
+
+
+def cast_rows_like(plan: FlatWirePlan, gi: int, rows: jax.Array) -> jax.Array:
+    """Round-trip a group's rows through each segment's leaf dtype — the
+    per-leaf path decodes into the leaf dtype before accumulating, so the
+    flat path must replay that rounding for non-f32 trees (no-op for f32)."""
+    segs = plan.group_segments(gi)
+    if all(jnp.dtype(s.dtype) == jnp.float32 for s in segs):
+        return rows
+    g = plan.groups[gi]
+    parts = []
+    for s in segs:
+        off = s.row_start - g.row_start
+        parts.append(rows[off:off + s.rows].astype(s.dtype)
+                     .astype(jnp.float32))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# jnp row codecs: WireFormat semantics on a (R, block) row slice, with the
+# RNG stream passed EXPLICITLY (uniform [0,1) draws) so multiple leaves can
+# share one codec pass without sharing one PRNG key.  Expressions mirror the
+# per-leaf encode/decode exactly (division-form probabilities, identical
+# reduction orders) — this is what makes the flat path bit-exact.
+# ---------------------------------------------------------------------------
+def _rows_tiled(rows: jax.Array, b: int) -> jax.Array:
+    R, B = rows.shape
+    return rows.reshape(R, B // b, b)
+
+
+def _rows_untiled(t: jax.Array) -> jax.Array:
+    return t.reshape(t.shape[0], t.shape[1] * t.shape[2])
+
+
+def row_encode(fmt: WireFormat, rows: jax.Array,
+               u: Optional[jax.Array]) -> Wire:
+    """Encode a (R, block) row slice; ``u`` are uniform [0,1) draws of the
+    same shape (None for RNG-free formats)."""
+    if isinstance(fmt, DenseWire):
+        return {"v": rows.astype(fmt.dtype)}
+    b = fmt.block
+    t = _rows_tiled(rows, b)
+    if isinstance(fmt, Int8Wire):
+        scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+        s = jnp.where(scale > 0, 127.0 / jnp.maximum(scale, 1e-30), 0.0)
+        scaled = t * s
+        low = jnp.floor(scaled)
+        up = _rows_tiled(u, b) < (scaled - low)
+        q = jnp.clip(low + up, -127, 127).astype(jnp.int8)
+        return {"q": _rows_untiled(q), "scale": scale[..., 0]}
+    if isinstance(fmt, TernaryWire):
+        scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+        prob = jnp.where(scale > 0,
+                         jnp.abs(t) / jnp.maximum(scale, 1e-30), 0.0)
+        take = _rows_tiled(u, b) < prob
+        codes = jnp.where(take, jnp.where(t >= 0, 1, 2), 0).astype(jnp.int32)
+        return {"codes": pack2bit(_rows_untiled(codes)),
+                "scale": scale[..., 0]}
+    if isinstance(fmt, HybridWire):
+        m = jnp.abs(t)
+        _, idx = jax.lax.top_k(m, fmt.top_j)
+        outv = jnp.take_along_axis(t, idx, axis=-1)
+        mask = jnp.zeros_like(t, bool)
+        mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
+        rest = jnp.where(mask, 0.0, t)
+        scale = jnp.max(jnp.abs(rest), axis=-1, keepdims=True)
+        prob = jnp.where(scale > 0,
+                         jnp.abs(rest) / jnp.maximum(scale, 1e-30), 0.0)
+        take = _rows_tiled(u, b) < prob
+        codes = jnp.where(take & ~mask, jnp.where(rest >= 0, 1, 2),
+                          0).astype(jnp.int32)
+        return {"codes": pack2bit(_rows_untiled(codes)), "scale": scale[..., 0],
+                "out_val": outv, "out_idx": idx.astype(jnp.int16)}
+    if isinstance(fmt, TopKWire):
+        _, idx = jax.lax.top_k(jnp.abs(t), fmt.k)
+        vals = jnp.take_along_axis(t, idx, axis=-1)
+        return {"val": vals, "idx": idx.astype(jnp.int16)}
+    if isinstance(fmt, RandKWire):
+        idx = jnp.argsort(_rows_tiled(u, b), axis=-1)[..., : fmt.k]
+        vals = jnp.take_along_axis(t, idx, axis=-1) * (b / fmt.k)
+        return {"val": vals, "idx": idx.astype(jnp.int16)}
+    raise NotImplementedError(f"no row codec for {fmt.name}")
+
+
+def row_decode(fmt: WireFormat, wire: Wire) -> jax.Array:
+    """Decode a row wire back to (R, block) f32 (padding decodes to 0)."""
+    if isinstance(fmt, DenseWire):
+        return wire["v"].astype(jnp.float32)
+    b = fmt.block
+    if isinstance(fmt, Int8Wire):
+        t = _rows_tiled(wire["q"].astype(jnp.float32), b)
+        return _rows_untiled(t * (wire["scale"][..., None] / 127.0))
+    if isinstance(fmt, TernaryWire):
+        codes = _rows_tiled(unpack2bit(wire["codes"]), b)
+        return _rows_untiled(code_to_val(codes) * wire["scale"][..., None])
+    if isinstance(fmt, HybridWire):
+        codes = _rows_tiled(unpack2bit(wire["codes"]), b)
+        vals = code_to_val(codes) * wire["scale"][..., None]
+        vals = jnp.put_along_axis(vals, wire["out_idx"].astype(jnp.int32),
+                                  wire["out_val"], axis=-1, inplace=False)
+        return _rows_untiled(vals)
+    if isinstance(fmt, (TopKWire, RandKWire)):
+        idx = wire["idx"].astype(jnp.int32)
+        out = jnp.zeros(wire["val"].shape[:-1] + (b,), jnp.float32)
+        out = jnp.put_along_axis(out, idx, wire["val"], axis=-1,
+                                 inplace=False)
+        return _rows_untiled(out)
+    raise NotImplementedError(f"no row codec for {fmt.name}")

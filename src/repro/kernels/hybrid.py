@@ -39,8 +39,9 @@ def _hybrid_encode_kernel(x_ref, rnd_ref, codes_ref, scale_ref, oval_ref,
         rem = jnp.where(hit, -1.0, rem)                # remove from pool
     out_mask = rem < 0                                 # outlier positions
     scale = jnp.max(jnp.where(out_mask, 0.0, m), axis=-1, keepdims=True)
-    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
-    prob = jnp.where(out_mask, 0.0, m * inv)
+    # division form matches the jnp wire codec / ref oracle bit-for-bit
+    prob = jnp.where(out_mask | (scale <= 0), 0.0,
+                     m / jnp.maximum(scale, 1e-30))
     u = _uniform_from_bits(rnd_ref[...])
     take = u < prob
     codes = jnp.where(take, jnp.where(x >= 0, 1, 2), 0).astype(jnp.uint32)
@@ -59,13 +60,16 @@ def hybrid_encode(x: jax.Array, rnd_bits: jax.Array, *,
                   block: int = DEFAULT_BLOCK, top_j: int = 4,
                   tile_r: int = TILE_R, interpret: bool = False):
     """x: (R, block); returns (packed (R, B/4) u8, scale (R,1) f32,
-    out_val (R, j) f32, out_idx (R, j) i32)."""
+    out_val (R, j) f32, out_idx (R, j) i32).  Any row count works: rows
+    are zero-padded to the tile and stripped."""
+    from .ternary import _pad_rows
     R, B = x.shape
     assert B == block and B % 512 == 0
-    tile_r = min(tile_r, R)
-    assert R % tile_r == 0
-    grid = (R // tile_r,)
-    return pl.pallas_call(
+    tile_r = min(tile_r, max(R, 1))
+    (x, rnd_bits), R = _pad_rows([x, rnd_bits], tile_r)
+    Rp = x.shape[0]
+    grid = (Rp // tile_r,)
+    outs = pl.pallas_call(
         functools.partial(_hybrid_encode_kernel, block=block, top_j=top_j),
         grid=grid,
         in_specs=[
@@ -79,13 +83,14 @@ def hybrid_encode(x: jax.Array, rnd_bits: jax.Array, *,
             pl.BlockSpec((tile_r, top_j), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R, B // 4), jnp.uint8),
-            jax.ShapeDtypeStruct((R, 1), jnp.float32),
-            jax.ShapeDtypeStruct((R, top_j), jnp.float32),
-            jax.ShapeDtypeStruct((R, top_j), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, B // 4), jnp.uint8),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, top_j), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, top_j), jnp.int32),
         ],
         interpret=interpret,
     )(x, rnd_bits)
+    return tuple(o[:R] for o in outs)
 
 
 def _hybrid_decode_axpy_kernel(codes_ref, scale_ref, oval_ref, oidx_ref,
@@ -108,14 +113,17 @@ def _hybrid_decode_axpy_kernel(codes_ref, scale_ref, oval_ref, oidx_ref,
 def hybrid_decode_axpy(codes, scales, out_val, out_idx, acc, weight: float, *,
                        block: int = DEFAULT_BLOCK, tile_r: int = TILE_R,
                        interpret: bool = False) -> jax.Array:
+    from .ternary import _pad_rows
     R, Bq = codes.shape
     B = Bq * 4
     assert B == block
     top_j = out_val.shape[-1]
-    tile_r = min(tile_r, R)
-    assert R % tile_r == 0
-    grid = (R // tile_r,)
-    return pl.pallas_call(
+    tile_r = min(tile_r, max(R, 1))
+    (codes, scales, out_val, out_idx, acc), R = _pad_rows(
+        [codes, scales, out_val, out_idx, acc], tile_r)
+    Rp = codes.shape[0]
+    grid = (Rp // tile_r,)
+    out = pl.pallas_call(
         functools.partial(_hybrid_decode_axpy_kernel, block=block,
                           top_j=top_j, weight=weight),
         grid=grid,
@@ -127,6 +135,7 @@ def hybrid_decode_axpy(codes, scales, out_val, out_idx, acc, weight: float, *,
             pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, B), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Rp, B), jnp.float32),
         interpret=interpret,
     )(codes, scales, out_val, out_idx, acc)
+    return out[:R]

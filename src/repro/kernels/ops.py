@@ -2,9 +2,21 @@
 
 On CPU (this container) the kernels execute with ``interpret=True`` — the
 kernel body runs as jax ops, validating the exact same code path that
-Mosaic compiles on TPU.  ``encode_leaf``/``decode_axpy_leaf`` adapt arbitrary
-(..., L) leaves to the (R, block) kernel layout (pad + reshape, preserving
-leading-dim sharding as in core.wire).
+Mosaic compiles on TPU.
+
+Two API layers:
+
+  * leaf wrappers (``ternary_encode`` / ``hybrid_encode`` / ``*_decode_axpy``)
+    adapt arbitrary (..., L) leaves to the (R, block) kernel layout (pad +
+    reshape, preserving leading-dim sharding as in core.wire);
+  * row wrappers (``encode_rows`` / ``decode_axpy_rows``) are the FLAT-WIRE
+    gossip hot path (core.gossip.flat_gossip_exchange): they take the
+    already-flattened (R, block) row buffer plus explicit uint32 RNG bits
+    and dispatch on the :class:`repro.core.wire.WireFormat` instance, so a
+    whole rung group of the differential tree is one kernel launch.
+
+Kernel row counts no longer need to divide TILE_R — the kernels zero-pad
+rows internally and strip them on the way out.
 """
 from __future__ import annotations
 
@@ -14,6 +26,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import wire as W
 from . import hybrid as H
 from . import ternary as T
 
@@ -22,21 +35,76 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _to_rows(x: jax.Array, block: int) -> Tuple[jax.Array, Tuple[int, ...], int]:
+def pallas_supported(fmt: "W.WireFormat", block: int) -> bool:
+    """True when ``fmt`` has a Pallas row codec at this row width: the
+    ternary/hybrid kernels require the format's tile to BE the row
+    (one scale per row) and a lane-friendly width."""
+    return (isinstance(fmt, (W.TernaryWire, W.HybridWire))
+            and getattr(fmt, "block", None) == block and block % 512 == 0)
+
+
+# ---------------------------------------------------------------------------
+# row API — the flat-wire hot path
+# ---------------------------------------------------------------------------
+def encode_rows(fmt: "W.WireFormat", rows: jax.Array, rnd_bits: jax.Array
+                ) -> "W.Wire":
+    """One kernel pass over a (R, block) rung-group row slice.  The RNG bits
+    are the SAME per-leaf streams the jnp codec draws (core.wire.rng_rows),
+    so the take decisions — and therefore the decoded values — are
+    bit-identical to the per-leaf path."""
+    if isinstance(fmt, W.TernaryWire):
+        codes, scales = T.ternary_encode(rows, rnd_bits, block=fmt.block,
+                                         interpret=_interpret())
+        return {"codes": codes, "scale": scales}
+    if isinstance(fmt, W.HybridWire):
+        codes, scales, oval, oidx = H.hybrid_encode(
+            rows, rnd_bits, block=fmt.block, top_j=fmt.top_j,
+            interpret=_interpret())
+        # int16 indices on the wire (same bytes as the per-leaf format);
+        # upcast again at decode
+        return {"codes": codes, "scale": scales, "out_val": oval,
+                "out_idx": oidx.astype(jnp.int16)}
+    raise NotImplementedError(f"no Pallas row codec for {fmt.name}")
+
+
+def decode_axpy_rows(fmt: "W.WireFormat", wire: "W.Wire", acc: jax.Array,
+                     weight: float) -> jax.Array:
+    """acc += weight * decode(wire) fused — no (R, block) f32 decode temp is
+    ever materialized for a neighbor."""
+    if isinstance(fmt, W.TernaryWire):
+        return T.ternary_decode_axpy(wire["codes"], wire["scale"], acc,
+                                     weight, block=fmt.block,
+                                     interpret=_interpret())
+    if isinstance(fmt, W.HybridWire):
+        return H.hybrid_decode_axpy(wire["codes"], wire["scale"],
+                                    wire["out_val"],
+                                    wire["out_idx"].astype(jnp.int32), acc,
+                                    weight, block=fmt.block,
+                                    interpret=_interpret())
+    raise NotImplementedError(f"no Pallas row codec for {fmt.name}")
+
+
+def decode_rows(fmt: "W.WireFormat", wire: "W.Wire") -> jax.Array:
+    """Full decode of a Pallas row wire (the axpy kernel against zeros)."""
+    R, Bq = wire["codes"].shape
+    zero = jnp.zeros((R, Bq * 4), jnp.float32)
+    return decode_axpy_rows(fmt, wire, zero, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# leaf wrappers (tests / microbenchmarks)
+# ---------------------------------------------------------------------------
+def _to_rows(x: jax.Array, block: int) -> Tuple[jax.Array, Tuple[int, ...]]:
     L = x.shape[-1]
     pad = (-L) % block
     if pad:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    rows = x.reshape(-1, block)
-    r_pad = (-rows.shape[0]) % T.TILE_R
-    if r_pad:
-        rows = jnp.pad(rows, ((0, r_pad), (0, 0)))
-    return rows, x.shape[:-1], r_pad
+    return x.reshape(-1, block), x.shape[:-1]
 
 
 @partial(jax.jit, static_argnames=("block",))
 def ternary_encode(x: jax.Array, key: jax.Array, *, block: int = 512):
-    rows, lead, r_pad = _to_rows(x, block)
+    rows, lead = _to_rows(x, block)
     bits = jax.random.bits(key, rows.shape, jnp.uint32)
     codes, scales = T.ternary_encode(rows, bits, block=block,
                                      interpret=_interpret())
@@ -53,7 +121,7 @@ def ternary_decode_axpy(wire, acc_rows: jax.Array, weight: float, *,
 @partial(jax.jit, static_argnames=("block", "top_j"))
 def hybrid_encode(x: jax.Array, key: jax.Array, *, block: int = 512,
                   top_j: int = 4):
-    rows, lead, r_pad = _to_rows(x, block)
+    rows, lead = _to_rows(x, block)
     bits = jax.random.bits(key, rows.shape, jnp.uint32)
     codes, scales, oval, oidx = H.hybrid_encode(
         rows, bits, block=block, top_j=top_j, interpret=_interpret())

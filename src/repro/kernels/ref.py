@@ -11,8 +11,10 @@ import jax.numpy as jnp
 
 
 def uniform_from_bits(bits: jax.Array) -> jax.Array:
-    mant = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
-    return jax.lax.bitcast_convert_type(mant, jnp.float32) - 1.0
+    """The shared bits->uniform mapping (see core.wire.uniform_from_bits —
+    the flat path's bit-exactness contract pins all codec stacks to it)."""
+    from ..core.wire import uniform_from_bits as _ufb
+    return _ufb(bits)
 
 
 def pack2bit_qi(codes: jax.Array) -> jax.Array:
@@ -34,6 +36,21 @@ def unpack2bit_qi(packed: jax.Array) -> jax.Array:
 
 def code_vals(codes: jax.Array) -> jax.Array:
     return jnp.where(codes == 1, 1.0, jnp.where(codes == 2, -1.0, 0.0))
+
+
+def qi_to_sequential(packed: jax.Array) -> jax.Array:
+    """Re-pack a quarter-interleaved byte plane into core.wire's sequential
+    nibble layout (byte j holds elements 4j..4j+3).  The two packings are
+    bijective views of the same code vector; this is the oracle bridge the
+    layout-parity tests use against ``wire.pack2bit``."""
+    from ..core.wire import pack2bit
+    return pack2bit(unpack2bit_qi(packed))
+
+
+def sequential_to_qi(packed: jax.Array) -> jax.Array:
+    """Inverse bridge: core.wire sequential bytes -> quarter-interleaved."""
+    from ..core.wire import unpack2bit
+    return pack2bit_qi(unpack2bit(packed))
 
 
 def ternary_encode_ref(x: jax.Array, rnd_bits: jax.Array

@@ -37,7 +37,12 @@ TILE_R = 8
 
 
 def _uniform_from_bits(bits: jax.Array) -> jax.Array:
-    """u32 -> uniform [0,1) f32 (bit trick: 23 mantissa bits)."""
+    """u32 -> uniform [0,1) f32 (bit trick: 23 mantissa bits).
+
+    CONTRACT: must stay byte-identical to core.wire.uniform_from_bits /
+    jax.random.uniform's mantissa mapping — the flat gossip path's
+    bit-exactness with the jnp codecs depends on it.  Kept as a kernel-side
+    copy (not an import) because Mosaic prefers pl.bitcast in-kernel."""
     mant = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
     return pl.bitcast(mant, jnp.float32) - 1.0 if hasattr(pl, "bitcast") else \
         jax.lax.bitcast_convert_type(mant, jnp.float32) - 1.0
@@ -47,8 +52,10 @@ def _encode_kernel(x_ref, rnd_ref, codes_ref, scale_ref, *, block: int):
     x = x_ref[...].astype(jnp.float32)                 # (tr, B)
     m = jnp.abs(x)
     scale = jnp.max(m, axis=-1, keepdims=True)         # (tr, 1)
-    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
-    prob = m * inv
+    # division form (NOT m * (1/scale)): bit-identical take decisions vs the
+    # jnp wire codec / kernels.ref oracle — the flat gossip path's parity
+    # with the per-leaf path depends on it
+    prob = jnp.where(scale > 0, m / jnp.maximum(scale, 1e-30), 0.0)
     u = _uniform_from_bits(rnd_ref[...])
     take = u < prob
     # codes: 0 = zero, 1 = +1, 2 = -1
@@ -62,18 +69,31 @@ def _encode_kernel(x_ref, rnd_ref, codes_ref, scale_ref, *, block: int):
     scale_ref[...] = scale
 
 
+def _pad_rows(arrs, tile_r: int):
+    """Pad every (R, ...) array to R % tile_r == 0 (zero rows encode/decode
+    to zero and are stripped by the caller).  Returns (padded, R)."""
+    R = arrs[0].shape[0]
+    r_pad = (-R) % tile_r
+    if r_pad:
+        arrs = [jnp.pad(a, ((0, r_pad),) + ((0, 0),) * (a.ndim - 1))
+                for a in arrs]
+    return arrs, R
+
+
 def ternary_encode(x: jax.Array, rnd_bits: jax.Array, *,
                    block: int = DEFAULT_BLOCK, tile_r: int = TILE_R,
                    interpret: bool = False
                    ) -> Tuple[jax.Array, jax.Array]:
     """x: (R, block) f32/bf16; rnd_bits: (R, block) uint32.
-    Returns (packed (R, block//4) uint8, scales (R, 1) f32)."""
+    Returns (packed (R, block//4) uint8, scales (R, 1) f32).
+    Any row count works: rows are zero-padded to the tile and stripped."""
     R, B = x.shape
     assert B == block and B % 512 == 0, (x.shape, block)
-    tile_r = min(tile_r, R)
-    assert R % tile_r == 0
-    grid = (R // tile_r,)
-    return pl.pallas_call(
+    tile_r = min(tile_r, max(R, 1))
+    (x, rnd_bits), R = _pad_rows([x, rnd_bits], tile_r)
+    Rp = x.shape[0]
+    grid = (Rp // tile_r,)
+    codes, scales = pl.pallas_call(
         functools.partial(_encode_kernel, block=block),
         grid=grid,
         in_specs=[
@@ -85,11 +105,12 @@ def ternary_encode(x: jax.Array, rnd_bits: jax.Array, *,
             pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R, B // 4), jnp.uint8),
-            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, B // 4), jnp.uint8),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x, rnd_bits)
+    return codes[:R], scales[:R]
 
 
 def _decode_axpy_kernel(codes_ref, scale_ref, acc_ref, out_ref, *,
@@ -110,14 +131,15 @@ def ternary_decode_axpy(codes: jax.Array, scales: jax.Array, acc: jax.Array,
                         tile_r: int = TILE_R, interpret: bool = False
                         ) -> jax.Array:
     """acc (R, block) f32  +=  weight * decode(codes (R, block//4), scales).
-    Fused axpy: one pass, no decoded temp."""
+    Fused axpy: one pass, no decoded temp.  Any row count works (padded)."""
     R, Bq = codes.shape
     B = Bq * 4
     assert B == block
-    tile_r = min(tile_r, R)
-    assert R % tile_r == 0
-    grid = (R // tile_r,)
-    return pl.pallas_call(
+    tile_r = min(tile_r, max(R, 1))
+    (codes, scales, acc), R = _pad_rows([codes, scales, acc], tile_r)
+    Rp = codes.shape[0]
+    grid = (Rp // tile_r,)
+    out = pl.pallas_call(
         functools.partial(_decode_axpy_kernel, block=block, weight=weight),
         grid=grid,
         in_specs=[
@@ -126,6 +148,7 @@ def ternary_decode_axpy(codes: jax.Array, scales: jax.Array, acc: jax.Array,
             pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((tile_r, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, B), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Rp, B), jnp.float32),
         interpret=interpret,
     )(codes, scales, acc)
+    return out[:R]

@@ -38,8 +38,17 @@ def main(argv=None):
     ap.add_argument("--unsafe", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--wire-path", default="flat", choices=["flat", "leaf"],
+                    help="gossip execution: fused flat row buffer (default)"
+                         " or the per-leaf reference loop")
+    ap.add_argument("--pallas-wire", action="store_true",
+                    help="flat path: route the wire codec through the "
+                         "Pallas kernels (interpret mode on CPU)")
     ap.add_argument("--adapt", action="store_true",
                     help="retune the gossip wire online from SNR telemetry")
+    ap.add_argument("--adapt-per-leaf", action="store_true",
+                    help="per-leaf rung selection (rung vectors composed "
+                         "into one mixed flat buffer); implies --adapt")
     ap.add_argument("--adapt-interval", type=int, default=50)
     ap.add_argument("--adapt-ladder", default="",
                     help="semicolon-separated wire specs, conservative->"
@@ -74,7 +83,8 @@ def main(argv=None):
 
     arch = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     shape_cfg = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
-    adapt_kw = {"enabled": args.adapt, "interval": args.adapt_interval,
+    adapt_kw = {"enabled": args.adapt or args.adapt_per_leaf,
+                "interval": args.adapt_interval,
                 "margin": args.adapt_margin}
     if args.adapt_ladder:
         adapt_kw["ladder"] = tuple(
@@ -83,6 +93,7 @@ def main(argv=None):
         consensus_axis=None if args.consensus == "none" else args.consensus,
         wire=args.wire, topology=args.topology, optimizer=args.optimizer,
         alpha=args.alpha, schedule=args.schedule, grad_accum=args.grad_accum,
+        wire_path=args.wire_path, use_pallas_wire=args.pallas_wire,
         unsafe=args.unsafe, adapt=AdaptConfig(**adapt_kw))
 
     tr = make_trainer(mesh, arch, run, shape_cfg)
@@ -127,19 +138,30 @@ def main(argv=None):
                 f"(ladder {list(ladder)}); add a safe anchor (e.g. 'dense') "
                 f"or set --unsafe to override")
         start = ladder.index(run.wire) if run.wire in ladder else 0
-        policy = SNRFeedbackPolicy(
-            ladder=ladder, eta_min=eta_min, margin=run.adapt.margin,
-            upgrade=run.adapt.upgrade, cadence=run.adapt.interval,
-            start_index=start)
         bank = tr.wire_bank(max_size=run.adapt.bank_size, donate=True)
         from jax.sharding import PartitionSpec
         n_leaves = len(jax.tree.leaves(
             tr.param_specs(), is_leaf=lambda t: isinstance(t, PartitionSpec)))
+        if args.adapt_per_leaf:
+            # rung VECTORS: each leaf walks the ladder on its own measured
+            # SNR; the flat gossip path composes the mixed assignment into
+            # one row buffer (plan-bank key = the normalized vector)
+            from ..adapt import PerLeafSNRPolicy
+            policy = PerLeafSNRPolicy(
+                ladder=ladder, eta_min=eta_min, n_leaves=n_leaves,
+                margin=run.adapt.margin, upgrade=run.adapt.upgrade,
+                cadence=run.adapt.interval, start_index=start)
+        else:
+            policy = SNRFeedbackPolicy(
+                ladder=ladder, eta_min=eta_min, margin=run.adapt.margin,
+                upgrade=run.adapt.upgrade, cadence=run.adapt.interval,
+                start_index=start)
+        from ..adapt import rung_key
         tel = tm.init(n_layers=n_leaves, window=run.adapt.window)
-        active = policy.initial_spec()
+        active = rung_key(policy.initial_spec())
         step_fn = bank.get(active)
         print(f"adapt: eta_min={eta_min:.3g} ladder={list(ladder)} "
-              f"start={active!r}")
+              f"per_leaf={args.adapt_per_leaf} start={active!r}")
     else:
         step_fn = tr.jit_train_step()
     data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=args.seq_len,
@@ -161,6 +183,7 @@ def main(argv=None):
                 snap = (tm.snapshot(tel, run.adapt.ema_decay) if at_cadence
                         else tm.total_snapshot(tel, run.adapt.ema_decay))
                 nxt = policy.decide(i + 1, snap)
+                nxt = rung_key(nxt) if nxt is not None else None
                 if nxt is not None and nxt != active:
                     print(f"adapt: step {i+1} wire {active!r} -> {nxt!r} "
                           f"(measured SNR {snap.total_snr:.3g})")

@@ -89,4 +89,6 @@ def gossip_with_outages(plan: GossipPlan, sim: StragglerSim, step: int,
                if k < len(nz)]
     eff = drop_renormalize_plan(plan, dropped)
     eff_plan = dc.replace(plan, offsets=tuple(eff))
-    return G.gossip_exchange(eff_plan, key, d_local), dropped
+    exchange = (G.flat_gossip_exchange if eff_plan.wire_path == "flat"
+                else G.gossip_exchange)
+    return exchange(eff_plan, key, d_local), dropped

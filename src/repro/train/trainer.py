@@ -111,7 +111,9 @@ class Trainer:
             fmt = make_wire(self.run.wire)
             self.plan = G.make_plan(self.mesh, self.consensus_axes, fmt,
                                     topology=self.run.topology,
-                                    lazy=self.run.lazy_mixing)
+                                    lazy=self.run.lazy_mixing,
+                                    wire_path=self.run.wire_path,
+                                    use_pallas=self.run.use_pallas_wire)
             self._validate_snr()
         else:
             self.snr_check = (True, "single node: exact update")
@@ -306,8 +308,13 @@ class Trainer:
                 # O(max leaf).
                 leaf_specs, spec_tree = jax.tree_util.tree_flatten(
                     param_specs, is_leaf=lambda t: isinstance(t, P))
-                leaf_fns = [G.build_gossip_fn(plan, self.mesh, sp)
-                            for sp in leaf_specs]
+                # each per-leaf fn sees a one-leaf tree: narrow a rung
+                # vector down to that leaf's format
+                leaf_plans = [
+                    dataclasses.replace(plan, fmt=f, leaf_fmts=None)
+                    for f in plan.fmts_for(len(leaf_specs))]
+                leaf_fns = [G.build_gossip_fn(p, self.mesh, sp)
+                            for p, sp in zip(leaf_plans, leaf_specs)]
 
                 def gossip_update(key, alpha_t, x, s, u):
                     xs = spec_tree.flatten_up_to(x)
@@ -437,8 +444,12 @@ class Trainer:
         leaf_shapes = [s[1:] for s in jax.tree.leaves(
             shapes, is_leaf=lambda t: isinstance(t, tuple))]
         dense_bits = sum(int(np.prod(s)) * 32 for s in leaf_shapes)
-        fmt = self.plan.fmt
-        bits = sum(fmt.wire_bits(s) for s in leaf_shapes)
+        fmts = self.plan.fmts_for(len(leaf_shapes))
+        if self.plan.wire_path == "flat":
+            from ..core.wire import flat_tree_wire_bits
+            bits = flat_tree_wire_bits(fmts, leaf_shapes)
+        else:
+            bits = sum(f.wire_bits(s) for f, s in zip(fmts, leaf_shapes))
         n_out = sum(1 for off, _ in self.plan.offsets
                     if any(o != 0 for o in off)) if self.plan.mode == "circulant" \
             else self.n_nodes - 1
@@ -450,21 +461,34 @@ class Trainer:
     # ------------------------------------------------------------------
     # adaptive communication (repro.adapt)
     # ------------------------------------------------------------------
-    def plan_for_wire(self, spec: str) -> G.GossipPlan:
-        """The launch plan with only the wire format swapped — topology, W
-        and offsets stay identical, so the Theorem-1 bar is unchanged."""
-        assert self.node_mode, "wire switching needs an active gossip plan"
-        return dataclasses.replace(self.plan, fmt=make_wire(spec))
+    def plan_for_wire(self, spec) -> G.GossipPlan:
+        """The launch plan with only the wire format(s) swapped — topology,
+        W and offsets stay identical, so the Theorem-1 bar is unchanged.
 
-    def train_step_for_wire(self, spec: str, donate: bool = False):
-        """Jitted train step with the gossip wire overridden to ``spec``."""
+        ``spec`` is either one wire spec string (all leaves) or a RUNG
+        VECTOR (one spec per gossiped leaf, tree-flatten order): the flat
+        path composes mixed rungs into a single row buffer, which is how
+        ``RateController.select_joint`` per-leaf assignments reach the
+        trainer.  Per-leaf feasibility vs the Theorem-1 bar is the
+        selecting controller's contract (see adapt.controller)."""
+        assert self.node_mode, "wire switching needs an active gossip plan"
+        if isinstance(spec, (tuple, list)):
+            fmts = tuple(make_wire(s) for s in spec)
+            return dataclasses.replace(self.plan, fmt=fmts[0],
+                                       leaf_fmts=fmts)
+        return dataclasses.replace(self.plan, fmt=make_wire(spec),
+                                   leaf_fmts=None)
+
+    def train_step_for_wire(self, spec, donate: bool = False):
+        """Jitted train step with the gossip wire overridden to ``spec``
+        (a single spec string or a per-leaf rung vector)."""
         return self.jit_train_step(donate=donate,
                                    plan=self.plan_for_wire(spec))
 
     def wire_bank(self, max_size: int = 8, donate: bool = False):
-        """Bounded LRU of jitted train steps keyed by wire spec — the
-        adapt controller switches formats through this, so a repeated
-        switch is a dictionary lookup, never a recompile."""
+        """Bounded LRU of jitted train steps keyed by wire spec — or by a
+        per-leaf rung-vector tuple — so the adapt controller's switches
+        are dictionary lookups, never recompiles."""
         from ..adapt.plan_bank import PlanBank
         return PlanBank(
             lambda spec: self.train_step_for_wire(spec, donate=donate),

@@ -1,0 +1,390 @@
+"""Flat-wire gossip path: FlatWirePlan metadata, row-codec parity with the
+per-leaf formats, bit-exactness of flat_gossip_exchange vs gossip_exchange
+(circulant AND dense modes, mixed per-leaf rungs, Pallas backend), and the
+rung-vector plumbing (PlanBank keys, PerLeafSNRPolicy, trainer plans)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_devices
+
+from repro.core import wire as W
+from repro.core.wire import make_wire
+
+
+# ---------------------------------------------------------------------------
+# plan metadata
+# ---------------------------------------------------------------------------
+def test_flat_plan_layout_and_grouping():
+    shapes = [(3, 700), (130,), (2, 5, 512), (260,)]
+    dtypes = ["float32"] * 4
+    fmts = [make_wire(s) for s in ("ternary:block=512", "dense",
+                                   "ternary:block=512", "int8:block=256")]
+    plan = W.make_flat_plan(shapes, dtypes, fmts)
+    assert plan.block == 512           # lcm(512, 256) with dense blockless
+    # groups in first-appearance order: ternary {0,2}, dense {1}, int8 {3}
+    assert len(plan.groups) == 3
+    assert [s.index for s in plan.segments] == [0, 2, 1, 3]
+    # rows: leaf0 3*ceil(700/512)=3*2=6; leaf2 10*1=10; leaf1 1; leaf3 1
+    assert [s.rows for s in plan.segments] == [6, 10, 1, 1]
+    assert plan.total_rows == 18
+    g0 = plan.groups[0]
+    assert g0.rows == 16 and g0.row_start == 0
+    # segments tile contiguously inside their group
+    for g in plan.groups:
+        segs = plan.group_segments(plan.groups.index(g))
+        rows = sorted((s.row_start, s.rows) for s in segs)
+        cur = g.row_start
+        for start, n in rows:
+            assert start == cur
+            cur += n
+        assert cur == g.row_start + g.rows
+
+
+def test_flat_plan_rejects_misaligned_blocks():
+    with pytest.raises(ValueError):
+        W.make_flat_plan([(512,)], ["float32"],
+                         [make_wire("ternary:block=384")], block=512)
+
+
+def test_flatten_unflatten_roundtrip():
+    key = jax.random.PRNGKey(0)
+    leaves = [jax.random.normal(jax.random.fold_in(key, i), s)
+              for i, s in enumerate([(3, 700), (130,), (2, 5, 512)])]
+    fmts = [make_wire("ternary:block=512")] * 3
+    plan = W.make_flat_plan([l.shape for l in leaves],
+                            [l.dtype for l in leaves], fmts)
+    buf = W.flatten_rows(plan, leaves)
+    assert buf.shape == (plan.total_rows, plan.block)
+    group_rows = [buf[g.row_start:g.row_start + g.rows] for g in plan.groups]
+    back = W.unflatten_rows(plan, group_rows)
+    for a, b in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# row codecs: single-node (n=1) exchange parity exercises encode+decode of
+# every format against the per-leaf WireFormat path, same PRNG key
+# ---------------------------------------------------------------------------
+SPECS = ["dense", "dense_bf16", "int8:block=256", "ternary:block=512",
+         "hybrid:block=512,top_j=4", "randk:block=512,k=64",
+         "topk:block=512,k=64"]
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_row_codec_matches_leaf_codec(spec):
+    """row_encode/row_decode on the flat buffer reproduce WireFormat
+    encode/decode bit-for-bit under the same per-leaf key streams."""
+    from repro.core import gossip as G
+    key = jax.random.PRNGKey(7)
+    leaves = {"a": jax.random.normal(key, (3, 700)) * 2,
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (130,)),
+              "c": jax.random.normal(jax.random.fold_in(key, 2), (2, 5, 512))}
+    fmt = make_wire(spec)
+    plan = G.GossipPlan(consensus_axes=(), dims=(), n_nodes=1,
+                        mode="circulant", offsets=(), W=np.ones((1, 1)),
+                        fmt=fmt)
+    c_leaf, _ = G.gossip_exchange(plan, key, leaves)
+    c_flat, _ = G.flat_gossip_exchange(plan, key, leaves)
+    for k in leaves:
+        np.testing.assert_array_equal(np.asarray(c_leaf[k]),
+                                      np.asarray(c_flat[k]), err_msg=k)
+
+
+def test_row_codec_mixed_rungs_single_node():
+    from repro.core import gossip as G
+    key = jax.random.PRNGKey(3)
+    leaves = {"a": jax.random.normal(key, (3, 700)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (130,)),
+              "c": jax.random.normal(jax.random.fold_in(key, 2), (2, 5, 512)),
+              "d": jax.random.normal(jax.random.fold_in(key, 3), (260,))}
+    fmts = tuple(make_wire(s) for s in
+                 ("ternary:block=512", "dense", "hybrid:block=512,top_j=4",
+                  "int8:block=256"))
+    plan = G.GossipPlan(consensus_axes=(), dims=(), n_nodes=1,
+                        mode="circulant", offsets=(), W=np.ones((1, 1)),
+                        fmt=fmts[0], leaf_fmts=fmts)
+    c_leaf, _ = G.gossip_exchange(plan, key, leaves)
+    c_flat, _ = G.flat_gossip_exchange(plan, key, leaves)
+    for k in leaves:
+        np.testing.assert_array_equal(np.asarray(c_leaf[k]),
+                                      np.asarray(c_flat[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# multi-device bit-exactness (the acceptance gate)
+# ---------------------------------------------------------------------------
+_PARITY_PRELUDE = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
+    from jax.sharding import PartitionSpec as P
+    from repro.core.wire import make_wire
+    from repro.core.gossip import make_plan, build_gossip_fn
+
+    key = jax.random.PRNGKey(0)
+    d = {'a': jax.random.normal(key, (8, 3, 700)),
+         'b': jax.random.normal(jax.random.PRNGKey(5), (8, 130)),
+         'c': jax.random.normal(jax.random.PRNGKey(7), (8, 2, 5, 512)),
+         'e': jax.random.normal(jax.random.PRNGKey(9), (8, 260))}
+
+    def parity(mesh, axes, specs, **pkw):
+        fmt = make_wire('ternary:block=512')
+        pl_leaf = make_plan(mesh, axes, fmt, wire_path='leaf', **pkw)
+        pl_flat = make_plan(mesh, axes, fmt, wire_path='flat', **pkw)
+        cl, al = jax.jit(build_gossip_fn(pl_leaf, mesh, specs))(key, d)
+        cf, af = jax.jit(build_gossip_fn(pl_flat, mesh, specs))(key, d)
+        for k in d:
+            assert np.array_equal(np.asarray(cl[k]), np.asarray(cf[k])), k
+            assert np.array_equal(np.asarray(al[k]), np.asarray(af[k])), k
+        return pl_flat.mode
+"""
+
+@pytest.mark.multidevice
+def test_flat_bit_exact_ring_circulant():
+    out = run_in_devices(8, _PARITY_PRELUDE + """
+    mesh = make_mesh((8,), ('data',))
+    specs = {'a': P('data', None, None), 'b': P('data', None),
+             'c': P('data', None, None, None), 'e': P('data', None)}
+    mode = parity(mesh, ('data',), specs)
+    assert mode == 'circulant', mode
+    print('OK', mode)
+    """)
+    assert "OK circulant" in out
+
+
+@pytest.mark.multidevice
+def test_flat_bit_exact_torus_2d():
+    out = run_in_devices(8, _PARITY_PRELUDE + """
+    mesh = make_mesh((2, 4), ('pod', 'data'))
+    specs = {'a': P(('pod','data'), None, None), 'b': P(('pod','data'), None),
+             'c': P(('pod','data'), None, None, None),
+             'e': P(('pod','data'), None)}
+    mode = parity(mesh, ('pod', 'data'), specs)
+    assert mode == 'circulant', mode
+    print('OK', mode)
+    """)
+    assert "OK circulant" in out
+
+
+@pytest.mark.multidevice
+def test_flat_bit_exact_dense_fallback():
+    out = run_in_devices(8, _PARITY_PRELUDE + """
+    from repro.core import consensus as cons
+    mesh = make_mesh((8,), ('data',))
+    specs = {'a': P('data', None, None), 'b': P('data', None),
+             'c': P('data', None, None, None), 'e': P('data', None)}
+    # irregular (non-circulant) graph -> dense all-gather fallback
+    A = np.zeros((8, 8))
+    for i, j in [(0,1),(0,3),(1,2),(2,5),(3,4),(4,5),(5,6),(6,7),(7,0),(2,7)]:
+        A[i, j] = A[j, i] = 1
+    Wd = cons.metropolis_weights(A, lazy=0.25)
+    mode = parity(mesh, ('data',), specs, W=Wd)
+    assert mode == 'dense', mode
+    print('OK', mode)
+    """)
+    assert "OK dense" in out
+
+
+@pytest.mark.multidevice
+def test_flat_bit_exact_mixed_rungs_and_pallas():
+    out = run_in_devices(8, _PARITY_PRELUDE + """
+    mesh = make_mesh((8,), ('data',))
+    specs = {'a': P('data', None, None), 'b': P('data', None),
+             'c': P('data', None, None, None), 'e': P('data', None)}
+    mixed = tuple(make_wire(s) for s in
+                  ('ternary:block=512', 'dense', 'hybrid:block=512,top_j=4',
+                   'int8:block=256'))
+    pl_leaf = make_plan(mesh, ('data',), mixed[0], wire_path='leaf',
+                        leaf_fmts=mixed)
+    pl_pal = make_plan(mesh, ('data',), mixed[0], wire_path='flat',
+                       use_pallas=True, leaf_fmts=mixed)
+    cl, al = jax.jit(build_gossip_fn(pl_leaf, mesh, specs))(key, d)
+    cf, af = jax.jit(build_gossip_fn(pl_pal, mesh, specs))(key, d)
+    for k in d:
+        assert np.array_equal(np.asarray(cl[k]), np.asarray(cf[k])), k
+        assert np.array_equal(np.asarray(al[k]), np.asarray(af[k])), k
+    print('OK')
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.multidevice
+def test_flat_bit_exact_bf16_tree_with_pallas():
+    """Non-f32 trees: the per-leaf path rounds every neighbor's decode
+    through the leaf dtype; the flat path must replay that (cast_rows_like)
+    — and the fused Pallas axpy, which can't, must fall back to the jnp
+    rows codec for non-f32 groups rather than silently diverge."""
+    out = run_in_devices(8, """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
+    from jax.sharding import PartitionSpec as P
+    from repro.core.wire import make_wire
+    from repro.core.gossip import make_plan, build_gossip_fn
+
+    mesh = make_mesh((8,), ('data',))
+    key = jax.random.PRNGKey(0)
+    d = {'a': jax.random.normal(key, (8, 3, 700)).astype(jnp.bfloat16),
+         'b': jax.random.normal(jax.random.PRNGKey(5), (8, 520)
+                                ).astype(jnp.bfloat16)}
+    specs = {'a': P('data', None, None), 'b': P('data', None)}
+    fmt = make_wire('ternary:block=512')
+    pl_leaf = make_plan(mesh, ('data',), fmt, wire_path='leaf')
+    for use_pallas in (False, True):
+        pl_flat = make_plan(mesh, ('data',), fmt, wire_path='flat',
+                            use_pallas=use_pallas)
+        cl, al = jax.jit(build_gossip_fn(pl_leaf, mesh, specs))(key, d)
+        cf, af = jax.jit(build_gossip_fn(pl_flat, mesh, specs))(key, d)
+        for k in d:
+            assert np.array_equal(np.asarray(cl[k], np.float32),
+                                  np.asarray(cf[k], np.float32)), (use_pallas, k)
+            assert np.array_equal(np.asarray(al[k], np.float32),
+                                  np.asarray(af[k], np.float32)), (use_pallas, k)
+    print('OK')
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.multidevice
+def test_flat_moves_fewer_collectives():
+    """The fused path must move ONE buffer per wire part per offset —
+    collective-permute count independent of leaf count — and keep packed
+    u8 codes (not decoded f32) on the links."""
+    out = run_in_devices(8, """
+    import jax, numpy as np
+    from repro.compat import make_mesh
+    from jax.sharding import PartitionSpec as P
+    from repro.core.wire import make_wire
+    from repro.core.gossip import make_plan, build_gossip_fn
+    from repro.launch.hlo_stats import analyze
+
+    mesh = make_mesh((8,), ('data',))
+    key = jax.random.PRNGKey(0)
+    d = {f'l{i}': jax.random.normal(jax.random.PRNGKey(i), (8, 4, 700))
+         for i in range(6)}
+    specs = {k: P('data', None, None) for k in d}
+    fmt = make_wire('ternary:block=512')
+    counts = {}
+    for path in ('leaf', 'flat'):
+        plan = make_plan(mesh, ('data',), fmt, wire_path=path)
+        fn = jax.jit(build_gossip_fn(plan, mesh, specs))
+        txt = fn.lower(key, d).compile().as_text()
+        st = analyze(txt)
+        counts[path] = st['collectives']['counts']['collective-permute']
+        assert any('u8[' in l for l in txt.splitlines()
+                   if 'collective-permute(' in l), path
+    # 6 leaves x 2 parts x 2 offsets = 24 vs 2 parts x 2 offsets = 4
+    assert counts['leaf'] >= 3 * counts['flat'], counts
+    print('OK', counts)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.multidevice
+def test_trainer_rung_vector_step():
+    """select_joint-style per-leaf rung vectors flow through
+    Trainer.train_step_for_wire / the PlanBank into ONE mixed flat plan."""
+    out = run_in_devices(8, """
+    import jax, numpy as np
+    from jax.sharding import PartitionSpec
+    from repro.compat import make_mesh, set_mesh
+    from repro.configs import get_smoke
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.train import make_trainer
+    from repro.data import SyntheticLMData
+    from repro.adapt import rung_key
+
+    mesh = make_mesh((4, 2), ('data', 'model'))
+    arch = get_smoke('qwen3-8b')
+    shape = ShapeConfig('t', 64, 8, 'train')
+    run = RunConfig(consensus_axis='data', wire='hybrid:block=64,top_j=4',
+                    alpha=0.05, optimizer='adam')
+    tr = make_trainer(mesh, arch, run, shape)
+    n_leaves = len(jax.tree.leaves(
+        tr.param_specs(), is_leaf=lambda t: isinstance(t, PartitionSpec)))
+    # a mixed rung vector: conservative first half, aggressive second
+    specs = tuple('int8:block=64' if i < n_leaves // 2
+                  else 'ternary:block=64' for i in range(n_leaves))
+    bank = tr.wire_bank(max_size=4)
+    step = bank.get(rung_key(specs))
+    state = tr.init_state(0)
+    data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=64,
+                           global_batch=8, n_nodes=4)
+    with set_mesh(mesh):
+        state, m = step(state, data.batch(0))
+        state, m = step(state, data.batch(1))
+    assert np.isfinite(float(m['loss']))
+    assert bank.stats()['builds'] == 1
+    assert bank.get(rung_key(specs)) is step   # repeated switch = dict hit
+    assert bank.stats()['hits'] >= 1
+    print('OK', float(m['loss']))
+    """, timeout=560)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# rung-vector plumbing (single device)
+# ---------------------------------------------------------------------------
+def test_rung_key_normalization():
+    from repro.adapt import rung_key
+    assert rung_key("ternary:block=512") == "ternary:block=512"
+    assert rung_key(("a", "b", "a")) == ("a", "b", "a")
+    # uniform vectors collapse to the shared single-spec plan
+    assert rung_key(("a", "a", "a")) == "a"
+    class D:  # controller.Decision-alikes
+        spec = "x"
+    assert rung_key([D(), D()]) == "x"
+
+
+def test_plan_bank_tuple_keys():
+    from repro.adapt.plan_bank import PlanBank
+    built = []
+    bank = PlanBank(lambda k: built.append(k) or len(built), max_size=4)
+    v1 = bank.get(("a", "b"))
+    v2 = bank.get(("a", "b"))
+    assert v1 == v2 == 1 and bank.stats()["builds"] == 1
+    assert bank.get("a") == 2
+    assert ("a", "b") in bank and "a" in bank
+
+
+def test_per_leaf_policy_walks_independently():
+    from repro.adapt import PerLeafSNRPolicy
+    from repro.adapt.telemetry import TelemetrySnapshot
+    ladder = ("dense", "int8:block=256", "ternary:block=512")
+    pol = PerLeafSNRPolicy(ladder=ladder, eta_min=1.0, n_leaves=3,
+                           margin=1.25, upgrade=2.0, cadence=1,
+                           start_index=1)
+    assert pol.initial_spec() == ("int8:block=256",) * 3
+
+    def snap(snrs, geo=10.0):
+        arr = np.asarray(snrs, np.float64)
+        return TelemetrySnapshot(diff_power=arr, noise_power=np.ones_like(arr),
+                                 snr=arr, window_diff=arr,
+                                 window_noise=np.ones_like(arr), count=5,
+                                 geo_snr=geo)
+
+    # leaf0 headroom -> step down; leaf1 in band -> hold; leaf2 low -> climb
+    v = pol.decide(1, snap([10.0, 1.5, 1.1]))
+    assert v == ("ternary:block=512", "int8:block=256", "dense")
+    # aggregate below the floor forces every leaf one rung conservative
+    v = pol.decide(2, snap([10.0, 10.0, 10.0], geo=0.5))
+    assert v == ("int8:block=256", "dense", "dense")
+
+
+def test_trainer_plan_for_wire_rung_vector():
+    """plan_for_wire accepts a rung vector and records per-leaf formats."""
+    from repro.core import gossip as G
+    from repro.train.trainer import Trainer
+    plan = G.GossipPlan(consensus_axes=("data",), dims=(4,), n_nodes=4,
+                        mode="circulant", offsets=(), W=np.eye(4),
+                        fmt=make_wire("ternary:block=512"))
+    tr = Trainer.__new__(Trainer)
+    tr.plan = plan
+    tr.consensus_axes = ("data",)
+    tr.n_nodes = 4
+    specs = ("dense", "ternary:block=512")
+    p2 = Trainer.plan_for_wire(tr, specs)
+    assert p2.leaf_fmts is not None and len(p2.leaf_fmts) == 2
+    assert p2.leaf_fmts[0].name == "dense"
+    p3 = Trainer.plan_for_wire(tr, "int8:block=256")
+    assert p3.leaf_fmts is None and p3.fmt.name == "int8"

@@ -94,3 +94,68 @@ def test_ops_wrappers_padding():
     assert w["codes"].dtype == jnp.uint8
     h = ops.hybrid_encode(x, jax.random.PRNGKey(1), block=512, top_j=4)
     assert h["out_idx"].dtype == jnp.int32
+
+
+@pytest.mark.parametrize("rows", [1, 3, 5, 7, 9, 13])
+def test_kernels_pad_ragged_row_counts(rows):
+    """Row counts that don't divide TILE_R must pad+strip, not assert —
+    both encode AND the fused decode-axpy (the flat gossip path hands the
+    kernels arbitrary rung-group row counts)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, 512)) * 2
+    bits = jax.random.bits(jax.random.PRNGKey(1), x.shape, jnp.uint32)
+    c1, s1 = T.ternary_encode(x, bits, block=512, interpret=True)
+    c2, s2 = R.ternary_encode_ref(x, bits)
+    assert c1.shape == (rows, 128)
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+    acc = jax.random.normal(jax.random.PRNGKey(2), x.shape)
+    y1 = T.ternary_decode_axpy(c2, s2, acc, 0.3, block=512, interpret=True)
+    y2 = R.ternary_decode_axpy_ref(c2, s2, acc, 0.3)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    h1 = H.hybrid_encode(x, bits, block=512, top_j=2, interpret=True)
+    h2 = R.hybrid_encode_ref(x, bits, 2)
+    for a, b in zip(h1, h2):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float64),
+                                      np.asarray(b, np.float64))
+    z1 = H.hybrid_decode_axpy(*h1, acc, -0.25, block=512, interpret=True)
+    z2 = R.hybrid_decode_axpy_ref(*h2, acc, -0.25)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
+def test_qi_layout_against_wire_pack2bit():
+    """The kernels' quarter-interleaved packing and core.wire's sequential
+    packing are bijective views of the same code vector: converting QI
+    bytes through ref.qi_to_sequential must reproduce wire.pack2bit
+    exactly, both packings must unpack to the same codes, and the decoded
+    VALUES must agree element-for-element."""
+    from repro.core import wire as W
+    codes = jax.random.randint(jax.random.PRNGKey(0), (8, 1024), 0, 3)
+    qi = R.pack2bit_qi(codes)
+    seq = W.pack2bit(codes)
+    np.testing.assert_array_equal(np.asarray(R.qi_to_sequential(qi)),
+                                  np.asarray(seq))
+    np.testing.assert_array_equal(np.asarray(R.sequential_to_qi(seq)),
+                                  np.asarray(qi))
+    np.testing.assert_array_equal(np.asarray(R.unpack2bit_qi(qi)),
+                                  np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(W.unpack2bit(seq)),
+                                  np.asarray(codes))
+    np.testing.assert_array_equal(
+        np.asarray(R.code_vals(R.unpack2bit_qi(qi))),
+        np.asarray(W.code_to_val(W.unpack2bit(seq))))
+
+
+def test_qi_roundtrip_through_encode():
+    """End-to-end layout oracle: a Pallas-encoded plane re-packed to the
+    sequential layout decodes identically through the jnp wire decoder."""
+    from repro.core import wire as W
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 512)) * 2
+    bits = jax.random.bits(jax.random.PRNGKey(4), x.shape, jnp.uint32)
+    qi_codes, scales = T.ternary_encode(x, bits, block=512, interpret=True)
+    dec_kernel = T.ternary_decode_axpy(qi_codes, scales,
+                                       jnp.zeros_like(x), 1.0,
+                                       block=512, interpret=True)
+    seq_codes = R.qi_to_sequential(qi_codes)
+    dec_wire = W.code_to_val(W.unpack2bit(seq_codes)) * scales
+    np.testing.assert_array_equal(np.asarray(dec_kernel),
+                                  np.asarray(dec_wire))
