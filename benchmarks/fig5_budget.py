@@ -1,0 +1,160 @@
+"""Fig. 5 (beyond-paper): the achieved-loss-vs-budget FRONTIER — what is
+the best loss B wire bits per step can buy on quadratic/W1?
+
+This is the DUAL of fig4: there the adaptive controller minimized bits
+subject to the Theorem-1 SNR bar; here the link is the constraint (the
+fixed-rate regime of DCGD / PowerGossip) and ``adapt.budget``'s
+BudgetController maximizes the minimum expected SNR it can purchase with
+``B`` flat-layout-costed bits per step.  Baselines at each budget point
+are ALL static wire rungs whose per-step cost fits the same budget.
+
+The structural result: W1's Theorem-1 bar (eta_min ~ 2.62) makes every
+wire cheaper than int8 (~20.8 kbit/step network-wide at dim=512) DIVERGE
+as a static choice — a static config either affords a safe rung or fails.
+The budgeted controller with a token bucket crosses that gap: below the
+cheapest converging static it runs BURST-OR-SILENCE (bank budget during
+blackout steps — an outage is a budget-0 window and vice versa — then
+spend a banked burst on a rung whose measured SNR clears the floor), so
+it still converges at budgets where no static does, and at larger budgets
+it spends the leftover above the best static rung on higher-SNR bursts.
+
+Acceptance (ISSUE 3):
+  * the budget is HARD: zero violations (cumulative flat-costed bits <=
+    cumulative budget + initial burst, asserted per run);
+  * wherever some static converges at the budget, budgeted is within
+    tolerance of (or better than) the best of them;
+  * at >= 2 budget points the budgeted controller converges while NO
+    static wire at the same budget does — lower loss at equal budget.
+
+Writes artifacts/bench/BENCH_budget.json and prints a CSV frontier.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adapt import budgeted_run
+from repro.adapt.budget import BudgetSchedule
+from repro.core import consensus as cons, dcdgd, problems
+from repro.core.compressors import make_compressor
+from repro.core.wire import make_wire
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+STEPS = 300
+TAIL = 25                  # achieved loss = mean gap over the last TAIL steps
+DIM = 512
+N_NODES = 5
+CONV_GAP = 10.0            # a run with final gap above this "diverged"
+TIE_TOL = 1.10             # budgeted within 10% of the best converging static
+BUCKET_CAP_STEPS = 6.0
+
+LADDER = ("dense", "int8:block=256", "hybrid:block=64,top_j=16",
+          "hybrid:block=64,top_j=4", "ternary:block=512")
+# network-wide per-step budgets (N_NODES encodes): 10k/12k are below every
+# CONVERGING static (only diverging rungs fit — burst-or-silence territory;
+# below ~9k the silence fraction starves consensus and even budgeted drifts,
+# the honest edge of the frontier); 19k fits one marginal static;
+# 35k/78k/110k bracket the int8->dense range
+BUDGETS = (10_000, 12_000, 19_000, 35_000, 78_000, 110_000)
+
+
+def alpha_fn(t):
+    # diminishing step (Cor.-1 style): the noise floor keeps decaying, so
+    # achieved loss actually resolves SNR differences between wires
+    return 0.08 / jnp.sqrt(t)
+
+
+def final_gap(r, f_star) -> float:
+    g = float(np.mean(r["f_bar"][-TAIL:]) - f_star)
+    return g if np.isfinite(g) else float("inf")
+
+
+def run():
+    prob = problems.quadratic(n_nodes=N_NODES, dim=DIM, seed=3)
+    W = cons.W1_PAPER
+    eta_min = float(cons.spectrum(W).snr_threshold)
+    key = jax.random.PRNGKey(0)
+
+    static_cost = {s: N_NODES * make_wire(s).wire_bits((DIM,))
+                   for s in LADDER}
+    static_gap = {}
+    for spec in LADDER:
+        r = dcdgd.run(prob, W, make_compressor("wire:" + spec), alpha_fn,
+                      STEPS, key)
+        static_gap[spec] = final_gap(r, prob.f_star)
+
+    out = {"problem": "quadratic_W1", "eta_min": eta_min, "steps": STEPS,
+           "dim": DIM, "n_nodes": N_NODES, "ladder": list(LADDER),
+           "statics": [{"wire": s, "bits_per_step": int(static_cost[s]),
+                        "gap": static_gap[s]} for s in LADDER],
+           "frontier": []}
+
+    for B in BUDGETS:
+        fits = [s for s in LADDER if static_cost[s] <= B]
+        conv = {s: static_gap[s] for s in fits if static_gap[s] <= CONV_GAP}
+        best_static = min(conv, key=conv.get) if conv else None
+        r = budgeted_run(prob, W, LADDER, alpha_fn, STEPS, key,
+                         schedule=BudgetSchedule(bits=float(B)),
+                         token_bucket=True,
+                         bucket_cap_steps=BUCKET_CAP_STEPS, cadence=1,
+                         min_useful_snr=eta_min * 1.05)
+        gap = final_gap(r, prob.f_star)
+        mix = {}
+        for s in r["spec_per_step"]:
+            k = s if isinstance(s, str) else "+".join(sorted(set(s)))
+            mix[k] = mix.get(k, 0) + 1
+        out["frontier"].append({
+            "budget_per_step": B,
+            "budgeted_gap": gap,
+            "budgeted_converged": gap <= CONV_GAP,
+            "budget_violations": int(r["budget_violations"]),
+            "cum_bits": float(r["cum_bits"][-1]),
+            "cum_budget": float(B) * STEPS,
+            "wire_mix": mix,
+            "static_fits": fits,
+            "best_static": best_static,
+            "best_static_gap": conv.get(best_static) if best_static else None,
+        })
+    return out
+
+
+def main():
+    ART.mkdir(parents=True, exist_ok=True)
+    out = run()
+    (ART / "BENCH_budget.json").write_text(json.dumps(out, indent=1))
+
+    print("name,budget_bits_per_step,budgeted_gap,best_static,"
+          "best_static_gap,violations")
+    ok = True
+    structural_wins = 0
+    strict_wins = 0
+    for row in out["frontier"]:
+        bs = row["best_static"] or "-"
+        bg = row["best_static_gap"]
+        print(f"fig5,{row['budget_per_step']},{row['budgeted_gap']:.4f},"
+              f"{bs},{'-' if bg is None else f'{bg:.4f}'},"
+              f"{row['budget_violations']}")
+        ok &= row["budget_violations"] == 0
+        if bg is None:
+            # no static converges at this budget: budgeted must
+            structural_wins += row["budgeted_converged"]
+            ok &= row["budgeted_converged"]
+        else:
+            ok &= row["budgeted_gap"] <= bg * TIE_TOL
+            strict_wins += row["budgeted_gap"] < bg
+    print(f"fig5 structural wins (budgeted converges, no static does): "
+          f"{structural_wins} (acceptance >= 2); strict wins vs a "
+          f"converging static: {strict_wins} (acceptance >= 1)")
+    ok &= structural_wins >= 2 and strict_wins >= 1
+    print(f"fig5 acceptance: {'ALL OK' if ok else 'FAIL'} "
+          f"-> {ART / 'BENCH_budget.json'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,30 +5,74 @@ Prints CSV lines (name,...) and writes artifacts/bench/*.json.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+# deterministic property flags a benchmark artifact must hold TRUE: any
+# false value is a correctness regression (not a perf wobble) and MUST fail
+# the run loudly — writing the artifact is not enough, CI only looks at the
+# exit code.  Maps artifact file -> flag paths ("a.b" descends dicts; a
+# dict value checks every entry).
+_ARTIFACT_FLAGS = {
+    "BENCH_gossip.json": ("bit_exact", "wire_bits_equal"),
+}
+
+
+def check_artifact_flags(art_dir: Path = ART) -> list:
+    """Return ["file:flag=value", ...] for every deterministic property
+    flag that is present but not truthy (missing artifacts are skipped —
+    their own suite already failed and gated the rc)."""
+    bad = []
+    for fname, flags in _ARTIFACT_FLAGS.items():
+        path = art_dir / fname
+        if not path.exists():
+            continue
+        data = json.loads(path.read_text())
+        for flag in flags:
+            node = data
+            for part in flag.split("."):
+                node = node.get(part, {}) if isinstance(node, dict) else {}
+            items = node.items() if isinstance(node, dict) else [(None, node)]
+            for k, v in items:
+                if v is not True:
+                    bad.append(f"{fname}:{flag}{'.' + k if k else ''}={v!r}")
+    return bad
+
+
+def enforce_artifact_flags(rc: int, art_dir: Path = ART) -> int:
+    bad = check_artifact_flags(art_dir)
+    for b in bad:
+        print(f"ARTIFACT-REGRESSION,{b}", flush=True)
+    return rc | (1 if bad else 0)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,fig4,roofline,wire")
+                    help="comma list: fig1,fig2,fig3,fig4,fig5,roofline,wire")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI probe: gossip-step microbenchmark "
-                         "only (refreshes artifacts/bench/BENCH_gossip.json)")
+                         "only (refreshes artifacts/bench/BENCH_gossip.json); "
+                         "exits nonzero if any deterministic property flag "
+                         "in the artifact is false")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
-                   fig4_adaptive, roofline, wire_micro)
+                   fig4_adaptive, fig5_budget, roofline, wire_micro)
     if args.smoke:
         print("==== gossip (smoke) ====", flush=True)
-        return wire_micro.main(smoke=True)
+        return enforce_artifact_flags(wire_micro.main(smoke=True))
     suites = {
         "fig1": fig1_convergence.main,
         "fig2": fig2_compressors.main,
         "fig3": fig3_realworld.main,
         "fig4": fig4_adaptive.main,
+        "fig5": fig5_budget.main,
         "wire": wire_micro.main,
         "roofline": roofline.main,
     }
@@ -48,7 +92,7 @@ def main(argv=None):
         rc |= r
         print(f"==== {name} done in {time.time()-t0:.1f}s (rc={r}) ====",
               flush=True)
-    return rc
+    return enforce_artifact_flags(rc)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,11 @@
 #   scripts/run_tests.sh            # full tier-1 suite
 #   scripts/run_tests.sh --fast     # CPU-only split (-m "not multidevice"),
 #                                   # stays under ~5 minutes
+#   scripts/run_tests.sh --hypothesis   # property-test split only: seeded
+#                                   # (--hypothesis-seed=0) and bounded via
+#                                   # the derandomized "repro-ci" profile
+#                                   # (tests/conftest.py), so it is
+#                                   # deterministic and wall-time-bounded
 #   scripts/run_tests.sh <pytest args...>   # passthrough
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,6 +22,20 @@ python -m pip install -q -r requirements-dev.txt 2>/dev/null \
 ARGS=("$@")
 if [[ "${1:-}" == "--fast" ]]; then
     ARGS=(-m "not multidevice" "${@:2}")
+elif [[ "${1:-}" == "--hypothesis" ]]; then
+    # the property-test files; seeded + derandomized profile => tier-1
+    # deterministic.  Without hypothesis installed the files degrade to
+    # their seeded fallback tests (and --hypothesis-seed would be an
+    # unknown flag), so only pass the seed when the plugin is present.
+    ARGS=(tests/test_wire_properties.py tests/test_compressors.py
+          tests/test_consensus_greedy.py "${@:2}")
+    if python -c "import hypothesis" 2>/dev/null; then
+        ARGS+=(--hypothesis-seed=0)
+    else
+        echo "WARN: hypothesis not installed; running seeded fallbacks only"
+    fi
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        exec python -m pytest -x -q "${ARGS[@]}"
 fi
 
 # || rc=$? keeps going under set -e so the perf artifact refreshes even

@@ -59,19 +59,45 @@ SNR-feedback policy force-climbs the ladder whenever the measured SNR of
 the active wire dips under the floor — so adaptation can only ever run
 FASTER than the static valid configuration, never outside the paper's
 convergence conditions.
+
+The budget contract (the dual problem)
+--------------------------------------
+``budget.BudgetController`` solves the DUAL of the eta_min-gated rate
+problem: maximize the minimum per-leaf expected SNR (same
+``expected_noise_power`` oracles) subject to a HARD per-step wire-bit
+budget, costed on the flat row layout the gossip path actually transmits
+(``core.wire.flat_tree_wire_bits`` — padding transmitted is padding
+counted) times the plan's neighbor multiplier.  The inversion flips which
+constraint is load-bearing: the budget is enforced at EVERY step
+(``BudgetPolicy`` re-solves off-cadence the moment the link shrinks under
+the active vector's cost), while eta_min becomes an audit floor —
+decisions below it are flagged ``below_floor``, not rejected, because a
+link that cannot carry eta_min-feasible traffic is the scenario being
+scheduled, not a config error.  A budget that cannot carry even the
+cheapest rung vector yields a BLACKOUT decision, mapped to
+``runtime.fault.OUTAGE_SPEC`` (W_t = I, exact local update, zero link
+bits): an outage is a budget-0 window and vice versa.  In token-bucket
+mode (``budget.TokenBucket``) unused bits bank up to a burst capacity and
+the invariant weakens from per-step (bits_t <= budget_t) to cumulative
+(sum bits <= sum budget + initial burst) — both are asserted step-by-step
+by the budget tests.
 """
-from .controller import (Decision, RateController, Rung, hybrid_rung_for,
-                         ladder_from_specs)
+from .budget import (BudgetController, BudgetDecision, BudgetSchedule,
+                     TokenBucket, gaussian_probes)
+from .controller import (Decision, RateController, Rung, evaluate_rung,
+                         hybrid_rung_for, ladder_from_specs)
 from .plan_bank import PlanBank, rung_key
-from .policies import (ControllerPolicy, FixedPolicy, PerLeafSNRPolicy,
-                       Policy, SNRFeedbackPolicy, StepDecayPolicy)
-from .runner import adaptive_run, bits_to_target
+from .policies import (BudgetPolicy, ControllerPolicy, FixedPolicy,
+                       PerLeafSNRPolicy, Policy, SNRFeedbackPolicy,
+                       StepDecayPolicy)
+from .runner import adaptive_run, bits_to_target, budgeted_run
 from .telemetry import TelemetrySnapshot, TelemetryState, init, snapshot, update
 
 __all__ = [
-    "Decision", "RateController", "Rung", "hybrid_rung_for",
-    "ladder_from_specs", "PlanBank", "ControllerPolicy", "FixedPolicy",
-    "Policy", "SNRFeedbackPolicy", "StepDecayPolicy", "adaptive_run",
-    "bits_to_target", "TelemetrySnapshot", "TelemetryState", "init",
-    "snapshot", "update",
+    "Decision", "RateController", "Rung", "evaluate_rung", "hybrid_rung_for",
+    "ladder_from_specs", "PlanBank", "BudgetController", "BudgetDecision",
+    "BudgetPolicy", "BudgetSchedule", "TokenBucket", "gaussian_probes",
+    "ControllerPolicy", "FixedPolicy", "Policy", "SNRFeedbackPolicy",
+    "StepDecayPolicy", "adaptive_run", "bits_to_target", "budgeted_run",
+    "TelemetrySnapshot", "TelemetryState", "init", "snapshot", "update",
 ]

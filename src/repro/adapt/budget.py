@@ -1,0 +1,328 @@
+"""Bandwidth-budgeted wire scheduling — the DUAL of the RateController.
+
+:class:`~repro.adapt.controller.RateController` solves the paper's §IV
+problem (minimize wire bits subject to the Theorem-1 SNR bar).  Real
+deployments often face the dual: a FIXED-bandwidth link where the question
+is "what is the best SNR I can buy with B bits per step?" (the fixed-rate
+regime of DCGD / PowerGossip).  :class:`BudgetController` solves that dual
+knapsack per decision:
+
+    maximize   min_l  expected-SNR(leaf l, rung r_l)      (maximin, then
+    subject to cost(r_1..r_L) <= B                         lexicographic)
+
+with the SNR of every (leaf, rung) candidate evaluated EXACTLY via the
+closed-form ``expected_noise_power`` oracles (``controller.evaluate_rung``)
+and the cost evaluated on the FLAT ROW LAYOUT the gossip hot path actually
+transmits: ``core.wire.flat_tree_wire_bits`` on the candidate rung vector
+(padding transmitted is padding counted) times the plan's per-step neighbor
+multiplier.  The emitted per-leaf rung vectors are ordinary plan-bank keys,
+so they flow through ``PlanBank`` / ``Trainer.train_step_for_wire`` and
+switching never recompiles.
+
+The budget is a HARD constraint; the Theorem-1 floor ``eta_min`` is
+advisory here (a link that cannot carry eta_min-feasible traffic is the
+scenario, not a config error) — decisions whose maximin SNR lands below
+the floor are flagged ``below_floor`` for audit, and a budget too small
+for even the cheapest vector yields a BLACKOUT decision (``specs=None``,
+mapped to ``runtime.fault.OUTAGE_SPEC``: a budget-0 window IS an outage).
+
+:class:`BudgetSchedule` models the link (constant / ramp / duty-cycled);
+:class:`TokenBucket` banks unused bits across steps (cumulative spend can
+never exceed cumulative budget plus the configured initial burst).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import wire as wirelib
+from ..core.wire import WireFormat
+from .controller import Rung, evaluate_rung, ladder_from_specs
+
+# relative slack on budget comparisons (float accumulation only — the
+# underlying bit counts are integers)
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# the link model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BudgetSchedule:
+    """Per-step wire-bit budget of the link.
+
+    kinds:
+      constant — ``bits`` every step;
+      ramp     — linear from ``bits`` to ``bits_end`` over ``ramp_steps``,
+                 then flat at ``bits_end`` (a link being provisioned up or
+                 throttled down);
+      duty     — ``bits`` for the first ``duty`` fraction of each
+                 ``period``-step cycle, ``off_bits`` for the rest (a shared
+                 link with scheduled contention; ``off_bits=0`` = periodic
+                 outage).
+    """
+    bits: float
+    kind: str = "constant"
+    bits_end: float = 0.0
+    ramp_steps: int = 0
+    period: int = 0
+    duty: float = 1.0
+    off_bits: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in ("constant", "ramp", "duty"), self.kind
+        if self.kind == "ramp":
+            assert self.ramp_steps >= 1
+        if self.kind == "duty":
+            assert self.period >= 1 and 0.0 <= self.duty <= 1.0
+
+    def budget_at(self, step: int) -> float:
+        if self.kind == "ramp":
+            t = min(max(step, 0) / self.ramp_steps, 1.0)
+            return float(self.bits + (self.bits_end - self.bits) * t)
+        if self.kind == "duty":
+            return float(self.bits if (step % self.period)
+                         < self.duty * self.period else self.off_bits)
+        return float(self.bits)
+
+    @classmethod
+    def parse(cls, spec: str, bits: float) -> "BudgetSchedule":
+        """CLI factory: ``"constant"`` / ``"ramp:end=2e5,steps=100"`` /
+        ``"duty:period=40,duty=0.75[,off=0]"``; ``bits`` is the base
+        per-step budget (``--bit-budget``)."""
+        name, _, argstr = spec.partition(":")
+        kw = {}
+        if argstr:
+            for kv in argstr.split(","):
+                k, v = kv.split("=")
+                kw[k] = float(v)
+        if name == "constant":
+            return cls(bits=bits)
+        if name == "ramp":
+            return cls(bits=bits, kind="ramp", bits_end=kw["end"],
+                       ramp_steps=int(kw["steps"]))
+        if name == "duty":
+            return cls(bits=bits, kind="duty", period=int(kw["period"]),
+                       duty=kw.get("duty", 0.5), off_bits=kw.get("off", 0.0))
+        raise ValueError(f"unknown budget schedule {spec!r} "
+                         f"(constant|ramp|duty)")
+
+
+@dataclasses.dataclass
+class TokenBucket:
+    """Banks unused budget across steps: ``fill`` adds the step's budget
+    (clipped at ``capacity`` — a link buffer, not an unbounded credit
+    line), ``spend`` draws down.  Invariant (asserted by tests):
+    ``spent <= filled + initial`` at every step, i.e. cumulative spend
+    never exceeds cumulative budget plus the configured initial burst."""
+    capacity: float
+    balance: float = 0.0
+    filled: float = 0.0
+    spent: float = 0.0
+    initial: float = dataclasses.field(default=0.0)
+
+    def __post_init__(self):
+        self.balance = min(self.balance, self.capacity)
+        self.initial = self.balance
+
+    def fill(self, amount: float) -> None:
+        amount = max(float(amount), 0.0)
+        self.filled += amount
+        self.balance = min(self.balance + amount, self.capacity)
+
+    def spend(self, bits: float) -> bool:
+        if bits > self.balance * (1 + _EPS) + _EPS:
+            return False
+        self.balance = max(self.balance - float(bits), 0.0)
+        self.spent += float(bits)
+        return True
+
+
+# ---------------------------------------------------------------------------
+# decisions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BudgetDecision:
+    step: int
+    specs: Optional[Tuple[str, ...]]   # None = blackout (no transmission)
+    bits: float                        # exact flat-layout cost of specs
+    budget: float                      # the bar this was solved against
+    min_snr: float                     # maximin objective achieved
+    reason: str          # "ok" | "saturated" | "blackout" | "silence"
+    below_floor: bool = False          # min_snr < eta_min (audit flag)
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BudgetController:
+    """Maximin-SNR-under-budget scheduler over WIRE-level rungs.
+
+    ``shapes`` are the per-leaf tensor shapes the cost model is evaluated
+    at — the SAME shapes the flat gossip path lays out as rows, so the
+    budget check and the transmitted bytes can never disagree.
+    ``neighbors`` multiplies one encode's bits into the per-step link cost
+    (``GossipPlan.n_out``).  ``snr_cap``, when set, stops the upgrade loop
+    once every leaf's expected SNR clears it — the controller then BANKS
+    the leftover instead of buying SNR nobody needs (only useful with a
+    :class:`TokenBucket`)."""
+    ladder: Tuple[Rung, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+    neighbors: int = 1
+    eta_min: float = 0.0
+    snr_cap: Optional[float] = None
+    # burst-or-silence floor: when set, a solution whose maximin SNR lands
+    # BELOW this is replaced by a blackout — on a constrained link, noise
+    # below the Theorem-1 bar is worse than silence (the Fig. 3 divergence
+    # mode), and with a TokenBucket the unspent bits bank toward a step
+    # that CAN clear the floor.  None (default) = always transmit the best
+    # affordable vector.
+    min_useful_snr: Optional[float] = None
+    log: List[BudgetDecision] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        assert self.ladder and self.shapes
+        for r in self.ladder:
+            if not isinstance(r.codec, WireFormat):
+                raise TypeError(
+                    f"BudgetController rungs must be WIRE formats (flat-"
+                    f"layout costing); got {r.spec!r} at level=compressor — "
+                    f"build the ladder with ladder_from_specs(level='wire')")
+        # leaf-local cost table: shapes and ladder are static, so the
+        # upgrade ordering per leaf is precomputed once
+        self._leaf_cost = [
+            [wirelib.per_leaf_flat_bits([r.codec], [s])[0] * self.neighbors
+             for r in self.ladder]
+            for s in self.shapes]
+
+    @classmethod
+    def for_plan(cls, plan, ladder_specs: Sequence[str],
+                 shapes: Sequence[Tuple[int, ...]], *,
+                 snr_cap: Optional[float] = None) -> "BudgetController":
+        """Controller bound to an active gossip plan: neighbor multiplier
+        and audit floor come from the plan itself."""
+        from ..core import consensus as cons
+        return cls(ladder=ladder_from_specs(ladder_specs, level="wire"),
+                   shapes=tuple(tuple(s) for s in shapes),
+                   neighbors=plan.n_out,
+                   eta_min=float(cons.spectrum(plan.W).snr_threshold),
+                   snr_cap=snr_cap)
+
+    # -- cost model --------------------------------------------------------
+    def vector_cost(self, rung_idx: Sequence[int]) -> float:
+        """EXACT per-step link bits of a candidate vector: the flat row
+        layout this mix would transmit (shared row width = lcm of the
+        chosen rung blocks, so it can differ from the sum of leaf-local
+        costs), times the neighbor multiplier."""
+        fmts = [self.ladder[i].codec for i in rung_idx]
+        return float(wirelib.flat_tree_wire_bits(fmts, list(self.shapes))
+                     * self.neighbors)
+
+    def specs_for(self, rung_idx: Sequence[int]) -> Tuple[str, ...]:
+        return tuple(self.ladder[i].spec for i in rung_idx)
+
+    # -- the dual knapsack -------------------------------------------------
+    def select_budgeted(self, probes: Sequence[np.ndarray], budget: float,
+                        step: int = 0) -> BudgetDecision:
+        """Greedy lexicographic maximin: start every leaf on its cheapest
+        rung; repeatedly upgrade the current-minimum-SNR leaf to its
+        cheapest strictly-better rung that still fits the budget (cost
+        re-evaluated exactly on the mixed flat layout each move); freeze a
+        leaf whose bottleneck cannot be raised.  Terminates in at most
+        L * |ladder| moves."""
+        assert len(probes) == len(self.shapes), \
+            (len(probes), len(self.shapes))
+        L, R = len(self.shapes), len(self.ladder)
+        snr = np.empty((L, R))
+        for li, z in enumerate(probes):
+            z = np.asarray(z, np.float32)
+            power = float((z.astype(np.float64) ** 2).sum())
+            for ri, rung in enumerate(self.ladder):
+                snr[li, ri] = evaluate_rung(rung, z, int(z.size), power)[2]
+
+        # cheapest start (tie → better SNR buys nothing extra, take it).
+        # Leaf-local costs ignore the lcm coupling: a mixed vector pads
+        # every row to the lcm of the CHOSEN blocks, so the per-leaf
+        # cheapest mix can cost MORE jointly than a uniform vector — also
+        # consider every uniform rung and keep the cheapest exact cost,
+        # otherwise a feasible budget could be declared a blackout.
+        cur = [min(range(R),
+                   key=lambda ri: (self._leaf_cost[li][ri], -snr[li][ri]))
+               for li in range(L)]
+        cost = self.vector_cost(cur)
+        for ri in range(R):
+            c = self.vector_cost([ri] * L)
+            if c < cost:
+                cur, cost = [ri] * L, c
+        if cost > budget * (1 + _EPS):
+            dec = BudgetDecision(step=step, specs=None, bits=0.0,
+                                 budget=float(budget), min_snr=0.0,
+                                 reason="blackout", below_floor=True)
+            self.log.append(dec)
+            return dec
+
+        reason = "ok"
+        frozen = set()
+        while len(frozen) < L:
+            if (self.snr_cap is not None
+                    and min(snr[li, cur[li]] for li in range(L))
+                    >= self.snr_cap):
+                reason = "saturated"
+                break
+            li = min((l for l in range(L) if l not in frozen),
+                     key=lambda l: snr[l, cur[l]])
+            ups = sorted((ri for ri in range(R)
+                          if snr[li, ri] > snr[li, cur[li]]),
+                         key=lambda ri: (self._leaf_cost[li][ri],
+                                         -snr[li, ri]))
+            for ri in ups:
+                trial = list(cur)
+                trial[li] = ri
+                c = self.vector_cost(trial)
+                if c <= budget * (1 + _EPS):
+                    cur, cost = trial, c
+                    break
+            else:
+                frozen.add(li)
+
+        min_snr = float(min(snr[li, cur[li]] for li in range(L)))
+        if (self.min_useful_snr is not None
+                and min_snr < self.min_useful_snr):
+            # burst-or-silence: the best SNR this budget buys is below the
+            # useful floor — bank the bits instead of transmitting noise
+            dec = BudgetDecision(step=step, specs=None, bits=0.0,
+                                 budget=float(budget), min_snr=min_snr,
+                                 reason="silence", below_floor=True)
+            self.log.append(dec)
+            return dec
+        dec = BudgetDecision(step=step, specs=self.specs_for(cur),
+                             bits=cost, budget=float(budget),
+                             min_snr=min_snr, reason=reason,
+                             below_floor=bool(min_snr < self.eta_min))
+        self.log.append(dec)
+        return dec
+
+
+# ---------------------------------------------------------------------------
+# probe synthesis (trainer path: telemetry powers, no live differential)
+# ---------------------------------------------------------------------------
+def gaussian_probes(shapes: Sequence[Tuple[int, ...]], seed: int = 0,
+                    powers: Optional[np.ndarray] = None) -> List[np.ndarray]:
+    """Deterministic standard-normal probes, one per leaf shape, optionally
+    rescaled so ||z_l||^2 equals the MEASURED per-leaf differential power —
+    the oracles then evaluate candidate SNRs on a representative sample at
+    the live scale (the distribution-shape part of the oracle is evaluated
+    on the Gaussian profile; telemetry supplies the magnitude)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for li, s in enumerate(shapes):
+        z = rng.standard_normal(s).astype(np.float32)
+        if powers is not None and np.isfinite(powers[li]) and powers[li] > 0:
+            z = z * np.sqrt(float(powers[li]) /
+                            max(float((z.astype(np.float64) ** 2).sum()),
+                                1e-30))
+        out.append(z)
+    return out

@@ -97,6 +97,23 @@ def hybrid_rung_for(z: np.ndarray, eta: float, level: str = "compressor"
     return Rung(spec=spec, codec=codec)
 
 
+def evaluate_rung(rung: Rung, z: np.ndarray, d: int, power: float
+                  ) -> Tuple[float, float, float]:
+    """(guaranteed_snr, expected_noise, predicted_snr) of one rung on sample
+    ``z`` with ``d = z.size`` and ``power = ||z||^2`` — the candidate-SNR
+    model shared by the bits-minimizing :class:`RateController` and the
+    SNR-maximizing dual (:mod:`repro.adapt.budget`).  A rung without an
+    analytic noise oracle is trusted only at its worst-case guarantee."""
+    g = rung.guaranteed_snr(d)
+    noise = rung.expected_noise(z)
+    if noise is None:
+        noise = power / g if g > 0 and math.isfinite(g) else float(np.inf)
+        pred = g
+    else:
+        pred = power / noise if noise > 0 else float("inf")
+    return g, noise, pred
+
+
 # ---------------------------------------------------------------------------
 # decisions
 # ---------------------------------------------------------------------------
@@ -176,14 +193,7 @@ class RateController:
         power = float((z.astype(np.float64) ** 2).sum())
         rows = []
         for i, rung in enumerate(self._candidates(z)):
-            g = rung.guaranteed_snr(d)
-            noise = rung.expected_noise(z)
-            if noise is None:
-                # no analytic model: trust only the worst-case guarantee
-                noise = power / g if g > 0 and math.isfinite(g) else np.inf
-                pred = g
-            else:
-                pred = power / noise if noise > 0 else float("inf")
+            g, noise, pred = evaluate_rung(rung, z, d, power)
             feasible = (g > self.eta_min) or (pred >= self.bar)
             rows.append(dict(idx=i, rung=rung, bits=rung.expected_bits(z),
                              pred=pred, guaranteed=g, noise=noise,

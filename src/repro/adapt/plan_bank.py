@@ -45,10 +45,14 @@ def rung_key(specs: Union[str, Sequence[str]]) -> Key:
 class PlanBank:
     """LRU cache of built plans: ``get(key)`` builds on first use only."""
 
-    def __init__(self, build: Callable[[Key], Any], max_size: int = 8):
+    def __init__(self, build: Callable[[Key], Any], max_size: int = 8,
+                 on_build: Callable[[Key], None] | None = None):
         assert max_size >= 1
         self._build = build
         self._max = max_size
+        self._on_build = on_build   # compile-counter hook: fires exactly
+        # once per build() (= per compilation), never on a cache hit — the
+        # observable the no-silent-recompile regression tests key on
         self._cache: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.builds = 0   # build() invocations (compilations)
         self.hits = 0     # lookups served from cache
@@ -59,6 +63,8 @@ class PlanBank:
             self._cache.move_to_end(spec)
             self.hits += 1
             return self._cache[spec]
+        if self._on_build is not None:
+            self._on_build(spec)
         value = self._build(spec)
         self.builds += 1
         self._cache[spec] = value

@@ -25,11 +25,19 @@ switches.
   ControllerPolicy   — model-based: defers to a RateController re-solving
                        the rate/SNR knapsack on a live probe of the actual
                        differential (the DC-DGD runner default).
+  BudgetPolicy       — the fixed-bandwidth-link dual: a BudgetController
+                       re-solves the maximin-SNR-under-budget knapsack at
+                       cadence, and EVERY step the policy enforces the hard
+                       per-step budget (BudgetSchedule, optionally banked
+                       through a TokenBucket) — downgrading immediately,
+                       off-cadence, when the link shrinks under the active
+                       vector's cost, and emitting the OUTAGE blackout spec
+                       on budget-0 windows.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -206,3 +214,84 @@ class ControllerPolicy(Policy):
             return None
         dec = self.controller.select_stacked(self.probe_fn(), step=step)
         return dec.spec
+
+
+@dataclasses.dataclass
+class BudgetPolicy(Policy):
+    """Hard per-step bit budget, maximin SNR (see module docstring).
+
+    The cadence gates only the EXPENSIVE re-solve (probing + oracle sweep);
+    the budget check itself runs every step: the active vector's exact
+    flat-layout cost is compared against ``schedule.budget_at(step)`` (or
+    the token-bucket balance), and a violation forces an immediate
+    off-cadence re-solve.  ``probe_fn`` supplies live per-leaf differential
+    probes when the caller has them (the DC-DGD runner); without it the
+    policy synthesizes Gaussian probes at the telemetry-measured per-leaf
+    powers (the trainer path).  ``spend_log`` records
+    (step, budget, balance_after, bits, reason) per decided step so tests
+    can assert cumulative spend <= cumulative budget step by step.
+    """
+    controller: "Any"                     # BudgetController
+    schedule: "Any"                       # BudgetSchedule-like (budget_at)
+    cadence: int = 25
+    bucket: Optional["Any"] = None        # TokenBucket
+    probe_fn: Optional[Callable[[], Sequence[np.ndarray]]] = None
+    probe_seed: int = 0
+    spend_log: List[Tuple[int, float, float, float, str]] = \
+        dataclasses.field(default_factory=list)
+    _active: Optional[Tuple[str, ...]] = dataclasses.field(default=None)
+    _active_bits: float = dataclasses.field(default=0.0)
+
+    def _probes(self, snap: Optional[TelemetrySnapshot]):
+        if self.probe_fn is not None:
+            return self.probe_fn()
+        from .budget import gaussian_probes
+        shapes = self.controller.shapes
+        powers = (snap.diff_power if snap is not None
+                  and snap.n_layers == len(shapes) and snap.count > 0
+                  else None)
+        return gaussian_probes(shapes, seed=self.probe_seed, powers=powers)
+
+    def _solve(self, step: int, snap, avail: float):
+        from ..runtime.fault import OUTAGE_SPEC
+        dec = self.controller.select_budgeted(self._probes(snap), avail,
+                                              step=step)
+        if dec.specs is None:
+            self._active, self._active_bits = OUTAGE_SPEC, 0.0
+        else:
+            self._active, self._active_bits = dec.specs, dec.bits
+        return dec.reason
+
+    def _account(self, step: int, budget: float, reason: str) -> None:
+        if self.bucket is not None:
+            ok = self.bucket.spend(self._active_bits)
+            assert ok, ("token-bucket overdraft — _solve must fit balance",
+                        step, self._active_bits, self.bucket.balance)
+            bal = self.bucket.balance
+        else:
+            bal = budget - self._active_bits
+        self.spend_log.append((step, float(budget), float(bal),
+                               float(self._active_bits), reason))
+
+    def decide(self, step, snap):
+        from ..runtime.fault import OUTAGE_SPEC
+        budget = float(self.schedule.budget_at(step))
+        if self.bucket is not None:
+            self.bucket.fill(budget)
+            avail = self.bucket.balance
+        else:
+            avail = budget
+        at_cadence = step % max(self.cadence, 1) == 0
+        over = self._active_bits > avail * (1 + 1e-9)
+        stale_outage = self._active == OUTAGE_SPEC and avail > 0
+        if self._active is None or at_cadence or over or stale_outage:
+            reason = self._solve(step, snap, avail)
+        else:
+            reason = "hold"
+        self._account(step, budget, reason)
+        return self._active
+
+    def initial_spec(self):
+        # step 0 transmits too: solve and account it against budget_at(0)
+        self.decide(0, None)
+        return self._active

@@ -27,11 +27,34 @@ import numpy as np
 
 from ..core import consensus as cons
 from ..core import dcdgd
-from ..core.compressors import Compressor, make_compressor
+from ..core.compressors import Compressor, Identity, make_compressor
 from . import telemetry as tm
 from .controller import RateController, ladder_from_specs
-from .plan_bank import PlanBank
-from .policies import ControllerPolicy, Policy
+from .plan_bank import PlanBank, rung_key
+from .policies import BudgetPolicy, ControllerPolicy, Policy
+
+
+def _metric_step(problem, alpha_fn, Wj: jax.Array, comp: Compressor
+                 ) -> Callable:
+    """Jitted one-step closure — dcdgd.step plus the benchmark metric set —
+    shared by the adaptive and budgeted runners (one definition, so the
+    metric contract cannot drift between them)."""
+
+    @jax.jit
+    def one(st):
+        a_t = alpha_fn(st.t)
+        new_state, aux = dcdgd.step(st, Wj, problem.grad, a_t, comp,
+                                    track_bits=True)
+        xbar = jnp.mean(new_state.x, axis=0)
+        m = {
+            "f_bar": problem.global_f(xbar),
+            "grad_norm_sq": jnp.sum(problem.global_grad(xbar) ** 2),
+            "consensus_err": jnp.sum((new_state.x - xbar[None, :]) ** 2),
+        }
+        m.update(aux)
+        return new_state, m
+
+    return one
 
 
 def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
@@ -55,23 +78,7 @@ def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
     state = dcdgd.init(problem.grad, params_like, float(alpha_fn(1)), ik)
 
     def build_step(spec: str) -> Callable:
-        comp = make_compressor(spec)
-
-        @jax.jit
-        def one(st):
-            a_t = alpha_fn(st.t)
-            new_state, aux = dcdgd.step(st, Wj, problem.grad, a_t, comp,
-                                        track_bits=True)
-            xbar = jnp.mean(new_state.x, axis=0)
-            m = {
-                "f_bar": problem.global_f(xbar),
-                "grad_norm_sq": jnp.sum(problem.global_grad(xbar) ** 2),
-                "consensus_err": jnp.sum((new_state.x - xbar[None, :]) ** 2),
-            }
-            m.update(aux)
-            return new_state, m
-
-        return one
+        return _metric_step(problem, alpha_fn, Wj, make_compressor(spec))
 
     bank = PlanBank(build_step, max_size=bank_size)
 
@@ -124,6 +131,104 @@ def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
     if controller is not None:
         out["decisions"] = list(controller.log)
         out["eta_min"] = controller.eta_min
+    return out
+
+
+def budgeted_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
+                 alpha, n_steps: int, key: jax.Array, *,
+                 schedule, token_bucket: bool = False,
+                 bucket_cap_steps: float = 4.0, cadence: int = 10,
+                 snr_cap: Optional[float] = None,
+                 min_useful_snr: Optional[float] = None,
+                 bank_size: int = 8) -> dict:
+    """DC-DGD under a HARD per-step wire-bit budget (the fixed-bandwidth
+    dual of :func:`adaptive_run`; see adapt.budget).
+
+    ``ladder_specs`` are WIRE-format specs (``core.wire.make_wire``) — the
+    budget is costed on the flat row layout, and each rung runs through the
+    :class:`~repro.core.compressors.WireCompressor` adapter so the bits the
+    algorithm ships are exactly the bits the controller budgeted.  The
+    budget is in per-step total-network encode bits (the same units as the
+    ``bits``/``cum_bits`` metrics of :func:`repro.core.dcdgd.run`, i.e. one
+    encode per node per step; multiply by the graph degree for link bits).
+    A step whose budget cannot carry even the cheapest rung transmits
+    NOTHING (blackout: W_t = I, exact local update, 0 bits) — that is how
+    a ``runtime.fault`` outage window enters as a budget-0 window.
+
+    ``token_bucket=True`` banks unused bits (capacity = ``bucket_cap_steps``
+    base budgets, starting FULL — an initial burst the cumulative-budget
+    accounting includes); ``snr_cap`` stops buying SNR once every leaf
+    clears it so the bucket actually accumulates.
+    """
+    from ..core.compressors import WireCompressor
+    from ..core.wire import make_wire
+    from ..runtime.fault import OUTAGE_SPEC
+    from .budget import BudgetController, TokenBucket
+
+    Wj = jnp.asarray(W, jnp.float32)
+    n = W.shape[0]
+    I = jnp.eye(n, dtype=jnp.float32)
+    params_like = jnp.zeros((n, problem.dim), jnp.float32)
+    alpha_fn = alpha if callable(alpha) else (lambda t: alpha)
+    key, ik = jax.random.split(key)
+    state = dcdgd.init(problem.grad, params_like, float(alpha_fn(1)), ik)
+
+    controller = BudgetController(
+        ladder=ladder_from_specs(ladder_specs, level="wire"),
+        shapes=((n, problem.dim),), neighbors=1,
+        eta_min=float(cons.spectrum(W).snr_threshold), snr_cap=snr_cap,
+        min_useful_snr=min_useful_snr)
+    bucket = None
+    if token_bucket:
+        cap = float(bucket_cap_steps) * float(schedule.budget_at(0))
+        bucket = TokenBucket(capacity=cap, balance=cap)
+
+    def build_step(spec: str) -> Callable:
+        if spec == OUTAGE_SPEC:     # blackout: exact local step, no links
+            return _metric_step(problem, alpha_fn, I, Identity())
+        return _metric_step(problem, alpha_fn, Wj,
+                            WireCompressor(fmt=make_wire(spec)))
+
+    bank = PlanBank(build_step, max_size=bank_size)
+    policy = BudgetPolicy(controller=controller, schedule=schedule,
+                          cadence=cadence, bucket=bucket,
+                          probe_fn=lambda: [np.asarray(state.d)])
+
+    active = rung_key(policy.initial_spec())
+    history, specs_per_step, wire_log = [], [], [(0, active)]
+    for i in range(n_steps):
+        step_fn = bank.get(active)
+        state, m = step_fn(state)
+        history.append(m)
+        specs_per_step.append(active)
+        if (i + 1) < n_steps:
+            nxt = policy.decide(i + 1, None)
+            nxt = rung_key(nxt) if nxt is not None else active
+            if nxt != active:
+                active = nxt
+                wire_log.append((i + 1, active))
+
+    out = {k: np.array([float(h[k]) for h in history]) for k in history[0]}
+    # bits accounting: the policy's flat-layout-costed spend per step (0 on
+    # blackout steps) — the quantity the budget constraint binds on
+    spend = {s: b for s, _, _, b, _ in policy.spend_log}
+    out["bits"] = np.array([spend[i] for i in range(n_steps)])
+    out["cum_bits"] = np.cumsum(out["bits"])
+    budgets = np.array([float(schedule.budget_at(i)) for i in range(n_steps)])
+    out["budget_per_step"] = budgets
+    if token_bucket:
+        allowance = np.cumsum(budgets) + bucket.initial
+    else:
+        allowance = budgets  # hard per-step cap
+    spent = out["cum_bits"] if token_bucket else out["bits"]
+    out["budget_violations"] = int(np.sum(spent > allowance * (1 + 1e-9)))
+    out["x_final"] = np.asarray(state.x)
+    out["wire_log"] = wire_log
+    out["spec_per_step"] = specs_per_step
+    out["bank_stats"] = bank.stats()
+    out["spend_log"] = list(policy.spend_log)
+    out["decisions"] = list(controller.log)
+    out["eta_min"] = controller.eta_min
     return out
 
 

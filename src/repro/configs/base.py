@@ -165,6 +165,18 @@ class AdaptConfig:
     window: int = 32                    # telemetry ring size
     bank_size: int = 8                  # max pre-built gossip plans kept
 
+    # --- bandwidth-budgeted scheduling (adapt.budget; the dual problem) ---
+    # bit_budget > 0 switches the policy to BudgetPolicy: maximize the min
+    # per-leaf expected SNR subject to <= bit_budget flat-layout wire bits
+    # per node per step (GossipPlan.n_out link sends included).  The budget
+    # is HARD: it is enforced every step, eta_min becomes an audit floor,
+    # and a budget-0 window is a fault.OUTAGE_SPEC blackout step.
+    bit_budget: float = 0.0             # 0 = budgeting disabled
+    budget_schedule: str = "constant"   # BudgetSchedule.parse spec:
+    # "constant" | "ramp:end=..,steps=.." | "duty:period=..,duty=..[,off=..]"
+    token_bucket: bool = False          # bank unused bits across steps
+    bucket_cap_steps: float = 4.0       # bucket capacity, in base budgets
+
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:

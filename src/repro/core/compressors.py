@@ -419,6 +419,33 @@ class BlockedHybrid(Compressor):
 
 
 # --------------------------------------------------------------------------
+# wire-format adapter: run a packed core.wire format where a math-level
+# Compressor is expected (the stacked DC-DGD backend, the budgeted runner).
+# The decoded view is decode(encode(z)) under the SAME key both the local
+# and every receiving node would use, so Algorithm-1 semantics hold, and
+# expected_bits is the EXACT packed wire size (what the collectives move,
+# padding included) instead of the paper's symbol-entropy accounting.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WireCompressor(Compressor):
+    fmt: "object" = None            # a repro.core.wire.WireFormat
+    name: str = dataclasses.field(default="wire", init=False)
+
+    def __call__(self, key, z):
+        wire = self.fmt.encode(key, z)
+        return self.fmt.decode(wire, z.shape, z.dtype)
+
+    def snr_lower_bound(self, d):
+        return float(self.fmt.snr_lower_bound(d))
+
+    def expected_bits(self, z):
+        return jnp.asarray(self.fmt.wire_bits(z.shape), jnp.float32)
+
+    def expected_noise_power(self, z):
+        return self.fmt.expected_noise_power(z)
+
+
+# --------------------------------------------------------------------------
 # pytree application + registry
 # --------------------------------------------------------------------------
 def tree_compress(comp: Compressor, key: jax.Array, tree):
@@ -448,7 +475,12 @@ _REGISTRY = {
 
 def make_compressor(spec: str) -> Compressor:
     """Factory from config strings like ``"sparsifier:p=0.8"`` or
-    ``"blocked_hybrid:block=512,top_j=4"``."""
+    ``"blocked_hybrid:block=512,top_j=4"``.  ``"wire:<wire spec>"`` wraps a
+    packed :mod:`repro.core.wire` format as a math-level compressor with
+    exact packed-size bit accounting (see :class:`WireCompressor`)."""
+    if spec.startswith("wire:"):
+        from .wire import make_wire
+        return WireCompressor(fmt=make_wire(spec[len("wire:"):]))
     name, _, argstr = spec.partition(":")
     if name not in _REGISTRY:
         raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")

@@ -153,6 +153,17 @@ class GossipPlan:
     def spectrum(self):
         return cons.spectrum(self.W)
 
+    @property
+    def n_out(self) -> int:
+        """Outgoing transmissions per node per step: non-self circulant
+        offsets, or the max neighbor degree of a dense-fallback W.  This is
+        the multiplier between one encode's wire bits and the per-step link
+        cost (paper accounting: the broadcast is counted once per link)."""
+        if self.mode == "circulant":
+            return sum(1 for off, _ in self.offsets
+                       if any(o != 0 for o in off))
+        return max(int((np.abs(self.W) > 1e-12).sum(1).max()) - 1, 0)
+
     def fmts_for(self, n_leaves: int) -> Tuple[WireFormat, ...]:
         if self.leaf_fmts is not None:
             assert len(self.leaf_fmts) == n_leaves, \
@@ -392,8 +403,4 @@ def plan_wire_bits_per_step(plan: GossipPlan, d_tree_shapes: PyTree) -> int:
         one = wirelib.flat_tree_wire_bits(fmts, shapes)
     else:
         one = sum(f.wire_bits(s) for f, s in zip(fmts, shapes))
-    if plan.mode == "circulant":
-        n_out = sum(1 for off, _ in plan.offsets if any(o != 0 for o in off))
-    else:
-        n_out = int((np.abs(plan.W) > 1e-12).sum(1).max()) - 1
-    return one * max(n_out, 0)
+    return one * plan.n_out

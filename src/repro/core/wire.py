@@ -530,6 +530,27 @@ def flat_tree_wire_bits(leaf_fmts, leaf_shapes, block: Optional[int] = None
     return sum(g.fmt.wire_bits((g.rows, plan.block)) for g in plan.groups)
 
 
+def per_leaf_flat_bits(leaf_fmts, leaf_shapes, block: Optional[int] = None
+                       ) -> list:
+    """Each leaf's share of :func:`flat_tree_wire_bits`, in tree order —
+    the marginal-cost table of the budgeted scheduler (adapt.budget).
+
+    Every wire format's ``wire_bits((R, B))`` is linear in the row count R
+    (one row's payload plus its per-tile overhead, R times), so a rung
+    group's cost decomposes EXACTLY into ``rows_leaf * bits_per_row``;
+    summing the returned list reproduces ``flat_tree_wire_bits`` bit for
+    bit, padding rows charged to the leaf that owns them."""
+    fmts = list(leaf_fmts)
+    plan = make_flat_plan(leaf_shapes, ["float32"] * len(fmts), fmts,
+                          block=block)
+    per_row = {gi: g.fmt.wire_bits((1, plan.block))
+               for gi, g in enumerate(plan.groups)}
+    out = [0] * plan.n_leaves
+    for seg in plan.segments:
+        out[seg.index] = seg.rows * per_row[seg.group]
+    return out
+
+
 def rng_rows(plan: FlatWirePlan, key: jax.Array) -> list:
     """Per-group (rows, block) uint32 bit buffers replaying the EXACT
     per-leaf RNG streams of ``gossip_exchange`` (leaf l draws from

@@ -55,6 +55,18 @@ def main(argv=None):
                          "aggressive (specs contain commas); default: "
                          "AdaptConfig.ladder")
     ap.add_argument("--adapt-margin", type=float, default=1.25)
+    ap.add_argument("--bit-budget", type=float, default=0.0,
+                    help="hard per-node per-step wire-bit budget (flat-"
+                         "layout costed, neighbor sends included): switches "
+                         "to the budgeted maximin-SNR scheduler "
+                         "(adapt.budget); implies --adapt")
+    ap.add_argument("--budget-schedule", default="constant",
+                    help="link model for --bit-budget: 'constant' | "
+                         "'ramp:end=..,steps=..' | "
+                         "'duty:period=..,duty=..[,off=..]'")
+    ap.add_argument("--token-bucket", action="store_true",
+                    help="bank unused budget bits across steps "
+                         "(AdaptConfig.bucket_cap_steps base budgets)")
     args = ap.parse_args(argv)
 
     import jax
@@ -83,9 +95,13 @@ def main(argv=None):
 
     arch = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     shape_cfg = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
-    adapt_kw = {"enabled": args.adapt or args.adapt_per_leaf,
+    adapt_kw = {"enabled": (args.adapt or args.adapt_per_leaf
+                            or args.bit_budget > 0),
                 "interval": args.adapt_interval,
-                "margin": args.adapt_margin}
+                "margin": args.adapt_margin,
+                "bit_budget": args.bit_budget,
+                "budget_schedule": args.budget_schedule,
+                "token_bucket": args.token_bucket}
     if args.adapt_ladder:
         adapt_kw["ladder"] = tuple(
             s.strip() for s in args.adapt_ladder.split(";") if s.strip())
@@ -129,9 +145,12 @@ def main(argv=None):
         # Theorem-1 gate, same bar as the static path (_validate_snr): the
         # ladder must contain a retreat anchor whose GUARANTEED SNR clears
         # eta_min — data-dependent rungs are the adaptive premise, but the
-        # feedback policy needs a provably-safe rung to climb back to
-        if not run.unsafe and not any(
-                f.snr_lower_bound(1) > eta_min for f in fmts):
+        # feedback policy needs a provably-safe rung to climb back to.
+        # Budget mode inverts the constraints (the budget is hard, eta_min
+        # is an audit floor — see adapt.budget), so the anchor gate does
+        # not apply there.
+        if (run.adapt.bit_budget <= 0 and not run.unsafe and not any(
+                f.snr_lower_bound(1) > eta_min for f in fmts)):
             raise ValueError(
                 f"Theorem-1 violation: no adapt-ladder rung has a "
                 f"guaranteed SNR above the threshold {eta_min:.3g} "
@@ -142,7 +161,11 @@ def main(argv=None):
         from jax.sharding import PartitionSpec
         n_leaves = len(jax.tree.leaves(
             tr.param_specs(), is_leaf=lambda t: isinstance(t, PartitionSpec)))
-        if args.adapt_per_leaf:
+        if run.adapt.bit_budget > 0:
+            # the fixed-bandwidth dual: hard budget, maximin SNR (rung
+            # vectors + OUTAGE blackouts from the budgeted scheduler)
+            policy = tr.budget_policy()
+        elif args.adapt_per_leaf:
             # rung VECTORS: each leaf walks the ladder on its own measured
             # SNR; the flat gossip path composes the mixed assignment into
             # one row buffer (plan-bank key = the normalized vector)
@@ -160,8 +183,15 @@ def main(argv=None):
         tel = tm.init(n_layers=n_leaves, window=run.adapt.window)
         active = rung_key(policy.initial_spec())
         step_fn = bank.get(active)
-        print(f"adapt: eta_min={eta_min:.3g} ladder={list(ladder)} "
-              f"per_leaf={args.adapt_per_leaf} start={active!r}")
+        if run.adapt.bit_budget > 0:
+            print(f"adapt: eta_min={eta_min:.3g} (advisory) "
+                  f"bit_budget={run.adapt.bit_budget:.3g}/"
+                  f"{run.adapt.budget_schedule} "
+                  f"token_bucket={run.adapt.token_bucket} "
+                  f"ladder={list(ladder)} start={active!r}")
+        else:
+            print(f"adapt: eta_min={eta_min:.3g} ladder={list(ladder)} "
+                  f"per_leaf={args.adapt_per_leaf} start={active!r}")
     else:
         step_fn = tr.jit_train_step()
     data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=args.seq_len,
@@ -173,7 +203,9 @@ def main(argv=None):
         for i in range(start_step, args.steps):
             state, m = step_fn(state, data.batch(i))
             wire_used = active if adapt_on else None  # wire that RAN step i
-            if adapt_on:
+            if adapt_on and (i + 1) < args.steps:
+                # (i + 1) guard: step args.steps never runs — deciding for
+                # it would charge the budget ledger for a phantom step
                 tel = tm.update(tel, m["diff_power_leaves"],
                                 m["noise_power_leaves"],
                                 decay=run.adapt.ema_decay)
@@ -206,6 +238,13 @@ def main(argv=None):
                 mgr.maybe_save(i + 1, state, extra={"loss": float(m["loss"])})
     if adapt_on:
         print(f"adapt: bank {bank.stats()}")
+        if run.adapt.bit_budget > 0 and policy.spend_log:
+            spent = sum(b for _, _, _, b, _ in policy.spend_log)
+            budg = sum(b for _, b, _, _, _ in policy.spend_log)
+            outages = sum(1 for *_, r in policy.spend_log if r == "blackout")
+            print(f"adapt: budget spent {spent:.3g} of {budg:.3g} "
+                  f"({spent / max(budg, 1e-9):.1%}), "
+                  f"blackout steps {outages}")
     if args.metrics_out:
         Path(args.metrics_out).write_text(json.dumps(history, indent=1))
     print(f"done: {args.steps - start_step} steps in {time.time()-t0:.1f}s; "

@@ -22,13 +22,18 @@ per-(step, offset-class) Bernoulli outages.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.gossip import GossipPlan
+
+# wire "spec" naming the zero-bandwidth step: a full outage is a budget-0
+# window (adapt.budget) and vice versa.  Trainer.plan_for_wire maps it to
+# :func:`outage_plan`; plan-bank keys treat it like any other rung.
+OUTAGE_SPEC = "outage"
 
 
 def drop_renormalize_plan(plan: GossipPlan, dropped_classes: Sequence[int]
@@ -57,6 +62,58 @@ def drop_renormalize_plan(plan: GossipPlan, dropped_classes: Sequence[int]
         out.append((off, w))
     return [(off, w + extra_self if all(o == 0 for o in off) else w)
             for off, w in out]
+
+
+def outage_plan(plan: GossipPlan) -> GossipPlan:
+    """The zero-link gossip plan for a FULL outage (every edge out, i.e. a
+    budget-0 window): self offset only with weight 1 (W_t = I — symmetric,
+    doubly stochastic, the drop-renormalize rule with all classes dropped)
+    and a dense (exact) local codec, so the step degenerates to the exact
+    local update x' = x + d with ZERO bits on any link.  Valid for circulant
+    AND dense-fallback plans: the self-only offset list is circulant over
+    any torus dims."""
+    from ..core.wire import DenseWire
+    zero = tuple(0 for _ in plan.dims)
+    return dataclasses.replace(
+        plan, mode="circulant", offsets=((zero, 1.0),),
+        W=np.eye(plan.n_nodes), fmt=DenseWire(), leaf_fmts=None,
+        use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# outages as bandwidth budgets (the fixed-bandwidth-link view)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class OutageBudgetSchedule:
+    """Adapter from link outages to the budgeted scheduler: the per-step
+    wire-bit budget is ``base.budget_at(step)`` except inside an outage
+    window, where it is 0 (``adapt.budget.BudgetController`` then emits the
+    OUTAGE_SPEC blackout decision, which ``Trainer.plan_for_wire`` maps to
+    :func:`outage_plan`).  ``windows`` are [start, end) step spans."""
+    base: Any                                   # BudgetSchedule-like
+    windows: Tuple[Tuple[int, int], ...] = ()
+
+    def in_outage(self, step: int) -> bool:
+        return any(a <= step < b for a, b in self.windows)
+
+    def budget_at(self, step: int) -> float:
+        return 0.0 if self.in_outage(step) else float(
+            self.base.budget_at(step))
+
+
+def outage_windows_from_sim(sim: "StragglerSim", n_steps: int,
+                            n_classes: int) -> Tuple[Tuple[int, int], ...]:
+    """Steps where the straggler schedule drops EVERY offset class — the
+    full-outage windows a budget controller must treat as budget 0."""
+    full = [t for t in range(n_steps)
+            if len(sim.dropped(t, n_classes)) == n_classes]
+    windows: List[Tuple[int, int]] = []
+    for t in full:
+        if windows and windows[-1][1] == t:
+            windows[-1] = (windows[-1][0], t + 1)
+        else:
+            windows.append((t, t + 1))
+    return tuple(windows)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -433,16 +433,20 @@ class Trainer:
             return self.jit_train_step(donate=True).lower(
                 self.state_struct(), batch_struct)
 
+    def gossip_leaf_shapes(self) -> list:
+        """Per-node shapes of the gossiped leaves (node dim stripped), in
+        tree-flatten order — what the flat-wire cost model is evaluated at."""
+        shapes = jax.tree.map(lambda t: t.shape,
+                              jax.eval_shape(self.init_state_fn(),
+                                             jax.ShapeDtypeStruct((2,), jnp.uint32)).x)
+        return [s[1:] for s in jax.tree.leaves(
+            shapes, is_leaf=lambda t: isinstance(t, tuple))]
+
     def wire_stats(self) -> Dict[str, float]:
         """Static per-step communication accounting."""
         if not self.node_mode or self.n_nodes <= 1:
             return {"wire_bits_per_node_step": 0.0, "compression_ratio": 0.0}
-        shapes = jax.tree.map(lambda t: t.shape,
-                              jax.eval_shape(self.init_state_fn(),
-                                             jax.ShapeDtypeStruct((2,), jnp.uint32)).x)
-        # per-node leaf shapes (strip node dim)
-        leaf_shapes = [s[1:] for s in jax.tree.leaves(
-            shapes, is_leaf=lambda t: isinstance(t, tuple))]
+        leaf_shapes = self.gossip_leaf_shapes()
         dense_bits = sum(int(np.prod(s)) * 32 for s in leaf_shapes)
         fmts = self.plan.fmts_for(len(leaf_shapes))
         if self.plan.wire_path == "flat":
@@ -450,12 +454,9 @@ class Trainer:
             bits = flat_tree_wire_bits(fmts, leaf_shapes)
         else:
             bits = sum(f.wire_bits(s) for f, s in zip(fmts, leaf_shapes))
-        n_out = sum(1 for off, _ in self.plan.offsets
-                    if any(o != 0 for o in off)) if self.plan.mode == "circulant" \
-            else self.n_nodes - 1
         return {"wire_bits_per_node_step": float(bits),
                 "dense_bits_per_node_step": float(dense_bits),
-                "neighbors": float(n_out),
+                "neighbors": float(self.plan.n_out),
                 "compression_ratio": float(dense_bits / max(bits, 1))}
 
     # ------------------------------------------------------------------
@@ -465,19 +466,54 @@ class Trainer:
         """The launch plan with only the wire format(s) swapped — topology,
         W and offsets stay identical, so the Theorem-1 bar is unchanged.
 
-        ``spec`` is either one wire spec string (all leaves) or a RUNG
+        ``spec`` is either one wire spec string (all leaves), a RUNG
         VECTOR (one spec per gossiped leaf, tree-flatten order): the flat
         path composes mixed rungs into a single row buffer, which is how
         ``RateController.select_joint`` per-leaf assignments reach the
-        trainer.  Per-leaf feasibility vs the Theorem-1 bar is the
-        selecting controller's contract (see adapt.controller)."""
+        trainer — or ``runtime.fault.OUTAGE_SPEC``, the zero-link blackout
+        plan of a budget-0 window (exact local update, no transmission).
+        Per-leaf feasibility vs the Theorem-1 bar is the selecting
+        controller's contract (see adapt.controller / adapt.budget)."""
         assert self.node_mode, "wire switching needs an active gossip plan"
+        from ..runtime import fault
+        if spec == fault.OUTAGE_SPEC:
+            return fault.outage_plan(self.plan)
         if isinstance(spec, (tuple, list)):
             fmts = tuple(make_wire(s) for s in spec)
             return dataclasses.replace(self.plan, fmt=fmts[0],
                                        leaf_fmts=fmts)
         return dataclasses.replace(self.plan, fmt=make_wire(spec),
                                    leaf_fmts=None)
+
+    def wire_bits_for(self, spec) -> int:
+        """EXACT per-node per-step link bits of ``plan_for_wire(spec)`` on
+        this model's gossiped leaves (flat-layout costing for flat plans,
+        neighbor sends included; 0 for the OUTAGE blackout plan) — the
+        quantity the budgeted scheduler's hard constraint binds on."""
+        plan = self.plan_for_wire(spec)
+        return G.plan_wire_bits_per_step(plan, self.gossip_leaf_shapes())
+
+    def budget_policy(self, *, cadence: Optional[int] = None,
+                      snr_cap: Optional[float] = None,
+                      min_useful_snr: Optional[float] = None):
+        """The run's AdaptConfig as a BudgetPolicy bound to this trainer's
+        plan and leaf shapes (adapt.budget): hard per-step bit budget =
+        ``adapt.bit_budget`` shaped by ``adapt.budget_schedule``, token
+        bucket optional.  Decisions are rung vectors (plan-bank keys) or
+        OUTAGE_SPEC."""
+        from ..adapt.budget import (BudgetController, BudgetSchedule,
+                                    TokenBucket)
+        from ..adapt.policies import BudgetPolicy
+        ac = self.run.adapt
+        assert ac.bit_budget > 0, "set AdaptConfig.bit_budget"
+        schedule = BudgetSchedule.parse(ac.budget_schedule, ac.bit_budget)
+        controller = BudgetController.for_plan(
+            self.plan, ac.ladder, self.gossip_leaf_shapes(), snr_cap=snr_cap)
+        controller.min_useful_snr = min_useful_snr
+        bucket = (TokenBucket(capacity=ac.bucket_cap_steps * ac.bit_budget)
+                  if ac.token_bucket else None)
+        return BudgetPolicy(controller=controller, schedule=schedule,
+                            cadence=cadence or ac.interval, bucket=bucket)
 
     def train_step_for_wire(self, spec, donate: bool = False):
         """Jitted train step with the gossip wire overridden to ``spec``

@@ -1,0 +1,422 @@
+"""Bandwidth-budgeted scheduling (repro.adapt.budget): the budget is a
+HARD constraint (flat-layout-costed bits <= budget at every step;
+token-bucket mode: cumulative <= cumulative budget + initial burst), the
+maximin objective is monotone in budget, outages are budget-0 windows
+(runtime.fault adapters), switching lives in the PlanBank (LRU compile
+count asserted via the compile-counter hook), and the benchmark harness
+fails loudly on false deterministic artifact flags."""
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import REPO, run_in_devices
+
+from repro.adapt import (BudgetController, BudgetSchedule, PlanBank,
+                         TokenBucket, budgeted_run, gaussian_probes,
+                         ladder_from_specs, rung_key)
+from repro.adapt.policies import BudgetPolicy
+from repro.core import consensus as cons, problems
+from repro.core.wire import flat_tree_wire_bits, make_wire
+from repro.runtime.fault import (OUTAGE_SPEC, OutageBudgetSchedule,
+                                 StragglerSim, outage_plan,
+                                 outage_windows_from_sim)
+
+LADDER = ("dense", "int8:block=64", "hybrid:block=128,top_j=4",
+          "ternary:block=128")
+SHAPES = ((3, 130), (257,), (2, 2, 128))
+
+
+def make_controller(**kw):
+    kw.setdefault("ladder", ladder_from_specs(LADDER, level="wire"))
+    kw.setdefault("shapes", SHAPES)
+    kw.setdefault("neighbors", 2)
+    kw.setdefault("eta_min", 2.0)
+    return BudgetController(**kw)
+
+
+# ---------------------------------------------------------------------------
+# schedule + bucket
+# ---------------------------------------------------------------------------
+class TestSchedule:
+    def test_constant_ramp_duty(self):
+        assert BudgetSchedule(bits=100.0).budget_at(7) == 100.0
+        r = BudgetSchedule(bits=0.0, kind="ramp", bits_end=100.0,
+                          ramp_steps=10)
+        assert r.budget_at(0) == 0.0 and r.budget_at(5) == 50.0
+        assert r.budget_at(10) == 100.0 == r.budget_at(99)
+        d = BudgetSchedule(bits=80.0, kind="duty", period=4, duty=0.5,
+                          off_bits=5.0)
+        assert [d.budget_at(t) for t in range(5)] == [80, 80, 5, 5, 80]
+
+    def test_parse(self):
+        s = BudgetSchedule.parse("constant", 42.0)
+        assert s.kind == "constant" and s.bits == 42.0
+        s = BudgetSchedule.parse("ramp:end=10,steps=5", 2.0)
+        assert s.kind == "ramp" and s.bits_end == 10.0 and s.ramp_steps == 5
+        s = BudgetSchedule.parse("duty:period=8,duty=0.25", 64.0)
+        assert s.budget_at(0) == 64.0 and s.budget_at(3) == 0.0
+        with pytest.raises(ValueError):
+            BudgetSchedule.parse("sawtooth", 1.0)
+
+    def test_token_bucket_invariant(self):
+        b = TokenBucket(capacity=100.0, balance=30.0)
+        assert b.initial == 30.0
+        b.fill(50.0)
+        assert b.balance == 80.0
+        assert b.spend(60.0) and b.balance == pytest.approx(20.0)
+        assert not b.spend(21.0)            # overdraft refused
+        b.fill(500.0)                       # clipped at capacity
+        assert b.balance == 100.0
+        assert b.spent <= b.filled + b.initial
+
+    def test_outage_budget_schedule(self):
+        sched = OutageBudgetSchedule(base=BudgetSchedule(bits=64.0),
+                                     windows=((2, 4), (7, 8)))
+        vals = [sched.budget_at(t) for t in range(9)]
+        assert vals == [64, 64, 0, 0, 64, 64, 64, 0, 64]
+
+    def test_outage_windows_from_sim(self):
+        sim = StragglerSim(prob=0.9, seed=3)
+        wins = outage_windows_from_sim(sim, n_steps=50, n_classes=2)
+        flat = {t for a, b in wins for t in range(a, b)}
+        for t in range(50):
+            assert (t in flat) == (len(sim.dropped(t, 2)) == 2)
+
+
+# ---------------------------------------------------------------------------
+# the dual knapsack
+# ---------------------------------------------------------------------------
+class TestBudgetController:
+    def test_budget_is_hard_and_maximin_monotone(self):
+        bc = make_controller()
+        probes = gaussian_probes(SHAPES, seed=1)
+        cheapest = bc.vector_cost(
+            [min(range(len(LADDER)), key=lambda r: bc._leaf_cost[l][r])
+             for l in range(len(SHAPES))])
+        budgets = [cheapest * f for f in (0.5, 1.0, 1.7, 3.0, 8.0, 50.0)]
+        prev = -1.0
+        for B in budgets:
+            dec = bc.select_budgeted(probes, B)
+            if dec.specs is None:
+                assert B < cheapest           # only below the cheapest mix
+                continue
+            assert dec.bits <= B * (1 + 1e-6)
+            # exact flat accounting: decision bits == the mixed layout cost
+            fmts = [make_wire(s) for s in dec.specs]
+            assert dec.bits == pytest.approx(
+                flat_tree_wire_bits(fmts, list(SHAPES)) * bc.neighbors)
+            assert dec.min_snr >= prev - 1e-9   # more budget, >= SNR
+            prev = dec.min_snr
+
+    def test_blackout_below_cheapest(self):
+        bc = make_controller()
+        dec = bc.select_budgeted(gaussian_probes(SHAPES, seed=0), 10.0)
+        assert dec.specs is None and dec.reason == "blackout"
+        assert dec.bits == 0.0
+
+    def test_silence_floor(self):
+        # a budget that only affords sub-floor SNR -> silence, bank bits
+        bc = make_controller(min_useful_snr=1e3)
+        probes = gaussian_probes(SHAPES, seed=1)
+        cheap = bc.vector_cost([3] * len(SHAPES))
+        dec = bc.select_budgeted(probes, cheap * 1.5)
+        assert dec.specs is None and dec.reason == "silence"
+        # enough budget for int8/dense clears the floor again
+        dec = bc.select_budgeted(probes, 1e9)
+        assert dec.specs is not None and dec.min_snr >= 1e3
+
+    def test_snr_cap_saturates(self):
+        bc = make_controller(snr_cap=5.0)
+        dec = bc.select_budgeted(gaussian_probes(SHAPES, seed=1), 1e9)
+        full = make_controller()
+        ref = full.select_budgeted(gaussian_probes(SHAPES, seed=1), 1e9)
+        assert dec.bits <= ref.bits          # stops buying at the cap
+        assert dec.min_snr >= 5.0
+
+    def test_no_false_blackout_from_lcm_padding(self):
+        # leaf-local cheapest = [int8:64 for the scalar, ternary:512 for
+        # the big leaf], but mixing them pads the scalar's row to the lcm
+        # (512) making the JOINT cost exceed uniform ternary — the
+        # controller must fall back to the cheapest uniform vector, not
+        # declare a blackout while a feasible vector exists
+        bc = BudgetController(
+            ladder=ladder_from_specs(("int8:block=64", "ternary:block=512"),
+                                     level="wire"),
+            shapes=((1,), (4096,)), neighbors=1)
+        uniform_ternary = bc.vector_cost([1, 1])
+        mixed = bc.vector_cost([0, 1])
+        assert uniform_ternary < mixed      # the coupling this guards
+        probes = gaussian_probes(bc.shapes, seed=0)
+        dec = bc.select_budgeted(probes, uniform_ternary * 1.05)
+        assert dec.specs is not None, "false blackout"
+        assert dec.bits <= uniform_ternary * 1.05 * (1 + 1e-9)
+
+    def test_compressor_level_rungs_rejected(self):
+        with pytest.raises(TypeError):
+            make_controller(ladder=ladder_from_specs(
+                ("ternary",), level="compressor"))
+
+
+# ---------------------------------------------------------------------------
+# the policy: per-step enforcement
+# ---------------------------------------------------------------------------
+class TestBudgetPolicy:
+    def test_hard_cap_every_step_duty(self):
+        bc = make_controller(neighbors=1)
+        big = bc.vector_cost([0] * len(SHAPES)) * 2   # dense fits
+        sched = BudgetSchedule(bits=big, kind="duty", period=4, duty=0.5,
+                               off_bits=0.0)
+        pol = BudgetPolicy(controller=bc, schedule=sched, cadence=3)
+        pol.initial_spec()
+        for step in range(1, 12):
+            pol.decide(step, None)
+        assert len(pol.spend_log) == 12
+        for step, budget, _, bits, _ in pol.spend_log:
+            assert bits <= budget * (1 + 1e-9), (step, bits, budget)
+            if budget == 0.0:
+                assert bits == 0.0           # off-phase = blackout
+        specs = {s for s, _, _, b, _ in pol.spend_log if b == 0.0}
+        assert specs                          # some blackout steps happened
+
+    def test_token_bucket_cumulative_and_bursts(self):
+        bc = make_controller(neighbors=1)
+        dense_cost = bc.vector_cost([0] * len(SHAPES))
+        fill = dense_cost * 0.6               # per-step budget < dense cost
+        bucket = TokenBucket(capacity=dense_cost * 3)
+        pol = BudgetPolicy(controller=bc, schedule=BudgetSchedule(bits=fill),
+                           cadence=1, bucket=bucket)
+        pol.initial_spec()
+        cum_bits = cum_budget = 0.0
+        burst = False
+        for step in range(0, 20):
+            if step:
+                pol.decide(step, None)
+            s, budget, _, bits, _ = pol.spend_log[-1]
+            cum_bits += bits
+            cum_budget += budget
+            assert cum_bits <= cum_budget + bucket.initial + 1e-6
+            burst |= bits > budget + 1e-6     # banked bits bought a burst
+        assert burst
+        assert bucket.spent == pytest.approx(cum_bits)
+
+    def test_outage_window_and_recovery(self):
+        bc = make_controller(neighbors=1)
+        base = bc.vector_cost([1] * len(SHAPES)) * 1.2
+        sched = OutageBudgetSchedule(base=BudgetSchedule(bits=base),
+                                     windows=((3, 6),))
+        pol = BudgetPolicy(controller=bc, schedule=sched, cadence=100)
+        out = [rung_key(pol.initial_spec())]
+        for step in range(1, 9):
+            out.append(rung_key(pol.decide(step, None)))
+        for t in (3, 4, 5):
+            assert out[t] == OUTAGE_SPEC, (t, out)
+        # recovery is immediate (off-cadence stale-outage re-solve)
+        assert out[6] != OUTAGE_SPEC
+        assert out[2] != OUTAGE_SPEC
+
+
+# ---------------------------------------------------------------------------
+# end-to-end budgeted DC-DGD
+# ---------------------------------------------------------------------------
+def test_budgeted_run_respects_budget_and_converges():
+    prob = problems.quadratic(n_nodes=5, dim=64, seed=3)
+    W = cons.W1_PAPER
+    eta = cons.spectrum(W).snr_threshold
+    ladder = ["dense", "int8:block=64", "ternary:block=64"]
+    int8_cost = 5 * make_wire("int8:block=64").wire_bits((64,))
+    r = budgeted_run(prob, W, ladder, lambda t: 0.08 / jnp.sqrt(t), 80,
+                     jax.random.PRNGKey(0),
+                     schedule=BudgetSchedule(bits=0.7 * int8_cost),
+                     token_bucket=True, bucket_cap_steps=4.0, cadence=1,
+                     min_useful_snr=eta * 1.05)
+    assert r["budget_violations"] == 0
+    assert np.isfinite(r["f_bar"]).all()
+    # burst-or-silence: both blackouts and transmissions happened
+    kinds = set(r["spec_per_step"])
+    assert OUTAGE_SPEC in kinds and len(kinds) >= 2, kinds
+    # blackout steps cost zero, others cost the flat-layout bits
+    for spec, bits in zip(r["spec_per_step"], r["bits"]):
+        assert (bits == 0.0) == (spec == OUTAGE_SPEC)
+    # cumulative spend bounded by cumulative budget + initial burst
+    allowance = np.cumsum(r["budget_per_step"]) + 4.0 * 0.7 * int8_cost
+    assert (r["cum_bits"] <= allowance * (1 + 1e-9)).all()
+
+
+def test_outage_plan_zero_bits_and_identity_mix():
+    from repro.core.gossip import GossipPlan, plan_wire_bits_per_step
+    plan = GossipPlan(consensus_axes=("pod", "data"), dims=(2, 4), n_nodes=8,
+                      mode="circulant",
+                      offsets=(((0, 0), 0.5), ((0, 1), 0.25), ((0, 3), 0.25)),
+                      W=np.eye(8), fmt=make_wire("ternary:block=64"))
+    off = outage_plan(plan)
+    assert off.n_out == 0 and off.offsets == (((0, 0), 1.0),)
+    assert off.fmt.name == "dense" and off.leaf_fmts is None
+    assert plan_wire_bits_per_step(off, [(3, 130), (257,)]) == 0
+    assert np.allclose(off.W, np.eye(8))
+
+
+# ---------------------------------------------------------------------------
+# PlanBank LRU: exact compile counts via the compile-counter hook
+# ---------------------------------------------------------------------------
+class TestPlanBankCompileCount:
+    @staticmethod
+    def _bank(max_size):
+        traces = []          # one append per jit TRACE (= per compilation)
+        hook_keys = []
+
+        def build(key):
+            width = len(key) if isinstance(key, tuple) else 1
+
+            @jax.jit
+            def f(x):
+                traces.append(key)
+                return x * float(width)
+
+            f(jnp.ones(4))   # compile eagerly so traces counts builds
+            return f
+
+        bank = PlanBank(build, max_size=max_size,
+                        on_build=hook_keys.append)
+        return bank, traces, hook_keys
+
+    def test_cycling_within_capacity_never_recompiles(self):
+        bank, traces, hook = self._bank(max_size=3)
+        keys = [("a",), ("a", "b"), ("a", "b", "c")]
+        for _ in range(4):
+            for k in keys:
+                bank.get(k)
+        assert len(traces) == 3 == len(hook) == bank.builds
+        assert bank.hits == 9 and bank.evictions == 0
+
+    def test_cycling_beyond_capacity_exact_compiles(self):
+        bank, traces, hook = self._bank(max_size=3)
+        keys = [("a",), ("b",), ("c",), ("d",)]
+        for _ in range(2):
+            for k in keys:
+                bank.get(k)
+        # LRU of 3 cycling 4 keys: every get misses -> 8 builds, 5 evictions
+        assert len(traces) == 8 == len(hook) == bank.builds
+        assert bank.hits == 0 and bank.evictions == 5
+
+    def test_rung_key_collapse_shares_plan(self):
+        bank, traces, hook = self._bank(max_size=3)
+        uniform = ("ternary:block=64",) * 5
+        f1 = bank.get(rung_key(uniform))
+        f2 = bank.get(rung_key("ternary:block=64"))
+        assert f1 is f2 and bank.builds == 1 and len(traces) == 1
+        mixed = ("ternary:block=64", "dense") + ("ternary:block=64",) * 3
+        assert rung_key(mixed) != rung_key(uniform)
+        bank.get(rung_key(mixed))
+        assert bank.builds == 2
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness: false deterministic flags fail loudly
+# ---------------------------------------------------------------------------
+class TestArtifactFlagGate:
+    @staticmethod
+    def _run_mod():
+        sys.path.insert(0, str(REPO))
+        try:
+            from benchmarks import run as bench_run
+        finally:
+            sys.path.pop(0)
+        return bench_run
+
+    def test_false_flag_fails_loudly(self, tmp_path, capsys):
+        bench_run = self._run_mod()
+        (tmp_path / "BENCH_gossip.json").write_text(json.dumps(
+            {"bit_exact": {"flat": True, "flat_pallas": False},
+             "wire_bits_equal": True}))
+        bad = bench_run.check_artifact_flags(tmp_path)
+        assert bad == ["BENCH_gossip.json:bit_exact.flat_pallas=False"]
+        assert bench_run.enforce_artifact_flags(0, tmp_path) == 1
+        assert "ARTIFACT-REGRESSION" in capsys.readouterr().out
+
+    def test_true_flags_pass(self, tmp_path):
+        bench_run = self._run_mod()
+        (tmp_path / "BENCH_gossip.json").write_text(json.dumps(
+            {"bit_exact": {"flat": True}, "wire_bits_equal": True}))
+        assert bench_run.check_artifact_flags(tmp_path) == []
+        assert bench_run.enforce_artifact_flags(0, tmp_path) == 0
+        # missing artifact: the suite that writes it already gated the rc
+        assert bench_run.check_artifact_flags(tmp_path / "nope") == []
+
+
+# ---------------------------------------------------------------------------
+# multidevice: the 2D-torus trainer never exceeds the per-step budget,
+# including across an outage window (satellite 3)
+# ---------------------------------------------------------------------------
+@pytest.mark.multidevice
+def test_budgeted_trainer_torus_respects_budget():
+    out = run_in_devices(8, """
+        import jax, numpy as np
+        from repro.compat import make_mesh, set_mesh
+        from repro.configs import get_smoke
+        from repro.configs.base import AdaptConfig, RunConfig, ShapeConfig
+        from repro.train import make_trainer
+        from repro.data import SyntheticLMData
+        from repro.adapt import rung_key
+        from repro.runtime.fault import OUTAGE_SPEC, OutageBudgetSchedule
+
+        mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+        arch = get_smoke('qwen3-8b')
+        shape = ShapeConfig('t', 64, 8, 'train')
+        ladder = ('int8:block=64', 'ternary:block=64')
+        run = RunConfig(consensus_axis='data', wire='int8:block=64',
+                        topology='torus', alpha=0.05, optimizer='sgd',
+                        adapt=AdaptConfig(enabled=True, bit_budget=1.0,
+                                          ladder=ladder))
+        tr = make_trainer(mesh, arch, run, shape)
+        # consensus spans the 2x2 (pod, data) torus; model axis shards TP
+        assert tr.n_nodes == 4 and tr.plan.mode == 'circulant'
+        assert len(tr.plan.dims) == 2 and tr.plan.n_out >= 2
+
+        n_leaves = len(tr.gossip_leaf_shapes())
+        int8_bits = tr.wire_bits_for('int8:block=64')
+        # budget = exactly the int8 plan, with an outage window at steps 3-4
+        import dataclasses
+        run = dataclasses.replace(
+            run, adapt=dataclasses.replace(run.adapt,
+                                           bit_budget=float(int8_bits)))
+        tr.run = run
+        policy = tr.budget_policy(cadence=1)
+        policy.schedule = OutageBudgetSchedule(base=policy.schedule,
+                                               windows=((3, 5),))
+        bank = tr.wire_bank(max_size=4)
+        active = rung_key(policy.initial_spec())
+        step_fn = bank.get(active)
+        state = tr.init_state(0)
+        data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=64,
+                               global_batch=8, n_nodes=4)
+        cum_bits = cum_budget = 0.0
+        with set_mesh(mesh):
+            for i in range(7):
+                state, m = step_fn(state, data.batch(i))
+                budget = policy.schedule.budget_at(i)
+                bits = tr.wire_bits_for(active)
+                # the policy's accounted spend == the plan's actual bits
+                srow = [r for r in policy.spend_log if r[0] == i][-1]
+                assert srow[3] == bits, (i, srow, bits)
+                # HARD per-step budget, every step
+                assert bits <= budget * (1 + 1e-9), (i, bits, budget)
+                if 3 <= i < 5:
+                    assert active == OUTAGE_SPEC and bits == 0, (i, active)
+                else:
+                    assert bits > 0, (i, active)
+                cum_bits += bits; cum_budget += budget
+                assert cum_bits <= cum_budget * (1 + 1e-9)
+                nxt = rung_key(policy.decide(i + 1, None))
+                if nxt != active:
+                    active = nxt
+                    step_fn = bank.get(active)
+        assert np.isfinite(float(m['loss']))
+        assert bank.stats()['builds'] <= 3             # int8 / outage (+1)
+        print('OK', bank.stats(), round(float(m['loss']), 3))
+    """, timeout=560)
+    assert "OK" in out

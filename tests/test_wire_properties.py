@@ -1,0 +1,145 @@
+"""Property tests locking down the flat-wire contract the adapt and budget
+controllers build on (ISSUE 3):
+
+  * every explicit-RNG row codec in core.wire (int8 / ternary / hybrid /
+    randk) encodes+decodes on the flat row buffer BIT-EXACTLY like the
+    per-leaf reference WireFormat under the same PRNG key, for random
+    shapes and random per-leaf rung mixes (the flat_gossip_exchange
+    parity invariant);
+  * the measured noise power ||C(z) - z||^2 of every explicit-RNG format
+    is statistically consistent with its closed-form
+    ``expected_noise_power`` oracle (the candidate-SNR model BOTH the
+    RateController and the BudgetController trust).
+
+Hypothesis drives the randomization when installed (deterministically:
+conftest registers a derandomized bounded profile, and
+``scripts/run_tests.sh --hypothesis`` pins ``--hypothesis-seed=0``);
+the seeded parametrized tests below exercise the same check functions
+either way, so the invariants stay covered when hypothesis is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip as G
+from repro.core import wire as W
+from repro.core.wire import make_wire
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:     # degrade to the seeded fallback tests only
+    HAVE_HYPOTHESIS = False
+
+# the explicit-RNG row codecs (wire.needs_rng); dense/topk are RNG-free
+RNG_SPECS = ("int8:block=64", "ternary:block=128",
+             "hybrid:block=128,top_j=4", "randk:block=128,k=32")
+ALL_SPECS = RNG_SPECS + ("dense", "topk:block=128,k=32")
+
+N_MC = 96   # Monte-Carlo draws for the oracle consistency check
+
+
+# ---------------------------------------------------------------------------
+# check functions (shared by the hypothesis and the seeded tests)
+# ---------------------------------------------------------------------------
+def _single_node_plan(fmts):
+    return G.GossipPlan(consensus_axes=(), dims=(), n_nodes=1,
+                        mode="circulant", offsets=(), W=np.ones((1, 1)),
+                        fmt=fmts[0], leaf_fmts=tuple(fmts))
+
+
+def check_flat_matches_leaf(shapes, specs, seed):
+    """flat_gossip_exchange decode == per-leaf gossip_exchange decode,
+    bit for bit, same PRNG key (single-node plan: pure codec parity)."""
+    key = jax.random.PRNGKey(seed)
+    leaves = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+              * (1.0 + 3.0 * i)
+              for i, s in enumerate(shapes)}
+    fmts = [make_wire(s) for s in specs]
+    plan = _single_node_plan(fmts)
+    c_leaf, _ = G.gossip_exchange(plan, key, leaves)
+    c_flat, _ = G.flat_gossip_exchange(plan, key, leaves)
+    for k in leaves:
+        np.testing.assert_array_equal(
+            np.asarray(c_leaf[k]), np.asarray(c_flat[k]),
+            err_msg=f"leaf {k} specs {specs} shapes {shapes} seed {seed}")
+
+
+def check_noise_oracle(spec, shape, seed, scale=1.0, n=N_MC):
+    """Monte-Carlo mean of ||decode(encode(z)) - z||^2 must sit within the
+    sampling tolerance of the closed-form expected_noise_power oracle."""
+    fmt = make_wire(spec)
+    z = jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+    pred = float(fmt.expected_noise_power(z))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), n)
+
+    def one(k):
+        dec = fmt.decode(fmt.encode(k, z), z.shape, jnp.float32)
+        return jnp.sum((dec - z.astype(jnp.float32)) ** 2)
+
+    draws = np.asarray(jax.vmap(one)(keys), np.float64)
+    mc, se = float(draws.mean()), float(draws.std() / np.sqrt(n))
+    power = float(jnp.sum(z.astype(jnp.float32) ** 2))
+    tol = 6.0 * se + 1e-6 * (power + 1.0)
+    assert abs(mc - pred) <= tol, \
+        (f"{spec} shape {shape} seed {seed} scale {scale}: "
+         f"MC {mc:.6g} vs oracle {pred:.6g} (tol {tol:.3g})")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven randomization
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _last = st.integers(1, 300)
+    _lead = st.integers(1, 4)
+    _shape = st.one_of(
+        st.tuples(_last),
+        st.tuples(_lead, _last),
+        st.tuples(_lead, st.integers(1, 3), _last),
+    )
+    _tree = st.lists(st.tuples(_shape, st.sampled_from(ALL_SPECS)),
+                     min_size=1, max_size=4)
+
+    @settings(deadline=None)
+    @given(tree=_tree, seed=st.integers(0, 2 ** 16 - 1))
+    def test_row_codec_roundtrip_property(tree, seed):
+        shapes = [t[0] for t in tree]
+        specs = [t[1] for t in tree]
+        check_flat_matches_leaf(shapes, specs, seed)
+
+    @settings(deadline=None)
+    @given(spec=st.sampled_from(RNG_SPECS),
+           shape=_shape,
+           seed=st.integers(0, 2 ** 16 - 1),
+           scale=st.sampled_from([0.02, 1.0, 40.0]))
+    def test_noise_oracle_property(spec, shape, seed, scale):
+        check_noise_oracle(spec, shape, seed, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# seeded coverage (runs with or without hypothesis)
+# ---------------------------------------------------------------------------
+_SEEDED_TREES = [
+    # every RNG codec alone, awkward shapes (padding on both axes)
+    ([(257,)], ["int8:block=64"]),
+    ([(3, 130)], ["ternary:block=128"]),
+    ([(2, 2, 200)], ["hybrid:block=128,top_j=4"]),
+    ([(150,)], ["randk:block=128,k=32"]),
+    # mixed rung vector incl. the RNG-free codecs, ragged shapes
+    ([(3, 70), (130,), (2, 2, 128), (1,), (260,), (5, 40)],
+     ["ternary:block=128", "dense", "hybrid:block=128,top_j=4",
+      "int8:block=64", "randk:block=128,k=32", "topk:block=128,k=32"]),
+]
+
+
+@pytest.mark.parametrize("shapes,specs", _SEEDED_TREES)
+@pytest.mark.parametrize("seed", [0, 12345])
+def test_row_codec_roundtrip_seeded(shapes, specs, seed):
+    check_flat_matches_leaf(shapes, specs, seed)
+
+
+@pytest.mark.parametrize("spec", RNG_SPECS)
+@pytest.mark.parametrize("shape,scale", [((3, 130), 1.0), ((257,), 40.0)])
+def test_noise_oracle_seeded(spec, shape, scale):
+    check_noise_oracle(spec, shape, seed=7, scale=scale)
