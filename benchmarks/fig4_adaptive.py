@@ -26,6 +26,10 @@ Acceptance (ISSUE 1):
   * every controller decision's predicted SNR >= eta_min of the active
     graph (the validate_compressor_for_topology bar) — zero violations.
 
+Driver: all training goes through repro.comm.TrainSession (one loop for
+every scenario) — ``adaptive_run`` is its deprecated thin wrapper, kept
+here for the legacy result-dict layout the plotting consumes.
+
 Writes artifacts/bench/fig4.json and prints a CSV summary.
 """
 from __future__ import annotations

@@ -26,6 +26,10 @@ Acceptance (ISSUE 3):
   * at >= 2 budget points the budgeted controller converges while NO
     static wire at the same budget does — lower loss at equal budget.
 
+Driver: all training goes through repro.comm.TrainSession (one loop for
+every scenario) — ``budgeted_run`` is its deprecated thin wrapper, kept
+here for the legacy result-dict layout the frontier assembly consumes.
+
 Writes artifacts/bench/BENCH_budget.json and prints a CSV frontier.
 """
 from __future__ import annotations

@@ -9,6 +9,11 @@
 #                                   # the derandomized "repro-ci" profile
 #                                   # (tests/conftest.py), so it is
 #                                   # deterministic and wall-time-bounded
+#   scripts/run_tests.sh --cli-smoke    # launch/train.py --smoke once per
+#                                   # comm-policy class (static / adapt /
+#                                   # budget / composed), 8 virtual CPU
+#                                   # devices; fails on nonzero exit or
+#                                   # missing metrics keys
 #   scripts/run_tests.sh <pytest args...>   # passthrough
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -36,6 +41,50 @@ elif [[ "${1:-}" == "--hypothesis" ]]; then
     fi
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         exec python -m pytest -x -q "${ARGS[@]}"
+elif [[ "${1:-}" == "--cli-smoke" ]]; then
+    # one end-to-end launcher run per comm-policy class, all through the
+    # same TrainSession driver; the checker fails the split when a run
+    # exits nonzero, writes no metrics rows, or drops a required key
+    export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    TMP="$(mktemp -d)"
+    trap 'rm -rf "$TMP"' EXIT
+    LADDER="dense;int8:block=64;ternary:block=64"
+    COMMON=(--arch qwen3-8b --smoke --steps 6 --seq-len 64 --global-batch 8
+            --optimizer sgd --alpha 0.05 --log-every 2 --adapt-interval 2
+            --adapt-ladder "$LADDER")
+    modes=(static adapt budget composed)
+    declare -A FLAGS=(
+        [static]=""
+        [adapt]="--adapt"
+        [budget]="--bit-budget 1200000 --token-bucket"
+        [composed]="--adapt --compose --bit-budget 1200000 --outage-windows 2-4"
+    )
+    rc=0
+    for mode in "${modes[@]}"; do
+        echo "== cli-smoke: $mode =="
+        # shellcheck disable=SC2086
+        if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+                python -m repro.launch.train "${COMMON[@]}" ${FLAGS[$mode]} \
+                --metrics-out "$TMP/$mode.json"; then
+            echo "cli-smoke $mode: FAIL (nonzero exit)"; rc=1; continue
+        fi
+        if ! python - "$TMP/$mode.json" "$mode" <<'PY'
+import json, sys
+rows = json.load(open(sys.argv[1])); mode = sys.argv[2]
+assert rows, "no metrics rows"
+need = {"loss", "step", "wall_s", "grad_norm"}
+if mode != "static":
+    need.add("wire")
+missing = need - set(rows[-1])
+assert not missing, f"missing metrics keys: {sorted(missing)}"
+print(f"cli-smoke {mode}: OK ({len(rows)} rows, "
+      f"final loss {rows[-1]['loss']:.3f})")
+PY
+        then
+            echo "cli-smoke $mode: FAIL (metrics check)"; rc=1
+        fi
+    done
+    exit $rc
 fi
 
 # || rc=$? keeps going under set -e so the perf artifact refreshes even

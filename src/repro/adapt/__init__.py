@@ -25,8 +25,35 @@ far fewer bits at the same SNR margin.  This subsystem closes that loop:
   policies.py   — pluggable schedules (fixed, step-decay, SNR-feedback,
                   model-based controller); static behavior is a policy
                   instance, so centralized / dense paths are untouched.
-  runner.py     — adaptive DC-DGD driver (drop-in for core.dcdgd.run) used
-                  by benchmarks/fig4_adaptive.py and the e2e tests.
+  budget.py     — the fixed-bandwidth dual (BudgetController, schedules,
+                  TokenBucket, deadline-aware WallClockBudgetSchedule).
+  runner.py     — DEPRECATED driver wrappers (see below).
+
+The repro.comm front door
+-------------------------
+As of the unified-comm refactor, this package supplies the MECHANISMS
+(telemetry, controllers, ladder policies, the plan bank) while the API
+every scenario programs against lives in :mod:`repro.comm`:
+
+  * spec strings are parsed ONCE by ``repro.comm.WireSpec``
+    (grammar ``["wire:"] name[:k=v,...]`` | ``"outage"``; ``canonical()``
+    is the PlanBank/rung-key domain) — ``make_wire`` / ``make_compressor``
+    and ``ladder_from_specs`` are shims over it;
+  * scenario behavior implements the ``repro.comm.CommPolicy`` protocol
+    (``observe(StepTelemetry)``, ``decide(step) -> PerLeafPlan | None``);
+    the legacy ``Policy`` classes here are wrapped by the RateComm /
+    BudgetComm / OutageComm adapters and stacked with ``Compose`` (budget
+    caps rate's proposal; an outage window overrides both to W_t = I);
+  * the ONE driver loop is ``repro.comm.TrainSession`` — there is no
+    scenario-specific runner loop anymore.  :func:`adaptive_run` and
+    :func:`budgeted_run` survive ONLY as deprecated wrappers that build a
+    session and repackage its result into their historical dict layout;
+    new code should use ``runner.make_dcdgd_session`` /
+    ``Trainer.comm_session`` directly::
+
+        from repro.comm import TrainSession
+        session = make_dcdgd_session(problem, W, alpha, key, policy)
+        result = session.run(n_steps)          # result.metrics_arrays()
 
 The wire ladder
 ---------------
@@ -83,21 +110,24 @@ the invariant weakens from per-step (bits_t <= budget_t) to cumulative
 by the budget tests.
 """
 from .budget import (BudgetController, BudgetDecision, BudgetSchedule,
-                     TokenBucket, gaussian_probes)
+                     TokenBucket, WallClockBudgetSchedule, gaussian_probes)
 from .controller import (Decision, RateController, Rung, evaluate_rung,
                          hybrid_rung_for, ladder_from_specs)
 from .plan_bank import PlanBank, rung_key
 from .policies import (BudgetPolicy, ControllerPolicy, FixedPolicy,
                        PerLeafSNRPolicy, Policy, SNRFeedbackPolicy,
                        StepDecayPolicy)
-from .runner import adaptive_run, bits_to_target, budgeted_run
+from .runner import (adaptive_run, bits_to_target, budgeted_run,
+                     make_dcdgd_session)
 from .telemetry import TelemetrySnapshot, TelemetryState, init, snapshot, update
 
 __all__ = [
     "Decision", "RateController", "Rung", "evaluate_rung", "hybrid_rung_for",
     "ladder_from_specs", "PlanBank", "BudgetController", "BudgetDecision",
-    "BudgetPolicy", "BudgetSchedule", "TokenBucket", "gaussian_probes",
+    "BudgetPolicy", "BudgetSchedule", "TokenBucket",
+    "WallClockBudgetSchedule", "gaussian_probes",
     "ControllerPolicy", "FixedPolicy", "Policy", "SNRFeedbackPolicy",
     "StepDecayPolicy", "adaptive_run", "bits_to_target", "budgeted_run",
+    "make_dcdgd_session",
     "TelemetrySnapshot", "TelemetryState", "init", "snapshot", "update",
 ]

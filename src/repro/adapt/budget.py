@@ -88,6 +88,27 @@ class BudgetSchedule:
         return float(self.bits)
 
     @classmethod
+    def from_wall_clock(cls, slo_ms: float, bits: float,
+                        base: Optional[Any] = None, decay: float = 0.5,
+                        min_scale: float = 0.05, max_scale: float = 4.0
+                        ) -> "WallClockBudgetSchedule":
+        """Deadline-aware budget (the ROADMAP latency-SLO follow-up): the
+        per-step bit budget tracks a step-time SLO instead of a fixed rate.
+
+        ``bits`` is the budget when steps land exactly on ``slo_ms``; the
+        live budget is ``base.budget_at(step)`` scaled by the clamped
+        ratio ``slo_ms / EMA(measured step wall ms)`` — steps running OVER
+        the SLO shrink the budget proportionally (communication must give
+        bits back to pull the step under the deadline), steps running
+        under it earn proportionally more.  Feed measurements via
+        ``record_wall_time`` (the TrainSession driver does this from its
+        per-step telemetry)."""
+        return WallClockBudgetSchedule(
+            base=base if base is not None else cls(bits=bits),
+            slo_ms=float(slo_ms), decay=decay, min_scale=min_scale,
+            max_scale=max_scale)
+
+    @classmethod
     def parse(cls, spec: str, bits: float) -> "BudgetSchedule":
         """CLI factory: ``"constant"`` / ``"ramp:end=2e5,steps=100"`` /
         ``"duty:period=40,duty=0.75[,off=0]"``; ``bits`` is the base
@@ -108,6 +129,43 @@ class BudgetSchedule:
                        duty=kw.get("duty", 0.5), off_bits=kw.get("off", 0.0))
         raise ValueError(f"unknown budget schedule {spec!r} "
                          f"(constant|ramp|duty)")
+
+
+@dataclasses.dataclass
+class WallClockBudgetSchedule:
+    """A BudgetSchedule-like whose per-step budget is the base schedule
+    scaled by ``clamp(slo_ms / ema_step_ms, min_scale, max_scale)`` (see
+    :meth:`BudgetSchedule.from_wall_clock`).  Until the first measurement
+    arrives the base budget passes through unscaled."""
+    base: Any                         # BudgetSchedule-like (budget_at)
+    slo_ms: float
+    decay: float = 0.5                # EMA on measured wall ms
+    min_scale: float = 0.05
+    max_scale: float = 4.0
+    ema_ms: Optional[float] = None
+    samples: int = 0
+
+    def __post_init__(self):
+        assert self.slo_ms > 0 and 0.0 <= self.decay < 1.0
+        assert 0 < self.min_scale <= self.max_scale
+
+    def record_wall_time(self, ms: float) -> None:
+        ms = float(ms)
+        if not np.isfinite(ms) or ms <= 0:
+            return
+        self.ema_ms = (ms if self.ema_ms is None
+                       else self.decay * self.ema_ms
+                       + (1.0 - self.decay) * ms)
+        self.samples += 1
+
+    def scale(self) -> float:
+        if self.ema_ms is None:
+            return 1.0
+        return float(np.clip(self.slo_ms / self.ema_ms,
+                             self.min_scale, self.max_scale))
+
+    def budget_at(self, step: int) -> float:
+        return float(self.base.budget_at(step)) * self.scale()
 
 
 @dataclasses.dataclass

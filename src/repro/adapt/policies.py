@@ -273,7 +273,15 @@ class BudgetPolicy(Policy):
         self.spend_log.append((step, float(budget), float(bal),
                                float(self._active_bits), reason))
 
-    def decide(self, step, snap):
+    def decide(self, step, snap, proposal=None, proposal_bits=0.0):
+        """One per-step budget decision (and ledger entry).
+
+        ``proposal`` (a plan-bank key; ``proposal_bits`` its exact
+        flat-layout cost) is the Compose path: another policy's choice is
+        ADOPTED when it fits the step's available budget — its bits enter
+        the ledger — and otherwise the controller re-solves its own
+        maximin knapsack under the budget (the cap).  A blackout proposal
+        (OUTAGE_SPEC, 0 bits) always fits."""
         from ..runtime.fault import OUTAGE_SPEC
         budget = float(self.schedule.budget_at(step))
         if self.bucket is not None:
@@ -281,6 +289,26 @@ class BudgetPolicy(Policy):
             avail = self.bucket.balance
         else:
             avail = budget
+        if proposal is not None:
+            if proposal == OUTAGE_SPEC:
+                self._active, self._active_bits = OUTAGE_SPEC, 0.0
+                reason = "override"
+            elif proposal_bits <= avail * (1 + 1e-9):
+                self._active = proposal
+                self._active_bits = float(proposal_bits)
+                reason = "proposal"
+            elif (self._active is not None
+                  and self._active != OUTAGE_SPEC
+                  and self._active_bits <= avail * (1 + 1e-9)
+                  and step % max(self.cadence, 1) != 0):
+                # proposal over budget, but the previously capped plan
+                # still fits: hold it off-cadence — the expensive maximin
+                # re-solve stays cadence-gated even under Compose
+                reason = "hold"
+            else:
+                reason = self._solve(step, snap, avail)  # cap: re-solve
+            self._account(step, budget, reason)
+            return self._active
         at_cadence = step % max(self.cadence, 1) == 0
         over = self._active_bits > avail * (1 + 1e-9)
         stale_outage = self._active == OUTAGE_SPEC and avail > 0

@@ -1,34 +1,28 @@
-"""Adaptive DC-DGD driver: the stacked-node algorithm of ``core.dcdgd``
-with the compressor re-chosen online from live SNR telemetry.
+"""DEPRECATED wrappers: adaptive / budgeted DC-DGD as repro.comm sessions.
 
-Mirrors :func:`repro.core.dcdgd.run` (same metrics arrays, so existing
-benchmark plotting works unchanged) plus:
-
-  * a :class:`~repro.adapt.plan_bank.PlanBank` of jitted one-step closures
-    keyed by compressor spec — a wire switch is a dict lookup, and a
-    repeated switch never recompiles;
-  * per-step telemetry (differential power / realized noise power) folded
-    into a :class:`~repro.adapt.telemetry.TelemetryState`;
-  * at every ``cadence`` steps the policy decides the next wire; the
-    model-based default probes the live differential ``state.d`` and lets
-    the :class:`~repro.adapt.controller.RateController` re-solve the
-    bits/SNR knapsack against the active graph's Theorem-1 bar;
-  * a ``wire_log`` of (step, spec, predicted SNR) switch records and the
-    full controller decision log for audit.
+The driver loops that used to live here moved into
+:class:`repro.comm.session.TrainSession` — the one loop every scenario
+shares (see the repro.comm package docstring).  :func:`adaptive_run` and
+:func:`budgeted_run` survive as thin compatibility wrappers: they build
+the PlanBank + CommPolicy a session needs, run it, and repackage the
+:class:`~repro.comm.session.SessionResult` into their historical dict
+layout (same metrics arrays as :func:`repro.core.dcdgd.run`, so existing
+benchmark plotting and tests work unchanged).  New code should construct
+sessions directly — :func:`make_dcdgd_session` is the shared builder.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..comm import (BudgetComm, PerLeafPlan, RateComm, SessionResult,
+                    TrainSession)
 from ..core import consensus as cons
 from ..core import dcdgd
 from ..core.compressors import Compressor, Identity, make_compressor
-from . import telemetry as tm
 from .controller import RateController, ladder_from_specs
 from .plan_bank import PlanBank, rung_key
 from .policies import BudgetPolicy, ControllerPolicy, Policy
@@ -37,8 +31,8 @@ from .policies import BudgetPolicy, ControllerPolicy, Policy
 def _metric_step(problem, alpha_fn, Wj: jax.Array, comp: Compressor
                  ) -> Callable:
     """Jitted one-step closure — dcdgd.step plus the benchmark metric set —
-    shared by the adaptive and budgeted runners (one definition, so the
-    metric contract cannot drift between them)."""
+    shared by every dcdgd-backed session (one definition, so the metric
+    contract cannot drift between scenarios)."""
 
     @jax.jit
     def one(st):
@@ -57,19 +51,16 @@ def _metric_step(problem, alpha_fn, Wj: jax.Array, comp: Compressor
     return one
 
 
-def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
-                 alpha, n_steps: int, key: jax.Array, *,
-                 margin: float = 1.25, cadence: int = 25,
-                 policy: Optional[Policy] = None,
-                 ema_decay: float = 0.9, window: int = 32,
-                 bank_size: int = 8) -> dict:
-    """Run adaptive DC-DGD for ``n_steps``; see module docstring.
+def make_dcdgd_session(problem, W: np.ndarray, alpha, key: jax.Array,
+                       policy, *, bank_size: int = 8,
+                       build_step: Optional[Callable] = None
+                       ) -> TrainSession:
+    """A TrainSession over the stacked-node dcdgd backend: plan keys are
+    compressor specs (or OUTAGE), built lazily into jitted metric steps.
 
-    ``ladder_specs`` are ``make_compressor`` strings ordered conservative ->
-    aggressive; ``policy=None`` builds the model-based ControllerPolicy over
-    a RateController validated for this W (raises, exactly like the launch
-    gate, if no rung's guaranteed SNR clears the Theorem-1 bar).
-    """
+    ``build_step(key) -> step_fn`` overrides the default compressor-level
+    builder (the budgeted scenario routes keys through WireCompressor so
+    the bits shipped are exactly the bits budgeted)."""
     Wj = jnp.asarray(W, jnp.float32)
     n = W.shape[0]
     params_like = jnp.zeros((n, problem.dim), jnp.float32)
@@ -77,57 +68,61 @@ def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
     key, ik = jax.random.split(key)
     state = dcdgd.init(problem.grad, params_like, float(alpha_fn(1)), ik)
 
-    def build_step(spec: str) -> Callable:
-        return _metric_step(problem, alpha_fn, Wj, make_compressor(spec))
+    if build_step is None:
+        def build_step(spec: str) -> Callable:
+            return _metric_step(problem, alpha_fn, Wj, make_compressor(spec))
 
     bank = PlanBank(build_step, max_size=bank_size)
+    return TrainSession(bank=bank, policy=policy, state=state)
 
+
+def _legacy_out(res: SessionResult) -> dict:
+    out = res.metrics_arrays()
+    out["x_final"] = np.asarray(res.state.x)
+    if "bits" in out:
+        out["cum_bits"] = np.cumsum(out["bits"])
+    out["spec_per_step"] = list(res.plan_per_step)
+    out["bank_stats"] = res.bank_stats
+    return out
+
+
+def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
+                 alpha, n_steps: int, key: jax.Array, *,
+                 margin: float = 1.25, cadence: int = 25,
+                 policy: Optional[Policy] = None,
+                 ema_decay: float = 0.9, window: int = 32,
+                 bank_size: int = 8) -> dict:
+    """DEPRECATED wrapper: adaptive DC-DGD via TrainSession + RateComm.
+
+    ``ladder_specs`` are ``make_compressor`` strings ordered conservative ->
+    aggressive; ``policy=None`` builds the model-based ControllerPolicy over
+    a RateController validated for this W (raises, exactly like the launch
+    gate, if no rung's guaranteed SNR clears the Theorem-1 bar).
+    """
     controller = None
+    session = make_dcdgd_session(problem, W, alpha, key, None,
+                                 bank_size=bank_size)
     if policy is None:
         ladder = ladder_from_specs(ladder_specs, level="compressor")
         controller = RateController.for_topology(W, ladder, margin=margin,
                                                  dim=problem.dim)
         policy = ControllerPolicy(
             controller=controller,
-            probe_fn=lambda: np.asarray(state.d),
+            probe_fn=lambda: np.asarray(session.state.d),
             cadence=cadence)
+    session.policy = RateComm(policy=policy, n_leaves=1, cadence=cadence,
+                              ema_decay=ema_decay, window=window)
+    res = session.run(n_steps)
 
-    tel = tm.init(n_layers=1, window=window)
-    active = policy.initial_spec()
-    wire_log = [(0, active,
-                 controller.log[-1].predicted_snr if controller and
-                 controller.log else float("nan"))]
+    out = _legacy_out(res)
 
-    history = []
-    specs_per_step = []
-    for i in range(n_steps):
-        step_fn = bank.get(active)
-        state, m = step_fn(state)
-        tel = tm.update(tel, m["differential_power"], m["noise_power"],
-                        decay=ema_decay)
-        history.append(m)
-        specs_per_step.append(active)
-        if policy is not None and (i + 1) < n_steps:
-            # the probe_fn closure reads the loop's live ``state`` binding,
-            # so it already points at the current differential; snapshots
-            # are cheap scalars off-cadence, full per-layer at cadence
-            at_cadence = (i + 1) % max(cadence, 1) == 0
-            snap = (tm.snapshot(tel, decay=ema_decay) if at_cadence
-                    else tm.total_snapshot(tel, decay=ema_decay))
-            nxt = policy.decide(i + 1, snap)
-            if nxt is not None and nxt != active:
-                active = nxt
-                wire_log.append(
-                    (i + 1, active,
-                     controller.log[-1].predicted_snr if controller and
-                     controller.log else float("nan")))
+    def snr_at(step: int) -> float:
+        if controller is None or not controller.log:
+            return float("nan")
+        hits = [d for d in controller.log if d.step == step]
+        return hits[-1].predicted_snr if hits else float("nan")
 
-    out = {k: np.array([float(h[k]) for h in history]) for k in history[0]}
-    out["x_final"] = np.asarray(state.x)
-    out["cum_bits"] = np.cumsum(out["bits"])
-    out["wire_log"] = wire_log
-    out["spec_per_step"] = specs_per_step
-    out["bank_stats"] = bank.stats()
+    out["wire_log"] = [(s, k, snr_at(s)) for s, k in res.wire_log]
     if controller is not None:
         out["decisions"] = list(controller.log)
         out["eta_min"] = controller.eta_min
@@ -141,8 +136,8 @@ def budgeted_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
                  snr_cap: Optional[float] = None,
                  min_useful_snr: Optional[float] = None,
                  bank_size: int = 8) -> dict:
-    """DC-DGD under a HARD per-step wire-bit budget (the fixed-bandwidth
-    dual of :func:`adaptive_run`; see adapt.budget).
+    """DEPRECATED wrapper: budgeted DC-DGD via TrainSession + BudgetComm
+    (the fixed-bandwidth dual of :func:`adaptive_run`; see adapt.budget).
 
     ``ladder_specs`` are WIRE-format specs (``core.wire.make_wire``) — the
     budget is costed on the flat row layout, and each rung runs through the
@@ -168,10 +163,7 @@ def budgeted_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
     Wj = jnp.asarray(W, jnp.float32)
     n = W.shape[0]
     I = jnp.eye(n, dtype=jnp.float32)
-    params_like = jnp.zeros((n, problem.dim), jnp.float32)
     alpha_fn = alpha if callable(alpha) else (lambda t: alpha)
-    key, ik = jax.random.split(key)
-    state = dcdgd.init(problem.grad, params_like, float(alpha_fn(1)), ik)
 
     controller = BudgetController(
         ladder=ladder_from_specs(ladder_specs, level="wire"),
@@ -189,32 +181,25 @@ def budgeted_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
         return _metric_step(problem, alpha_fn, Wj,
                             WireCompressor(fmt=make_wire(spec)))
 
-    bank = PlanBank(build_step, max_size=bank_size)
+    session = make_dcdgd_session(problem, W, alpha, key, None,
+                                 bank_size=bank_size, build_step=build_step)
     policy = BudgetPolicy(controller=controller, schedule=schedule,
                           cadence=cadence, bucket=bucket,
-                          probe_fn=lambda: [np.asarray(state.d)])
+                          probe_fn=lambda: [np.asarray(session.state.d)])
+    session.policy = BudgetComm(policy=policy)
+    res = session.run(n_steps)
 
-    active = rung_key(policy.initial_spec())
-    history, specs_per_step, wire_log = [], [], [(0, active)]
-    for i in range(n_steps):
-        step_fn = bank.get(active)
-        state, m = step_fn(state)
-        history.append(m)
-        specs_per_step.append(active)
-        if (i + 1) < n_steps:
-            nxt = policy.decide(i + 1, None)
-            nxt = rung_key(nxt) if nxt is not None else active
-            if nxt != active:
-                active = nxt
-                wire_log.append((i + 1, active))
-
-    out = {k: np.array([float(h[k]) for h in history]) for k in history[0]}
+    out = _legacy_out(res)
     # bits accounting: the policy's flat-layout-costed spend per step (0 on
     # blackout steps) — the quantity the budget constraint binds on
     spend = {s: b for s, _, _, b, _ in policy.spend_log}
     out["bits"] = np.array([spend[i] for i in range(n_steps)])
     out["cum_bits"] = np.cumsum(out["bits"])
-    budgets = np.array([float(schedule.budget_at(i)) for i in range(n_steps)])
+    # budgets from the ledger, NOT re-evaluated post-hoc: a stateful
+    # schedule (WallClockBudgetSchedule) would report its final scale for
+    # every past step, mis-auditing the budgets actually enforced
+    ledger_budget = {s: b for s, b, _, _, _ in policy.spend_log}
+    budgets = np.array([float(ledger_budget[i]) for i in range(n_steps)])
     out["budget_per_step"] = budgets
     if token_bucket:
         allowance = np.cumsum(budgets) + bucket.initial
@@ -222,10 +207,7 @@ def budgeted_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
         allowance = budgets  # hard per-step cap
     spent = out["cum_bits"] if token_bucket else out["bits"]
     out["budget_violations"] = int(np.sum(spent > allowance * (1 + 1e-9)))
-    out["x_final"] = np.asarray(state.x)
-    out["wire_log"] = wire_log
-    out["spec_per_step"] = specs_per_step
-    out["bank_stats"] = bank.stats()
+    out["wire_log"] = list(res.wire_log)
     out["spend_log"] = list(policy.spend_log)
     out["decisions"] = list(controller.log)
     out["eta_min"] = controller.eta_min

@@ -1,0 +1,50 @@
+"""repro.comm — the single front door for every communication decision.
+
+The paper's mechanism (general SNR-constrained compressors + a systematic
+rate/SNR trade-off, §III-IV) used to be spread across ad-hoc spec strings
+and three divergent driver loops.  This package is the typed API the rest
+of the repo now goes through:
+
+  wirespec.py — :class:`WireSpec`: frozen, hashable parse of the one spec
+                grammar (``["wire:"] name[:k=v,...]`` | ``"outage"``),
+                with ``canonical()`` as the PlanBank/rung key domain and
+                ``wire()`` / ``compressor()`` level-dispatched builders.
+                ``core.wire.make_wire`` and
+                ``core.compressors.make_compressor`` are shims over it.
+  policy.py   — :class:`CommPolicy` protocol (``observe(StepTelemetry)``,
+                ``decide(step) -> PerLeafPlan | None``) plus adapters for
+                every existing behavior (StaticComm, RateComm, BudgetComm,
+                OutageComm) and the :class:`Compose` combinator: budget
+                caps rate's proposal, an outage window overrides both to
+                the W_t = I blackout plan.
+  session.py  — :class:`TrainSession`: the ONE driver loop (plan-bank
+                switching, telemetry feedback, logging / checkpoint
+                hooks).  ``launch/train.py``, ``benchmarks/fig4`` /
+                ``fig5``, and the deprecated ``adapt.runner`` wrappers all
+                run through it.
+
+Quick example (a budget-capped adaptive trainer session)::
+
+    from repro.comm import Compose, RateComm, BudgetComm, TrainSession
+    policy = Compose(
+        RateComm(policy=SNRFeedbackPolicy(ladder=..., eta_min=...),
+                 n_leaves=n, cadence=50),
+        BudgetComm(policy=trainer.budget_policy()),
+        OutageComm(windows=((100, 120),)))
+    session = TrainSession(bank=trainer.wire_bank(), policy=policy,
+                           state=trainer.init_state(0),
+                           batch_fn=data.batch)
+    result = session.run(n_steps)
+"""
+from .policy import (OUTAGE_PLAN, BudgetComm, CommPolicy, Compose,
+                     OutageComm, PerLeafPlan, RateComm, StaticComm,
+                     StepTelemetry)
+from .session import SessionResult, TrainSession
+from .wirespec import OUTAGE, WireSpec, canonical_key
+
+__all__ = [
+    "WireSpec", "OUTAGE", "canonical_key",
+    "CommPolicy", "PerLeafPlan", "StepTelemetry", "OUTAGE_PLAN",
+    "StaticComm", "RateComm", "BudgetComm", "OutageComm", "Compose",
+    "TrainSession", "SessionResult",
+]

@@ -1,0 +1,372 @@
+"""CommPolicy — the one decision interface every DC-DGD scenario drives.
+
+A communication policy sees one :class:`StepTelemetry` record per executed
+step (``observe``) and, asked for any step, answers with the
+:class:`PerLeafPlan` that step should transmit (``decide``) — or ``None``
+for "hold the current plan".  The :class:`~repro.comm.session.TrainSession`
+driver is the only caller: it runs the step the plan names (via a
+PlanBank, so switching never recompiles), folds the step's differential /
+noise powers back into ``observe``, and asks ``decide`` for the next step.
+
+Lifecycle (the contract TrainSession upholds)::
+
+    plan = policy.decide(start)        # never None: the opening plan
+    for i in range(start, n_steps):
+        state, m = bank.get(plan.key())(state, ...)
+        policy.observe(StepTelemetry(step=i, diff_power=..., ...))
+        if i + 1 < n_steps:            # no phantom decision for a step
+            nxt = policy.decide(i + 1) # that never runs (budget ledgers!)
+            plan = nxt or plan
+
+Adapters wrap every pre-existing behavior so the scenarios stack instead
+of owning private driver loops:
+
+  StaticComm   — the non-adaptive baseline: one plan forever.
+  RateComm     — the PR-1 telemetry loop: owns a TelemetryState and feeds
+                 snapshots to a legacy adapt.policies.Policy
+                 (SNRFeedback / PerLeafSNR / StepDecay / Controller...).
+  BudgetComm   — the PR-3 hard-budget loop: wraps adapt.policies.
+                 BudgetPolicy (per-step ledger, token bucket, blackouts)
+                 and forwards measured step wall time to deadline-aware
+                 schedules (BudgetSchedule.from_wall_clock).
+  OutageComm   — scheduled link blackouts: OUTAGE inside its windows,
+                 no opinion outside.
+  Compose      — rate + budget + outage in ONE policy: the rate member
+                 proposes, the budget member caps the proposal against the
+                 live budget (adopting it when it fits, re-solving its
+                 maximin knapsack under the budget when it does not — the
+                 ledger stays exact either way), and an outage window
+                 overrides everything to the W_t = I blackout plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Protocol, Sequence, \
+    Tuple, Union, runtime_checkable
+
+import numpy as np
+
+from .wirespec import OUTAGE_NAME, WireSpec, canonical_key
+
+Key = Union[str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# telemetry record & plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StepTelemetry:
+    """What one executed step reports back to the policy: per-gossiped-leaf
+    differential power ||d_l||^2 and realized noise power ||C(d_l)-d_l||^2
+    (the Definition-1 numerator/denominator, already computed on the wire
+    path), plus the measured step wall time for deadline-aware budgets."""
+    step: int
+    diff_power: np.ndarray
+    noise_power: np.ndarray
+    wall_ms: Optional[float] = None
+
+    @property
+    def n_leaves(self) -> int:
+        return int(np.asarray(self.diff_power).size)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerLeafPlan:
+    """One step's transmission plan: a rung VECTOR (one WireSpec per
+    gossiped leaf; length-1 = the same rung on every leaf) or the OUTAGE
+    blackout (W_t = I, exact local update, zero link bits).
+
+    ``key()`` is the PlanBank key — canonical spec strings with uniform
+    vectors collapsed, so plans map 1:1 onto the pre-built jitted steps
+    and a policy switch can never silently recompile."""
+    specs: Tuple[WireSpec, ...] = ()
+    outage: bool = False
+
+    def __post_init__(self):
+        assert self.outage or self.specs, "empty plan"
+
+    @classmethod
+    def uniform(cls, spec) -> "PerLeafPlan":
+        spec = WireSpec.parse(spec)
+        if spec.is_outage:
+            return OUTAGE_PLAN
+        return cls(specs=(spec,))
+
+    @classmethod
+    def vector(cls, specs: Sequence) -> "PerLeafPlan":
+        parsed = tuple(WireSpec.parse(s) for s in specs)
+        if any(s.is_outage for s in parsed):
+            # an outage is whole-link (W_t = I), never per-leaf
+            if all(s.is_outage for s in parsed):
+                return OUTAGE_PLAN
+            raise ValueError(f"'outage' cannot mix into a rung vector: "
+                             f"{[s.canonical() for s in parsed]}")
+        return cls(specs=parsed)
+
+    @classmethod
+    def from_key(cls, key) -> Optional["PerLeafPlan"]:
+        """Lift a legacy policy decision (spec string, rung-vector tuple,
+        OUTAGE_SPEC, WireSpec, or None = hold) into the typed domain."""
+        if key is None:
+            return None
+        if isinstance(key, PerLeafPlan):
+            return key
+        if isinstance(key, (str, WireSpec)):
+            return cls.uniform(key)           # outage handled by uniform
+        return cls.vector(key)
+
+    def key(self) -> Key:
+        if self.outage:
+            return OUTAGE_NAME
+        return canonical_key(self.specs)
+
+
+OUTAGE_PLAN = PerLeafPlan(outage=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ProbeSnap:
+    """Minimal telemetry view BudgetPolicy reads for probe synthesis."""
+    diff_power: np.ndarray
+    n_layers: int
+    count: int
+
+
+@runtime_checkable
+class CommPolicy(Protocol):
+    """The protocol every scenario implements (see module docstring)."""
+
+    def observe(self, t: StepTelemetry) -> None: ...
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]: ...
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StaticComm:
+    """The non-adaptive baseline as a policy: one plan, forever.
+
+    ``consumes_telemetry = False`` tells the session not to pull the
+    step's power metrics to host at all — the static hot path keeps JAX's
+    async dispatch pipelining, exactly like the pre-session launcher."""
+    plan: PerLeafPlan
+    consumes_telemetry = False
+
+    def __init__(self, spec):
+        self.plan = (spec if isinstance(spec, PerLeafPlan)
+                     else PerLeafPlan.from_key(spec))
+
+    def observe(self, t: StepTelemetry) -> None:
+        pass
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        return self.plan
+
+
+@dataclasses.dataclass
+class RateComm:
+    """Telemetry-fed rate control: owns the TelemetryState the PR-1 driver
+    loops used to thread by hand and feeds snapshots to a legacy
+    ``adapt.policies.Policy`` at its cadence (full per-leaf snapshot at
+    cadence, cheap scalar totals off-cadence — the exact schedule the old
+    loops implemented)."""
+    policy: Any                       # adapt.policies.Policy
+    n_leaves: int = 1
+    cadence: int = 25
+    ema_decay: float = 0.9
+    window: int = 32
+
+    def __post_init__(self):
+        from ..adapt import telemetry as tm
+        self._tm = tm
+        self._tel = tm.init(n_layers=self.n_leaves, window=self.window)
+        self._held: Optional[PerLeafPlan] = None
+
+    @property
+    def telemetry(self):
+        return self._tel
+
+    def observe(self, t: StepTelemetry) -> None:
+        self._tel = self._tm.update(self._tel, t.diff_power, t.noise_power,
+                                    decay=self.ema_decay)
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        if self._held is None:
+            self._held = PerLeafPlan.from_key(self.policy.initial_spec())
+            return self._held
+        at_cadence = step % max(self.cadence, 1) == 0
+        snap = (self._tm.snapshot(self._tel, self.ema_decay) if at_cadence
+                else self._tm.total_snapshot(self._tel, self.ema_decay))
+        nxt = PerLeafPlan.from_key(self.policy.decide(step, snap))
+        if nxt is not None:
+            self._held = nxt
+        return nxt
+
+
+@dataclasses.dataclass
+class BudgetComm:
+    """Hard-budget control: wraps ``adapt.policies.BudgetPolicy`` (which
+    owns the per-step spend ledger, token bucket and blackout logic) and
+    adds (i) telemetry-scaled probes from ``observe`` and (ii) wall-time
+    coupling for deadline-aware schedules.
+
+    As a Compose member it exposes :meth:`cap`: given another policy's
+    proposal, adopt it when its exact flat-layout cost fits the live
+    budget (accounting those bits), otherwise re-solve the maximin
+    knapsack under the budget — so a composed rate policy can only ever
+    SHRINK the bits the budget would have spent, never breach it."""
+    policy: Any                       # adapt.policies.BudgetPolicy
+
+    def __post_init__(self):
+        self._snap = None
+        self._cost_cache: dict = {}   # plan key -> exact flat-layout bits
+
+    @property
+    def spend_log(self):
+        return self.policy.spend_log
+
+    @property
+    def controller(self):
+        return self.policy.controller
+
+    def observe(self, t: StepTelemetry) -> None:
+        shapes = self.policy.controller.shapes
+        if t.n_leaves == len(shapes):
+            self._snap = _ProbeSnap(np.asarray(t.diff_power, np.float64),
+                                    t.n_leaves, t.step + 1)
+        if t.wall_ms is not None:
+            sched = self.policy.schedule
+            rec = getattr(sched, "record_wall_time", None)
+            if rec is None:                  # e.g. OutageBudgetSchedule
+                rec = getattr(getattr(sched, "base", None),
+                              "record_wall_time", None)
+            if rec is not None:
+                rec(t.wall_ms)
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        return PerLeafPlan.from_key(self.policy.decide(step, self._snap))
+
+    # -- Compose support ---------------------------------------------------
+    def plan_cost(self, plan: PerLeafPlan) -> float:
+        """Exact per-step link bits of ``plan`` on the controller's leaf
+        shapes (flat row layout, neighbor sends included)."""
+        if plan.outage:
+            return 0.0
+        key = plan.key()
+        hit = self._cost_cache.get(key)
+        if hit is not None:
+            return hit
+        from ..core import wire as wirelib
+        ctl = self.policy.controller
+        specs = plan.specs
+        if len(specs) == 1:
+            specs = specs * len(ctl.shapes)
+        assert len(specs) == len(ctl.shapes), (len(specs), len(ctl.shapes))
+        fmts = [s.wire() for s in specs]
+        cost = float(wirelib.flat_tree_wire_bits(fmts, list(ctl.shapes))
+                     * ctl.neighbors)
+        self._cost_cache[key] = cost
+        return cost
+
+    def cap(self, step: int, proposal: Optional[PerLeafPlan]
+            ) -> PerLeafPlan:
+        if proposal is None:
+            return self.decide(step)
+        key = self.policy.decide(step, self._snap, proposal=proposal.key(),
+                                 proposal_bits=self.plan_cost(proposal))
+        return PerLeafPlan.from_key(key)
+
+
+@dataclasses.dataclass
+class OutageComm:
+    """Scheduled full-link blackouts: ``[start, end)`` step windows decide
+    OUTAGE; outside them this policy has no opinion (None), so it is ONLY
+    usable composed over a base policy that supplies the opening plan
+    (``Compose(StaticComm(wire), OutageComm(...))`` — what
+    ``Trainer.comm_policy`` builds for outage-only runs).  Standalone, a
+    session starting outside a window has no plan to run and fails."""
+    windows: Tuple[Tuple[int, int], ...] = ()
+    consumes_telemetry = False
+
+    def in_outage(self, step: int) -> bool:
+        return any(a <= step < b for a, b in self.windows)
+
+    def observe(self, t: StepTelemetry) -> None:
+        pass
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        return OUTAGE_PLAN if self.in_outage(step) else None
+
+    @classmethod
+    def parse(cls, spec: str) -> "OutageComm":
+        """CLI factory: ``"3-5;40-45"`` -> windows ((3,5), (40,45))."""
+        wins = []
+        for part in spec.split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            a, _, b = part.partition("-")
+            wins.append((int(a), int(b) if b else int(a) + 1))
+        return cls(windows=tuple(wins))
+
+
+class Compose:
+    """Stack rate + budget + outage behaviors in one policy.
+
+    Precedence (most to least authoritative):
+      1. an OutageComm window overrides everything to the blackout plan;
+      2. a BudgetComm caps whatever was proposed — adopting a fitting
+         proposal's exact bits into its ledger, re-solving under the
+         budget otherwise (a blackout proposal always fits: 0 bits);
+      3. the remaining members propose in order; the first with an opinion
+         this step wins, and the last opinion is held across silent steps.
+
+    ``observe`` fans out to every member, so each keeps its own telemetry
+    view.  At most one BudgetComm may be composed (one ledger)."""
+
+    def __init__(self, *policies: CommPolicy):
+        assert policies, "Compose needs at least one policy"
+        self.outages: List[OutageComm] = [
+            p for p in policies if isinstance(p, OutageComm)]
+        budgets = [p for p in policies if isinstance(p, BudgetComm)]
+        assert len(budgets) <= 1, "at most one BudgetComm (one ledger)"
+        self.budget: Optional[BudgetComm] = budgets[0] if budgets else None
+        self.proposers: List[CommPolicy] = [
+            p for p in policies
+            if not isinstance(p, (OutageComm, BudgetComm))]
+        self.members: Tuple[CommPolicy, ...] = tuple(policies)
+        self._held: Optional[PerLeafPlan] = None
+        self._last: Optional[PerLeafPlan] = None
+
+    @property
+    def consumes_telemetry(self) -> bool:
+        return any(getattr(p, "consumes_telemetry", True)
+                   for p in self.members)
+
+    def observe(self, t: StepTelemetry) -> None:
+        # a blackout step executed the W_t = I plan: its realized noise
+        # power is 0, so feeding it to a rate member would record a huge
+        # fake SNR and trigger a spurious post-outage downgrade — the
+        # proposers only see telemetry of steps that actually transmitted
+        blackout = self._last is not None and self._last.outage
+        for p in self.members:
+            if blackout and p in self.proposers:
+                continue
+            p.observe(t)
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        for p in self.proposers:
+            d = p.decide(step)
+            if d is not None:
+                self._held = d
+                break
+        proposal = self._held
+        if any(o.in_outage(step) for o in self.outages):
+            proposal = OUTAGE_PLAN
+        out = (self.budget.cap(step, proposal) if self.budget is not None
+               else proposal)
+        if out is not None:
+            self._last = out
+        return out

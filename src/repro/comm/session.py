@@ -1,0 +1,171 @@
+"""TrainSession — the ONE driver loop for every DC-DGD scenario.
+
+Before this module the repo ran three copies of the same loop: the inline
+adapt loop in ``launch/train.py``, and ``adaptive_run`` / ``budgeted_run``
+in ``adapt/runner.py`` — each threading its own telemetry state, plan-bank
+switching, bits ledger and metrics conventions.  TrainSession owns all of
+it once:
+
+  * **plan execution** — the active :class:`~repro.comm.policy.PerLeafPlan`
+    keys into a :class:`~repro.adapt.plan_bank.PlanBank` of pre-built
+    jitted steps, so a policy switch is a dict lookup, never a recompile;
+  * **telemetry** — each step's differential / noise powers (either the
+    trainer's ``diff_power_leaves`` vectors or the dcdgd runners' scalar
+    ``differential_power``) plus measured wall time flow back into
+    ``policy.observe`` as one :class:`StepTelemetry` record;
+  * **decisions** — ``policy.decide(i + 1)`` runs only for steps that will
+    actually execute (a budget ledger must never be charged for a phantom
+    step), and switches are recorded in ``wire_log``;
+  * **hooks** — periodic logging, checkpointing, and switch callbacks, so
+    the CLI launcher adds behavior without forking the loop.
+
+Typical use (the CLI path)::
+
+    session = TrainSession(bank=trainer.wire_bank(), policy=policy,
+                           state=state, batch_fn=data.batch)
+    result = session.run(args.steps)
+
+and the dcdgd benchmark path is the same session with ``batch_fn=None``
+(the jitted step closes over the problem).  ``adaptive_run`` /
+``budgeted_run`` survive only as deprecated wrappers that build a session
+and repackage :class:`SessionResult` into their legacy dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .policy import CommPolicy, Key, PerLeafPlan, StepTelemetry
+
+# metric-key pairs recognized as (differential power, noise power), in
+# preference order: per-leaf vectors (trainer path) first, the dcdgd
+# runners' scalars second
+_POWER_KEYS = (("diff_power_leaves", "noise_power_leaves"),
+               ("differential_power", "noise_power"),
+               ("diff_power", "noise_power"))
+
+
+def _powers(metrics: Dict[str, Any]
+            ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+    for dk, nk in _POWER_KEYS:
+        if dk in metrics and nk in metrics:
+            d = np.asarray(metrics[dk], np.float64).reshape(-1)
+            n = np.asarray(metrics[nk], np.float64).reshape(-1)
+            return d, n
+    return None, None
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """What one ``session.run`` produced.  ``history`` holds the raw
+    per-step metric dicts (device scalars — convert once at the end via
+    :meth:`metrics_arrays`, the legacy runners' layout) unless the session
+    ran with ``track_history=False``."""
+    state: Any
+    n_steps: int
+    history: List[Dict[str, Any]]
+    wire_log: List[Tuple[int, Key]]
+    plan_per_step: List[Key]
+    bank_stats: Dict[str, int]
+    wall_s: float
+
+    def metrics_arrays(self) -> Dict[str, np.ndarray]:
+        """history -> {key: np.array over steps} for scalar metrics (the
+        ``core.dcdgd.run`` metrics contract)."""
+        if not self.history:
+            return {}
+        out = {}
+        for k, v in self.history[0].items():
+            if np.ndim(v) == 0:
+                out[k] = np.array([float(h[k]) for h in self.history])
+        return out
+
+
+@dataclasses.dataclass
+class TrainSession:
+    """See module docstring.  ``bank`` maps plan keys to step callables:
+    ``step(state, batch)`` when ``batch_fn`` is set, ``step(state)``
+    otherwise (both return ``(new_state, metrics_dict)``)."""
+    bank: Any                                  # PlanBank: key -> step fn
+    policy: CommPolicy
+    state: Any
+    batch_fn: Optional[Callable[[int], Any]] = None
+    track_history: bool = True
+    # hooks
+    log_every: int = 0                         # 0 = no periodic logging
+    # on_log(step_index, metrics, key_that_ran_the_step)
+    on_log: Optional[Callable[[int, Dict[str, Any], Key], None]] = None
+    on_switch: Optional[Callable[[int, Key, Key], None]] = None
+    checkpoint: Optional[Callable[[int, Any, Dict[str, Any]], None]] = None
+
+    def run(self, n_steps: int, start_step: int = 0) -> SessionResult:
+        if start_step >= n_steps:
+            # nothing will execute: do not ask the policy for an opening
+            # plan (a budget ledger must never be charged a phantom step)
+            return SessionResult(state=self.state, n_steps=0, history=[],
+                                 wire_log=[], plan_per_step=[],
+                                 bank_stats=dict(self.bank.stats())
+                                 if hasattr(self.bank, "stats") else {},
+                                 wall_s=0.0)
+        plan = self.policy.decide(start_step)
+        assert plan is not None, "policy must open with a plan"
+        active: Key = plan.key()
+        wire_log: List[Tuple[int, Key]] = [(start_step, active)]
+        plan_per_step: List[Key] = []
+        history: List[Dict[str, Any]] = []
+        # a policy that ignores telemetry (StaticComm) must not cost the
+        # hot loop a per-step device->host sync: keep async dispatch
+        wants_telemetry = getattr(self.policy, "consumes_telemetry", True)
+        t0 = time.time()
+        for i in range(start_step, n_steps):
+            # a first-use bank entry jit-compiles on this call: its wall
+            # time measures the compiler, not the link, so it must not
+            # reach deadline-aware budget schedules
+            fresh = (hasattr(self.bank, "__contains__")
+                     and active not in self.bank)
+            step_fn = self.bank.get(active)
+            ts = time.perf_counter()
+            # self.state stays live during the run: model-based policies
+            # probe the current differential through it (ControllerPolicy /
+            # BudgetPolicy probe_fn closures)
+            if self.batch_fn is not None:
+                self.state, m = step_fn(self.state, self.batch_fn(i))
+            else:
+                self.state, m = step_fn(self.state)
+            diff, noise = (_powers(m) if wants_telemetry else (None, None))
+            # pulling the powers to host blocks on the step, so the wall
+            # measurement is honest; without a wire path there is nothing
+            # to observe (and nothing to adapt)
+            if diff is not None:
+                wall_ms = (None if fresh
+                           else (time.perf_counter() - ts) * 1e3)
+                self.policy.observe(StepTelemetry(
+                    step=i, diff_power=diff, noise_power=noise,
+                    wall_ms=wall_ms))
+            ran = active                      # the plan that RAN step i
+            plan_per_step.append(ran)
+            if self.track_history:
+                history.append(m)
+            if (i + 1) < n_steps:
+                nxt = self.policy.decide(i + 1)
+                if nxt is not None:
+                    k = nxt.key()
+                    if k != active:
+                        if self.on_switch is not None:
+                            self.on_switch(i + 1, active, k)
+                        wire_log.append((i + 1, k))
+                        active = k
+            if (self.on_log is not None and self.log_every > 0
+                    and ((i + 1) % self.log_every == 0
+                         or i == n_steps - 1)):
+                self.on_log(i, m, ran)
+            if self.checkpoint is not None:
+                self.checkpoint(i + 1, self.state, m)
+        return SessionResult(
+            state=self.state, n_steps=n_steps - start_step, history=history,
+            wire_log=wire_log, plan_per_step=plan_per_step,
+            bank_stats=dict(self.bank.stats()) if hasattr(self.bank, "stats")
+            else {}, wall_s=time.time() - t0)

@@ -1,0 +1,223 @@
+"""Typed wire specs — the single grammar for every codec the repo names.
+
+Historically four modules parsed spec strings independently
+(``core.compressors.make_compressor``, ``core.wire.make_wire``,
+``adapt.controller.ladder_from_specs``, ``adapt.budget``), each with its own
+``name:key=val,...`` splitter.  :class:`WireSpec` is the one parser and the
+one canonical form; the legacy factories are now thin shims over it.
+
+Grammar
+-------
+::
+
+    spec      := ["wire:"] name [":" arg ("," arg)*] | "outage"
+    arg       := key "=" value
+    value     := int | float | identifier        (e.g. dtype=bfloat16)
+
+``name`` must name a packed wire format (``core.wire``: dense, dense_bf16,
+int8, ternary, hybrid, randk, topk) or a math-level compressor
+(``core.compressors``: identity, sparsifier, ternary, blocked_ternary,
+lowprec, hybrid, blocked_hybrid) — several names exist at BOTH levels with
+different semantics ("ternary" is the global-anchor Example-2 operator at
+the math level but the blocked packed format at the wire level), so a
+``WireSpec`` stays level-agnostic and the caller picks the registry via
+:meth:`wire` / :meth:`compressor`.  The ``wire:`` prefix is the packed-
+format-as-compressor adapter (:class:`repro.core.compressors.WireCompressor`)
+and is only meaningful at the compressor level.  ``"outage"`` is the
+zero-link blackout pseudo-spec (``runtime.fault.OUTAGE_SPEC``): it builds
+neither a wire nor a compressor — drivers map it to the W_t = I plan.
+
+Canonical form
+--------------
+:meth:`canonical` renders args in sorted key order with minimal numeric
+formatting; ``parse(s).canonical()`` is idempotent and equals the raw
+string for every ladder rung the repo ships (so PlanBank / rung keys are
+unchanged by the migration — verified by tests/test_comm.py against the
+legacy ``plan_bank.rung_key``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple, Union
+
+# the blackout pseudo-spec; kept textually identical to
+# runtime.fault.OUTAGE_SPEC (asserted in tests) without importing jax-heavy
+# modules at import time
+OUTAGE_NAME = "outage"
+
+_ArgVal = Union[int, float, str]
+
+
+def _wire_registry() -> Dict[str, Any]:
+    from ..core.wire import _WIRES
+    return _WIRES
+
+
+def _compressor_registry() -> Dict[str, Any]:
+    from ..core.compressors import _REGISTRY
+    return _REGISTRY
+
+
+def _coerce(raw: str) -> _ArgVal:
+    try:
+        return int(raw)
+    except ValueError:
+        pass
+    try:
+        return float(raw)
+    except ValueError:
+        pass
+    return raw
+
+
+def _render(v: _ArgVal) -> str:
+    if isinstance(v, bool):          # guard: bools are ints in python
+        return str(int(v))
+    if isinstance(v, int):
+        return str(v)
+    if isinstance(v, float):
+        return repr(v)               # shortest round-trip form ('0.8')
+    return str(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Frozen, hashable codec spec: ``name`` plus sorted ``(key, value)``
+    args, with ``adapter="wire"`` marking the ``wire:`` packed-format-as-
+    compressor prefix.  Equal specs hash equal, so a WireSpec (or a tuple of
+    them) is directly usable as a PlanBank / rung key."""
+
+    name: str
+    args: Tuple[Tuple[str, _ArgVal], ...] = ()
+    adapter: str = ""                # "" | "wire"
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def parse(cls, spec: Union[str, "WireSpec"]) -> "WireSpec":
+        """Parse a spec string (idempotent on WireSpec instances).
+
+        Unknown names and malformed args raise ValueError at PARSE time, so
+        a typo'd ladder rung fails before any plan is built."""
+        if isinstance(spec, WireSpec):
+            return spec
+        if not isinstance(spec, str):
+            raise TypeError(f"WireSpec.parse wants a string, got "
+                            f"{type(spec).__name__}: {spec!r}")
+        s = spec.strip()
+        adapter = ""
+        if s.startswith("wire:"):
+            adapter = "wire"
+            s = s[len("wire:"):]
+        name, _, argstr = s.partition(":")
+        known = (set(_wire_registry()) | set(_compressor_registry())
+                 | {OUTAGE_NAME})
+        if name not in known:
+            raise ValueError(f"unknown codec {name!r} in spec {spec!r}; "
+                             f"have {sorted(known)}")
+        if adapter and name not in _wire_registry():
+            raise ValueError(f"'wire:' prefix needs a packed wire format, "
+                             f"got {name!r} in {spec!r}")
+        if name == OUTAGE_NAME and (argstr or adapter):
+            raise ValueError(f"'outage' takes no args/prefix: {spec!r}")
+        args = []
+        seen = set()
+        if argstr:
+            for kv in argstr.split(","):
+                k, eq, v = kv.partition("=")
+                if not eq or not k or not v:
+                    raise ValueError(f"malformed arg {kv!r} in spec {spec!r} "
+                                     f"(want key=value)")
+                if k in seen:
+                    raise ValueError(f"duplicate arg {k!r} in spec {spec!r}")
+                seen.add(k)
+                args.append((k, _coerce(v)))
+        return cls(name=name, args=tuple(sorted(args)), adapter=adapter)
+
+    # ------------------------------------------------------------------
+    def canonical(self) -> str:
+        """The canonical string form (parse . canonical is idempotent)."""
+        head = (self.adapter + ":" if self.adapter else "") + self.name
+        if not self.args:
+            return head
+        return head + ":" + ",".join(f"{k}={_render(v)}"
+                                     for k, v in self.args)
+
+    def __str__(self) -> str:
+        return self.canonical()
+
+    @property
+    def is_outage(self) -> bool:
+        return self.name == OUTAGE_NAME
+
+    def kwargs(self) -> Dict[str, _ArgVal]:
+        return dict(self.args)
+
+    # ------------------------------------------------------------------
+    # builders
+    # ------------------------------------------------------------------
+    def wire(self):
+        """Build the packed :class:`repro.core.wire.WireFormat`."""
+        if self.is_outage:
+            raise ValueError("'outage' has no wire format — map it to the "
+                             "W_t = I plan via runtime.fault.outage_plan")
+        reg = _wire_registry()
+        if self.name not in reg:
+            raise ValueError(f"{self.name!r} is a math-level compressor, "
+                             f"not a packed wire format; have {sorted(reg)}")
+        kw = {}
+        for k, v in self.args:
+            if k == "dtype":
+                kw[k] = v
+                continue
+            if isinstance(v, float) and not v.is_integer() or \
+                    isinstance(v, str):
+                raise ValueError(f"wire arg {k}={v!r} in "
+                                 f"{self.canonical()!r} must be an integer")
+            kw[k] = int(v)
+        return reg[self.name](**kw)
+
+    def compressor(self):
+        """Build the math-level :class:`repro.core.compressors.Compressor`
+        (``wire:`` specs wrap the packed format in a WireCompressor)."""
+        if self.is_outage:
+            raise ValueError("'outage' has no compressor — it is the "
+                             "zero-link blackout step (exact local update)")
+        if self.adapter == "wire":
+            from ..core.compressors import WireCompressor
+            return WireCompressor(fmt=self.wire())
+        reg = _compressor_registry()
+        if self.name not in reg:
+            raise ValueError(
+                f"{self.name!r} is a packed wire format, not a math-level "
+                f"compressor; have {sorted(reg)} (or prefix with 'wire:' "
+                f"to use the packed format as a compressor)")
+        field_types = {f.name: str(f.type)
+                       for f in dataclasses.fields(reg[self.name])}
+        kw = {}
+        for k, v in self.args:
+            t = field_types.get(k, "float")
+            kw[k] = int(v) if "int" in t else float(v)
+        return reg[self.name](**kw)
+
+    def codec(self, level: str = "wire"):
+        """Level-dispatched builder (the ``ladder_from_specs`` contract)."""
+        return self.wire() if level == "wire" else self.compressor()
+
+
+OUTAGE = WireSpec(name=OUTAGE_NAME)
+
+
+# ---------------------------------------------------------------------------
+# key helpers (legacy PlanBank interop)
+# ---------------------------------------------------------------------------
+def canonical_key(spec) -> Union[str, Tuple[str, ...]]:
+    """Normalize any wire selection — spec string, WireSpec, or a per-leaf
+    sequence of either — to the legacy PlanBank key domain (canonical
+    strings; uniform vectors collapsed), round-tripping every element
+    through :meth:`WireSpec.parse`."""
+    from ..adapt.plan_bank import rung_key
+    if isinstance(spec, (str, WireSpec)):
+        return WireSpec.parse(spec).canonical()
+    seq = tuple(WireSpec.parse(getattr(s, "spec", s)).canonical()
+                for s in spec)
+    return rung_key(seq)

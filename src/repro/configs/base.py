@@ -176,6 +176,21 @@ class AdaptConfig:
     # "constant" | "ramp:end=..,steps=.." | "duty:period=..,duty=..[,off=..]"
     token_bucket: bool = False          # bank unused bits across steps
     bucket_cap_steps: float = 4.0       # bucket capacity, in base budgets
+    budget_slo_ms: float = 0.0          # > 0 wraps the budget schedule in
+    # BudgetSchedule.from_wall_clock: the per-step budget scales with
+    # slo_ms / measured step wall ms (deadline-aware link model)
+    per_leaf: bool = False              # rate control emits per-leaf rung
+    # VECTORS (PerLeafSNRPolicy) instead of one uniform rung
+
+    # --- composition (repro.comm.Compose) ---------------------------------
+    # compose=True stacks rate + budget instead of budget replacing rate:
+    # the rate policy proposes, the budget caps the proposal every step,
+    # and any outage_windows override both to the W_t = I blackout plan.
+    compose: bool = False
+    outage_windows: Tuple[Tuple[int, int], ...] = ()   # [start, end) steps
+    rate_control: bool = True           # False = no SNR-feedback rate member
+    # even while enabled (an outage-only run holds the configured static
+    # wire between blackout windows instead of walking the ladder)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -473,22 +473,14 @@ _REGISTRY = {
 }
 
 
-def make_compressor(spec: str) -> Compressor:
+def make_compressor(spec) -> Compressor:
     """Factory from config strings like ``"sparsifier:p=0.8"`` or
     ``"blocked_hybrid:block=512,top_j=4"``.  ``"wire:<wire spec>"`` wraps a
     packed :mod:`repro.core.wire` format as a math-level compressor with
-    exact packed-size bit accounting (see :class:`WireCompressor`)."""
-    if spec.startswith("wire:"):
-        from .wire import make_wire
-        return WireCompressor(fmt=make_wire(spec[len("wire:"):]))
-    name, _, argstr = spec.partition(":")
-    if name not in _REGISTRY:
-        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
-    kwargs = {}
-    if argstr:
-        field_types = {f.name: str(f.type) for f in dataclasses.fields(_REGISTRY[name])}
-        for kv in argstr.split(","):
-            k, v = kv.split("=")
-            t = field_types.get(k, "float")
-            kwargs[k] = int(v) if "int" in t else float(v)
-    return _REGISTRY[name](**kwargs)
+    exact packed-size bit accounting (see :class:`WireCompressor`).
+
+    Back-compat shim: parsing now lives in :class:`repro.comm.wirespec.
+    WireSpec` (the one grammar for every spec string in the repo); this
+    factory delegates and also accepts a WireSpec directly."""
+    from ..comm.wirespec import WireSpec
+    return WireSpec.parse(spec).compressor()

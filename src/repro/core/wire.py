@@ -356,17 +356,14 @@ _WIRES = {
 }
 
 
-def make_wire(spec: str) -> WireFormat:
-    """'ternary:block=512' / 'hybrid:block=512,top_j=4' / 'randk:k=64' ..."""
-    name, _, argstr = spec.partition(":")
-    if name not in _WIRES:
-        raise ValueError(f"unknown wire format {spec!r}; have {sorted(_WIRES)}")
-    kwargs = {}
-    if argstr:
-        for kv in argstr.split(","):
-            k, v = kv.split("=")
-            kwargs[k] = v if k == "dtype" else int(v)
-    return _WIRES[name](**kwargs)
+def make_wire(spec) -> WireFormat:
+    """'ternary:block=512' / 'hybrid:block=512,top_j=4' / 'randk:k=64' ...
+
+    Back-compat shim: parsing now lives in :class:`repro.comm.wirespec.
+    WireSpec` (the one grammar for every spec string in the repo); this
+    factory delegates and also accepts a WireSpec directly."""
+    from ..comm.wirespec import WireSpec
+    return WireSpec.parse(spec).wire()
 
 
 def tree_wire_bits(fmt: WireFormat, tree) -> int:

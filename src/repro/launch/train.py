@@ -5,6 +5,12 @@ production — mesh dims shrink to fit), with checkpoint/resume, periodic
 metrics, the Theorem-1 config gate, and optional straggler simulation.
 For the 512-chip production mesh use launch/dryrun.py (this container
 cannot execute 512-way programs, only compile them).
+
+Every scenario — static, adaptive (--adapt / --adapt-per-leaf), budgeted
+(--bit-budget), composed (--compose), outage-scheduled (--outage-windows)
+— drives training through ONE loop: ``Trainer.comm_session`` builds a
+``repro.comm.TrainSession`` whose policy is the scenario; the launcher
+only adds logging/checkpoint hooks.
 """
 import argparse
 import json
@@ -64,15 +70,27 @@ def main(argv=None):
                     help="link model for --bit-budget: 'constant' | "
                          "'ramp:end=..,steps=..' | "
                          "'duty:period=..,duty=..[,off=..]'")
+    ap.add_argument("--budget-slo-ms", type=float, default=0.0,
+                    help="deadline-aware budget: scale the per-step bit "
+                         "budget by slo_ms / measured step wall ms "
+                         "(BudgetSchedule.from_wall_clock)")
     ap.add_argument("--token-bucket", action="store_true",
                     help="bank unused budget bits across steps "
                          "(AdaptConfig.bucket_cap_steps base budgets)")
+    ap.add_argument("--compose", action="store_true",
+                    help="stack rate + budget control (repro.comm.Compose: "
+                         "the SNR-feedback policy proposes, the budget caps "
+                         "it every step) instead of budget-only")
+    ap.add_argument("--outage-windows", default="",
+                    help="scheduled full-link blackouts, e.g. '30-35;80-90' "
+                         "([start, end) steps; W_t = I, zero link bits)")
     args = ap.parse_args(argv)
 
     import jax
     import numpy as np
 
     from ..compat import set_mesh
+    from ..comm import BudgetComm, Compose
     from ..configs import get_arch, get_smoke
     from ..configs.base import AdaptConfig, RunConfig, ShapeConfig
     from ..data import SyntheticLMData
@@ -95,13 +113,26 @@ def main(argv=None):
 
     arch = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     shape_cfg = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    outage_windows = ()
+    if args.outage_windows:
+        from ..comm import OutageComm
+        outage_windows = OutageComm.parse(args.outage_windows).windows
     adapt_kw = {"enabled": (args.adapt or args.adapt_per_leaf
-                            or args.bit_budget > 0),
+                            or args.compose or args.bit_budget > 0
+                            or bool(outage_windows)),
+                # outage-only / budget-only runs hold the configured wire:
+                # the SNR-feedback rate member needs an explicit ask
+                "rate_control": (args.adapt or args.adapt_per_leaf
+                                 or args.compose),
                 "interval": args.adapt_interval,
                 "margin": args.adapt_margin,
                 "bit_budget": args.bit_budget,
                 "budget_schedule": args.budget_schedule,
-                "token_bucket": args.token_bucket}
+                "budget_slo_ms": args.budget_slo_ms,
+                "token_bucket": args.token_bucket,
+                "per_leaf": args.adapt_per_leaf,
+                "compose": args.compose,
+                "outage_windows": outage_windows}
     if args.adapt_ladder:
         adapt_kw["ladder"] = tuple(
             s.strip() for s in args.adapt_ladder.split(";") if s.strip())
@@ -132,119 +163,72 @@ def main(argv=None):
                 print(f"resumed from step {start_step}")
 
     adapt_on = run.adapt.enabled and tr.node_mode
+    policy = tr.comm_policy()      # validates the ladder (Theorem-1 gate)
     if adapt_on:
-        from ..adapt import SNRFeedbackPolicy
-        from ..adapt import telemetry as tm
-        from ..core import consensus as cons
-        eta_min = cons.spectrum(tr.plan.W).snr_threshold
-        # the configured wire is the run's starting rung if it is on the
-        # ladder; otherwise start at the conservative end
-        ladder = run.adapt.ladder
-        from ..core.wire import make_wire
-        fmts = [make_wire(s) for s in ladder]  # fail fast on a typo'd rung
-        # Theorem-1 gate, same bar as the static path (_validate_snr): the
-        # ladder must contain a retreat anchor whose GUARANTEED SNR clears
-        # eta_min — data-dependent rungs are the adaptive premise, but the
-        # feedback policy needs a provably-safe rung to climb back to.
-        # Budget mode inverts the constraints (the budget is hard, eta_min
-        # is an audit floor — see adapt.budget), so the anchor gate does
-        # not apply there.
-        if (run.adapt.bit_budget <= 0 and not run.unsafe and not any(
-                f.snr_lower_bound(1) > eta_min for f in fmts)):
-            raise ValueError(
-                f"Theorem-1 violation: no adapt-ladder rung has a "
-                f"guaranteed SNR above the threshold {eta_min:.3g} "
-                f"(ladder {list(ladder)}); add a safe anchor (e.g. 'dense') "
-                f"or set --unsafe to override")
-        start = ladder.index(run.wire) if run.wire in ladder else 0
-        bank = tr.wire_bank(max_size=run.adapt.bank_size, donate=True)
-        from jax.sharding import PartitionSpec
-        n_leaves = len(jax.tree.leaves(
-            tr.param_specs(), is_leaf=lambda t: isinstance(t, PartitionSpec)))
+        eta_min = tr.eta_min()
+        mode = ("composed" if args.compose and run.adapt.bit_budget > 0
+                else "budget" if run.adapt.bit_budget > 0
+                else "rate" if run.adapt.rate_control else "outage")
+        extras = []
         if run.adapt.bit_budget > 0:
-            # the fixed-bandwidth dual: hard budget, maximin SNR (rung
-            # vectors + OUTAGE blackouts from the budgeted scheduler)
-            policy = tr.budget_policy()
-        elif args.adapt_per_leaf:
-            # rung VECTORS: each leaf walks the ladder on its own measured
-            # SNR; the flat gossip path composes the mixed assignment into
-            # one row buffer (plan-bank key = the normalized vector)
-            from ..adapt import PerLeafSNRPolicy
-            policy = PerLeafSNRPolicy(
-                ladder=ladder, eta_min=eta_min, n_leaves=n_leaves,
-                margin=run.adapt.margin, upgrade=run.adapt.upgrade,
-                cadence=run.adapt.interval, start_index=start)
-        else:
-            policy = SNRFeedbackPolicy(
-                ladder=ladder, eta_min=eta_min, margin=run.adapt.margin,
-                upgrade=run.adapt.upgrade, cadence=run.adapt.interval,
-                start_index=start)
-        from ..adapt import rung_key
-        tel = tm.init(n_layers=n_leaves, window=run.adapt.window)
-        active = rung_key(policy.initial_spec())
-        step_fn = bank.get(active)
-        if run.adapt.bit_budget > 0:
-            print(f"adapt: eta_min={eta_min:.3g} (advisory) "
-                  f"bit_budget={run.adapt.bit_budget:.3g}/"
-                  f"{run.adapt.budget_schedule} "
-                  f"token_bucket={run.adapt.token_bucket} "
-                  f"ladder={list(ladder)} start={active!r}")
-        else:
-            print(f"adapt: eta_min={eta_min:.3g} ladder={list(ladder)} "
-                  f"per_leaf={args.adapt_per_leaf} start={active!r}")
-    else:
-        step_fn = tr.jit_train_step()
+            extras.append(f"bit_budget={run.adapt.bit_budget:.3g}/"
+                          f"{run.adapt.budget_schedule} "
+                          f"token_bucket={run.adapt.token_bucket}")
+        if run.adapt.budget_slo_ms > 0:
+            extras.append(f"slo_ms={run.adapt.budget_slo_ms:g}")
+        if outage_windows:
+            extras.append(f"outages={list(outage_windows)}")
+        print(f"adapt[{mode}]: eta_min={eta_min:.3g}"
+              f"{' (advisory)' if run.adapt.bit_budget > 0 else ''} "
+              f"ladder={list(run.adapt.ladder)} "
+              f"per_leaf={run.adapt.per_leaf} "
+              + " ".join(extras))
+
     data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=args.seq_len,
                            global_batch=args.global_batch,
                            n_nodes=max(tr.n_nodes, 1), iid=args.iid)
     history = []
     t0 = time.time()
+
+    def on_log(i, m, ran):
+        row = {k: float(v) for k, v in m.items() if np.ndim(v) == 0}
+        row["step"] = i + 1
+        row["wall_s"] = round(time.time() - t0, 2)
+        if adapt_on:
+            row["wire"] = ran
+        history.append(row)
+        print(f"step {i+1:5d} loss {row['loss']:.4f} "
+              f"gnorm {row['grad_norm']:.3f} "
+              f"noise/diff {row.get('noise_power', 0) / max(row.get('diff_power', 1), 1e-9):.3f}"
+              if 'noise_power' in row else
+              f"step {i+1:5d} loss {row['loss']:.4f}")
+
+    def on_switch(step, old, new):
+        print(f"adapt: step {step} wire {old!r} -> {new!r}")
+
+    session = tr.comm_session(
+        state, data.batch, policy=policy,
+        track_history=False,           # on_log keeps the rows we report;
+        # retaining every step's device metrics would grow with --steps
+        log_every=max(args.log_every, 1), on_log=on_log,
+        on_switch=on_switch if adapt_on else None,
+        checkpoint=(lambda s, st, m: mgr.maybe_save(
+            s, st, extra={"loss": float(m["loss"])})) if mgr else None)
     with set_mesh(mesh):
-        for i in range(start_step, args.steps):
-            state, m = step_fn(state, data.batch(i))
-            wire_used = active if adapt_on else None  # wire that RAN step i
-            if adapt_on and (i + 1) < args.steps:
-                # (i + 1) guard: step args.steps never runs — deciding for
-                # it would charge the budget ledger for a phantom step
-                tel = tm.update(tel, m["diff_power_leaves"],
-                                m["noise_power_leaves"],
-                                decay=run.adapt.ema_decay)
-                # off-cadence steps only need the EMA totals (two scalar
-                # syncs); the full per-layer snapshot stays at cadence
-                at_cadence = (i + 1) % max(run.adapt.interval, 1) == 0
-                snap = (tm.snapshot(tel, run.adapt.ema_decay) if at_cadence
-                        else tm.total_snapshot(tel, run.adapt.ema_decay))
-                nxt = policy.decide(i + 1, snap)
-                nxt = rung_key(nxt) if nxt is not None else None
-                if nxt is not None and nxt != active:
-                    print(f"adapt: step {i+1} wire {active!r} -> {nxt!r} "
-                          f"(measured SNR {snap.total_snr:.3g})")
-                    active = nxt
-                    step_fn = bank.get(active)
-            if (i + 1) % args.log_every == 0 or i == args.steps - 1:
-                row = {k: float(v) for k, v in m.items()
-                       if np.ndim(v) == 0}
-                row["step"] = i + 1
-                row["wall_s"] = round(time.time() - t0, 2)
-                if adapt_on:
-                    row["wire"] = wire_used
-                history.append(row)
-                print(f"step {i+1:5d} loss {row['loss']:.4f} "
-                      f"gnorm {row['grad_norm']:.3f} "
-                      f"noise/diff {row.get('noise_power', 0) / max(row.get('diff_power', 1), 1e-9):.3f}"
-                      if 'noise_power' in row else
-                      f"step {i+1:5d} loss {row['loss']:.4f}")
-            if mgr:
-                mgr.maybe_save(i + 1, state, extra={"loss": float(m["loss"])})
+        res = session.run(args.steps, start_step=start_step)
+
     if adapt_on:
-        print(f"adapt: bank {bank.stats()}")
-        if run.adapt.bit_budget > 0 and policy.spend_log:
-            spent = sum(b for _, _, _, b, _ in policy.spend_log)
-            budg = sum(b for _, b, _, _, _ in policy.spend_log)
-            outages = sum(1 for *_, r in policy.spend_log if r == "blackout")
+        print(f"adapt: bank {res.bank_stats}")
+        budget = (policy.budget if isinstance(policy, Compose)
+                  else policy if isinstance(policy, BudgetComm) else None)
+        if budget is not None and budget.spend_log:
+            spent = sum(b for _, _, _, b, _ in budget.spend_log)
+            budg = sum(b for _, b, _, _, _ in budget.spend_log)
+            blk = sum(1 for *_, r in budget.spend_log
+                      if r in ("blackout", "override", "silence"))
             print(f"adapt: budget spent {spent:.3g} of {budg:.3g} "
                   f"({spent / max(budg, 1e-9):.1%}), "
-                  f"blackout steps {outages}")
+                  f"blackout steps {blk}")
     if args.metrics_out:
         Path(args.metrics_out).write_text(json.dumps(history, indent=1))
     print(f"done: {args.steps - start_step} steps in {time.time()-t0:.1f}s; "

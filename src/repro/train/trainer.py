@@ -473,9 +473,20 @@ class Trainer:
         trainer — or ``runtime.fault.OUTAGE_SPEC``, the zero-link blackout
         plan of a budget-0 window (exact local update, no transmission).
         Per-leaf feasibility vs the Theorem-1 bar is the selecting
-        controller's contract (see adapt.controller / adapt.budget)."""
+        controller's contract (see adapt.controller / adapt.budget).
+
+        Typed inputs (``repro.comm``: WireSpec, PerLeafPlan, or sequences
+        of WireSpec) normalize to the same key domain, so policies can
+        hand their plans straight to the trainer."""
         assert self.node_mode, "wire switching needs an active gossip plan"
+        from ..comm import PerLeafPlan, WireSpec, canonical_key
         from ..runtime import fault
+        if isinstance(spec, PerLeafPlan):
+            spec = spec.key()
+        elif isinstance(spec, WireSpec) or (
+                isinstance(spec, (tuple, list))
+                and any(isinstance(s, WireSpec) for s in spec)):
+            spec = canonical_key(spec)
         if spec == fault.OUTAGE_SPEC:
             return fault.outage_plan(self.plan)
         if isinstance(spec, (tuple, list)):
@@ -507,6 +518,11 @@ class Trainer:
         ac = self.run.adapt
         assert ac.bit_budget > 0, "set AdaptConfig.bit_budget"
         schedule = BudgetSchedule.parse(ac.budget_schedule, ac.bit_budget)
+        if ac.budget_slo_ms > 0:
+            # deadline-aware link: the budget tracks the step-time SLO
+            # (TrainSession feeds measured wall times via BudgetComm)
+            schedule = BudgetSchedule.from_wall_clock(
+                ac.budget_slo_ms, ac.bit_budget, base=schedule)
         controller = BudgetController.for_plan(
             self.plan, ac.ladder, self.gossip_leaf_shapes(), snr_cap=snr_cap)
         controller.min_useful_snr = min_useful_snr
@@ -529,6 +545,116 @@ class Trainer:
         return PlanBank(
             lambda spec: self.train_step_for_wire(spec, donate=donate),
             max_size=max_size)
+
+    # ------------------------------------------------------------------
+    # the repro.comm front door
+    # ------------------------------------------------------------------
+    def eta_min(self) -> float:
+        """The active graph's Theorem-1 threshold (1-lambda_N)/(1+lambda_N),
+        computed once per trainer (W is fixed at plan build)."""
+        cached = getattr(self, "_eta_min", None)
+        if cached is None:
+            cached = float(cons.spectrum(self.plan.W).snr_threshold)
+            self._eta_min = cached
+        return cached
+
+    def _rate_member_on(self) -> bool:
+        """Whether the comm policy gets an SNR-feedback rate member — the
+        ONE predicate both the Theorem-1 anchor gate (validate_ladder)
+        and the policy construction (comm_policy) key off."""
+        ac = self.run.adapt
+        return ac.rate_control and (ac.bit_budget <= 0 or ac.compose)
+
+    def validate_ladder(self) -> float:
+        """Parse every ladder rung (fail fast on a typo) and enforce the
+        Theorem-1 anchor gate of the rate-control scenario: the ladder
+        must contain a rung whose GUARANTEED SNR clears eta_min — the
+        provably-safe rung feedback policies climb back to.  Budget mode
+        inverts the constraints (the budget is hard, eta_min is an audit
+        floor — see adapt.budget), so the gate does not apply there
+        unless the rate member is composed on top.  Returns eta_min."""
+        ac = self.run.adapt
+        eta_min = self.eta_min()
+        fmts = [make_wire(s) for s in ac.ladder]
+        if (self._rate_member_on() and not self.run.unsafe and not any(
+                f.snr_lower_bound(1) > eta_min for f in fmts)):
+            raise ValueError(
+                f"Theorem-1 violation: no adapt-ladder rung has a "
+                f"guaranteed SNR above the threshold {eta_min:.3g} "
+                f"(ladder {list(ac.ladder)}); add a safe anchor (e.g. "
+                f"'dense') or set unsafe=True to override")
+        return eta_min
+
+    def comm_policy(self):
+        """This run's AdaptConfig as ONE repro.comm CommPolicy:
+
+          * static (adapt disabled)            -> StaticComm(run.wire)
+          * adapt                              -> RateComm(SNRFeedback /
+                                                  PerLeafSNR at per_leaf)
+          * bit_budget > 0                     -> BudgetComm(budget_policy)
+          * compose=True (rate AND budget)     -> Compose(rate, budget)
+          * outage_windows                     -> OutageComm stacked on top
+
+        The driver for any of them is the same TrainSession — see
+        :meth:`comm_session`."""
+        from ..comm import (BudgetComm, Compose, OutageComm, RateComm,
+                            StaticComm)
+        ac = self.run.adapt
+        if not (ac.enabled and self.node_mode):
+            return StaticComm(self.run.wire)
+        eta_min = self.validate_ladder()
+        parts = []
+        budget_on = ac.bit_budget > 0
+        if self._rate_member_on():
+            from ..adapt import PerLeafSNRPolicy, SNRFeedbackPolicy
+            # the configured wire is the starting rung if it is on the
+            # ladder; otherwise start at the conservative end
+            start = (ac.ladder.index(self.run.wire)
+                     if self.run.wire in ac.ladder else 0)
+            n_leaves = len(self.gossip_leaf_shapes())
+            if ac.per_leaf:
+                pol = PerLeafSNRPolicy(
+                    ladder=ac.ladder, eta_min=eta_min, n_leaves=n_leaves,
+                    margin=ac.margin, upgrade=ac.upgrade,
+                    cadence=ac.interval, start_index=start)
+            else:
+                pol = SNRFeedbackPolicy(
+                    ladder=ac.ladder, eta_min=eta_min, margin=ac.margin,
+                    upgrade=ac.upgrade, cadence=ac.interval,
+                    start_index=start)
+            parts.append(RateComm(policy=pol, n_leaves=n_leaves,
+                                  cadence=ac.interval,
+                                  ema_decay=ac.ema_decay,
+                                  window=ac.window))
+        if budget_on:
+            parts.append(BudgetComm(policy=self.budget_policy()))
+        if ac.outage_windows:
+            if not parts:
+                parts.append(StaticComm(self.run.wire))
+            parts.append(OutageComm(windows=tuple(ac.outage_windows)))
+        if not parts:
+            # enabled but no member applies (e.g. rate_control=False with
+            # no budget and no outage windows): hold the configured wire
+            return StaticComm(self.run.wire)
+        return parts[0] if len(parts) == 1 else Compose(*parts)
+
+    def comm_session(self, state, batch_fn, *, donate: bool = True,
+                     policy=None, **session_kw):
+        """A :class:`repro.comm.session.TrainSession` driving THIS trainer:
+        the plan bank serves jitted train steps (allreduce runs degenerate
+        to a one-entry bank), the policy is :meth:`comm_policy` unless
+        overridden, and ``session.run(n_steps)`` is the whole driver."""
+        from ..adapt.plan_bank import PlanBank
+        from ..comm import TrainSession
+        if self.node_mode:
+            bank = self.wire_bank(max_size=self.run.adapt.bank_size,
+                                  donate=donate)
+        else:
+            bank = PlanBank(lambda _: self.jit_train_step(donate=donate),
+                            max_size=1)
+        return TrainSession(bank=bank,
+                            policy=policy or self.comm_policy(),
+                            state=state, batch_fn=batch_fn, **session_kw)
 
 
 def make_trainer(mesh, arch: ArchConfig, run: RunConfig, shape: ShapeConfig

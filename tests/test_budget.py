@@ -204,6 +204,29 @@ class TestBudgetPolicy:
         assert burst
         assert bucket.spent == pytest.approx(cum_bits)
 
+    def test_wall_clock_budget_stays_hard(self):
+        """Deadline-aware link (BudgetSchedule.from_wall_clock): measured
+        slow steps shrink the live budget and the per-step cap still binds
+        on the SHRUNK value."""
+        bc = make_controller(neighbors=1)
+        dense = bc.vector_cost([0] * len(SHAPES))
+        sched = BudgetSchedule.from_wall_clock(slo_ms=100.0,
+                                               bits=dense * 1.05, decay=0.0)
+        pol = BudgetPolicy(controller=bc, schedule=sched, cadence=1)
+        pol.initial_spec()
+        # on-SLO (no measurement yet): base budget, dense affordable
+        assert pol.spend_log[-1][3] == pytest.approx(dense)
+        sched.record_wall_time(400.0)         # 4x over SLO -> quarter budget
+        pol.decide(1, None)
+        _, budget, _, bits, _ = pol.spend_log[-1]
+        assert budget == pytest.approx(dense * 1.05 / 4.0)
+        assert 0 < bits <= budget * (1 + 1e-9)      # downgraded, still capped
+        sched.record_wall_time(25.0)          # 4x under SLO -> clamped boost
+        pol.decide(2, None)
+        _, budget2, _, bits2, _ = pol.spend_log[-1]
+        assert budget2 == pytest.approx(dense * 1.05 * sched.max_scale)
+        assert bits2 == pytest.approx(dense)  # dense affordable again
+
     def test_outage_window_and_recovery(self):
         bc = make_controller(neighbors=1)
         base = bc.vector_cost([1] * len(SHAPES)) * 1.2

@@ -1,0 +1,383 @@
+"""The unified repro.comm API: WireSpec grammar + canonical round-trips
+(and their equality with the legacy rung_key domain), the make_wire /
+make_compressor back-compat shims, Compose precedence (budget caps rate,
+outage overrides both), PlanBank compile counts under policy switching,
+and the TrainSession driver."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapt import (BudgetController, BudgetPolicy, BudgetSchedule,
+                         PlanBank, SNRFeedbackPolicy, WallClockBudgetSchedule,
+                         ladder_from_specs, rung_key)
+from repro.comm import (OUTAGE_PLAN, BudgetComm, Compose, OutageComm,
+                        PerLeafPlan, RateComm, StaticComm, StepTelemetry,
+                        TrainSession, WireSpec, canonical_key)
+from repro.core.compressors import (BlockedHybrid, Sparsifier, WireCompressor,
+                                    make_compressor)
+from repro.core.wire import HybridWire, Int8Wire, TernaryWire, make_wire
+from repro.runtime.fault import OUTAGE_SPEC
+
+# every spec-string shape the repo ships (default trainer ladder, fig4/fig5
+# ladders, wire adapters, the blackout pseudo-spec)
+REPO_SPECS = [
+    "dense", "dense_bf16", "int8:block=256", "ternary:block=512",
+    "hybrid:block=256,top_j=16", "hybrid:block=512,top_j=4",
+    "randk:block=512,k=128", "topk:block=512,k=128",
+    "identity", "ternary", "sparsifier:p=0.8", "lowprec:bits=6",
+    "hybrid:eta=3.3", "blocked_ternary:block=16",
+    "blocked_hybrid:block=512,top_j=4",
+    "wire:ternary:block=64", "wire:int8:block=64", "outage",
+]
+
+DEFAULT_LADDER = ("dense", "int8:block=256", "hybrid:block=256,top_j=16",
+                  "hybrid:block=512,top_j=4", "ternary:block=512")
+
+
+# ---------------------------------------------------------------------------
+# WireSpec grammar
+# ---------------------------------------------------------------------------
+class TestWireSpec:
+    @pytest.mark.parametrize("spec", REPO_SPECS)
+    def test_parse_canonical_roundtrip_idempotent(self, spec):
+        w = WireSpec.parse(spec)
+        assert w.canonical() == spec                      # repo specs ARE canonical
+        assert WireSpec.parse(w.canonical()) == w         # parse . canonical = id
+        assert WireSpec.parse(w) is w                     # idempotent on WireSpec
+        assert hash(WireSpec.parse(spec)) == hash(w)      # hashable key
+
+    @pytest.mark.parametrize("spec", DEFAULT_LADDER)
+    def test_canonical_matches_legacy_rung_key(self, spec):
+        # the PlanBank key domain is unchanged by the migration
+        assert WireSpec.parse(spec).canonical() == rung_key(spec)
+
+    def test_canonical_sorts_and_normalizes(self):
+        a = WireSpec.parse("hybrid:top_j=4,block=512")
+        b = WireSpec.parse("hybrid:block=512,top_j=4")
+        assert a == b and a.canonical() == "hybrid:block=512,top_j=4"
+
+    @pytest.mark.parametrize("bad", [
+        "ternaryy", "hybrid:block", "hybrid:block=512,block=256",
+        "wire:sparsifier:p=0.5", "outage:block=2", "hybrid:=4"])
+    def test_malformed_specs_rejected_at_parse(self, bad):
+        with pytest.raises(ValueError):
+            WireSpec.parse(bad)
+
+    def test_outage_spec_names_agree(self):
+        assert WireSpec.parse("outage").is_outage
+        assert WireSpec.parse(OUTAGE_SPEC).canonical() == OUTAGE_SPEC
+
+    def test_level_dispatch(self):
+        s = WireSpec.parse("ternary:block=64")
+        assert isinstance(s.wire(), TernaryWire) and s.wire().block == 64
+        # "ternary" means something different per level — both reachable
+        assert WireSpec.parse("ternary").compressor().name == "ternary"
+        with pytest.raises(ValueError):
+            WireSpec.parse("sparsifier:p=0.5").wire()
+        with pytest.raises(ValueError):
+            WireSpec.parse("int8:block=64").compressor()
+        with pytest.raises(ValueError):
+            WireSpec.parse("outage").wire()
+        with pytest.raises(ValueError):
+            WireSpec.parse("randk:k=2.5").wire()   # no silent truncation
+
+
+class TestFactoryShims:
+    def test_make_wire_delegates(self):
+        assert make_wire("hybrid:block=512,top_j=4") == HybridWire(
+            block=512, top_j=4)
+        assert make_wire("int8:block=256") == Int8Wire(block=256)
+        assert make_wire(WireSpec.parse("ternary:block=64")) == TernaryWire(
+            block=64)
+        with pytest.raises(ValueError):
+            make_wire("nope")
+
+    def test_make_compressor_delegates(self):
+        assert make_compressor("sparsifier:p=0.8") == Sparsifier(p=0.8)
+        assert make_compressor("blocked_hybrid:block=512,top_j=4") == \
+            BlockedHybrid(block=512, top_j=4)
+        wc = make_compressor("wire:ternary:block=64")
+        assert isinstance(wc, WireCompressor) and wc.fmt == TernaryWire(
+            block=64)
+        with pytest.raises(ValueError):
+            make_compressor("nope:p=1")
+
+    def test_ladder_from_specs_through_wirespec(self):
+        # both registries, same strings — level picks the codec
+        rungs = ladder_from_specs(("ternary:block=64",), level="wire")
+        assert isinstance(rungs[0].codec, TernaryWire)
+
+
+# ---------------------------------------------------------------------------
+# PerLeafPlan keys
+# ---------------------------------------------------------------------------
+class TestPerLeafPlan:
+    def test_uniform_collapses_like_rung_key(self):
+        v = ("ternary:block=64",) * 5
+        assert PerLeafPlan.vector(v).key() == rung_key(v) == "ternary:block=64"
+        mixed = ("ternary:block=64", "dense", "ternary:block=64")
+        assert PerLeafPlan.vector(mixed).key() == rung_key(mixed)
+
+    def test_outage_and_from_key(self):
+        assert OUTAGE_PLAN.key() == OUTAGE_SPEC
+        assert PerLeafPlan.from_key(OUTAGE_SPEC) is OUTAGE_PLAN
+        assert PerLeafPlan.from_key(None) is None
+        assert PerLeafPlan.from_key("dense").key() == "dense"
+        assert canonical_key(("dense", "int8:block=64")) == (
+            "dense", "int8:block=64")
+        # the typed OUTAGE WireSpec lifts to the real blackout plan (not a
+        # bogus outage=False plan whose cost model would try .wire())
+        from repro.comm import OUTAGE
+        assert PerLeafPlan.from_key(OUTAGE) is OUTAGE_PLAN
+        assert PerLeafPlan.uniform(OUTAGE).outage
+        assert PerLeafPlan.vector([OUTAGE, OUTAGE]) is OUTAGE_PLAN
+        with pytest.raises(ValueError):
+            PerLeafPlan.vector(["dense", OUTAGE])
+
+
+# ---------------------------------------------------------------------------
+# Compose precedence (satellite: budget caps rate, outage overrides both)
+# ---------------------------------------------------------------------------
+LADDER = ("dense", "int8:block=64", "ternary:block=64")
+SHAPES = ((4, 64), (130,))
+
+
+def _budget_comm(bits, cadence=1, **kw):
+    ctl = BudgetController(ladder=ladder_from_specs(LADDER, level="wire"),
+                           shapes=SHAPES, neighbors=1, eta_min=1.0, **kw)
+    pol = BudgetPolicy(controller=ctl, schedule=BudgetSchedule(bits=bits),
+                       cadence=cadence)
+    return BudgetComm(policy=pol)
+
+
+def _telemetry(step, n=len(SHAPES), snr=10.0):
+    d = np.full((n,), 100.0)
+    return StepTelemetry(step=step, diff_power=d, noise_power=d / snr)
+
+
+class TestCompose:
+    def test_budget_caps_rates_choice(self):
+        # rate proposes dense; the budget only affords ternary
+        bc = _budget_comm(bits=0.0)
+        dense_cost = bc.plan_cost(PerLeafPlan.uniform("dense"))
+        tern_cost = bc.plan_cost(PerLeafPlan.uniform("ternary:block=64"))
+        budget = (dense_cost + tern_cost) / 2
+        bc.policy.schedule = BudgetSchedule(bits=budget)
+        rate = StaticComm("dense")
+        comp = Compose(rate, bc)
+        plan = comp.decide(0)
+        assert plan.key() != "dense"                  # capped: downgraded
+        # ledger: the capped solve's bits were accounted and fit the budget
+        step, bgt, _, bits, reason = bc.spend_log[-1]
+        assert bits <= bgt * (1 + 1e-9) and reason != "proposal"
+        assert bc.plan_cost(plan) == pytest.approx(bits)
+
+    def test_budget_adopts_fitting_proposal_exactly(self):
+        bc = _budget_comm(bits=0.0)
+        dense_cost = bc.plan_cost(PerLeafPlan.uniform("dense"))
+        bc.policy.schedule = BudgetSchedule(bits=dense_cost * 1.01)
+        comp = Compose(StaticComm("dense"), bc)
+        plan = comp.decide(0)
+        assert plan.key() == "dense"                  # proposal fits: adopted
+        assert bc.spend_log[-1][3] == pytest.approx(dense_cost)
+        assert bc.spend_log[-1][4] == "proposal"
+
+    def test_outage_overrides_rate_and_budget(self):
+        bc = _budget_comm(bits=1e12)                  # budget affords dense
+        comp = Compose(StaticComm("dense"), bc,
+                       OutageComm(windows=((2, 4),)))
+        keys = [comp.decide(s).key() for s in range(6)]
+        assert keys == ["dense", "dense", OUTAGE_SPEC, OUTAGE_SPEC,
+                        "dense", "dense"]
+        # blackout steps cost zero in the budget ledger
+        for step, _, _, bits, reason in bc.spend_log:
+            assert (bits == 0.0) == (2 <= step < 4)
+
+    def test_compose_observe_fans_out(self):
+        rate = RateComm(policy=SNRFeedbackPolicy(
+            ladder=LADDER, eta_min=1.0, cadence=1), n_leaves=2, cadence=1)
+        bc = _budget_comm(bits=1e12)
+        comp = Compose(rate, bc, OutageComm())
+        comp.decide(0)
+        comp.observe(_telemetry(0))
+        assert int(rate.telemetry.count) == 1         # rate saw the sample
+        assert bc._snap is not None and bc._snap.n_layers == 2
+
+    def test_blackout_telemetry_skips_rate_members(self):
+        # a W_t=I step's noise power is 0 -> fake-infinite SNR; the rate
+        # member must not fold it into its EMA (spurious post-outage
+        # downgrade), while the budget member still sees the sample
+        rate = RateComm(policy=SNRFeedbackPolicy(
+            ladder=LADDER, eta_min=1.0, cadence=1), n_leaves=2, cadence=1)
+        bc = _budget_comm(bits=1e12)
+        comp = Compose(rate, bc, OutageComm(windows=((0, 1),)))
+        assert comp.decide(0).outage
+        comp.observe(StepTelemetry(step=0, diff_power=np.ones(2),
+                                   noise_power=np.zeros(2)))
+        assert int(rate.telemetry.count) == 0      # skipped
+        assert bc._snap is not None                # budget still fed
+        assert not comp.decide(1).outage
+        comp.observe(_telemetry(1))
+        assert int(rate.telemetry.count) == 1      # transmitting steps count
+
+    def test_telemetry_gating_attribute(self):
+        assert StaticComm("dense").consumes_telemetry is False
+        assert OutageComm().consumes_telemetry is False
+        assert Compose(StaticComm("dense"), OutageComm()) \
+            .consumes_telemetry is False
+        assert Compose(StaticComm("dense"),
+                       _budget_comm(bits=1.0)).consumes_telemetry is True
+
+    def test_rate_walks_ladder_under_compose(self):
+        # huge measured SNR -> the feedback policy steps down the ladder,
+        # and a generous budget adopts each proposal verbatim
+        rate = RateComm(policy=SNRFeedbackPolicy(
+            ladder=LADDER, eta_min=1.0, margin=1.0, upgrade=1.5, cadence=1),
+            n_leaves=2, cadence=1)
+        comp = Compose(rate, _budget_comm(bits=1e12))
+        plan = comp.decide(0)
+        assert plan.key() == "dense"
+        seen = [plan.key()]
+        for s in range(1, 4):
+            comp.observe(_telemetry(s - 1, snr=1e6))
+            seen.append(comp.decide(s).key())
+        assert seen[-1] != "dense"                    # moved down-ladder
+
+
+# ---------------------------------------------------------------------------
+# PlanBank compile counts across policy switches (satellite)
+# ---------------------------------------------------------------------------
+class TestNoRecompileOnPolicySwitch:
+    def test_composed_session_compiles_at_most_ladder_size(self):
+        """A full composed session (rate + budget + outage) cycling plans
+        never compiles more than |ladder| + 1 (outage) distinct steps —
+        policy switching is a dict lookup."""
+        traces = []
+
+        def build(key):
+            @jax.jit
+            def f(state):
+                traces.append(key)
+                return state + 1.0, {
+                    "diff_power_leaves": jnp.full((len(SHAPES),), 100.0),
+                    "noise_power_leaves": jnp.full((len(SHAPES),), 10.0)}
+            f(jnp.zeros(()))          # compile eagerly: traces == builds
+            return f
+
+        bank = PlanBank(build, max_size=len(LADDER) + 1)
+        rate = RateComm(policy=SNRFeedbackPolicy(
+            ladder=LADDER, eta_min=1.0, margin=1.0, upgrade=1.2, cadence=2),
+            n_leaves=len(SHAPES), cadence=2)
+        comp = Compose(rate, _budget_comm(bits=1e12),
+                       OutageComm(windows=((5, 8), (12, 15))))
+        session = TrainSession(bank=bank, policy=comp,
+                               state=jnp.zeros(()))
+        res = session.run(30)
+        distinct = set(res.plan_per_step)
+        assert OUTAGE_SPEC in distinct and len(distinct) >= 3
+        assert bank.builds == len(set(traces)) == len(distinct)
+        assert bank.builds <= len(LADDER) + 1
+        assert bank.hits == 30 - bank.builds
+        assert bank.evictions == 0
+
+
+# ---------------------------------------------------------------------------
+# TrainSession driver contract
+# ---------------------------------------------------------------------------
+class TestTrainSession:
+    @staticmethod
+    def _counting_bank():
+        def build(key):
+            def f(state, batch):
+                return state + batch, {"loss": jnp.asarray(float(len(key)))}
+            return f
+        return PlanBank(build, max_size=4)
+
+    def test_batch_fn_hooks_and_history(self):
+        logged, switches = [], []
+        session = TrainSession(
+            bank=self._counting_bank(), policy=StaticComm("dense"),
+            state=jnp.zeros(()), batch_fn=lambda i: jnp.asarray(1.0),
+            log_every=2, on_log=lambda i, m, ran: logged.append((i, ran)),
+            on_switch=lambda s, a, b: switches.append((s, a, b)))
+        res = session.run(5)
+        assert float(res.state) == 5.0
+        assert [i for i, _ in logged] == [1, 3, 4]    # every 2 + final
+        assert switches == [] and res.wire_log == [(0, "dense")]
+        assert len(res.history) == 5 and res.n_steps == 5
+        assert res.metrics_arrays()["loss"].shape == (5,)
+
+    def test_no_phantom_decision_for_unrun_step(self):
+        # the budget ledger gets exactly one entry per EXECUTED step
+        bc = _budget_comm(bits=1e12)
+        session = TrainSession(
+            bank=self._counting_bank(), policy=bc, state=jnp.zeros(()),
+            batch_fn=lambda i: jnp.asarray(1.0))
+        session.run(4)
+        assert [s for s, *_ in bc.spend_log] == [0, 1, 2, 3]
+        # an empty run (resume at/after the end) charges NOTHING
+        res = session.run(4, start_step=4)
+        assert res.n_steps == 0 and res.plan_per_step == []
+        assert [s for s, *_ in bc.spend_log] == [0, 1, 2, 3]
+
+    def test_wall_clock_budget_coupling(self):
+        """Deadline-aware budgets: the session's measured wall times reach
+        the schedule, and a slow step shrinks the live budget."""
+        # budget generous enough that the plan never switches: only the
+        # (compiled) first step's wall time is excluded
+        sched = BudgetSchedule.from_wall_clock(slo_ms=1e9, bits=1e12,
+                                               decay=0.0)
+        ctl = BudgetController(
+            ladder=ladder_from_specs(LADDER, level="wire"),
+            shapes=SHAPES, neighbors=1, eta_min=1.0)
+        bc = BudgetComm(policy=BudgetPolicy(controller=ctl, schedule=sched,
+                                            cadence=1))
+
+        def build(key):
+            def f(state):
+                return state, {"diff_power_leaves": np.ones(len(SHAPES)),
+                               "noise_power_leaves": np.ones(len(SHAPES))}
+            return f
+
+        session = TrainSession(bank=PlanBank(build), policy=bc,
+                               state=jnp.zeros(()))
+        session.run(3)
+        # step 0 built (compiled) its plan: its wall time is the compiler's,
+        # not the link's, and must NOT reach the schedule
+        assert sched.samples == 2 and sched.ema_ms is not None
+        # an SLO far above any measured step time maxes the scale
+        assert sched.scale() == sched.max_scale
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware schedule unit behavior (satellite)
+# ---------------------------------------------------------------------------
+class TestWallClockSchedule:
+    def test_scaling_and_clamps(self):
+        s = BudgetSchedule.from_wall_clock(slo_ms=100.0, bits=1000.0,
+                                           decay=0.0, min_scale=0.1,
+                                           max_scale=2.0)
+        assert isinstance(s, WallClockBudgetSchedule)
+        assert s.budget_at(0) == 1000.0               # no measurement yet
+        s.record_wall_time(100.0)
+        assert s.budget_at(1) == pytest.approx(1000.0)   # on-SLO: unscaled
+        s.record_wall_time(200.0)                     # 2x slow -> half budget
+        assert s.budget_at(2) == pytest.approx(500.0)
+        s.record_wall_time(1e9)                       # clamped at min_scale
+        assert s.budget_at(3) == pytest.approx(100.0)
+        s.record_wall_time(1.0)                       # clamped at max_scale
+        assert s.budget_at(4) == pytest.approx(2000.0)
+        s.record_wall_time(-5.0)                      # garbage ignored
+        assert s.samples == 4
+
+    def test_wraps_any_base_schedule(self):
+        base = BudgetSchedule(bits=80.0, kind="duty", period=4, duty=0.5,
+                              off_bits=0.0)
+        s = BudgetSchedule.from_wall_clock(slo_ms=100.0, bits=80.0,
+                                           base=base, decay=0.0)
+        s.record_wall_time(200.0)
+        assert s.budget_at(0) == pytest.approx(40.0)  # scaled on-phase
+        assert s.budget_at(2) == 0.0                  # off-phase stays 0
