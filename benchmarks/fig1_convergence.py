@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import baselines, consensus as cons, dcdgd, problems
 from repro.core.compressors import Sparsifier
+from repro.topology import topology
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -31,8 +32,8 @@ CONV_THRESH = 5e-2
 def run(trials: int = TRIALS, steps: int = STEPS):
     prob = problems.paper_objective_5node(dim=5, seed=0)
     out = {"steps": steps, "alpha": ALPHA, "rows": []}
-    for wname, W in (("W1", cons.W1_PAPER), ("W2", cons.W2_PAPER)):
-        s = cons.spectrum(W)
+    for wname, W in (("W1", topology("w1")), ("W2", topology("w2"))):
+        s = W.spectrum
         p_thresh = cons.sparsifier_p_threshold(W)
         curves = {}
         dgd = baselines.run_baseline("dgd", prob, W, ALPHA, steps,

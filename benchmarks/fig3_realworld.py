@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import baselines, consensus as cons, dcdgd, problems
 from repro.core.compressors import HybridChain, Sparsifier, Ternary
+from repro.topology import topology
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -36,9 +37,9 @@ def run(steps: int = STEPS, trials: int = TRIALS):
     X, y = problems.spambase_like_data(n=4601, d=57, seed=7)
     prob = problems.logreg_nonconvex(X, y, n_nodes=10, rho=0.1, iid=False)
     out = {"rows": []}
-    for tname, W in (("topoA", cons.fig3_topology_a()),
-                     ("topoB", cons.fig3_topology_b())):
-        s = cons.spectrum(W)
+    for tname, W in (("topoA", topology("fig3a")),
+                     ("topoB", topology("fig3b"))):
+        s = W.spectrum
         eta_min = s.snr_threshold
         p_safe = min(max(cons.sparsifier_p_threshold(W) + 0.12, 0.5), 0.9)
         methods = {

@@ -43,6 +43,7 @@ import numpy as np
 from repro.core import consensus as cons, dcdgd, problems
 from repro.core.compressors import make_compressor
 from repro.adapt import adaptive_run, bits_to_target
+from repro.topology import topology
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -68,7 +69,7 @@ def _curves(r, prob):
 
 
 def run_scenario(name, prob, W, statics, ladder, steps, cadence, seed=0):
-    eta_min = cons.spectrum(W).snr_threshold
+    eta_min = W.eta_min
     out = {"name": name, "eta_min": eta_min, "alpha": ALPHA, "steps": steps,
            "statics": {}, "rows": []}
     static_res = {}
@@ -116,10 +117,10 @@ def run_scenario(name, prob, W, statics, ladder, steps, cadence, seed=0):
 def run():
     out = {"target_frac": TARGET_FRAC}
     prob_a = problems.quadratic(n_nodes=5, dim=512, seed=3)
-    out["A"] = run_scenario("quadratic_W1", prob_a, cons.W1_PAPER,
+    out["A"] = run_scenario("quadratic_W1", prob_a, topology("w1"),
                             STATICS_A, LADDER_A, STEPS_A, cadence=20)
     prob_b = problems.paper_objective_5node(dim=20, seed=0)
-    out["B"] = run_scenario("fig1_objective_W2", prob_b, cons.W2_PAPER,
+    out["B"] = run_scenario("fig1_objective_W2", prob_b, topology("w2"),
                             STATICS_B, LADDER_B, STEPS_B, cadence=20)
     return out
 

@@ -46,6 +46,7 @@ from repro.adapt.budget import BudgetSchedule
 from repro.core import consensus as cons, dcdgd, problems
 from repro.core.compressors import make_compressor
 from repro.core.wire import make_wire
+from repro.topology import topology
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
@@ -80,8 +81,8 @@ def final_gap(r, f_star) -> float:
 
 def run():
     prob = problems.quadratic(n_nodes=N_NODES, dim=DIM, seed=3)
-    W = cons.W1_PAPER
-    eta_min = float(cons.spectrum(W).snr_threshold)
+    W = topology("w1")
+    eta_min = float(W.eta_min)
     key = jax.random.PRNGKey(0)
 
     static_cost = {s: N_NODES * make_wire(s).wire_bits((DIM,))

@@ -1,0 +1,240 @@
+"""Fig. 6 (beyond-paper): time-varying consensus topology as a one-flag
+scenario — ring -> torus:4x2 mid-run, under a hard bit budget, with a
+link-fault window — through the typed repro.topology front door.
+
+The paper's convergence theory is graph-local: Theorem 1's SNR floor
+``eta_min = (1 - lambda_N)/(1 + lambda_N)`` moves when the graph does, so
+a controller tuned to the launch topology is WRONG the moment the network
+re-wires (the elastic/fault reality of DESIGN.md §6).  This benchmark
+drives one composed policy —
+
+    Compose(RateComm(ControllerPolicy),   # model-based rate control
+            BudgetComm(BudgetPolicy),     # hard per-step bit budget
+            TopologyComm(TopoSchedule),   # ring -> torus @ STEPS/2
+            FaultComm(window sim))        # an edge out for a step window
+
+— through the ONE TrainSession driver over the dcdgd backend, and asserts:
+
+  * zero Theorem-1 violations: every rate decision's predicted SNR clears
+    the eta_min ACTIVE at that decision's step (the TopologyComm retarget
+    pushed the new floor into the controller), and the TopologyComm's own
+    sustained-below-floor audit counts zero;
+  * the budget is hard: per-step flat-costed bits <= budget, every step,
+    across the switch (the ledger never sees a violation);
+  * zero recompiles beyond the PlanBank bound: builds == distinct plan
+    keys, no evictions — a graph switch and a fault pattern are dict
+    lookups into ``("topo", canonical, rung)`` / ``("fault", drops, ...)``
+    entries;
+  * the run CONVERGES (final gap under the static-dense reference x tol).
+
+Writes artifacts/bench/BENCH_topology.json and prints a CSV summary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adapt import ladder_from_specs
+from repro.adapt.budget import BudgetController, BudgetSchedule
+from repro.adapt.controller import RateController
+from repro.adapt.policies import BudgetPolicy, ControllerPolicy
+from repro.adapt.runner import _metric_step, make_dcdgd_session
+from repro.comm import BudgetComm, Compose, FaultComm, RateComm, StaticComm
+from repro.core import problems
+from repro.core.compressors import Identity, WireCompressor
+from repro.core.wire import make_wire
+from repro.runtime.fault import (OUTAGE_SPEC, drop_renormalize_dense,
+                                 peel_plan_key)
+from repro.topology import TopoSchedule, TopologyComm, topology
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+N_NODES = 8
+DIM = 256
+STEPS = 300
+SWITCH = STEPS // 2
+TAIL = 25
+FAULT_WINDOW = (60, 80)        # one undirected edge out (drop-renormalize)
+LADDER = ("dense", "int8:block=256", "hybrid:block=64,top_j=8",
+          "ternary:block=256")
+# affords int8 comfortably, never dense (dense = N*DIM*32 = 65.5 kbit)
+BUDGET = 30_000.0
+CONV_TOL = 1.5                 # vs the exact-wire reference gap
+RATE_CADENCE = 10
+
+TOPOS = {"opening": "ring:lazy=0.0", "switched": "torus:4x2,lazy=0.25"}
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowFaultSim:
+    """Deterministic link fault: undirected edge class 0 is out for the
+    whole [start, end) window (the StragglerSim contract, minus the
+    randomness — the bank-bound assertion wants few distinct patterns)."""
+    start: int
+    end: int
+
+    def dropped(self, step, n_classes):
+        return [0] if self.start <= step < self.end and n_classes else []
+
+
+def run():
+    prob = problems.quadratic(n_nodes=N_NODES, dim=DIM, seed=3)
+    topos = {}
+    for sp in (TOPOS["opening"], TOPOS["switched"]):
+        t = topology(sp, n=N_NODES)
+        topos[t.canonical()] = t
+    opening = topology(TOPOS["opening"], n=N_NODES)
+    switched = topology(TOPOS["switched"], n=N_NODES)
+    sched = TopoSchedule.parse(f"{SWITCH}:{TOPOS['switched']}",
+                               opening=TOPOS["opening"])
+    alpha_fn = lambda t: 0.08 / jnp.sqrt(t)            # noqa: E731
+    key = jax.random.PRNGKey(0)
+
+    # ---- the composed policy --------------------------------------------
+    wire_ladder = ladder_from_specs(LADDER, level="wire")
+    rate_ctl = RateController(
+        ladder=wire_ladder, eta_min=opening.eta_min, margin=1.25,
+        synthesize_hybrid=False, level="wire")
+    budget_ctl = BudgetController(
+        ladder=wire_ladder, shapes=((N_NODES, DIM),), neighbors=1,
+        eta_min=opening.eta_min)
+    budget_pol = BudgetPolicy(controller=budget_ctl,
+                              schedule=BudgetSchedule(bits=BUDGET),
+                              cadence=1)
+    n_edges = int(np.sum(np.abs(opening.W) > 1e-12)
+                  - N_NODES) // 2
+    topo_comm = TopologyComm(
+        schedule=sched, topologies=dict(topos), dims=None,
+        guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+    fault_comm = FaultComm(sim=WindowFaultSim(*FAULT_WINDOW),
+                           n_classes=n_edges)
+
+    # ---- the bank: (topo, rung [, fault]) -> jitted metric step ----------
+    opening_c = opening.canonical()
+
+    def resolve_W(key_):
+        """Plan key -> (W, inner spec): peel ("topo", c, ...) and
+        ("fault", drops, ...) tags down to the wire rung."""
+        topo_c, drops, inner = peel_plan_key(key_)
+        W = topos[topo_c or opening_c].W
+        if drops:
+            W = drop_renormalize_dense(W, drops)
+        return W, inner
+
+    def build_step(key_):
+        if key_ == OUTAGE_SPEC:
+            return _metric_step(prob, alpha_fn,
+                                jnp.eye(N_NODES, dtype=jnp.float32),
+                                Identity())
+        W, inner = resolve_W(key_)
+        return _metric_step(prob, alpha_fn, jnp.asarray(W, jnp.float32),
+                            WireCompressor(fmt=make_wire(inner)))
+
+    bank_size = 2 * len(LADDER) + 2
+    session = make_dcdgd_session(prob, opening.W, alpha_fn, key, None,
+                                 bank_size=bank_size, build_step=build_step)
+    probe = lambda: np.asarray(session.state.d)                 # noqa: E731
+    rate = RateComm(policy=ControllerPolicy(controller=rate_ctl,
+                                            probe_fn=probe,
+                                            cadence=RATE_CADENCE),
+                    n_leaves=1, cadence=RATE_CADENCE)
+    session.policy = Compose(rate, BudgetComm(policy=budget_pol),
+                             topo_comm, fault_comm)
+    res = session.run(STEPS)
+
+    # ---- references ------------------------------------------------------
+    # exact-wire (identity) run on the opening graph = convergence yardstick
+    ref = make_dcdgd_session(
+        prob, opening.W, alpha_fn, key, StaticComm("identity"),
+        build_step=lambda k: _metric_step(
+            prob, alpha_fn, jnp.asarray(opening.W, jnp.float32), Identity()))
+    ref_res = ref.run(STEPS)
+
+    # ---- audits ----------------------------------------------------------
+    def floor_at(step):
+        return topos[sched.active_at(step).canonical()].eta_min
+
+    rate_viols = sum(1 for d in rate_ctl.log
+                     if np.isfinite(d.predicted_snr)
+                     and d.predicted_snr < floor_at(d.step))
+    retargeted = [d.eta_bar for d in rate_ctl.log if d.step >= SWITCH]
+    budget_viols = sum(1 for _, b, _, bits, _ in budget_pol.spend_log
+                       if bits > b * (1 + 1e-9))
+
+    hist = res.metrics_arrays()
+    gap = hist["f_bar"] - prob.f_star
+    ref_gap = ref_res.metrics_arrays()["f_bar"] - prob.f_star
+    final_gap = float(np.mean(gap[-TAIL:]))
+    ref_final = float(np.mean(ref_gap[-TAIL:]))
+
+    distinct = sorted(set(res.plan_per_step), key=str)
+    builds = res.bank_stats["builds"]
+    topo_keys = {k[1] for k in res.plan_per_step
+                 if isinstance(k, tuple) and k[0] == "topo"}
+    fault_steps = sum(1 for k in res.plan_per_step if "fault" in str(k))
+
+    return {
+        "problem": f"quadratic_n{N_NODES}_d{DIM}",
+        "schedule": [(s, sp.canonical()) for s, sp in sched.entries],
+        "eta_min": {c: t.eta_min for c, t in topos.items()},
+        "budget_per_step": BUDGET,
+        "ladder": list(LADDER),
+        "fault_window": list(FAULT_WINDOW),
+        "steps": STEPS,
+        "final_gap": final_gap,
+        "ref_final_gap": ref_final,
+        "converged": bool(final_gap <= max(ref_final * CONV_TOL, 1e-6)
+                          or final_gap <= ref_final + 0.05),
+        "eta_min_violations_decisions": int(rate_viols),
+        "eta_min_violations_audit": int(topo_comm.violations),
+        "retargeted_floor": float(min(retargeted)) if retargeted else None,
+        "budget_violations": int(budget_viols),
+        "switch_log": [(s, old, new, em)
+                       for s, old, new, em in topo_comm.switch_log],
+        "bank": dict(res.bank_stats),
+        "bank_bound": bank_size,
+        "distinct_plans": [str(k) for k in distinct],
+        "no_recompiles_beyond_bank": bool(
+            builds == len(distinct) and res.bank_stats["evictions"] == 0),
+        "fault_steps": int(fault_steps),
+        "cum_bits": float(np.sum([b for *_, b, _ in budget_pol.spend_log])),
+    }
+
+
+def main():
+    ART.mkdir(parents=True, exist_ok=True)
+    out = run()
+    (ART / "BENCH_topology.json").write_text(json.dumps(out, indent=1))
+
+    print("name,step,from,to,eta_min")
+    for s, old, new, em in out["switch_log"]:
+        print(f"fig6-switch,{s},{old},{new},{em:.3g}")
+    print(f"fig6 final gap {out['final_gap']:.4f} "
+          f"(exact-wire ref {out['ref_final_gap']:.4f}); "
+          f"eta_min {out['eta_min']}")
+    print(f"fig6 eta_min violations: decisions="
+          f"{out['eta_min_violations_decisions']} "
+          f"audit={out['eta_min_violations_audit']}; "
+          f"budget violations={out['budget_violations']}; "
+          f"fault steps={out['fault_steps']}")
+    print(f"fig6 bank {out['bank']} (bound {out['bank_bound']}) "
+          f"plans={out['distinct_plans']}")
+    ok = (out["converged"]
+          and out["eta_min_violations_decisions"] == 0
+          and out["eta_min_violations_audit"] == 0
+          and out["budget_violations"] == 0
+          and out["no_recompiles_beyond_bank"]
+          and len(out["switch_log"]) == 1
+          and out["fault_steps"] > 0)
+    print(f"fig6 acceptance: {'ALL OK' if ok else 'FAIL'} "
+          f"-> {ART / 'BENCH_topology.json'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,7 @@ ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 # dict value checks every entry).
 _ARTIFACT_FLAGS = {
     "BENCH_gossip.json": ("bit_exact", "wire_bits_equal"),
+    "BENCH_topology.json": ("converged", "no_recompiles_beyond_bank"),
 }
 
 
@@ -53,7 +54,7 @@ def enforce_artifact_flags(rc: int, art_dir: Path = ART) -> int:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,fig4,fig5,roofline,wire")
+                    help="comma list: fig1,...,fig6,roofline,wire")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI probe: gossip-step microbenchmark "
                          "only (refreshes artifacts/bench/BENCH_gossip.json); "
@@ -63,7 +64,8 @@ def main(argv=None):
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
-                   fig4_adaptive, fig5_budget, roofline, wire_micro)
+                   fig4_adaptive, fig5_budget, fig6_topology, roofline,
+                   wire_micro)
     if args.smoke:
         print("==== gossip (smoke) ====", flush=True)
         return enforce_artifact_flags(wire_micro.main(smoke=True))
@@ -73,6 +75,7 @@ def main(argv=None):
         "fig3": fig3_realworld.main,
         "fig4": fig4_adaptive.main,
         "fig5": fig5_budget.main,
+        "fig6": fig6_topology.main,
         "wire": wire_micro.main,
         "roofline": roofline.main,
     }

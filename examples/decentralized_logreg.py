@@ -1,42 +1,58 @@
 """Real-world-style example (paper §V-3): 10-node decentralized logistic
 regression with a non-convex regularizer on Spambase-scale data, non-i.i.d.
-label-skew split, comparing communication cost across methods.
+label-skew split, comparing communication cost across methods — driven
+through the typed front doors: the graph is a ``repro.topology.TopoSpec``
+(``"fig3b"``), and every DC-DGD variant runs as a
+``repro.comm.TrainSession`` (``make_dcdgd_session`` + a CommPolicy), the
+same driver the launcher and benchmarks use.
 
     PYTHONPATH=src python examples/decentralized_logreg.py
 """
 import jax
 import numpy as np
 
-from repro.core import baselines, consensus as cons, dcdgd, problems
-from repro.core.compressors import HybridChain, Sparsifier, Ternary
+from repro.adapt import make_dcdgd_session
+from repro.comm import StaticComm
+from repro.core import baselines, consensus as cons, problems
+from repro.topology import TopoSpec, topology
+
+
+def session_run(prob, topo, spec, alpha, steps, key):
+    """One DC-DGD variant as a TrainSession over the dcdgd backend: the
+    plan key is the compressor spec, the policy is the static baseline."""
+    session = make_dcdgd_session(prob, topo, alpha, key, StaticComm(spec))
+    res = session.run(steps)
+    out = res.metrics_arrays()
+    out["cum_bits"] = np.cumsum(out["bits"])
+    return out
 
 
 def main():
     X, y = problems.spambase_like_data(n=4601, d=57, seed=7)
     prob = problems.logreg_nonconvex(X, y, n_nodes=10, rho=0.1, iid=False)
-    W = cons.fig3_topology_b()
-    s = cons.spectrum(W)
-    eta_min = s.snr_threshold
-    print(f"10-node graph: lambda_N={s.lambda_n:.3f} beta={s.beta:.3f} "
-          f"SNR threshold {eta_min:.2f}\n")
+    spec = TopoSpec.parse("fig3b")          # the paper's denser 10-node graph
+    W = topology(spec)
+    eta_min = W.eta_min
+    print(f"10-node graph {spec.canonical()!r}: lambda_N={W.lambda_n:.3f} "
+          f"beta={W.beta:.3f} SNR threshold {eta_min:.2f}\n")
 
     alpha, steps = 0.08, 600
+    p_safe = min(cons.sparsifier_p_threshold(W) + 0.1, 0.9)
+    key = jax.random.PRNGKey(0)
     runs = {
         "DGD (uncompressed)": lambda: baselines.run_baseline(
-            "dgd", prob, W, alpha, steps, jax.random.PRNGKey(0)),
+            "dgd", prob, W, alpha, steps, key),
         "QDGD (int8)": lambda: baselines.run_baseline(
-            "qdgd", prob, W, alpha, steps, jax.random.PRNGKey(0)),
+            "qdgd", prob, W, alpha, steps, key),
         "ADC-DGD (int8, g=1.2)": lambda: baselines.run_baseline(
-            "adc-dgd", prob, W, alpha, steps, jax.random.PRNGKey(0)),
-        "DC-DGD sparsifier": lambda: dcdgd.run(
-            prob, W, Sparsifier(p=min(cons.sparsifier_p_threshold(W) + 0.1,
-                                      0.9)),
-            alpha, steps, jax.random.PRNGKey(0)),
-        "DC-DGD ternary": lambda: dcdgd.run(
-            prob, W, Ternary(), alpha, steps, jax.random.PRNGKey(0)),
-        "DC-DGD hybrid": lambda: dcdgd.run(
-            prob, W, HybridChain(eta=max(1.25 * eta_min, 1.0)), alpha, steps,
-            jax.random.PRNGKey(0)),
+            "adc-dgd", prob, W, alpha, steps, key),
+        "DC-DGD sparsifier": lambda: session_run(
+            prob, W, f"sparsifier:p={p_safe}", alpha, steps, key),
+        "DC-DGD ternary": lambda: session_run(
+            prob, W, "ternary", alpha, steps, key),
+        "DC-DGD hybrid": lambda: session_run(
+            prob, W, f"hybrid:eta={max(1.25 * eta_min, 1.0)}", alpha,
+            steps, key),
     }
     print(f"{'method':26s} {'final |grad|^2':>14s} {'Mbits to 3% err':>16s}")
     for name, fn in runs.items():

@@ -1,6 +1,10 @@
 """Fault-tolerance walkthrough: decentralized training survives a node
-failure, a node join, simulated link outages, and a checkpoint restart —
-the DESIGN.md §6 story, executable on CPU.
+failure, a node join, simulated link faults, and a checkpoint restart —
+the DESIGN.md §6 story, executable on CPU, driven through the typed front
+doors: graphs are ``repro.topology`` objects (Membership rebuilds one per
+change and re-derives eta_min), every training segment is a
+``repro.comm.TrainSession``, and the straggling-link segment composes a
+``FaultComm`` over the static policy (drop-and-renormalize per step).
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
@@ -10,30 +14,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adapt import make_dcdgd_session
+from repro.adapt.runner import _metric_step
 from repro.ckpt import restore, save
-from repro.core import consensus as cons, dcdgd, problems
-from repro.core.compressors import Sparsifier
-from repro.core.gossip import GossipPlan, make_plan  # noqa: F401
+from repro.comm import Compose, FaultComm, StaticComm
+from repro.core import dcdgd, problems
+from repro.core.compressors import make_compressor
 from repro.runtime.elastic import Membership, apply_state_plan, \
     rebuild_consensus
-from repro.runtime.fault import StragglerSim, drop_renormalize_plan
+from repro.runtime.fault import StragglerSim, drop_renormalize_dense, \
+    peel_plan_key
+
+SPEC = "sparsifier:p=0.8"
+ALPHA = 0.08
 
 
-def grad_step(prob, W, x, s, key, comp, alpha=0.08, drop=None):
-    Wj = jnp.asarray(W, jnp.float32)
-    if drop:  # drop-and-renormalize: fold dropped edge weight into self
-        W = W.copy()
-        i, j = drop
-        w = W[i, j]
-        W[i, j] = W[j, i] = 0.0
-        W[i, i] += w
-        W[j, j] += w
-        Wj = jnp.asarray(W, jnp.float32)
-    g = prob.grad(x)
-    d = s - alpha * g
+def warm_state(prob, x0, key):
+    """DCDGDState warm-started at x0 with the residual RESET (s = 0, i.e.
+    y = x — the apply_state_plan convention after a membership change)."""
+    d1 = jax.tree.map(lambda g: -ALPHA * g, prob.grad(x0))
+    return dcdgd.DCDGDState(x=x0, y=x0, d=d1, t=jnp.int32(1), key=key)
+
+
+def run_segment(prob, m, x0, key, steps, policy=None, build_step=None):
+    """One training segment on the CURRENT membership graph, through the
+    one TrainSession driver.  Returns (x, s) for the next state-carry."""
+    session = make_dcdgd_session(prob, m.topo, ALPHA, key,
+                                 policy or StaticComm(SPEC),
+                                 build_step=build_step)
     key, sub = jax.random.split(key)
-    c = dcdgd._node_compress(comp, sub, d)
-    return x + c, s + dcdgd._mix(Wj, c) - c, key
+    session.state = warm_state(prob, x0, sub)
+    res = session.run(steps)
+    st = res.state
+    return st.x, st.y - st.x, key
 
 
 def gnorm(prob, x):
@@ -41,18 +54,17 @@ def gnorm(prob, x):
 
 
 def main():
-    comp = Sparsifier(p=0.8)
+    comp_snr = make_compressor(SPEC).snr_lower_bound(8)
     m = Membership(node_ids=[0, 1, 2, 3, 4], topology="ring")
     prob = problems.quadratic(n_nodes=5, dim=8, seed=3)
-    info = rebuild_consensus(m, comp.snr_lower_bound(8))
-    print(f"[gate] 5-node ring: eta_min={info['eta_min']:.3f} ok={info['ok']}")
+    info = rebuild_consensus(m, comp_snr)
+    print(f"[gate] 5-node {m.topo.canonical()!r}: "
+          f"eta_min={info['eta_min']:.3f} ok={info['ok']}")
 
     x = jnp.zeros((5, 8))
-    s = jnp.zeros((5, 8))
     key = jax.random.PRNGKey(0)
-    for _ in range(120):
-        x, s, key = grad_step(prob, m.W, x, s, key, comp)
-    print(f"[train] 120 steps, |grad|^2 = {gnorm(prob, x):.2e}")
+    x, s, key = run_segment(prob, m, x, key, 120)
+    print(f"[train] 120 session steps, |grad|^2 = {gnorm(prob, x):.2e}")
 
     # --- checkpoint, then simulate a crash + restart ---
     with tempfile.TemporaryDirectory() as d:
@@ -62,32 +74,53 @@ def main():
         print(f"[ckpt] restart drift: "
               f"{float(jnp.abs(x2['x'] - x).max()):.1e} (exact)")
 
-    # --- node 2 dies ---
+    # --- node 2 dies: Membership rebuilds the Topology, the gate re-runs ---
     plan = m.leave(2)
     x, s = apply_state_plan(x, s, plan)
     prob4 = problems.quadratic(n_nodes=4, dim=8, seed=3)
-    print(f"[leave] node 2 gone; W rebuilt "
-          f"(doubly stochastic: {np.allclose(m.W.sum(0), 1)})")
-    for _ in range(120):
-        x, s, key = grad_step(prob4, m.W, x, s, key, comp)
+    info = rebuild_consensus(m, comp_snr)
+    print(f"[leave] node 2 gone; {m.topo.canonical()!r} rebuilt "
+          f"(eta_min={info['eta_min']:.3f}, doubly stochastic: "
+          f"{np.allclose(m.W.sum(0), 1)})")
+    x, s, key = run_segment(prob4, m, x, key, 120)
     print(f"[train] post-failure |grad|^2 = {gnorm(prob4, x):.2e}")
 
-    # --- straggling link: drop-and-renormalize for 30 steps ---
+    # --- straggling links: FaultComm composes over the static policy ---
+    n_edges = int(m.topo.adj.sum()) // 2
     sim = StragglerSim(prob=0.5, seed=7)
-    for t in range(30):
-        drop = (0, 1) if sim.dropped(t, 1) else None
-        x, s, key = grad_step(prob4, m.W, x, s, key, comp, drop=drop)
-    print(f"[straggler] 30 steps with 50% outage on edge (0,1): "
+
+    def build_step(key_):
+        # plan keys are the spec, ("fault", drops, spec), or "outage"
+        # (every edge out that step): lower drops by renormalizing W —
+        # the same rule runtime.fault applies to circulant offsets
+        from repro.core.compressors import Identity
+        from repro.runtime.fault import OUTAGE_SPEC
+        if key_ == OUTAGE_SPEC:
+            return _metric_step(prob4, lambda t: ALPHA,
+                                jnp.eye(m.n, dtype=jnp.float32), Identity())
+        _, drops, inner = peel_plan_key(key_)
+        W = drop_renormalize_dense(m.W, drops)
+        return _metric_step(prob4, lambda t: ALPHA,
+                            jnp.asarray(W, jnp.float32),
+                            make_compressor(inner))
+
+    faulty = Compose(StaticComm(SPEC),
+                     FaultComm(sim=sim, n_classes=n_edges))
+    x, s, key = run_segment(prob4, m, x, key, 30, policy=faulty,
+                            build_step=build_step)
+    print(f"[straggler] 30 steps with 50% per-edge faults "
+          f"(FaultComm over {n_edges} edges): "
           f"|grad|^2 = {gnorm(prob4, x):.2e}")
 
     # --- a new node joins, warm-started from a neighbor ---
     plan = m.join(9)
     x, s = apply_state_plan(x, s, plan)
     prob5 = problems.quadratic(n_nodes=5, dim=8, seed=3)
-    for _ in range(150):
-        x, s, key = grad_step(prob5, m.W, x, s, key, comp)
-    print(f"[join] node 9 joined (neighbor-copy init); "
-          f"|grad|^2 = {gnorm(prob5, x):.2e}")
+    info = rebuild_consensus(m, comp_snr)
+    print(f"[join] node 9 joined {m.topo.canonical()!r} "
+          f"(eta_min={info['eta_min']:.3f}, neighbor-copy init)")
+    x, s, key = run_segment(prob5, m, x, key, 150)
+    print(f"[train] post-join |grad|^2 = {gnorm(prob5, x):.2e}")
     print("elastic failover cycle complete")
 
 

@@ -11,12 +11,13 @@ import numpy as np
 
 from repro.core import baselines, consensus as cons, dcdgd, problems
 from repro.core.compressors import HybridChain, Sparsifier, Ternary
+from repro.topology import topology
 
 
 def main():
     prob = problems.paper_objective_5node(dim=5, seed=0)
-    W = cons.W1_PAPER
-    s = cons.spectrum(W)
+    W = topology("w1")            # the paper's 5-node circle matrix
+    s = W.spectrum
     print(f"consensus: 5-node circle, lambda_N={s.lambda_n:.3f}, "
           f"beta={s.beta:.3f}")
     print(f"Theorem-1 SNR threshold: {s.snr_threshold:.3f} "

@@ -52,12 +52,19 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
     COMMON=(--arch qwen3-8b --smoke --steps 6 --seq-len 64 --global-batch 8
             --optimizer sgd --alpha 0.05 --log-every 2 --adapt-interval 2
             --adapt-ladder "$LADDER")
-    modes=(static adapt budget composed)
+    modes=(static adapt budget composed topology)
     declare -A FLAGS=(
         [static]=""
         [adapt]="--adapt"
         [budget]="--bit-budget 1200000 --token-bucket"
         [composed]="--adapt --compose --bit-budget 1200000 --outage-windows 2-4"
+        # time-varying topology: torus:4x2 (dense lowering on the linear
+        # 8-node mesh) -> ring (circulant) at step 3, composed with rate +
+        # hard budget + per-edge faults; the checker additionally gates on
+        # eta_min_violations == 0 (the TopologyComm retarget audit)
+        [topology]="--mesh 8x1 --adapt --compose --bit-budget 2400000
+                    --topology torus:4x2 --topo-schedule 3:ring
+                    --edge-drop-prob 0.2"
     )
     rc=0
     for mode in "${modes[@]}"; do
@@ -75,8 +82,14 @@ assert rows, "no metrics rows"
 need = {"loss", "step", "wall_s", "grad_norm"}
 if mode != "static":
     need.add("wire")
+if mode == "topology":
+    need |= {"topology", "eta_min", "eta_min_violations"}
 missing = need - set(rows[-1])
 assert not missing, f"missing metrics keys: {sorted(missing)}"
+if mode == "topology":
+    assert rows[-1]["eta_min_violations"] == 0, \
+        f"eta_min violations: {rows[-1]['eta_min_violations']}"
+    assert rows[-1]["topology"] == "ring", rows[-1]["topology"]
 print(f"cli-smoke {mode}: OK ({len(rows)} rows, "
       f"final loss {rows[-1]['loss']:.3f})")
 PY

@@ -29,21 +29,35 @@ far fewer bits at the same SNR margin.  This subsystem closes that loop:
                   TokenBucket, deadline-aware WallClockBudgetSchedule).
   runner.py     — DEPRECATED driver wrappers (see below).
 
-The repro.comm front door
--------------------------
+The repro.comm / repro.topology front doors
+-------------------------------------------
 As of the unified-comm refactor, this package supplies the MECHANISMS
-(telemetry, controllers, ladder policies, the plan bank) while the API
-every scenario programs against lives in :mod:`repro.comm`:
+(telemetry, controllers, ladder policies, the plan bank) while the APIs
+every scenario programs against live in :mod:`repro.comm` (the wire side)
+and :mod:`repro.topology` (the graph side):
 
   * spec strings are parsed ONCE by ``repro.comm.WireSpec``
     (grammar ``["wire:"] name[:k=v,...]`` | ``"outage"``; ``canonical()``
     is the PlanBank/rung-key domain) — ``make_wire`` / ``make_compressor``
-    and ``ladder_from_specs`` are shims over it;
+    and ``ladder_from_specs`` are shims over it, and ``AdaptConfig.ladder``
+    carries parsed WireSpec objects (a typo fails at config build);
+  * consensus GRAPHS are parsed once by ``repro.topology.TopoSpec``
+    (``ring[:hops=2] | torus:4x2 | erdos:p=0.3,... | file:path``) and
+    owned by ``repro.topology.Topology`` — which caches the spectral
+    quantities every controller here binds on (``eta_min``, ``beta``,
+    ``alpha_max``) and decides the gossip lowering.  Controllers are
+    retargetable: a composed ``TopologyComm`` pushes the new graph's
+    eta_min (and link-cost neighbor multiplier) into the rate/budget
+    members on a mid-run switch, so plan-bank keys extend to
+    ``(topo_canonical, rung_vector)`` and a graph change never recompiles
+    beyond the bank bound;
   * scenario behavior implements the ``repro.comm.CommPolicy`` protocol
     (``observe(StepTelemetry)``, ``decide(step) -> PerLeafPlan | None``);
     the legacy ``Policy`` classes here are wrapped by the RateComm /
     BudgetComm / OutageComm adapters and stacked with ``Compose`` (budget
-    caps rate's proposal; an outage window overrides both to W_t = I);
+    caps rate's proposal; an outage window overrides both to W_t = I; a
+    ``FaultComm`` rides per-edge drop-and-renormalize faults on the final
+    plan; a ``TopologyComm`` resolves the active graph first);
   * the ONE driver loop is ``repro.comm.TrainSession`` — there is no
     scenario-specific runner loop anymore.  :func:`adaptive_run` and
     :func:`budgeted_run` survive ONLY as deprecated wrappers that build a
@@ -52,7 +66,9 @@ every scenario programs against lives in :mod:`repro.comm`:
     ``Trainer.comm_session`` directly::
 
         from repro.comm import TrainSession
-        session = make_dcdgd_session(problem, W, alpha, key, policy)
+        from repro.topology import topology
+        session = make_dcdgd_session(problem, topology("w1"), alpha, key,
+                                     policy)
         result = session.run(n_steps)          # result.metrics_arrays()
 
 The wire ladder
@@ -75,9 +91,10 @@ while its measured SNR is provably above the bar).
 
 The eta_min gate
 ----------------
-eta_min = (1 - lambda_N) / (1 + lambda_N) of the active consensus matrix —
+eta_min = (1 - lambda_N) / (1 + lambda_N) of the ACTIVE consensus graph —
 the same Theorem-1 threshold `consensus.validate_compressor_for_topology`
-enforces at launch.  The controller is constructed via
+enforces at launch, and a live property of ``repro.topology.Topology``
+(``topo.eta_min``, cached).  The controller is constructed via
 ``RateController.for_topology(W, ladder)``, which requires at least one
 rung with a GUARANTEED bound above eta_min (the retreat anchor) and raises
 the identical launch-gate error otherwise.  Selection never drops a layer
@@ -85,7 +102,11 @@ below eta_min even under the aggregate knapsack relaxation, and the
 SNR-feedback policy force-climbs the ladder whenever the measured SNR of
 the active wire dips under the floor — so adaptation can only ever run
 FASTER than the static valid configuration, never outside the paper's
-convergence conditions.
+convergence conditions.  Under a time-varying graph the floor MOVES:
+``TopologyComm.maybe_switch`` retargets every composed controller's
+eta_min at the switch step, before any decision is made against the new
+graph, and audits sustained below-floor operation as
+``eta_min_violations`` (asserted zero by fig6 and the CLI smoke).
 
 The budget contract (the dual problem)
 --------------------------------------

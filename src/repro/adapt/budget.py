@@ -249,12 +249,24 @@ class BudgetController:
                     f"BudgetController rungs must be WIRE formats (flat-"
                     f"layout costing); got {r.spec!r} at level=compressor — "
                     f"build the ladder with ladder_from_specs(level='wire')")
+        self._rebuild_cost_table()
+
+    def _rebuild_cost_table(self) -> None:
         # leaf-local cost table: shapes and ladder are static, so the
-        # upgrade ordering per leaf is precomputed once
+        # upgrade ordering per leaf is precomputed once (re-derived only
+        # when a topology switch changes the neighbor multiplier)
         self._leaf_cost = [
             [wirelib.per_leaf_flat_bits([r.codec], [s])[0] * self.neighbors
              for r in self.ladder]
             for s in self.shapes]
+
+    def set_neighbors(self, neighbors: int) -> None:
+        """Re-base the link-cost model on a new gossip neighbor count —
+        the topology-switch hook (``BudgetComm.retarget``): the same rung
+        vector costs ``n_out`` times one encode's bits, and ``n_out`` is
+        a property of the active graph."""
+        self.neighbors = int(neighbors)
+        self._rebuild_cost_table()
 
     @classmethod
     def for_plan(cls, plan, ladder_specs: Sequence[str],

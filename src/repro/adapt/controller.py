@@ -72,12 +72,16 @@ class Rung:
             return None
 
 
-def ladder_from_specs(specs: Sequence[str], level: str = "compressor"
+def ladder_from_specs(specs: Sequence, level: str = "compressor"
                       ) -> Tuple[Rung, ...]:
-    """Build rungs from config strings; ``level`` picks the codec registry
-    ("compressor" = math-level, "wire" = packed formats)."""
+    """Build rungs from config specs; ``level`` picks the codec registry
+    ("compressor" = math-level, "wire" = packed formats).  Entries may be
+    strings or typed ``repro.comm.WireSpec`` objects (the AdaptConfig
+    ladder is WireSpec-typed) — ``Rung.spec`` stays the canonical STRING
+    either way, so decision logs and plan-bank keys are unchanged."""
     make = make_compressor if level == "compressor" else make_wire
-    return tuple(Rung(spec=s, codec=make(s)) for s in specs)
+    return tuple(Rung(spec=s if isinstance(s, str) else str(s),
+                      codec=make(s)) for s in specs)
 
 
 def hybrid_rung_for(z: np.ndarray, eta: float, level: str = "compressor"

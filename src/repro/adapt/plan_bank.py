@@ -9,9 +9,14 @@ benchmark harness) can assert that a REPEATED switch is a dictionary
 lookup, not a compilation.
 
 Keys are any hashable the injected builder understands: a single spec
-string, or a tuple of per-leaf specs (use :func:`rung_key` to normalize a
+string, a tuple of per-leaf specs (use :func:`rung_key` to normalize a
 controller's ``select_joint`` decision list) — each distinct rung vector is
-its own jitted flat plan.
+its own jitted flat plan — or the TAGGED forms the composed scenarios
+emit, ``("topo", topo_canonical, inner)`` for a time-varying consensus
+graph and ``("fault", drops, inner)`` for per-edge drop-and-renormalize
+faults (``Trainer.plan_for_wire`` lowers both; see ``repro.comm.policy.
+PerLeafPlan.key``).  A graph switch or a fault pattern is therefore a
+dict lookup like any rung switch, never a recompile.
 
 The bank is deliberately generic — the value builder is injected — so the
 same class backs

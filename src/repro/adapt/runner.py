@@ -60,7 +60,9 @@ def make_dcdgd_session(problem, W: np.ndarray, alpha, key: jax.Array,
 
     ``build_step(key) -> step_fn`` overrides the default compressor-level
     builder (the budgeted scenario routes keys through WireCompressor so
-    the bits shipped are exactly the bits budgeted)."""
+    the bits shipped are exactly the bits budgeted).  ``W`` is a consensus
+    matrix or a :class:`repro.topology.Topology`."""
+    W = getattr(W, "W", W)
     Wj = jnp.asarray(W, jnp.float32)
     n = W.shape[0]
     params_like = jnp.zeros((n, problem.dim), jnp.float32)
@@ -86,7 +88,7 @@ def _legacy_out(res: SessionResult) -> dict:
     return out
 
 
-def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
+def adaptive_run(problem, W, ladder_specs: Sequence[str],
                  alpha, n_steps: int, key: jax.Array, *,
                  margin: float = 1.25, cadence: int = 25,
                  policy: Optional[Policy] = None,
@@ -99,6 +101,7 @@ def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
     a RateController validated for this W (raises, exactly like the launch
     gate, if no rung's guaranteed SNR clears the Theorem-1 bar).
     """
+    W = getattr(W, "W", W)
     controller = None
     session = make_dcdgd_session(problem, W, alpha, key, None,
                                  bank_size=bank_size)
@@ -129,7 +132,7 @@ def adaptive_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
     return out
 
 
-def budgeted_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
+def budgeted_run(problem, W, ladder_specs: Sequence[str],
                  alpha, n_steps: int, key: jax.Array, *,
                  schedule, token_bucket: bool = False,
                  bucket_cap_steps: float = 4.0, cadence: int = 10,
@@ -160,6 +163,7 @@ def budgeted_run(problem, W: np.ndarray, ladder_specs: Sequence[str],
     from ..runtime.fault import OUTAGE_SPEC
     from .budget import BudgetController, TokenBucket
 
+    W = getattr(W, "W", W)
     Wj = jnp.asarray(W, jnp.float32)
     n = W.shape[0]
     I = jnp.eye(n, dtype=jnp.float32)

@@ -14,9 +14,15 @@ of the repo now goes through:
   policy.py   — :class:`CommPolicy` protocol (``observe(StepTelemetry)``,
                 ``decide(step) -> PerLeafPlan | None``) plus adapters for
                 every existing behavior (StaticComm, RateComm, BudgetComm,
-                OutageComm) and the :class:`Compose` combinator: budget
-                caps rate's proposal, an outage window overrides both to
-                the W_t = I blackout plan.
+                OutageComm, FaultComm for per-edge drop-and-renormalize
+                faults) and the :class:`Compose` combinator: a
+                ``repro.topology.TopologyComm`` member resolves the
+                active graph first (retargeting every member's Theorem-1
+                floor on a switch), budget caps rate's proposal, an
+                outage window overrides both to the W_t = I blackout
+                plan, and fault drops ride on the final plan.  Plan keys
+                extend to ``("topo", canonical, inner)`` /
+                ``("fault", drops, inner)``.
   session.py  — :class:`TrainSession`: the ONE driver loop (plan-bank
                 switching, telemetry feedback, logging / checkpoint
                 hooks).  ``launch/train.py``, ``benchmarks/fig4`` /
@@ -37,14 +43,14 @@ Quick example (a budget-capped adaptive trainer session)::
     result = session.run(n_steps)
 """
 from .policy import (OUTAGE_PLAN, BudgetComm, CommPolicy, Compose,
-                     OutageComm, PerLeafPlan, RateComm, StaticComm,
-                     StepTelemetry)
+                     FaultComm, OutageComm, PerLeafPlan, RateComm,
+                     StaticComm, StepTelemetry)
 from .session import SessionResult, TrainSession
 from .wirespec import OUTAGE, WireSpec, canonical_key
 
 __all__ = [
     "WireSpec", "OUTAGE", "canonical_key",
     "CommPolicy", "PerLeafPlan", "StepTelemetry", "OUTAGE_PLAN",
-    "StaticComm", "RateComm", "BudgetComm", "OutageComm", "Compose",
-    "TrainSession", "SessionResult",
+    "StaticComm", "RateComm", "BudgetComm", "OutageComm", "FaultComm",
+    "Compose", "TrainSession", "SessionResult",
 ]

@@ -48,7 +48,9 @@ import numpy as np
 
 from .wirespec import OUTAGE_NAME, WireSpec, canonical_key
 
-Key = Union[str, Tuple[str, ...]]
+# a bank key: canonical spec string, rung-vector tuple, or the tagged
+# ("topo", canonical, inner) / ("fault", drops, inner) forms
+Key = Union[str, Tuple[Any, ...]]
 
 
 # ---------------------------------------------------------------------------
@@ -74,16 +76,29 @@ class StepTelemetry:
 class PerLeafPlan:
     """One step's transmission plan: a rung VECTOR (one WireSpec per
     gossiped leaf; length-1 = the same rung on every leaf) or the OUTAGE
-    blackout (W_t = I, exact local update, zero link bits).
+    blackout (W_t = I, exact local update, zero link bits), optionally
+    tagged with the active consensus graph (``topo``, a canonical
+    :class:`repro.topology.TopoSpec` string set by a composed
+    TopologyComm) and/or per-edge fault drops (``drops``, indices into
+    the gossip plan's non-self offset classes, set by a composed
+    FaultComm — the drop-renormalize rule of ``runtime.fault``).
 
     ``key()`` is the PlanBank key — canonical spec strings with uniform
-    vectors collapsed, so plans map 1:1 onto the pre-built jitted steps
+    vectors collapsed, extended to tagged tuples ``("topo", canonical,
+    inner)`` / ``("fault", drops, inner)`` for graph-switching and
+    faulty-link plans — so plans map 1:1 onto the pre-built jitted steps
     and a policy switch can never silently recompile."""
     specs: Tuple[WireSpec, ...] = ()
     outage: bool = False
+    topo: Optional[str] = None           # canonical TopoSpec string
+    drops: Tuple[int, ...] = ()          # dropped offset-class indices
 
     def __post_init__(self):
         assert self.outage or self.specs, "empty plan"
+        if self.drops:
+            object.__setattr__(self, "drops",
+                               tuple(sorted(set(int(d)
+                                                for d in self.drops))))
 
     @classmethod
     def uniform(cls, spec) -> "PerLeafPlan":
@@ -117,8 +132,15 @@ class PerLeafPlan:
 
     def key(self) -> Key:
         if self.outage:
+            # the blackout is W_t = I on ANY graph and drops nothing: one
+            # shared bank entry regardless of topo/fault tags
             return OUTAGE_NAME
-        return canonical_key(self.specs)
+        k: Any = canonical_key(self.specs)
+        if self.drops:
+            k = ("fault", self.drops, k)
+        if self.topo is not None:
+            k = ("topo", self.topo, k)
+        return k
 
 
 OUTAGE_PLAN = PerLeafPlan(outage=True)
@@ -204,6 +226,19 @@ class RateComm:
             self._held = nxt
         return nxt
 
+    def retarget(self, eta_min: float, neighbors: Optional[int] = None
+                 ) -> None:
+        """Topology-switch hook (TopologyComm): repoint the wrapped
+        policy's Theorem-1 floor at the new graph's eta_min so the
+        hysteresis bands / knapsack bars re-solve against the live
+        threshold (no recompile — the next decide just uses it)."""
+        p = self.policy
+        if hasattr(p, "eta_min"):
+            p.eta_min = float(eta_min)
+        ctl = getattr(p, "controller", None)
+        if ctl is not None and hasattr(ctl, "eta_min"):
+            ctl.eta_min = float(eta_min)
+
 
 @dataclasses.dataclass
 class BudgetComm:
@@ -278,6 +313,19 @@ class BudgetComm:
                                  proposal_bits=self.plan_cost(proposal))
         return PerLeafPlan.from_key(key)
 
+    def retarget(self, eta_min: float, neighbors: Optional[int] = None
+                 ) -> None:
+        """Topology-switch hook (TopologyComm): the audit floor moves to
+        the new graph's eta_min and — because the wire-bits -> link-bits
+        multiplier is the graph's neighbor count — the cost model is
+        re-based and the plan-cost cache dropped, so the very next cap /
+        re-solve budgets against the new graph's real link cost."""
+        ctl = self.policy.controller
+        ctl.eta_min = float(eta_min)
+        if neighbors is not None and neighbors != ctl.neighbors:
+            ctl.set_neighbors(int(neighbors))
+        self._cost_cache.clear()
+
 
 @dataclasses.dataclass
 class OutageComm:
@@ -312,19 +360,66 @@ class OutageComm:
         return cls(windows=tuple(wins))
 
 
+@dataclasses.dataclass
+class FaultComm:
+    """Partial per-edge link faults as a Compose member — the CommPolicy
+    route for ``runtime.fault``'s straggler simulation, so drop-and-
+    renormalize composes with rate/budget control instead of owning a
+    private driver (the old ``gossip_with_outages`` path).
+
+    ``sim`` is a ``runtime.fault.StragglerSim``-like (``dropped(step,
+    n_classes) -> [class indices]``); ``n_classes`` is the number of
+    non-self offset classes of the ACTIVE gossip plan.  Each decided
+    step, Compose applies :meth:`drops_at` to the final plan: the dropped
+    classes ride in ``PerLeafPlan.drops`` (bank key ``("fault", drops,
+    inner)``), the trainer lowers them through
+    ``runtime.fault.drop_renormalize_plan`` (W_t stays symmetric doubly
+    stochastic), and a step with EVERY class out degenerates to the
+    OUTAGE blackout.  Like OutageComm, this member never proposes a plan
+    of its own — compose it over a base policy.
+
+    Budget interaction: drops are applied AFTER the budget cap, so the
+    ledger charges the no-fault cost — a conservative upper bound (a
+    dropped edge ships fewer real bits than budgeted, never more)."""
+    sim: Any                          # StragglerSim-like
+    n_classes: int
+    consumes_telemetry = False
+
+    def drops_at(self, step: int) -> Tuple[int, ...]:
+        if self.n_classes <= 0:
+            return ()
+        return tuple(sorted(k for k in self.sim.dropped(step, self.n_classes)
+                            if 0 <= k < self.n_classes))
+
+    def observe(self, t: StepTelemetry) -> None:
+        pass
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        return None
+
+
 class Compose:
-    """Stack rate + budget + outage behaviors in one policy.
+    """Stack rate + budget + outage + topology + fault behaviors in one
+    policy.
 
     Precedence (most to least authoritative):
-      1. an OutageComm window overrides everything to the blackout plan;
-      2. a BudgetComm caps whatever was proposed — adopting a fitting
+      1. a TopologyComm resolves the active consensus graph FIRST — on a
+         switch it retargets every member's Theorem-1 floor / neighbor
+         multiplier before anyone decides, and it tags the final plan
+         with the graph (bank key ``("topo", canonical, inner)``);
+      2. an OutageComm window overrides everything to the blackout plan;
+      3. a BudgetComm caps whatever was proposed — adopting a fitting
          proposal's exact bits into its ledger, re-solving under the
          budget otherwise (a blackout proposal always fits: 0 bits);
-      3. the remaining members propose in order; the first with an opinion
-         this step wins, and the last opinion is held across silent steps.
+      4. the remaining members propose in order; the first with an opinion
+         this step wins, and the last opinion is held across silent steps;
+      5. FaultComm drops ride on the FINAL plan (``PerLeafPlan.drops``;
+         every class out = the blackout plan) — a fault mutates how the
+         chosen plan is lowered, it never chooses the plan.
 
     ``observe`` fans out to every member, so each keeps its own telemetry
-    view.  At most one BudgetComm may be composed (one ledger)."""
+    view.  At most one BudgetComm may be composed (one ledger), at most
+    one TopologyComm (one active graph)."""
 
     def __init__(self, *policies: CommPolicy):
         assert policies, "Compose needs at least one policy"
@@ -333,9 +428,17 @@ class Compose:
         budgets = [p for p in policies if isinstance(p, BudgetComm)]
         assert len(budgets) <= 1, "at most one BudgetComm (one ledger)"
         self.budget: Optional[BudgetComm] = budgets[0] if budgets else None
+        self.faults: List[FaultComm] = [
+            p for p in policies if isinstance(p, FaultComm)]
+        # TopologyComm lives in repro.topology (duck-typed here to keep
+        # this module importable without the jax-heavy core registries)
+        topos = [p for p in policies if hasattr(p, "maybe_switch")]
+        assert len(topos) <= 1, "at most one TopologyComm (one graph)"
+        self.topo = topos[0] if topos else None
+        special = set(map(id, self.outages)) | set(map(id, self.faults)) \
+            | {id(self.budget), id(self.topo)}
         self.proposers: List[CommPolicy] = [
-            p for p in policies
-            if not isinstance(p, (OutageComm, BudgetComm))]
+            p for p in policies if id(p) not in special]
         self.members: Tuple[CommPolicy, ...] = tuple(policies)
         self._held: Optional[PerLeafPlan] = None
         self._last: Optional[PerLeafPlan] = None
@@ -357,6 +460,10 @@ class Compose:
             p.observe(t)
 
     def decide(self, step: int) -> Optional[PerLeafPlan]:
+        if self.topo is not None:
+            # resolve the active graph BEFORE anyone decides: floors and
+            # neighbor multipliers must be live when proposals are solved
+            self.topo.maybe_switch(step, self.members)
         for p in self.proposers:
             d = p.decide(step)
             if d is not None:
@@ -367,6 +474,18 @@ class Compose:
             proposal = OUTAGE_PLAN
         out = (self.budget.cap(step, proposal) if self.budget is not None
                else proposal)
+        if self.faults and out is not None and not out.outage:
+            drops: set = set()
+            for f in self.faults:
+                drops.update(f.drops_at(step))
+            if drops:
+                n_classes = max(f.n_classes for f in self.faults)
+                out = (OUTAGE_PLAN if len(drops) >= n_classes
+                       else dataclasses.replace(out,
+                                                drops=tuple(sorted(drops))))
+        if self.topo is not None and out is not None:
+            out = self.topo.annotate(step, out)
+            self.topo.audit(step, out)
         if out is not None:
             self._last = out
         return out

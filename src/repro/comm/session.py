@@ -8,7 +8,10 @@ it once:
 
   * **plan execution** — the active :class:`~repro.comm.policy.PerLeafPlan`
     keys into a :class:`~repro.adapt.plan_bank.PlanBank` of pre-built
-    jitted steps, so a policy switch is a dict lookup, never a recompile;
+    jitted steps, so a policy switch is a dict lookup, never a recompile
+    (this includes the tagged ``("topo", ...)`` / ``("fault", ...)`` keys
+    of time-varying-graph and link-fault scenarios — the session is
+    agnostic to what a key means, the bank's builder lowers it);
   * **telemetry** — each step's differential / noise powers (either the
     trainer's ``diff_power_leaves`` vectors or the dcdgd runners' scalar
     ``differential_power``) plus measured wall time flow back into

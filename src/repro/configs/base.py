@@ -1,8 +1,14 @@
-"""Config dataclasses: architecture, input shapes, run/distribution options."""
+"""Config dataclasses: architecture, input shapes, run/distribution options.
+
+Communication-facing fields are TYPED at config build time: wire ladders
+parse to :class:`repro.comm.WireSpec` tuples and topology fields to
+:class:`repro.topology.TopoSpec` (``AdaptConfig.__post_init__`` /
+``RunConfig.__post_init__``), so a typo'd rung or graph raises when the
+config is constructed — before any mesh, plan, or jit exists."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,10 +155,15 @@ class AdaptConfig:
     from live SNR telemetry at a fixed cadence.  ``ladder`` is ordered
     conservative -> aggressive; the controller only ever selects a rung
     whose guaranteed or measured SNR clears the active graph's Theorem-1
-    bar eta_min (times ``margin`` for measured feasibility)."""
+    bar eta_min (times ``margin`` for measured feasibility).
+
+    ``ladder`` entries and ``topo_schedule`` graphs may be written as
+    strings; ``__post_init__`` parses them into WireSpec / (step,
+    TopoSpec) tuples, so both grammars fail at config-build time."""
     enabled: bool = False
     interval: int = 50                  # retune cadence (steps)
-    ladder: Tuple[str, ...] = (
+    # parsed to Tuple[WireSpec, ...] at construction
+    ladder: Tuple[Any, ...] = (
         "dense",                        # exact anchor (SNR = inf)
         "int8:block=256",               # guaranteed-SNR quantizer
         "hybrid:block=256,top_j=16",
@@ -192,12 +203,35 @@ class AdaptConfig:
     # even while enabled (an outage-only run holds the configured static
     # wire between blackout windows instead of walking the ladder)
 
+    # --- time-varying topology (repro.topology.TopoSchedule) --------------
+    # ((step_from, topo_spec), ...): from step_from on, gossip runs over
+    # the named graph; a composed TopologyComm re-derives eta_min on each
+    # switch and retargets the rate/budget members (plan-bank keys extend
+    # to (topo_canonical, rung_vector) — switching never recompiles beyond
+    # the bank bound).  RunConfig.topology is the step-0 graph unless the
+    # schedule names one itself.  Parsed to (int, TopoSpec) tuples.
+    topo_schedule: Tuple[Tuple[int, Any], ...] = ()
+
+    def __post_init__(self):
+        from ..comm.wirespec import WireSpec
+        object.__setattr__(
+            self, "ladder", tuple(WireSpec.parse(s) for s in self.ladder))
+        if self.topo_schedule:
+            from ..topology import TopoSpec
+            sched = tuple(sorted(((int(s), TopoSpec.parse(sp))
+                                  for s, sp in self.topo_schedule),
+                                 key=lambda e: e[0]))
+            object.__setattr__(self, "topo_schedule", sched)
+
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
     """Distribution + optimization options for a training/serving run."""
     consensus_axis: Optional[str] = "data"   # "data" | "pod" | None (allreduce)
-    topology: str = "ring"                   # ring | torus | complete
+    # the consensus graph, in the repro.topology grammar ("ring",
+    # "torus:4x2", "erdos:p=0.3,seed=0", ...); parsed to a TopoSpec at
+    # construction so a typo'd graph fails at config-build time
+    topology: Any = "ring"
     compressor: str = "blocked_hybrid:block=512,top_j=4"  # math-level spec
     wire: str = "ternary"                    # wire format: dense|ternary|hybrid|topk|int8
     wire_block: int = 512
@@ -221,5 +255,13 @@ class RunConfig:
     use_pallas_wire: bool = False            # flat path: Pallas codec kernels
     # (interpret mode on CPU; bit-exact with the jnp codecs either way)
     unsafe: bool = False                     # override the Theorem-1 SNR gate
-    edge_drop_prob: float = 0.0              # straggler simulation (runtime.fault)
+    edge_drop_prob: float = 0.0              # straggler simulation: per-step
+    # per-offset-class Bernoulli drop probability, routed through the
+    # FaultComm CommPolicy (drop-and-renormalize, composes with rate/
+    # budget control)
+    edge_drop_seed: int = 0
     adapt: AdaptConfig = AdaptConfig()       # online wire control (repro.adapt)
+
+    def __post_init__(self):
+        from ..topology import TopoSpec
+        object.__setattr__(self, "topology", TopoSpec.parse(self.topology))

@@ -99,9 +99,10 @@ def qdgd_step(state: QDGDState, W, grad_fn, alpha: float, eps0: float,
 # --------------------------------------------------------------------------
 # driver mirroring dcdgd.run for benchmarks
 # --------------------------------------------------------------------------
-def run_baseline(method: str, problem, W: np.ndarray, alpha, n_steps: int,
+def run_baseline(method: str, problem, W, alpha, n_steps: int,
                  key: jax.Array, comp: Compressor | None = None,
                  gamma: float = 1.2, eps0: float = 1.0) -> dict:
+    W = getattr(W, "W", W)           # accept a repro.topology.Topology
     Wj = jnp.asarray(W, jnp.float32)
     n = W.shape[0]
     params_like = jnp.zeros((n, problem.dim), jnp.float32)

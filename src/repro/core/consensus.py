@@ -1,4 +1,5 @@
-"""Consensus matrices, spectra, and the paper's convergence thresholds (§III).
+"""Consensus-matrix MATH: constructors, spectra, and the paper's
+convergence thresholds (§III).
 
 A consensus matrix W is doubly stochastic, symmetric, with the network's
 sparsity pattern; its spectrum lies in (-1, 1] with lambda_1 = 1.  The paper's
@@ -9,8 +10,19 @@ key quantities:
   * beta      — max(|lambda_2|, |lambda_N|), governs consensus mixing (Thm 2/3)
   * alpha_max — (lambda_N (eta+1) + eta - 1) / (L (1+eta))     (Theorem 1)
 
-`validate_config` enforces these at launch time: a compressor whose guaranteed
-SNR is below eta_min is rejected (the Fig. 1 / Fig. 3 divergence mode).
+``validate_compressor_for_topology`` enforces these at launch time: a
+compressor whose guaranteed SNR is below eta_min is rejected (the Fig. 1 /
+Fig. 3 divergence mode).
+
+THE FRONT DOOR IS :mod:`repro.topology`: this module supplies the numpy
+building blocks (adjacency constructors, Metropolis weights, Spectrum,
+circulant decomposition), but everything above it names graphs through the
+typed :class:`repro.topology.TopoSpec` grammar and consumes
+:class:`repro.topology.Topology` objects (which own W, cache the spectrum,
+and decide the gossip lowering).  ``spectrum`` /
+``sparsifier_p_threshold`` / ``validate_compressor_for_topology`` accept a
+Topology anywhere they accept a raw W.  New call sites should not build
+adjacencies here directly — parse a spec.
 """
 from __future__ import annotations
 
@@ -188,21 +200,25 @@ class Spectrum:
         return (self.lambda_n * (eta + 1) + eta - 1) / (L * (1 + eta))
 
 
-def spectrum(W: Array) -> Spectrum:
+def spectrum(W) -> Spectrum:
+    """Spectral summary of a consensus matrix (accepts a raw W or a
+    :class:`repro.topology.Topology`, whose cached spectrum is reused)."""
+    if hasattr(W, "spectrum") and isinstance(W.spectrum, Spectrum):
+        return W.spectrum
     lam = np.sort(np.linalg.eigvalsh(np.asarray(W)))
     lam_n, lam_2 = float(lam[0]), float(lam[-2])
     return Spectrum(lambda_2=lam_2, lambda_n=lam_n,
                     beta=max(abs(lam_2), abs(lam_n)))
 
 
-def sparsifier_p_threshold(W: Array) -> float:
+def sparsifier_p_threshold(W) -> float:
     """Minimum Bernoulli keep-probability p for the Example-1 sparsifier:
     p/(1-p) > (1-lambda_N)/(1+lambda_N)  =>  p > (1-lambda_N)/2."""
     s = spectrum(W)
     return (1.0 - s.lambda_n) / 2.0
 
 
-def validate_compressor_for_topology(W: Array, snr_lb: float,
+def validate_compressor_for_topology(W, snr_lb: float,
                                      strict: bool = True) -> Tuple[bool, str]:
     """Launch-time check (DESIGN.md §2.1): compressor guaranteed SNR must
     clear the Theorem-1 threshold."""

@@ -118,12 +118,15 @@ def step(state: DCDGDState, W: jax.Array, grad_fn: GradFn, alpha_t: jax.Array,
     return DCDGDState(x=x_new, y=y_new, d=d_next, t=state.t + 1, key=key), aux
 
 
-def run(problem, W: np.ndarray, comp: Compressor, alpha: float | Callable,
+def run(problem, W, comp: Compressor, alpha: float | Callable,
         n_steps: int, key: jax.Array, track_bits: bool = True,
         validate: bool = False) -> dict:
     """Convenience driver: runs DC-DGD for ``n_steps`` on ``problem`` (see
     core.problems.Problem) and returns per-step metric arrays.  Used by the
-    paper benchmarks (Figs. 1 & 3) and integration tests."""
+    paper benchmarks (Figs. 1 & 3) and integration tests.  ``W`` is a
+    consensus matrix or a :class:`repro.topology.Topology` (the typed
+    front door — ``dcdgd.run(prob, topology("w1"), ...)``)."""
+    W = getattr(W, "W", W)           # unwrap a Topology
     if validate:
         cons.validate_compressor_for_topology(
             W, comp.snr_lower_bound(problem.dim))

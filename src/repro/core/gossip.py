@@ -83,27 +83,14 @@ def offset_perm(dims: Tuple[int, ...], offset: Tuple[int, ...]
 # ---------------------------------------------------------------------------
 def mesh_consensus_matrix(dims: Tuple[int, ...], topology: str = "ring",
                           lazy: float = 0.25) -> np.ndarray:
-    """W for the consensus graph laid over the given mesh axis sizes."""
-    n = int(np.prod(dims))
-    if n == 1:
-        return np.ones((1, 1))
-    if n == 2:
-        return _two_node_w()
-    if topology == "complete":
-        return cons.metropolis_weights(cons.complete_adjacency(n), lazy=lazy)
-    if len(dims) == 2 and min(dims) >= 2:
-        # multi-axis consensus (pod x data): torus is the group-circulant
-        # graph over Z_a x Z_b (a linearized ring would NOT be circulant over
-        # the torus group and would force the dense fallback)
-        return cons.torus_consensus(dims[0], dims[1], lazy=lazy)
-    # single effective axis: ring over the linearized node space
-    return cons.metropolis_weights(cons.ring_adjacency(n), lazy=lazy)
+    """W for the consensus graph laid over the given mesh axis sizes.
 
-
-def _two_node_w() -> np.ndarray:
-    # lazy 2-node consensus: lambda_N = 0.5 -> eta_min = 1/3 (plain 1/2-1/2
-    # averaging has lambda_N = 0, eta_min = 1; laziness relaxes the SNR bar)
-    return np.array([[0.75, 0.25], [0.25, 0.75]])
+    Back-compat shim: graph construction now lives in
+    :class:`repro.topology.Topology` (``for_mesh_dims`` keeps this
+    function's dispatch exactly — two-node lazy W, ring->torus promotion
+    on 2D dims, ring over the linearized space otherwise)."""
+    from ..topology import Topology
+    return Topology.for_mesh_dims(dims, topology, lazy=lazy).W
 
 
 def circulant_offsets_nd(W: np.ndarray, dims: Tuple[int, ...], atol=1e-12
@@ -148,9 +135,15 @@ class GossipPlan:
     leaf_fmts: Optional[Tuple[WireFormat, ...]] = None
     wire_path: str = "flat"          # "flat" | "leaf"
     use_pallas: bool = False         # flat path: Pallas codec kernels
+    # the typed graph this plan lowers (None on hand-built/derived plans,
+    # e.g. the outage W_t = I plan); spectra/thresholds should be read
+    # from here when present — they are computed once and cached
+    topo: Optional[Any] = None       # repro.topology.Topology
 
     @property
     def spectrum(self):
+        if self.topo is not None:
+            return self.topo.spectrum
         return cons.spectrum(self.W)
 
     @property
@@ -173,25 +166,35 @@ class GossipPlan:
 
 
 def make_plan(mesh, consensus_axes: Tuple[str, ...], fmt: WireFormat,
-              topology: str = "ring", lazy: float = 0.25,
+              topology="ring", lazy: float = 0.25,
               W: Optional[np.ndarray] = None,
               leaf_fmts: Optional[Sequence[WireFormat]] = None,
               wire_path: str = "flat",
               use_pallas: bool = False) -> GossipPlan:
+    """Build the gossip plan for one graph x wire combination.
+
+    ``topology`` is the front door: a spec string (``"ring"``,
+    ``"torus:4x2"``, ``"erdos:p=0.3"``, ...), a parsed
+    :class:`repro.topology.TopoSpec`, or a prebuilt
+    :class:`repro.topology.Topology` — the Topology owns W, the spectra
+    AND the lowering decision (circulant offsets over the mesh dims vs
+    the dense all-gather fallback).  ``W=`` remains as the legacy escape
+    hatch for explicit matrices and wraps into a Topology."""
+    from ..topology import Topology
     dims = _axis_sizes(mesh, consensus_axes)
     n = int(np.prod(dims))
-    if W is None:
-        W = mesh_consensus_matrix(dims, topology, lazy)
-    try:
-        offs = tuple(circulant_offsets_nd(W, dims))
-        mode = "circulant"
-    except ValueError:
-        offs = ()
-        mode = "dense"
+    if W is not None:
+        topo = Topology.from_W(np.asarray(W))
+    elif isinstance(topology, Topology):
+        topo = topology
+        assert topo.n == n, (topo.n, dims)
+    else:
+        topo = Topology.for_mesh_dims(dims, topology, lazy=lazy)
+    mode, offs = topo.lowering(dims)
     return GossipPlan(consensus_axes=tuple(consensus_axes), dims=dims,
-                      n_nodes=n, mode=mode, offsets=offs, W=W, fmt=fmt,
+                      n_nodes=n, mode=mode, offsets=offs, W=topo.W, fmt=fmt,
                       leaf_fmts=tuple(leaf_fmts) if leaf_fmts else None,
-                      wire_path=wire_path, use_pallas=use_pallas)
+                      wire_path=wire_path, use_pallas=use_pallas, topo=topo)
 
 
 def _leaf_encode(fmt: WireFormat, key: jax.Array, leaf: jax.Array):

@@ -32,7 +32,23 @@ def main(argv=None):
     ap.add_argument("--consensus", default="data",
                     choices=["data", "pod", "none"])
     ap.add_argument("--wire", default="ternary:block=512")
-    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology", default="ring",
+                    help="consensus graph, in the repro.topology grammar: "
+                         "ring[:hops=2] | torus:4x2 | complete | star | "
+                         "erdos:p=0.3,seed=0 | expander:d=4 | file:path")
+    ap.add_argument("--topo-schedule", default="",
+                    help="time-varying topology: 'step:topo' entries "
+                         "separated by ';', e.g. '100:torus:4x2;300:ring' "
+                         "(--topology is the step-0 graph); on each switch "
+                         "the composed policy retargets eta_min without "
+                         "recompiling (plan-bank keys extend to "
+                         "(topo, rung))")
+    ap.add_argument("--edge-drop-prob", type=float, default=0.0,
+                    help="straggler simulation: per-step Bernoulli drop "
+                         "probability per gossip offset class, routed "
+                         "through the FaultComm policy (drop-and-"
+                         "renormalize; composes with rate/budget control)")
+    ap.add_argument("--edge-drop-seed", type=int, default=0)
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--alpha", type=float, default=3e-3)
     ap.add_argument("--schedule", default="constant")
@@ -117,9 +133,17 @@ def main(argv=None):
     if args.outage_windows:
         from ..comm import OutageComm
         outage_windows = OutageComm.parse(args.outage_windows).windows
+    topo_schedule = ()
+    if args.topo_schedule:
+        # parse (and so validate) at the CLI boundary; --topology is the
+        # step-0 graph unless the schedule names one itself
+        from ..topology import TopoSchedule
+        topo_schedule = TopoSchedule.parse(
+            args.topo_schedule, opening=args.topology).entries
     adapt_kw = {"enabled": (args.adapt or args.adapt_per_leaf
                             or args.compose or args.bit_budget > 0
-                            or bool(outage_windows)),
+                            or bool(outage_windows)
+                            or bool(topo_schedule)),
                 # outage-only / budget-only runs hold the configured wire:
                 # the SNR-feedback rate member needs an explicit ask
                 "rate_control": (args.adapt or args.adapt_per_leaf
@@ -132,7 +156,8 @@ def main(argv=None):
                 "token_bucket": args.token_bucket,
                 "per_leaf": args.adapt_per_leaf,
                 "compose": args.compose,
-                "outage_windows": outage_windows}
+                "outage_windows": outage_windows,
+                "topo_schedule": topo_schedule}
     if args.adapt_ladder:
         adapt_kw["ladder"] = tuple(
             s.strip() for s in args.adapt_ladder.split(";") if s.strip())
@@ -141,7 +166,8 @@ def main(argv=None):
         wire=args.wire, topology=args.topology, optimizer=args.optimizer,
         alpha=args.alpha, schedule=args.schedule, grad_accum=args.grad_accum,
         wire_path=args.wire_path, use_pallas_wire=args.pallas_wire,
-        unsafe=args.unsafe, adapt=AdaptConfig(**adapt_kw))
+        unsafe=args.unsafe, edge_drop_prob=args.edge_drop_prob,
+        edge_drop_seed=args.edge_drop_seed, adapt=AdaptConfig(**adapt_kw))
 
     tr = make_trainer(mesh, arch, run, shape_cfg)
     print(f"mesh={dict(zip(axes, shape))} consensus={tr.consensus_axes} "
@@ -164,6 +190,7 @@ def main(argv=None):
 
     adapt_on = run.adapt.enabled and tr.node_mode
     policy = tr.comm_policy()      # validates the ladder (Theorem-1 gate)
+    topo_member = policy.topo if isinstance(policy, Compose) else None
     if adapt_on:
         eta_min = tr.eta_min()
         mode = ("composed" if args.compose and run.adapt.bit_budget > 0
@@ -178,9 +205,14 @@ def main(argv=None):
             extras.append(f"slo_ms={run.adapt.budget_slo_ms:g}")
         if outage_windows:
             extras.append(f"outages={list(outage_windows)}")
+        if topo_member is not None:
+            extras.append("topo_schedule=" + ";".join(
+                f"{s}:{sp}" for s, sp in topo_member.schedule.entries))
+        if run.edge_drop_prob > 0:
+            extras.append(f"edge_drop_prob={run.edge_drop_prob:g}")
         print(f"adapt[{mode}]: eta_min={eta_min:.3g}"
               f"{' (advisory)' if run.adapt.bit_budget > 0 else ''} "
-              f"ladder={list(run.adapt.ladder)} "
+              f"ladder={[str(s) for s in run.adapt.ladder]} "
               f"per_leaf={run.adapt.per_leaf} "
               + " ".join(extras))
 
@@ -196,6 +228,10 @@ def main(argv=None):
         row["wall_s"] = round(time.time() - t0, 2)
         if adapt_on:
             row["wire"] = ran
+        if topo_member is not None:
+            row["topology"] = topo_member.active.canonical()
+            row["eta_min"] = topo_member.active.eta_min
+            row["eta_min_violations"] = topo_member.violations
         history.append(row)
         print(f"step {i+1:5d} loss {row['loss']:.4f} "
               f"gnorm {row['grad_norm']:.3f} "
@@ -217,6 +253,9 @@ def main(argv=None):
     with set_mesh(mesh):
         res = session.run(args.steps, start_step=start_step)
 
+    if topo_member is not None:
+        print(f"topology: switches {topo_member.switch_log} "
+              f"eta_min_violations {topo_member.violations}")
     if adapt_on:
         print(f"adapt: bank {res.bank_stats}")
         budget = (policy.budget if isinstance(policy, Compose)

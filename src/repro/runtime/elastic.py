@@ -19,18 +19,27 @@ drive a full join -> converge -> leave -> converge cycle.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import consensus as cons
+from ..topology import TopoSpec, Topology
 
 
 @dataclasses.dataclass
 class Membership:
-    """Active node set + topology; rebuilds W on change."""
+    """Active node set + topology; rebuilds the :class:`Topology` (and
+    with it W and the cached spectrum) on every change.
+
+    ``topology`` is any :class:`repro.topology.TopoSpec` the front-door
+    grammar accepts (string or parsed) — ``"ring"``, ``"torus"`` (auto-
+    factored to the most-square dims for the live n), ``"complete"``,
+    ``"erdos:p=..."``, ... — or an explicit ``adjacency`` matrix for
+    custom graphs.  Tiny memberships (n <= 3) always densify to the
+    complete graph, as before."""
     node_ids: List[int]
-    topology: str = "ring"          # ring | torus | complete | custom
+    topology: Any = "ring"          # TopoSpec | spec string
     lazy: float = 0.25
     adjacency: Optional[np.ndarray] = None   # custom topologies
 
@@ -41,32 +50,27 @@ class Membership:
     def n(self) -> int:
         return len(self.node_ids)
 
+    @property
+    def W(self) -> np.ndarray:
+        return self.topo.W
+
     def _rebuild(self):
         n = self.n
         if self.adjacency is not None:
-            adj = self.adjacency
-            assert adj.shape == (n, n)
-        elif self.topology == "complete" or n <= 3:
-            adj = cons.complete_adjacency(n) if n > 1 else np.zeros((1, 1), bool)
-        elif self.topology == "torus":
-            a = int(np.floor(np.sqrt(n)))
-            while n % a:
-                a -= 1
-            adj = cons.torus_adjacency(a, n // a) if a > 1 \
-                else cons.ring_adjacency(n)
+            assert self.adjacency.shape == (n, n)
+            self.topo = Topology.from_adjacency(self.adjacency,
+                                                lazy=self.lazy)
         else:
-            adj = cons.ring_adjacency(n)
-        if n == 1:
-            self.W = np.ones((1, 1))
-        else:
-            self.W = cons.metropolis_weights(adj, lazy=self.lazy)
-        self.spectrum = cons.spectrum(self.W) if n > 1 else None
+            spec = TopoSpec.parse(self.topology)
+            if n <= 3 and spec.fixed_n is None:
+                spec = TopoSpec.parse("complete")
+            self.topo = Topology.from_spec(spec, n=n, lazy=self.lazy)
+        self.spectrum = self.topo.spectrum if n > 1 else None
 
     def validate_compressor(self, snr_lb: float) -> Tuple[bool, str]:
         if self.n <= 1:
             return True, "single node"
-        return cons.validate_compressor_for_topology(self.W, snr_lb,
-                                                     strict=False)
+        return self.topo.validate_compressor(snr_lb, strict=False)
 
     # ------------------------------------------------------------------
     def leave(self, node_id: int) -> Dict:

@@ -18,6 +18,15 @@ neighbor (O(deg) x param memory) — the drop-renormalize rule is free.
 
 ``StragglerSim`` drives the simulation in tests/benchmarks: deterministic
 per-(step, offset-class) Bernoulli outages.
+
+CommPolicy route (the composable path): ``repro.comm.FaultComm`` wraps a
+StragglerSim as a Compose member — drops ride in ``PerLeafPlan.drops``,
+the plan bank lowers them through :func:`fault_plan` (keys
+``("fault", drops, inner)``), and an every-class drop degenerates to the
+:func:`outage_plan` blackout — so straggler simulation composes with
+rate/budget/topology control instead of owning a private driver.
+``RunConfig.edge_drop_prob`` / ``launch.train --edge-drop-prob`` wire it
+into the trainer.
 """
 from __future__ import annotations
 
@@ -64,6 +73,69 @@ def drop_renormalize_plan(plan: GossipPlan, dropped_classes: Sequence[int]
             for off, w in out]
 
 
+def non_self_classes(plan: GossipPlan) -> List[int]:
+    """Indices into ``plan.offsets`` of the non-self offset classes — the
+    index space ``StragglerSim`` / ``FaultComm`` drop over."""
+    return [i for i, (off, _) in enumerate(plan.offsets)
+            if any(o != 0 for o in off)]
+
+
+def fault_plan(plan: GossipPlan, drops: Sequence[int]) -> GossipPlan:
+    """The gossip plan for a step with the given NON-SELF offset classes
+    out (drop-and-renormalize; indices into :func:`non_self_classes`'
+    space, i.e. what ``repro.comm.FaultComm`` puts in
+    ``PerLeafPlan.drops``).  This is the plan-bank value behind the
+    ``("fault", drops, inner)`` keys, so straggler simulation composes
+    with rate/budget control through the ordinary CommPolicy machinery
+    (Compose maps an every-class drop to the OUTAGE blackout before it
+    ever reaches here)."""
+    nz = non_self_classes(plan)
+    if not nz:
+        # dense-fallback (or degenerate) plans have no offset classes to
+        # drop: per-edge faults are a circulant-lowering feature
+        return plan
+    idx = [nz[k] for k in drops if 0 <= k < len(nz)]
+    eff = drop_renormalize_plan(plan, idx)
+    return dataclasses.replace(plan, offsets=tuple(eff))
+
+
+def drop_renormalize_dense(W: np.ndarray, drops: Sequence[int]
+                           ) -> np.ndarray:
+    """Per-edge drop-and-renormalize on a DENSE consensus matrix: the
+    dropped UNDIRECTED edges (indices into the (i < j) nonzero-edge list)
+    are zeroed and their weight folded into both self weights, so W_t
+    stays symmetric doubly stochastic — the same rule
+    :func:`drop_renormalize_plan` applies to circulant offset classes,
+    for backends that mix with the full matrix (the dcdgd sessions in
+    ``benchmarks/fig6_topology`` / ``examples/elastic_failover``)."""
+    W = np.array(W, dtype=np.float64, copy=True)
+    n = W.shape[0]
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if abs(W[i, j]) > 1e-12]
+    for k in drops:
+        if not (0 <= k < len(edges)):
+            continue
+        i, j = edges[k]
+        w = W[i, j]
+        W[i, j] = W[j, i] = 0.0
+        W[i, i] += w
+        W[j, j] += w
+    return W
+
+
+def peel_plan_key(key):
+    """Split a (possibly tagged) plan-bank key into ``(topo_canonical |
+    None, drops, inner)`` — the inverse of ``PerLeafPlan.key()``'s
+    ``("topo", c, ("fault", drops, inner))`` nesting, for bank builders
+    that lower the tags themselves."""
+    topo, drops = None, ()
+    if isinstance(key, tuple) and len(key) == 3 and key[0] == "topo":
+        topo, key = key[1], key[2]
+    if isinstance(key, tuple) and len(key) == 3 and key[0] == "fault":
+        drops, key = tuple(key[1]), key[2]
+    return topo, drops, key
+
+
 def outage_plan(plan: GossipPlan) -> GossipPlan:
     """The zero-link gossip plan for a FULL outage (every edge out, i.e. a
     budget-0 window): self offset only with weight 1 (W_t = I — symmetric,
@@ -77,7 +149,7 @@ def outage_plan(plan: GossipPlan) -> GossipPlan:
     return dataclasses.replace(
         plan, mode="circulant", offsets=((zero, 1.0),),
         W=np.eye(plan.n_nodes), fmt=DenseWire(), leaf_fmts=None,
-        use_pallas=False)
+        use_pallas=False, topo=None)
 
 
 # ---------------------------------------------------------------------------
@@ -134,18 +206,16 @@ def gossip_with_outages(plan: GossipPlan, sim: StragglerSim, step: int,
                         key: jax.Array, d_local):
     """gossip_exchange under a simulated outage schedule (host-side plan
     selection — the per-step offset list is static w.r.t. jit because the
-    caller re-traces per outage pattern in tests; production would use a
-    small set of pre-compiled patterns)."""
-    import dataclasses as dc
-
+    caller re-traces per outage pattern in tests; production routes the
+    SAME drops through ``repro.comm.FaultComm`` -> ``PerLeafPlan.drops``
+    -> :func:`fault_plan`, so the pre-compiled patterns live in the plan
+    bank and compose with rate/budget control)."""
     from ..core import gossip as G
 
-    nz = [i for i, (off, _) in enumerate(plan.offsets)
-          if any(o != 0 for o in off)]
-    dropped = [nz[k] for k in sim.dropped(step, len(nz))
-               if k < len(nz)]
-    eff = drop_renormalize_plan(plan, dropped)
-    eff_plan = dc.replace(plan, offsets=tuple(eff))
+    nz = non_self_classes(plan)
+    classes = [k for k in sim.dropped(step, len(nz)) if k < len(nz)]
+    dropped = [nz[k] for k in classes]
+    eff_plan = fault_plan(plan, classes)
     exchange = (G.flat_gossip_exchange if eff_plan.wire_path == "flat"
                 else G.gossip_exchange)
     return exchange(eff_plan, key, d_local), dropped

@@ -1,0 +1,47 @@
+"""repro.topology — the single front door for consensus graphs, spectra,
+and time-varying topology.
+
+The paper's convergence theory is a property of the GRAPH: Theorem 1's SNR
+floor ``eta_min = (1 - lambda_N)/(1 + lambda_N)`` and step-size cap are
+functions of the consensus matrix's spectrum, and every communication
+controller in :mod:`repro.adapt` binds on them.  This package is the typed
+API those quantities flow through — the graph-side mirror of the PR-4
+``repro.comm`` design:
+
+  topospec.py — :class:`TopoSpec`: frozen, hashable parse of the one graph
+                grammar (``ring[:hops=2] | torus:4x2 | complete |
+                erdos:p=0.3,seed=0 | expander:d=4 | star | w1 | w2 |
+                fig3a | fig3b | file:path``), with ``canonical()`` as the
+                topology half of the extended PlanBank key domain
+                ``(topo_canonical, rung_vector)``.  A typo'd graph fails
+                at parse/config-build time.
+  topology.py — :class:`Topology`: the runtime object owning the
+                adjacency, the Metropolis/lazy ``W``, cached spectral
+                quantities (``lambda_n``, ``beta``, ``eta_min``,
+                ``alpha_max``), the launch-time compressor gate, and the
+                gossip LOWERING decision (circulant offsets over the mesh
+                dims vs the dense all-gather fallback) that
+                ``core.gossip.make_plan`` now consumes instead of
+                re-deriving.
+  schedule.py — :class:`TopoSchedule` (the ``step:topo`` switch plan) and
+                :class:`TopologyComm` (the Compose member: annotates plans
+                with the active graph, retargets composed rate/budget
+                members to the new ``eta_min`` on a switch — scheduled,
+                elastic, or fault-driven — and audits sustained
+                below-floor operation as ``eta_min_violations``).
+
+Quick example (ring -> torus mid-run under a bit budget)::
+
+    from repro.topology import TopoSchedule, TopologyComm, topology
+    sched = TopoSchedule.parse("150:torus:4x2", opening="ring")
+    topos = {sp.canonical(): topology(sp, n=8, lazy=0.25)
+             for sp in sched.specs()}
+    policy = Compose(RateComm(...), BudgetComm(...),
+                     TopologyComm(schedule=sched, topologies=topos))
+"""
+from .topospec import TopoSpec
+from .topology import Topology, topology
+from .schedule import TopoSchedule, TopologyComm
+
+__all__ = ["TopoSpec", "Topology", "topology", "TopoSchedule",
+           "TopologyComm"]

@@ -1,0 +1,228 @@
+"""Time-varying consensus topology as a composable CommPolicy member.
+
+:class:`TopoSchedule` is the static plan — ``((step_from, TopoSpec), ...)``
+sorted ascending, first entry at step 0 — and :class:`TopologyComm` is its
+:class:`~repro.comm.policy.Compose` member: it never proposes a wire plan
+itself; instead, at every decided step it
+
+  * ANNOTATES the composed plan with the active graph's canonical spec, so
+    the PlanBank key domain extends to ``(topo_canonical, rung_vector)``
+    and a graph switch is a dict lookup into a pre-buildable plan, never a
+    recompile beyond the bank bound;
+  * RETARGETS the other members on a switch: the new graph's Theorem-1
+    floor ``eta_min = (1 - lambda_N)/(1 + lambda_N)`` is pushed into every
+    composed rate/budget member (``retarget(eta_min, neighbors)``), so the
+    controllers re-solve against the new floor without recompiling;
+  * AUDITS: counts sustained below-floor operation (a transmitting plan
+    held unchanged while the measured step SNR sits under the ACTIVE
+    graph's floor and no rung in the plan is guaranteed-safe) — the
+    ``eta_min_violations`` observable the fig6 benchmark and the CLI smoke
+    gate assert to be zero.
+
+Switches need not come from the static schedule alone: :meth:`switch_to`
+is the elastic/fault-driven entry point (a membership change or a link
+failure hands the session a new graph the same way a scheduled step does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .topology import Topology
+from .topospec import TopoSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoSchedule:
+    """``entries`` = ((step_from, TopoSpec), ...) sorted ascending; the
+    active spec at step t is the last entry whose threshold is <= t."""
+    entries: Tuple[Tuple[int, TopoSpec], ...]
+
+    def __post_init__(self):
+        assert self.entries, "empty topology schedule"
+        # key on the step alone: TopoSpec defines no ordering, and duplicate
+        # steps must reach the assertion below, not a sort TypeError
+        norm = tuple(sorted(((int(s), TopoSpec.parse(sp))
+                             for s, sp in self.entries),
+                            key=lambda e: e[0]))
+        object.__setattr__(self, "entries", norm)
+        assert norm[0][0] == 0, "topology schedule must start at step 0"
+        steps = [s for s, _ in norm]
+        assert len(set(steps)) == len(steps), \
+            f"duplicate schedule steps: {steps}"
+
+    @classmethod
+    def parse(cls, spec: str, opening: Union[str, TopoSpec, None] = None
+              ) -> "TopoSchedule":
+        """CLI factory: ``"3:torus:4x2;9:ring"`` — ``step:topo`` entries
+        separated by ';' (the topo part may itself contain ':').  An
+        ``opening`` spec is prepended at step 0 when the string does not
+        cover it (the launcher passes ``--topology``)."""
+        entries: List[Tuple[int, TopoSpec]] = []
+        for part in spec.split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            step_s, sep, topo_s = part.partition(":")
+            if not sep or not topo_s:
+                raise ValueError(f"malformed schedule entry {part!r} "
+                                 f"(want step:topo)")
+            entries.append((int(step_s), TopoSpec.parse(topo_s)))
+        if opening is not None and not any(s == 0 for s, _ in entries):
+            entries.append((0, TopoSpec.parse(opening)))
+        return cls(entries=tuple(entries))
+
+    def active_at(self, step: int) -> TopoSpec:
+        out = self.entries[0][1]
+        for s, sp in self.entries:
+            if step >= s:
+                out = sp
+        return out
+
+    def switch_steps(self) -> Tuple[int, ...]:
+        return tuple(s for s, _ in self.entries[1:])
+
+    def specs(self) -> Tuple[TopoSpec, ...]:
+        seen, out = set(), []
+        for _, sp in self.entries:
+            if sp.canonical() not in seen:
+                seen.add(sp.canonical())
+                out.append(sp)
+        return tuple(out)
+
+
+@dataclasses.dataclass
+class TopologyComm:
+    """Compose member for time-varying graphs (see module docstring).
+
+    ``topologies`` maps canonical spec -> the prebuilt :class:`Topology`
+    over the run's node count / mesh dims (build them ONCE at session
+    setup — e.g. ``Trainer.comm_policy`` / ``fig6`` — so a mid-run switch
+    costs a dict lookup and an eta_min push, not an eigendecomposition).
+    ``dims`` are the mesh consensus dims the gossip lowering runs over
+    (None = the linear (n,) space).  ``guaranteed_snr(spec_str)`` supplies
+    the wire's worst-case bound for the audit (d=1, matching the trainer's
+    launch gate); None disables the guaranteed-safe exemption."""
+    schedule: TopoSchedule
+    topologies: Dict[str, Topology]
+    dims: Optional[Tuple[int, ...]] = None
+    guaranteed_snr: Optional[Any] = None     # Callable[[str], float]
+    consumes_telemetry = True
+
+    # populated as the session runs
+    switch_log: List[Tuple[int, str, str, float]] = dataclasses.field(
+        default_factory=list)     # (step, old, new, new_eta_min)
+    violations: int = 0
+
+    def __post_init__(self):
+        for sp in self.schedule.specs():
+            assert sp.canonical() in self.topologies, \
+                f"no Topology prebuilt for {sp.canonical()!r}"
+        self._active: str = self.schedule.active_at(0).canonical()
+        self._forced: Optional[str] = None
+        self._last_snr: float = float("nan")
+        self._last_key: Any = None
+        self._below_streak: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def active(self) -> Topology:
+        return self.topologies[self._active]
+
+    def active_canonical(self, step: int) -> str:
+        if self._forced is not None:
+            return self._forced
+        return self.schedule.active_at(step).canonical()
+
+    def eta_min_at(self, step: int) -> float:
+        return self.topologies[self.active_canonical(step)].eta_min
+
+    def switch_to(self, spec: Union[str, TopoSpec],
+                  topo: Optional[Topology] = None) -> None:
+        """Elastic/fault-driven override: from the next decided step on,
+        the active graph is ``spec`` regardless of the schedule (pass the
+        prebuilt Topology when it is not already registered)."""
+        spec = TopoSpec.parse(spec) if not isinstance(spec, TopoSpec) \
+            else spec
+        c = spec.canonical()
+        if topo is not None:
+            self.topologies[c] = topo
+        assert c in self.topologies, f"no Topology for {c!r}"
+        self._forced = c
+
+    # ------------------------------------------------------------------
+    # Compose integration
+    # ------------------------------------------------------------------
+    def maybe_switch(self, step: int, members: Sequence[Any]) -> bool:
+        """Called by Compose at the TOP of each decide: resolve the active
+        graph for ``step`` and, on a change, push the new Theorem-1 floor
+        (and gossip neighbor multiplier) into every member exposing
+        ``retarget``.  Returns True when a switch happened."""
+        nxt = self.active_canonical(step)
+        if nxt == self._active:
+            return False
+        old = self._active
+        self._active = nxt
+        topo = self.topologies[nxt]
+        # dims=None = a backend whose bit accounting is per-encode, not
+        # per-link (the dcdgd sessions): leave cost-model neighbors alone
+        neighbors = topo.n_out(self.dims) if self.dims is not None else None
+        for m in members:
+            retarget = getattr(m, "retarget", None)
+            if retarget is not None and m is not self:
+                retarget(eta_min=topo.eta_min, neighbors=neighbors)
+        self.switch_log.append((step, old, nxt, topo.eta_min))
+        self._below_streak = 0
+        return True
+
+    def annotate(self, step: int, plan):
+        """Tag the composed plan with the active graph so its PlanBank key
+        becomes ``("topo", canonical, inner_key)``."""
+        if plan is None or plan.outage:
+            # the blackout plan is W_t = I on ANY graph: one shared entry
+            return plan
+        if plan.topo == self._active:
+            return plan
+        return dataclasses.replace(plan, topo=self._active)
+
+    # ------------------------------------------------------------------
+    # telemetry audit
+    # ------------------------------------------------------------------
+    def observe(self, t) -> None:
+        d = float(np.sum(np.asarray(t.diff_power, np.float64)))
+        n = float(np.sum(np.asarray(t.noise_power, np.float64)))
+        self._last_snr = d / n if n > 0 else float("inf")
+
+    def decide(self, step: int):
+        return None          # never proposes; Compose calls maybe_switch
+
+    def audit(self, step: int, plan) -> None:
+        """Count a Theorem-1 violation: the measured SNR sits below the
+        ACTIVE floor for two consecutive decided steps while the same
+        non-blackout, non-guaranteed-safe plan is held (a reacting policy
+        climbs within one decide; only a stale floor or a floor-ignoring
+        policy sustains this)."""
+        floor = self.active.eta_min
+        if plan is None or plan.outage or not math.isfinite(self._last_snr):
+            self._below_streak = 0
+            self._last_key = None if plan is None else plan.key()
+            return
+        below = self._last_snr < floor
+        held = plan.key() == self._last_key
+        safe = False
+        if self.guaranteed_snr is not None and below:
+            try:
+                safe = all(float(self.guaranteed_snr(str(s))) > floor
+                           for s in plan.specs)
+            except Exception:
+                safe = False
+        if below and held and not safe:
+            self._below_streak += 1
+            if self._below_streak >= 2:
+                self.violations += 1
+        else:
+            self._below_streak = 0
+        self._last_key = plan.key()

@@ -1,0 +1,333 @@
+"""Topology — the runtime consensus graph object.
+
+One instance owns everything the rest of the repo used to re-derive
+piecemeal from a raw ``W`` matrix:
+
+  * the adjacency and the Metropolis/lazy consensus matrix ``W``
+    (constructed once from a :class:`~repro.topology.topospec.TopoSpec`);
+  * the cached spectral quantities the paper's theory binds on —
+    ``lambda_n``, ``lambda_2``, ``beta``, the Theorem-1 SNR floor
+    ``eta_min = (1 - lambda_N)/(1 + lambda_N)``, and the step-size cap
+    ``alpha_max(eta, L)``;
+  * the GOSSIP LOWERING decision: :meth:`lowering` answers whether the
+    graph is circulant-embeddable over the given mesh dims (one ppermute
+    per neighbor offset) or needs the dense all-gather fallback — the
+    branch that used to live inline in ``core.gossip.make_plan``.
+
+``core.gossip`` consumes a Topology when building a :class:`GossipPlan`,
+``runtime.elastic.Membership`` rebuilds one per membership change, and the
+time-varying scenario (:mod:`repro.topology.schedule`) keys plan banks on
+``topology.canonical()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core import consensus as cons
+from .topospec import TopoSpec
+
+Array = np.ndarray
+
+
+def _expander_adjacency(n: int, d: int, seed: int = 0) -> Array:
+    """Random CIRCULANT d-regular expander: offset set {1} plus d//2 - 1
+    random distinct offsets in [2, n//2].  Circulant by construction, so
+    the gossip lowering stays one ppermute per offset (a generic random
+    regular graph would force the dense all-gather fallback)."""
+    if d < 2 or d % 2:
+        raise ValueError(f"expander degree must be even and >= 2, got {d}")
+    k = d // 2
+    pool = [o for o in range(2, n // 2 + (0 if n % 2 == 0 else 1))]
+    if k - 1 > len(pool):
+        raise ValueError(f"expander:d={d} needs n > {2 * k}, got n={n}")
+    rng = np.random.default_rng(seed)
+    offs = [1] + list(rng.choice(pool, size=k - 1, replace=False)) \
+        if k > 1 else [1]
+    adj = np.zeros((n, n), dtype=bool)
+    for off in offs:
+        for i in range(n):
+            adj[i, (i + off) % n] = adj[(i + off) % n, i] = True
+    return adj
+
+
+def _load_file_adjacency(path: str) -> Array:
+    """``file:`` backend: .npy bool/0-1 adjacency matrix, or .json with
+    either {"n": N, "edges": [[u, v], ...]} or a nested adjacency list."""
+    p = Path(path)
+    if not p.exists():
+        raise ValueError(f"topology file not found: {path!r}")
+    if p.suffix == ".npy":
+        adj = np.load(p)
+    else:
+        data = json.loads(p.read_text())
+        if isinstance(data, dict):
+            n = int(data["n"])
+            adj = np.zeros((n, n), dtype=bool)
+            for u, v in data["edges"]:
+                adj[int(u), int(v)] = adj[int(v), int(u)] = True
+        else:
+            adj = np.asarray(data)
+    adj = np.asarray(adj).astype(bool)
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"topology file {path!r} must hold a square "
+                         f"adjacency matrix, got shape {adj.shape}")
+    np.fill_diagonal(adj, False)
+    if not (adj == adj.T).all():
+        raise ValueError(f"topology file {path!r}: adjacency must be "
+                         f"symmetric (undirected graph)")
+    return adj
+
+
+def _adj_from_W(W: Array, atol: float = 1e-12) -> Array:
+    adj = np.abs(np.asarray(W)) > atol
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+@dataclasses.dataclass(eq=False)
+class Topology:
+    """See module docstring.  Treat instances as immutable — everything
+    downstream (plan keys, cached spectra, controllers) assumes ``W``
+    never changes after construction; a graph change is a NEW Topology."""
+    spec: TopoSpec
+    n: int
+    adj: Array                       # bool, zero diagonal
+    W: Array
+    _spectrum: Optional[cons.Spectrum] = dataclasses.field(
+        default=None, repr=False)
+
+    # ------------------------------------------------------------------
+    # constructors
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_spec(cls, spec: Union[str, TopoSpec], n: Optional[int] = None,
+                  lazy: float = 0.0) -> "Topology":
+        """Build the graph a spec names.  ``n`` is required unless the spec
+        pins it (w1/w2/fig3a/fig3b, torus:AxB, file:...); a conflicting
+        explicit ``n`` is an error, not a silent override.  ``lazy`` is the
+        default lazy-mixing factor — a ``lazy=`` arg in the spec wins."""
+        spec = TopoSpec.parse(spec)
+        fixed = spec.fixed_n
+        if fixed is not None:
+            if n is not None and n != fixed:
+                raise ValueError(f"topology {spec.canonical()!r} pins "
+                                 f"n={fixed}, got n={n}")
+            n = fixed
+        lz = spec.lazy if spec.lazy is not None else float(lazy)
+        kw = spec.kwargs()
+        name = spec.name
+
+        # fixed consensus matrices (already weighted; lazy does not apply)
+        if name == "w1":
+            return cls.from_W(cons.W1_PAPER, spec=spec)
+        if name == "w2":
+            return cls.from_W(cons.W2_PAPER, spec=spec)
+        if name == "fig3a":
+            return cls.from_W(cons.fig3_topology_a(), spec=spec)
+        if name == "fig3b":
+            return cls.from_W(cons.fig3_topology_b(), spec=spec)
+
+        if name == "file":
+            adj = _load_file_adjacency(spec.path)
+            if n is not None and n != adj.shape[0]:
+                raise ValueError(f"topology file {spec.path!r} has "
+                                 f"n={adj.shape[0]}, got n={n}")
+            return cls.from_adjacency(adj, spec=spec, lazy=lz)
+
+        if n is None:
+            raise ValueError(f"topology {spec.canonical()!r} needs an "
+                             f"explicit node count n")
+        n = int(n)
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        if n == 1:
+            return cls(spec=spec, n=1, adj=np.zeros((1, 1), bool),
+                       W=np.ones((1, 1)))
+
+        if name == "ring":
+            adj = cons.ring_adjacency(n, hops=int(kw.get("hops", 1)))
+        elif name == "torus":
+            dims = spec.dims or _factor_torus(n)
+            adj = cons.torus_adjacency(*dims)
+        elif name == "complete":
+            adj = cons.complete_adjacency(n)
+        elif name == "star":
+            adj = cons.star_adjacency(n)
+        elif name == "erdos":
+            adj = cons.erdos_adjacency(n, p=float(kw["p"]),
+                                       seed=int(kw.get("seed", 0)))
+        elif name == "expander":
+            adj = _expander_adjacency(n, d=int(kw["d"]),
+                                      seed=int(kw.get("seed", 0)))
+        else:  # pragma: no cover — parse() already rejected it
+            raise ValueError(f"unhandled topology {name!r}")
+        return cls.from_adjacency(adj, spec=spec, lazy=lz)
+
+    @classmethod
+    def from_adjacency(cls, adj: Array, spec: Optional[TopoSpec] = None,
+                       lazy: float = 0.0) -> "Topology":
+        """Metropolis-weighted Topology over an explicit adjacency."""
+        adj = np.asarray(adj).astype(bool).copy()
+        np.fill_diagonal(adj, False)
+        n = adj.shape[0]
+        if n > 1 and not cons.is_connected(adj):
+            raise ValueError("topology adjacency is not connected")
+        W = (cons.metropolis_weights(adj, lazy=lazy) if n > 1
+             else np.ones((1, 1)))
+        return cls(spec=spec or TopoSpec(name="file", path="<adjacency>"),
+                   n=n, adj=adj, W=W)
+
+    @classmethod
+    def from_W(cls, W: Array, spec: Optional[TopoSpec] = None) -> "Topology":
+        """Wrap an explicit consensus matrix (the paper's fixed matrices,
+        legacy ``W=`` call sites).  Validates double stochasticity."""
+        W = np.asarray(W, dtype=np.float64)
+        if W.shape[0] > 1:
+            cons.validate_consensus_matrix(W)
+        return cls(spec=spec or TopoSpec(name="file", path="<matrix>"),
+                   n=W.shape[0], adj=_adj_from_W(W), W=W)
+
+    @classmethod
+    def for_mesh_dims(cls, dims: Sequence[int],
+                      spec: Union[str, TopoSpec] = "ring",
+                      lazy: float = 0.25) -> "Topology":
+        """The graph laid over the given mesh axis sizes — the dispatch
+        that used to be ``core.gossip.mesh_consensus_matrix``:
+
+          * n == 1 -> trivial; n == 2 -> the lazy two-node W (lambda_N =
+            0.5, eta_min = 1/3 — plain averaging would demand SNR >= 1);
+          * ``ring`` on a 2D mesh promotes to the torus over those dims
+            (the group-circulant graph of Z_a x Z_b; a linearized ring
+            would not be circulant over the torus group and would force
+            the dense fallback);
+          * bare ``torus`` takes the mesh dims as its dims;
+          * every other spec builds as named over n = prod(dims).
+        """
+        spec = TopoSpec.parse(spec)
+        dims = tuple(int(d) for d in dims)
+        n = int(np.prod(dims)) if dims else 1
+        if spec.fixed_n is not None and spec.fixed_n != n:
+            raise ValueError(f"topology {spec.canonical()!r} pins "
+                             f"n={spec.fixed_n} but the mesh consensus "
+                             f"dims {dims} give n={n}")
+        if n == 1:
+            return cls(spec=spec, n=1, adj=np.zeros((1, 1), bool),
+                       W=np.ones((1, 1)))
+        if n == 2:
+            W = np.array([[0.75, 0.25], [0.25, 0.75]])
+            return cls(spec=spec, n=2, adj=_adj_from_W(W), W=W)
+        lz = spec.lazy if spec.lazy is not None else float(lazy)
+        # a ring with explicit args (hops=...) is NOT promoted: the caller
+        # asked for that graph, and the torus cannot honor its args — it
+        # builds as named over n (dense fallback on the torus group)
+        plain_ring = (spec.name == "ring"
+                      and not any(k != "lazy" for k, _ in spec.args))
+        if ((plain_ring or (spec.name == "torus" and not spec.dims))
+                and len(dims) == 2 and min(dims) >= 2):
+            adj = cons.torus_adjacency(*dims)
+            return cls.from_adjacency(
+                adj, spec=TopoSpec(name="torus", args=spec.args
+                                   if spec.name == "torus" else (),
+                                   dims=dims), lazy=lz)
+        return cls.from_spec(spec, n=n, lazy=lazy)
+
+    # ------------------------------------------------------------------
+    # spectra (computed once, cached)
+    # ------------------------------------------------------------------
+    @property
+    def spectrum(self) -> cons.Spectrum:
+        if self._spectrum is None:
+            self._spectrum = cons.spectrum(self.W)
+        return self._spectrum
+
+    @property
+    def lambda_n(self) -> float:
+        return self.spectrum.lambda_n
+
+    @property
+    def lambda_2(self) -> float:
+        return self.spectrum.lambda_2
+
+    @property
+    def beta(self) -> float:
+        return self.spectrum.beta
+
+    @property
+    def eta_min(self) -> float:
+        """Theorem-1 SNR floor (1 - lambda_N)/(1 + lambda_N)."""
+        return self.spectrum.snr_threshold
+
+    def alpha_max(self, eta: float, L: float) -> float:
+        """Theorem-1 step-size cap for compressor SNR eta, smoothness L."""
+        return self.spectrum.max_step_size(eta, L)
+
+    # ------------------------------------------------------------------
+    def canonical(self) -> str:
+        """The plan/cache key for this graph (TopoSpec canonical form)."""
+        return self.spec.canonical()
+
+    @property
+    def degree(self) -> int:
+        """Max node degree = outgoing transmissions per step on the dense
+        lowering; circulant graphs use the non-self offset count."""
+        if self.n <= 1:
+            return 0
+        return int(self.adj.sum(1).max())
+
+    def validate_compressor(self, snr_lb: float, strict: bool = True
+                            ) -> Tuple[bool, str]:
+        """The launch-time Theorem-1 gate on this graph."""
+        if self.n <= 1:
+            return True, "single node: exact update"
+        return cons.validate_compressor_for_topology(self.W, snr_lb,
+                                                     strict=strict)
+
+    # ------------------------------------------------------------------
+    # gossip lowering
+    # ------------------------------------------------------------------
+    def lowering(self, dims: Optional[Sequence[int]] = None
+                 ) -> Tuple[str, Tuple[Tuple[Tuple[int, ...], float], ...]]:
+        """How the gossip backend executes this graph over mesh consensus
+        dims: ``("circulant", ((offset_vec, weight), ...))`` when W is
+        circulant over the torus group Z_d1 x ... (one ppermute per
+        non-self offset), else ``("dense", ())`` — all-gather the wire and
+        mix with the local W row.  ``dims=None`` means the linear node
+        space ``(n,)``."""
+        from ..core import gossip as G
+        dims = tuple(int(d) for d in dims) if dims is not None else (self.n,)
+        if int(np.prod(dims)) != self.n:
+            raise ValueError(f"mesh dims {dims} do not match n={self.n}")
+        try:
+            offs = tuple(G.circulant_offsets_nd(self.W, dims))
+            return "circulant", offs
+        except ValueError:
+            return "dense", ()
+
+    def n_out(self, dims: Optional[Sequence[int]] = None) -> int:
+        """Outgoing transmissions per node per step under :meth:`lowering`
+        (the wire-bits -> link-bits multiplier)."""
+        mode, offs = self.lowering(dims)
+        if mode == "circulant":
+            return sum(1 for off, _ in offs if any(o != 0 for o in off))
+        return max(self.degree, 0)
+
+
+def _factor_torus(n: int) -> Tuple[int, int]:
+    """Most-square factorization of n (bare ``torus`` spec, elastic
+    membership): a = largest divisor <= sqrt(n)."""
+    a = int(np.floor(np.sqrt(n)))
+    while n % a:
+        a -= 1
+    return (a, n // a) if a > 1 else (1, n)
+
+
+def topology(spec: Union[str, TopoSpec], n: Optional[int] = None,
+             lazy: float = 0.0) -> Topology:
+    """Module-level front door: ``topology("w1")``,
+    ``topology("ring", n=10, lazy=0.25)``, ``topology("torus:4x2")``."""
+    return Topology.from_spec(spec, n=n, lazy=lazy)

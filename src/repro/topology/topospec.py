@@ -1,0 +1,197 @@
+"""Typed topology specs — the single grammar for every consensus graph the
+repo names.
+
+Historically graph construction was scattered: numpy constructors in
+``core.consensus``, the ring/torus/complete dispatch inside
+``core.gossip.mesh_consensus_matrix``, ad-hoc ``topology=`` strings in
+``runtime.elastic.Membership``, configs and the launcher.  :class:`TopoSpec`
+is the one parser and the one canonical form; every front-door entry point
+(``Topology.from_spec``, ``GossipPlan`` construction, ``Membership``,
+``RunConfig.topology``, ``--topology``/``--topo-schedule``) goes through it,
+so a typo'd graph fails at parse/config-build time, before any plan exists.
+
+Grammar
+-------
+::
+
+    topo  := name [":" body]
+    body  := dims | path | arg ("," arg)*          (dims/path lead, per name)
+    arg   := key "=" value
+    dims  := int "x" int                           (torus only)
+    value := int | float
+
+Named constructors (see :mod:`repro.core.consensus` for the math):
+
+    ring[:hops=H,lazy=L]     — H-hop circle (default hops=1)
+    torus[:AxB[,lazy=L]]     — 2D torus; bare "torus" factors n at build time
+    complete[:lazy=L]        — all-to-all
+    star[:lazy=L]            — hub-and-spoke (worst-case spectral gap demo)
+    erdos:p=P[,seed=S,lazy=L]— Erdos–Renyi G(n, p), resampled until connected
+    expander:d=D[,seed=S,lazy=L]
+                             — random circulant D-regular expander (offset
+                               set {1} + random distinct offsets, so the
+                               gossip lowering stays ppermute-able)
+    w1 | w2                  — the paper's two 5-node matrices (§V-1)
+    fig3a | fig3b            — the 10-node Fig. 3 graphs
+    file:<path>              — adjacency from disk (.npy bool matrix, or
+                               .json {"n": N, "edges": [[u, v], ...]} /
+                               nested adjacency list)
+
+Canonical form
+--------------
+:meth:`canonical` renders the spec with sorted args and minimal numeric
+formatting; ``parse(s).canonical()`` is idempotent, and canonical strings
+are the topology half of the extended PlanBank key domain
+``(topo_canonical, rung_vector)`` used by time-varying runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple, Union
+
+_ArgVal = Union[int, float]
+
+# name -> (allowed args, required args)
+_TOPO_ARGS: Dict[str, Tuple[frozenset, frozenset]] = {
+    "ring": (frozenset({"hops", "lazy"}), frozenset()),
+    "torus": (frozenset({"lazy"}), frozenset()),
+    "complete": (frozenset({"lazy"}), frozenset()),
+    "star": (frozenset({"lazy"}), frozenset()),
+    "erdos": (frozenset({"p", "seed", "lazy"}), frozenset({"p"})),
+    "expander": (frozenset({"d", "seed", "lazy"}), frozenset({"d"})),
+    "w1": (frozenset(), frozenset()),
+    "w2": (frozenset(), frozenset()),
+    "fig3a": (frozenset(), frozenset()),
+    "fig3b": (frozenset(), frozenset()),
+    "file": (frozenset(), frozenset()),
+}
+
+# named graphs with a fixed node count (the paper's matrices)
+_FIXED_N = {"w1": 5, "w2": 5, "fig3a": 10, "fig3b": 10}
+
+_DIMS_RE = re.compile(r"^(\d+)x(\d+)$")
+
+
+def _coerce(raw: str) -> _ArgVal:
+    try:
+        return int(raw)
+    except ValueError:
+        pass
+    try:
+        return float(raw)
+    except ValueError:
+        raise ValueError(f"topology arg value {raw!r} must be numeric")
+
+
+def _render(v: _ArgVal) -> str:
+    if isinstance(v, int):
+        return str(v)
+    return repr(v)               # shortest round-trip form ('0.3')
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoSpec:
+    """Frozen, hashable graph spec: ``name`` plus sorted ``(key, value)``
+    args; ``dims`` for an explicit torus, ``path`` for file-backed graphs.
+    Equal specs hash equal, so a TopoSpec (or its ``canonical()`` string)
+    is directly usable in plan/cache keys."""
+
+    name: str
+    args: Tuple[Tuple[str, _ArgVal], ...] = ()
+    dims: Tuple[int, ...] = ()       # torus only ("torus:4x2")
+    path: str = ""                   # file only
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def parse(cls, spec: Union[str, "TopoSpec"]) -> "TopoSpec":
+        """Parse a topology string (idempotent on TopoSpec instances).
+
+        Unknown names, unknown/missing/duplicate args, and malformed dims
+        raise ValueError at PARSE time — a typo'd graph fails before any
+        consensus matrix or gossip plan is built."""
+        if isinstance(spec, TopoSpec):
+            return spec
+        if not isinstance(spec, str):
+            raise TypeError(f"TopoSpec.parse wants a string, got "
+                            f"{type(spec).__name__}: {spec!r}")
+        s = spec.strip()
+        name, _, body = s.partition(":")
+        if name not in _TOPO_ARGS:
+            raise ValueError(f"unknown topology {name!r} in spec {spec!r}; "
+                             f"have {sorted(_TOPO_ARGS)}")
+        if name == "file":
+            if not body:
+                raise ValueError(f"'file' topology needs a path: {spec!r}")
+            return cls(name=name, path=body)
+        allowed, required = _TOPO_ARGS[name]
+        dims: Tuple[int, ...] = ()
+        parts = [p for p in body.split(",") if p] if body else []
+        if name == "torus" and parts and "=" not in parts[0]:
+            m = _DIMS_RE.match(parts[0])
+            if not m:
+                raise ValueError(f"torus dims must look like '4x2', got "
+                                 f"{parts[0]!r} in {spec!r}")
+            dims = (int(m.group(1)), int(m.group(2)))
+            if min(dims) < 1:
+                raise ValueError(f"torus dims must be >= 1: {spec!r}")
+            parts = parts[1:]
+        args = []
+        seen = set()
+        for kv in parts:
+            k, eq, v = kv.partition("=")
+            if not eq or not k or not v:
+                raise ValueError(f"malformed arg {kv!r} in topology "
+                                 f"{spec!r} (want key=value)")
+            if k in seen:
+                raise ValueError(f"duplicate arg {k!r} in topology {spec!r}")
+            if k not in allowed:
+                raise ValueError(f"topology {name!r} takes no arg {k!r} "
+                                 f"(allowed: {sorted(allowed) or 'none'}) "
+                                 f"in {spec!r}")
+            seen.add(k)
+            args.append((k, _coerce(v)))
+        missing = required - seen
+        if missing:
+            raise ValueError(f"topology {name!r} requires "
+                             f"{sorted(missing)}: {spec!r}")
+        return cls(name=name, args=tuple(sorted(args)), dims=dims)
+
+    # ------------------------------------------------------------------
+    def canonical(self) -> str:
+        """The canonical string form (parse . canonical is idempotent)."""
+        if self.name == "file":
+            return f"file:{self.path}"
+        lead = [f"{self.dims[0]}x{self.dims[1]}"] if self.dims else []
+        body = lead + [f"{k}={_render(v)}" for k, v in self.args]
+        return self.name + (":" + ",".join(body) if body else "")
+
+    def __str__(self) -> str:
+        return self.canonical()
+
+    def kwargs(self) -> Dict[str, _ArgVal]:
+        return dict(self.args)
+
+    @property
+    def fixed_n(self) -> Optional[int]:
+        """Node count the spec itself pins (paper matrices, explicit torus
+        dims); None when n comes from the runtime (mesh / membership)."""
+        if self.name in _FIXED_N:
+            return _FIXED_N[self.name]
+        if self.dims:
+            return int(self.dims[0] * self.dims[1])
+        return None
+
+    @property
+    def lazy(self) -> Optional[float]:
+        """Spec-pinned lazy-mixing factor (None = use the caller default)."""
+        for k, v in self.args:
+            if k == "lazy":
+                return float(v)
+        return None
+
+    def build(self, n: Optional[int] = None, lazy: float = 0.0):
+        """Construct the runtime :class:`~repro.topology.topology.Topology`
+        (convenience for ``Topology.from_spec(self, n, lazy)``)."""
+        from .topology import Topology
+        return Topology.from_spec(self, n=n, lazy=lazy)

@@ -462,7 +462,8 @@ class Trainer:
     # ------------------------------------------------------------------
     # adaptive communication (repro.adapt)
     # ------------------------------------------------------------------
-    def plan_for_wire(self, spec) -> G.GossipPlan:
+    def plan_for_wire(self, spec, base_plan: Optional[G.GossipPlan] = None
+                      ) -> G.GossipPlan:
         """The launch plan with only the wire format(s) swapped — topology,
         W and offsets stay identical, so the Theorem-1 bar is unchanged.
 
@@ -477,24 +478,71 @@ class Trainer:
 
         Typed inputs (``repro.comm``: WireSpec, PerLeafPlan, or sequences
         of WireSpec) normalize to the same key domain, so policies can
-        hand their plans straight to the trainer."""
+        hand their plans straight to the trainer.
+
+        TAGGED keys extend the domain to composed scenarios:
+        ``("topo", canonical, inner)`` rebuilds the gossip plan over the
+        named :class:`repro.topology.Topology` (same mesh dims, new W /
+        offsets / lowering) before resolving ``inner``, and
+        ``("fault", drops, inner)`` lowers the inner plan through
+        ``runtime.fault.fault_plan`` (drop-and-renormalize on the dropped
+        offset classes) — both produced by TopologyComm / FaultComm
+        members of a Compose policy."""
         assert self.node_mode, "wire switching needs an active gossip plan"
         from ..comm import PerLeafPlan, WireSpec, canonical_key
         from ..runtime import fault
+        plan = base_plan if base_plan is not None else self.plan
         if isinstance(spec, PerLeafPlan):
             spec = spec.key()
         elif isinstance(spec, WireSpec) or (
                 isinstance(spec, (tuple, list))
                 and any(isinstance(s, WireSpec) for s in spec)):
             spec = canonical_key(spec)
+        if isinstance(spec, tuple) and len(spec) == 3 and spec[0] == "topo":
+            return self.plan_for_wire(
+                spec[2], base_plan=self.plan_for_topology(spec[1]))
+        if isinstance(spec, tuple) and len(spec) == 3 and spec[0] == "fault":
+            return fault.fault_plan(
+                self.plan_for_wire(spec[2], base_plan=plan), spec[1])
         if spec == fault.OUTAGE_SPEC:
-            return fault.outage_plan(self.plan)
+            return fault.outage_plan(plan)
         if isinstance(spec, (tuple, list)):
             fmts = tuple(make_wire(s) for s in spec)
-            return dataclasses.replace(self.plan, fmt=fmts[0],
+            return dataclasses.replace(plan, fmt=fmts[0],
                                        leaf_fmts=fmts)
-        return dataclasses.replace(self.plan, fmt=make_wire(spec),
+        return dataclasses.replace(plan, fmt=make_wire(spec),
                                    leaf_fmts=None)
+
+    def topology_for(self, spec):
+        """The :class:`repro.topology.Topology` a spec names, laid over
+        THIS trainer's mesh consensus dims (cached — spectra are computed
+        once per graph per trainer)."""
+        from ..topology import Topology, TopoSpec
+        c = TopoSpec.parse(spec).canonical()
+        cache = getattr(self, "_topo_cache", None)
+        if cache is None:
+            cache = self._topo_cache = {}
+            if self.plan is not None and self.plan.topo is not None:
+                cache[self.plan.topo.canonical()] = self.plan.topo
+        if c not in cache:
+            cache[c] = Topology.for_mesh_dims(
+                self.plan.dims, c, lazy=self.run.lazy_mixing)
+        return cache[c]
+
+    def plan_for_topology(self, spec) -> G.GossipPlan:
+        """The launch plan re-laid over another graph: same mesh axes and
+        wire format, new W / offsets / lowering mode (cached per graph)."""
+        topo = self.topology_for(spec)
+        cache = getattr(self, "_topo_plan_cache", None)
+        if cache is None:
+            cache = self._topo_plan_cache = {}
+        c = topo.canonical()
+        if c not in cache:
+            cache[c] = G.make_plan(
+                self.mesh, self.consensus_axes, self.plan.fmt,
+                topology=topo, wire_path=self.run.wire_path,
+                use_pallas=self.run.use_pallas_wire)
+        return cache[c]
 
     def wire_bits_for(self, spec) -> int:
         """EXACT per-node per-step link bits of ``plan_for_wire(spec)`` on
@@ -550,11 +598,12 @@ class Trainer:
     # the repro.comm front door
     # ------------------------------------------------------------------
     def eta_min(self) -> float:
-        """The active graph's Theorem-1 threshold (1-lambda_N)/(1+lambda_N),
-        computed once per trainer (W is fixed at plan build)."""
+        """The LAUNCH graph's Theorem-1 threshold (1-lambda_N)/(1+lambda_N),
+        computed once per trainer (a composed TopologyComm retargets the
+        live floor on a mid-run graph switch)."""
         cached = getattr(self, "_eta_min", None)
         if cached is None:
-            cached = float(cons.spectrum(self.plan.W).snr_threshold)
+            cached = float(self.plan.spectrum.snr_threshold)
             self._eta_min = cached
         return cached
 
@@ -569,24 +618,62 @@ class Trainer:
         """Parse every ladder rung (fail fast on a typo) and enforce the
         Theorem-1 anchor gate of the rate-control scenario: the ladder
         must contain a rung whose GUARANTEED SNR clears eta_min — the
-        provably-safe rung feedback policies climb back to.  Budget mode
-        inverts the constraints (the budget is hard, eta_min is an audit
-        floor — see adapt.budget), so the gate does not apply there
-        unless the rate member is composed on top.  Returns eta_min."""
+        provably-safe rung feedback policies climb back to.  With a
+        ``topo_schedule``, the gate binds on EVERY scheduled graph's
+        floor (the switch retargets eta_min upward mid-run; an anchor
+        that only clears the launch graph would leave the controller
+        with no safe retreat after the switch).  Budget mode inverts the
+        constraints (the budget is hard, eta_min is an audit floor — see
+        adapt.budget), so the gate does not apply there unless the rate
+        member is composed on top.  Returns the LAUNCH graph's eta_min."""
         ac = self.run.adapt
         eta_min = self.eta_min()
+        floors = {"launch": eta_min}
+        for _, sp in ac.topo_schedule:
+            floors[sp.canonical()] = self.topology_for(sp).eta_min
+        eta_req = max(floors.values())
         fmts = [make_wire(s) for s in ac.ladder]
         if (self._rate_member_on() and not self.run.unsafe and not any(
-                f.snr_lower_bound(1) > eta_min for f in fmts)):
+                f.snr_lower_bound(1) > eta_req for f in fmts)):
+            worst = max(floors, key=floors.get)
             raise ValueError(
                 f"Theorem-1 violation: no adapt-ladder rung has a "
-                f"guaranteed SNR above the threshold {eta_min:.3g} "
-                f"(ladder {list(ac.ladder)}); add a safe anchor (e.g. "
-                f"'dense') or set unsafe=True to override")
+                f"guaranteed SNR above the threshold {eta_req:.3g} "
+                f"(worst scheduled graph: {worst!r}; ladder "
+                f"{[str(s) for s in ac.ladder]}); add a safe "
+                f"anchor (e.g. 'dense') or set unsafe=True to override")
         return eta_min
 
+    def _fault_member(self):
+        """RunConfig.edge_drop_prob as a FaultComm Compose member: the
+        straggler simulation's per-edge drops become ("fault", drops,
+        inner) plan keys, so they compose with rate/budget control."""
+        from ..comm import FaultComm
+        from ..runtime import fault
+        return FaultComm(
+            sim=fault.StragglerSim(prob=self.run.edge_drop_prob,
+                                   seed=self.run.edge_drop_seed),
+            n_classes=len(fault.non_self_classes(self.plan)))
+
+    def _topology_member(self):
+        """AdaptConfig.topo_schedule as a TopologyComm Compose member:
+        graphs prebuilt over this trainer's mesh dims, floors pushed into
+        the composed rate/budget members on each switch, guaranteed-SNR
+        oracle = the same d=1 bound the launch gate uses."""
+        from ..topology import TopoSchedule, TopologyComm, TopoSpec
+        ac = self.run.adapt
+        entries = tuple(ac.topo_schedule)
+        if not any(s == 0 for s, _ in entries):
+            entries = ((0, TopoSpec.parse(self.run.topology)),) + entries
+        sched = TopoSchedule(entries=entries)
+        topos = {sp.canonical(): self.topology_for(sp)
+                 for sp in sched.specs()}
+        return TopologyComm(
+            schedule=sched, topologies=topos, dims=self.plan.dims,
+            guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+
     def comm_policy(self):
-        """This run's AdaptConfig as ONE repro.comm CommPolicy:
+        """This run's RunConfig/AdaptConfig as ONE repro.comm CommPolicy:
 
           * static (adapt disabled)            -> StaticComm(run.wire)
           * adapt                              -> RateComm(SNRFeedback /
@@ -594,23 +681,33 @@ class Trainer:
           * bit_budget > 0                     -> BudgetComm(budget_policy)
           * compose=True (rate AND budget)     -> Compose(rate, budget)
           * outage_windows                     -> OutageComm stacked on top
+          * topo_schedule                      -> TopologyComm (time-varying
+                                                  graph; retargets floors)
+          * edge_drop_prob > 0                 -> FaultComm (per-edge drop-
+                                                  and-renormalize faults)
 
         The driver for any of them is the same TrainSession — see
         :meth:`comm_session`."""
         from ..comm import (BudgetComm, Compose, OutageComm, RateComm,
                             StaticComm)
+        faults_on = self.node_mode and self.run.edge_drop_prob > 0
         ac = self.run.adapt
         if not (ac.enabled and self.node_mode):
+            if faults_on:
+                return Compose(StaticComm(self.run.wire),
+                               self._fault_member())
             return StaticComm(self.run.wire)
         eta_min = self.validate_ladder()
         parts = []
         budget_on = ac.bit_budget > 0
         if self._rate_member_on():
             from ..adapt import PerLeafSNRPolicy, SNRFeedbackPolicy
+            from ..comm import WireSpec
             # the configured wire is the starting rung if it is on the
             # ladder; otherwise start at the conservative end
-            start = (ac.ladder.index(self.run.wire)
-                     if self.run.wire in ac.ladder else 0)
+            wire_spec = WireSpec.parse(self.run.wire)
+            start = (ac.ladder.index(wire_spec)
+                     if wire_spec in ac.ladder else 0)
             n_leaves = len(self.gossip_leaf_shapes())
             if ac.per_leaf:
                 pol = PerLeafSNRPolicy(
@@ -632,6 +729,14 @@ class Trainer:
             if not parts:
                 parts.append(StaticComm(self.run.wire))
             parts.append(OutageComm(windows=tuple(ac.outage_windows)))
+        if ac.topo_schedule:
+            if not parts:
+                parts.append(StaticComm(self.run.wire))
+            parts.append(self._topology_member())
+        if faults_on:
+            if not parts:
+                parts.append(StaticComm(self.run.wire))
+            parts.append(self._fault_member())
         if not parts:
             # enabled but no member applies (e.g. rate_control=False with
             # no budget and no outage windows): hold the configured wire
