@@ -25,7 +25,11 @@ drives one composed policy —
     keys, no evictions — a graph switch and a fault pattern are dict
     lookups into ``("topo", canonical, rung)`` / ``("fault", drops, ...)``
     entries;
-  * the run CONVERGES (final gap under the static-dense reference x tol).
+  * the run CONVERGES (final gap under the static-dense reference x tol);
+  * OBS PARITY: the run streams a ``repro.obs`` event log
+    (artifacts/bench/fig6_run.jsonl) and the counters / cumulative bits
+    DERIVED from that log alone bit-match the audits computed here from
+    the live objects (``obs_parity`` — an artifact regression flag).
 
 Writes artifacts/bench/BENCH_topology.json and prints a CSV summary.
 """
@@ -106,13 +110,22 @@ def run():
     budget_pol = BudgetPolicy(controller=budget_ctl,
                               schedule=BudgetSchedule(bits=BUDGET),
                               cadence=1)
-    n_edges = int(np.sum(np.abs(opening.W) > 1e-12)
-                  - N_NODES) // 2
+    def n_edges_of(canonical):
+        """Undirected-edge count of a registered graph — the FaultComm
+        droppable-class space for the dense (drop_renormalize_dense)
+        backend."""
+        W = topos[canonical].W
+        return int(np.sum(np.abs(W) > 1e-12) - N_NODES) // 2
+
+    n_edges = n_edges_of(opening.canonical())
     topo_comm = TopologyComm(
         schedule=sched, topologies=dict(topos), dims=None,
         guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+    # n_classes_fn: a TopologyComm switch re-derives the class count from
+    # the NEW graph (ring-8 has 8 edges, torus:4x2 has 12 — without the
+    # hook, drops past the switch would index the ring's edge list)
     fault_comm = FaultComm(sim=WindowFaultSim(*FAULT_WINDOW),
-                           n_classes=n_edges)
+                           n_classes=n_edges, n_classes_fn=n_edges_of)
 
     # ---- the bank: (topo, rung [, fault]) -> jitted metric step ----------
     opening_c = opening.canonical()
@@ -136,8 +149,19 @@ def run():
                             WireCompressor(fmt=make_wire(inner)))
 
     bank_size = 2 * len(LADDER) + 2
+    # the obs event log: everything the parity audit below derives comes
+    # from THIS file, not from the live objects
+    from repro.obs import JsonlSink, Recorder, summarize
+    ART.mkdir(parents=True, exist_ok=True)
+    obs_path = ART / "fig6_run.jsonl"
+    recorder = Recorder(JsonlSink(obs_path))
+    recorder.emit_manifest(
+        config={"steps": STEPS, "budget": BUDGET, "ladder": list(LADDER),
+                "fault_window": list(FAULT_WINDOW)},
+        topology=opening.canonical(), seed=0)
     session = make_dcdgd_session(prob, opening.W, alpha_fn, key, None,
-                                 bank_size=bank_size, build_step=build_step)
+                                 bank_size=bank_size, build_step=build_step,
+                                 obs=recorder)
     probe = lambda: np.asarray(session.state.d)                 # noqa: E731
     rate = RateComm(policy=ControllerPolicy(controller=rate_ctl,
                                             probe_fn=probe,
@@ -146,6 +170,7 @@ def run():
     session.policy = Compose(rate, BudgetComm(policy=budget_pol),
                              topo_comm, fault_comm)
     res = session.run(STEPS)
+    recorder.close()
 
     # ---- references ------------------------------------------------------
     # exact-wire (identity) run on the opening graph = convergence yardstick
@@ -178,6 +203,22 @@ def run():
                  if isinstance(k, tuple) and k[0] == "topo"}
     fault_steps = sum(1 for k in res.plan_per_step if "fault" in str(k))
 
+    # ---- obs parity: the event log alone reproduces every audit ----------
+    rep = summarize(str(obs_path))
+    obs_counters = rep["counters"]
+    obs_cum_bits = rep["derived"]["cum_bits"]
+    cum_bits = float(np.sum([b for *_, b, _ in budget_pol.spend_log]))
+    obs_parity = bool(
+        obs_cum_bits == cum_bits
+        and obs_counters.get("eta_min_violations", 0)
+        == int(topo_comm.violations)
+        and obs_counters.get("budget_violations", 0) == int(budget_viols)
+        and obs_counters.get("plan_builds", 0) == int(builds)
+        and obs_counters.get("plan_evictions", 0)
+        == int(res.bank_stats["evictions"])
+        and rep["derived"]["fault_steps"] == int(fault_steps)
+        and rep["derived"]["n_steps"] == STEPS)
+
     return {
         "problem": f"quadratic_n{N_NODES}_d{DIM}",
         "schedule": [(s, sp.canonical()) for s, sp in sched.entries],
@@ -202,7 +243,11 @@ def run():
         "no_recompiles_beyond_bank": bool(
             builds == len(distinct) and res.bank_stats["evictions"] == 0),
         "fault_steps": int(fault_steps),
-        "cum_bits": float(np.sum([b for *_, b, _ in budget_pol.spend_log])),
+        "cum_bits": cum_bits,
+        "obs_log": str(obs_path),
+        "obs_parity": obs_parity,
+        "obs_counters": dict(obs_counters),
+        "obs_cum_bits": obs_cum_bits,
     }
 
 
@@ -224,13 +269,16 @@ def main():
           f"fault steps={out['fault_steps']}")
     print(f"fig6 bank {out['bank']} (bound {out['bank_bound']}) "
           f"plans={out['distinct_plans']}")
+    print(f"fig6 obs: parity={out['obs_parity']} "
+          f"counters={out['obs_counters']} log={out['obs_log']}")
     ok = (out["converged"]
           and out["eta_min_violations_decisions"] == 0
           and out["eta_min_violations_audit"] == 0
           and out["budget_violations"] == 0
           and out["no_recompiles_beyond_bank"]
           and len(out["switch_log"]) == 1
-          and out["fault_steps"] > 0)
+          and out["fault_steps"] > 0
+          and out["obs_parity"])
     print(f"fig6 acceptance: {'ALL OK' if ok else 'FAIL'} "
           f"-> {ART / 'BENCH_topology.json'}")
     return 0 if ok else 1

@@ -1,5 +1,13 @@
 """§Roofline: assemble the per-(arch x shape x mesh) three-term roofline
-table from the dry-run artifacts (artifacts/dryrun/*.json).
+table from the dry-run artifacts (artifacts/dryrun/*.json), plus the
+KERNEL BASELINE: the Pallas wire codecs (ternary / hybrid encode +
+decode-axpy) timed at a fixed row shape and checked element-exact against
+the pure-jnp oracles in ``repro.kernels.ref``.  The timings give the
+``repro.obs`` span layer a kernel-level reference point; the exactness
+checks are the DETERMINISTIC property flags (``kernels_ok``) the
+``benchmarks.run`` ARTIFACT-REGRESSION gate enforces on
+BENCH_roofline.json — a wrong codec output fails the run loudly, a slow
+machine does not.
 
 Per cell:
     compute_s   = HLO_FLOPs_per_dev / peak_FLOPs          (197 TF bf16 v5e)
@@ -151,6 +159,78 @@ def to_markdown(rows) -> str:
     return "".join(out)
 
 
+KERNEL_SHAPE = (32, 512)          # (rows, block) — one timing cell
+KERNEL_TOP_J = 8
+
+
+def _timeit(fn, *args, n=5):
+    fn(*args)  # warm (compile / trace)
+    import time
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def kernel_baseline():
+    """Time the Pallas wire codecs at KERNEL_SHAPE and check each output
+    element-exact against the ref oracles.  Returns {name: {us_per_call,
+    ok}} — ``ok`` is deterministic (exactness, not speed)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import hybrid as H
+    from repro.kernels import ops
+    from repro.kernels import ref as R
+    from repro.kernels import ternary as T
+
+    rows, block = KERNEL_SHAPE
+    interpret = ops._interpret()      # non-TPU backends interpret Pallas
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, block),
+                          jnp.float32) * 3
+    bits = jax.random.bits(jax.random.PRNGKey(1), (rows, block), jnp.uint32)
+    acc = jax.random.normal(jax.random.PRNGKey(2), (rows, block))
+    out = {}
+
+    codes, scales = T.ternary_encode(x, bits, block=block,
+                                     interpret=interpret)
+    rc, rs = R.ternary_encode_ref(x, bits)
+    enc_ok = (bool((np.asarray(codes) == np.asarray(rc)).all())
+              and bool(np.allclose(scales, rs, rtol=1e-6)))
+    out["ternary_encode"] = {
+        "us_per_call": _timeit(lambda: T.ternary_encode(
+            x, bits, block=block, interpret=interpret)),
+        "ok": enc_ok}
+
+    y = T.ternary_decode_axpy(codes, scales, acc, 0.4, block=block,
+                              interpret=interpret)
+    ry = R.ternary_decode_axpy_ref(rc, rs, acc, 0.4)
+    out["ternary_decode_axpy"] = {
+        "us_per_call": _timeit(lambda: T.ternary_decode_axpy(
+            codes, scales, acc, 0.4, block=block, interpret=interpret)),
+        "ok": bool(np.allclose(y, ry, rtol=1e-5, atol=1e-6))}
+
+    h = H.hybrid_encode(x, bits, block=block, top_j=KERNEL_TOP_J,
+                        interpret=interpret)
+    rh = R.hybrid_encode_ref(x, bits, KERNEL_TOP_J)
+    h_ok = all(bool(np.allclose(np.asarray(a, np.float64),
+                                np.asarray(b, np.float64), rtol=1e-6))
+               for a, b in zip(h, rh))
+    out["hybrid_encode"] = {
+        "us_per_call": _timeit(lambda: H.hybrid_encode(
+            x, bits, block=block, top_j=KERNEL_TOP_J,
+            interpret=interpret)),
+        "ok": h_ok}
+
+    z = H.hybrid_decode_axpy(*h, acc, 0.4, block=block, interpret=interpret)
+    rz = R.hybrid_decode_axpy_ref(*rh, acc, 0.4)
+    out["hybrid_decode_axpy"] = {
+        "us_per_call": _timeit(lambda: H.hybrid_decode_axpy(
+            *h, acc, 0.4, block=block, interpret=interpret)),
+        "ok": bool(np.allclose(z, rz, rtol=1e-5, atol=1e-6))}
+    return out, interpret
+
+
 def main():
     import jax.numpy  # noqa: F401
     (ART / "bench").mkdir(parents=True, exist_ok=True)
@@ -159,6 +239,20 @@ def main():
         json.dumps(rows, indent=1, default=str))
     md = to_markdown(rows)
     (ART / "bench" / "roofline.md").write_text(md)
+    kernels, interpret = kernel_baseline()
+    bench = {
+        "cells_total": len(rows),
+        "cells_ok": sum(1 for r in rows if r["status"] == "ok"),
+        "kernel_shape": list(KERNEL_SHAPE),
+        "kernel_top_j": KERNEL_TOP_J,
+        "interpret": bool(interpret),
+        "kernels": kernels,
+        # the ARTIFACT-REGRESSION flags: element-exactness vs the ref
+        # oracles (deterministic), never the timings
+        "kernels_ok": {name: k["ok"] for name, k in kernels.items()},
+    }
+    (ART / "bench" / "BENCH_roofline.json").write_text(
+        json.dumps(bench, indent=1))
     ok_rows = [r for r in rows if r["status"] == "ok"]
     print(f"name,cells_ok,cells_total,median_roofline_frac")
     fracs = [r["roofline_fraction"] for r in ok_rows]
@@ -168,7 +262,10 @@ def main():
         print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
               f"{r['dominant'].replace('_s','')},{r['roofline_fraction']:.3f},"
               f"{r['useful_ratio']:.2f}")
-    return 0
+    print("name,kernel,us_per_call,ok")
+    for name, k in kernels.items():
+        print(f"roofline-kernel,{name},{k['us_per_call']:.1f},{k['ok']}")
+    return 0 if all(k["ok"] for k in kernels.values()) else 1
 
 
 if __name__ == "__main__":

@@ -12,8 +12,11 @@
 #   scripts/run_tests.sh --cli-smoke    # launch/train.py --smoke once per
 #                                   # comm-policy class (static / adapt /
 #                                   # budget / composed), 8 virtual CPU
-#                                   # devices; fails on nonzero exit or
-#                                   # missing metrics keys
+#                                   # devices; fails on nonzero exit,
+#                                   # missing metrics keys, or a repro.obs
+#                                   # event log that does not validate
+#                                   # (unknown event kinds / missing
+#                                   # manifest fields)
 #   scripts/run_tests.sh <pytest args...>   # passthrough
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -72,8 +75,16 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
         # shellcheck disable=SC2086
         if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
                 python -m repro.launch.train "${COMMON[@]}" ${FLAGS[$mode]} \
-                --metrics-out "$TMP/$mode.json"; then
+                --metrics-out "$TMP/$mode.json" \
+                --obs "$TMP/$mode.jsonl"; then
             echo "cli-smoke $mode: FAIL (nonzero exit)"; rc=1; continue
+        fi
+        # the emitted event log must be schema-valid: every line a known
+        # v=SCHEMA_VERSION event, first event a run_manifest with its
+        # required fields (obs_cli exits nonzero otherwise)
+        if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+                python -m repro.launch.obs_cli validate "$TMP/$mode.jsonl"; then
+            echo "cli-smoke $mode: FAIL (obs validate)"; rc=1; continue
         fi
         if ! python - "$TMP/$mode.json" "$mode" <<'PY'
 import json, sys

@@ -71,6 +71,23 @@ and :mod:`repro.topology` (the graph side):
                                      policy)
         result = session.run(n_steps)          # result.metrics_arrays()
 
+Observability: the sink is the one metrics path
+-----------------------------------------------
+Because every scenario funnels through that one session driver, run
+telemetry has ONE exit too: hand the session a ``repro.obs.Recorder``
+(``obs=``) and every executed step, plan switch, fault window, outage and
+PlanBank build streams into a schema-validated JSONL event log.  The
+subsystems in this package do not print or keep private tallies — they
+increment the recorder's shared ``Counters`` registry
+(``BudgetPolicy._account`` mirrors its per-step budget check into
+``budget_violations``; the PlanBank build/evict hooks feed ``plan_builds``
+/ ``plan_evictions``; ``TopologyComm.audit`` mirrors
+``eta_min_violations``) and the budget ``spend_log`` stays the bits source
+of truth (each StepEvent's ``bits`` is ledger-first).  ``obs report`` /
+``obs diff`` then reproduce the fig4/fig5/fig6 headline numbers from the
+log alone — the event stream, not any in-process dict, is the audit
+surface.
+
 The wire ladder
 ---------------
 A ladder is an ORDERED tuple of codec specs, conservative -> aggressive,

@@ -55,27 +55,40 @@ class PlanBank:
         assert max_size >= 1
         self._build = build
         self._max = max_size
-        self._on_build = on_build   # compile-counter hook: fires exactly
-        # once per build() (= per compilation), never on a cache hit — the
-        # observable the no-silent-recompile regression tests key on
+        # compile-counter hooks: each fires exactly once per build() (= per
+        # compilation), never on a cache hit — the observable the
+        # no-silent-recompile regression tests and repro.obs key on
+        self._build_hooks: list = [on_build] if on_build is not None else []
+        self._evict_hooks: list = []
         self._cache: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.builds = 0   # build() invocations (compilations)
         self.hits = 0     # lookups served from cache
         self.evictions = 0
+
+    def add_build_hook(self, hook: Callable[[Key], None]) -> None:
+        """Register an additional per-build callback (``repro.obs``
+        attaches BuildEvent emission here)."""
+        self._build_hooks.append(hook)
+
+    def add_evict_hook(self, hook: Callable[[Key], None]) -> None:
+        """Register a per-eviction callback, called with the evicted key."""
+        self._evict_hooks.append(hook)
 
     def get(self, spec: Key) -> Any:
         if spec in self._cache:
             self._cache.move_to_end(spec)
             self.hits += 1
             return self._cache[spec]
-        if self._on_build is not None:
-            self._on_build(spec)
+        for hook in self._build_hooks:
+            hook(spec)
         value = self._build(spec)
         self.builds += 1
         self._cache[spec] = value
         if len(self._cache) > self._max:
-            self._cache.popitem(last=False)
+            evicted, _ = self._cache.popitem(last=False)
             self.evictions += 1
+            for hook in self._evict_hooks:
+                hook(evicted)
         return value
 
     def __contains__(self, spec: Key) -> bool:

@@ -239,6 +239,11 @@ class BudgetPolicy(Policy):
     probe_seed: int = 0
     spend_log: List[Tuple[int, float, float, float, str]] = \
         dataclasses.field(default_factory=list)
+    # shared repro.obs counters registry (Recorder.bind_policy sets it):
+    # _account mirrors each per-step budget-violation check into
+    # "budget_violations" — the same bits > budget*(1+1e-9) predicate the
+    # fig6 post-hoc spend-log audit applies
+    counters: Optional["Any"] = None
     _active: Optional[Tuple[str, ...]] = dataclasses.field(default=None)
     _active_bits: float = dataclasses.field(default=0.0)
 
@@ -270,6 +275,13 @@ class BudgetPolicy(Policy):
             bal = self.bucket.balance
         else:
             bal = budget - self._active_bits
+        # per-step violation audit (no-bucket mode: bits must fit the
+        # step's own budget — the fig6 post-hoc spend-log predicate).
+        # Under a token bucket, spending banked balance above the per-step
+        # fill is legitimate; the overdraft assert above is the invariant.
+        if (self.counters is not None and self.bucket is None
+                and self._active_bits > budget * (1 + 1e-9)):
+            self.counters.incr("budget_violations")
         self.spend_log.append((step, float(budget), float(bal),
                                float(self._active_bits), reason))
 

@@ -53,15 +53,16 @@ def _metric_step(problem, alpha_fn, Wj: jax.Array, comp: Compressor
 
 def make_dcdgd_session(problem, W: np.ndarray, alpha, key: jax.Array,
                        policy, *, bank_size: int = 8,
-                       build_step: Optional[Callable] = None
-                       ) -> TrainSession:
+                       build_step: Optional[Callable] = None,
+                       obs=None) -> TrainSession:
     """A TrainSession over the stacked-node dcdgd backend: plan keys are
     compressor specs (or OUTAGE), built lazily into jitted metric steps.
 
     ``build_step(key) -> step_fn`` overrides the default compressor-level
     builder (the budgeted scenario routes keys through WireCompressor so
     the bits shipped are exactly the bits budgeted).  ``W`` is a consensus
-    matrix or a :class:`repro.topology.Topology`."""
+    matrix or a :class:`repro.topology.Topology`.  ``obs`` attaches a
+    ``repro.obs.Recorder`` (typed event log + counters audit)."""
     W = getattr(W, "W", W)
     Wj = jnp.asarray(W, jnp.float32)
     n = W.shape[0]
@@ -75,7 +76,7 @@ def make_dcdgd_session(problem, W: np.ndarray, alpha, key: jax.Array,
             return _metric_step(problem, alpha_fn, Wj, make_compressor(spec))
 
     bank = PlanBank(build_step, max_size=bank_size)
-    return TrainSession(bank=bank, policy=policy, state=state)
+    return TrainSession(bank=bank, policy=policy, state=state, obs=obs)
 
 
 def _legacy_out(res: SessionResult) -> dict:

@@ -369,8 +369,15 @@ class FaultComm:
 
     ``sim`` is a ``runtime.fault.StragglerSim``-like (``dropped(step,
     n_classes) -> [class indices]``); ``n_classes`` is the number of
-    non-self offset classes of the ACTIVE gossip plan.  Each decided
-    step, Compose applies :meth:`drops_at` to the final plan: the dropped
+    non-self offset classes of the ACTIVE gossip plan.  Under a composed
+    TopologyComm the active plan changes with the graph, so the class
+    count must follow it: supply ``n_classes_fn(topo_canonical) -> int``
+    and :meth:`on_topology` (called by ``TopologyComm.maybe_switch`` on
+    every switch) re-derives ``n_classes`` from the NEW graph — without
+    it a switch keeps the opening graph's count, so drops index a stale
+    edge space and full-outage detection uses the wrong denominator.
+    Each decided step, Compose applies :meth:`drops_at` to the final
+    plan: the dropped
     classes ride in ``PerLeafPlan.drops`` (bank key ``("fault", drops,
     inner)``), the trainer lowers them through
     ``runtime.fault.drop_renormalize_plan`` (W_t stays symmetric doubly
@@ -383,7 +390,15 @@ class FaultComm:
     dropped edge ships fewer real bits than budgeted, never more)."""
     sim: Any                          # StragglerSim-like
     n_classes: int
+    # topo_canonical -> class count of that graph's active gossip plan
+    n_classes_fn: Optional[Callable[[str], int]] = None
     consumes_telemetry = False
+
+    def on_topology(self, canonical: str) -> None:
+        """TopologyComm switch hook: re-derive the droppable-class count
+        from the newly active graph (no-op without ``n_classes_fn``)."""
+        if self.n_classes_fn is not None:
+            self.n_classes = int(self.n_classes_fn(canonical))
 
     def drops_at(self, step: int) -> Tuple[int, ...]:
         if self.n_classes <= 0:

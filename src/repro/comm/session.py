@@ -20,12 +20,26 @@ it once:
     actually execute (a budget ledger must never be charged for a phantom
     step), and switches are recorded in ``wire_log``;
   * **hooks** — periodic logging, checkpointing, and switch callbacks, so
-    the CLI launcher adds behavior without forking the loop.
+    the CLI launcher adds behavior without forking the loop;
+  * **observability** — when a ``repro.obs.Recorder`` is attached
+    (``obs=``), the session is the ONE metrics path: it binds the shared
+    counters registry into the policy members and the plan bank at run
+    start, emits a typed event per executed step / plan switch / fault /
+    bank build, records phase spans (``step`` / ``compile`` /
+    ``controller_decide``), and closes the log with the counters audit
+    block.  The ``on_log`` / ``wire_log`` hooks remain for in-process
+    consumers, but everything a report needs is derivable from the event
+    log alone (``repro.obs.report``).  ``obs`` is duck-typed — this
+    module never imports obs (or jax, except lazily under ``obs`` to
+    bound step walls with ``block_until_ready``) — and ``obs=None``
+    leaves the hot path byte-for-byte on the pre-obs behavior,
+    including StaticComm's async dispatch.
 
 Typical use (the CLI path)::
 
     session = TrainSession(bank=trainer.wire_bank(), policy=policy,
-                           state=state, batch_fn=data.batch)
+                           state=state, batch_fn=data.batch,
+                           obs=Recorder(JsonlSink(path)))   # optional
     result = session.run(args.steps)
 
 and the dcdgd benchmark path is the same session with ``batch_fn=None``
@@ -103,6 +117,10 @@ class TrainSession:
     on_log: Optional[Callable[[int, Dict[str, Any], Key], None]] = None
     on_switch: Optional[Callable[[int, Key, Key], None]] = None
     checkpoint: Optional[Callable[[int, Any, Dict[str, Any]], None]] = None
+    # structured telemetry: a repro.obs.Recorder-like (duck-typed — needs
+    # bind_policy/attach_bank/on_step/on_switch/finalize and .spans).
+    # None (the default) keeps the loop exactly on the pre-obs hot path.
+    obs: Optional[Any] = None
 
     def run(self, n_steps: int, start_step: int = 0) -> SessionResult:
         if start_step >= n_steps:
@@ -113,14 +131,26 @@ class TrainSession:
                                  bank_stats=dict(self.bank.stats())
                                  if hasattr(self.bank, "stats") else {},
                                  wall_s=0.0)
+        obs = self.obs
+        _block = None
+        if obs is not None:
+            # bind the shared counters registry / bits ledger / bank hooks
+            # before any decision or build can fire (idempotent)
+            obs.bind_policy(self.policy)
+            obs.attach_bank(self.bank)
+            import jax as _jax  # lazy: obs-free sessions stay jax-free
+            _block = _jax.block_until_ready
         plan = self.policy.decide(start_step)
         assert plan is not None, "policy must open with a plan"
         active: Key = plan.key()
+        active_plan = plan                    # the typed plan behind `active`
         wire_log: List[Tuple[int, Key]] = [(start_step, active)]
         plan_per_step: List[Key] = []
         history: List[Dict[str, Any]] = []
         # a policy that ignores telemetry (StaticComm) must not cost the
         # hot loop a per-step device->host sync: keep async dispatch
+        # (an attached obs blocks regardless — honest per-step walls are
+        # what the user opted into)
         wants_telemetry = getattr(self.policy, "consumes_telemetry", True)
         t0 = time.time()
         for i in range(start_step, n_steps):
@@ -129,6 +159,8 @@ class TrainSession:
             # reach deadline-aware budget schedules
             fresh = (hasattr(self.bank, "__contains__")
                      and active not in self.bank)
+            if obs is not None:
+                obs.step = i          # BuildEvents fired by get() tag it
             step_fn = self.bank.get(active)
             ts = time.perf_counter()
             # self.state stays live during the run: model-based policies
@@ -138,6 +170,8 @@ class TrainSession:
                 self.state, m = step_fn(self.state, self.batch_fn(i))
             else:
                 self.state, m = step_fn(self.state)
+            if _block is not None:
+                m = _block(m)
             diff, noise = (_powers(m) if wants_telemetry else (None, None))
             # pulling the powers to host blocks on the step, so the wall
             # measurement is honest; without a wire path there is nothing
@@ -150,15 +184,27 @@ class TrainSession:
                     wall_ms=wall_ms))
             ran = active                      # the plan that RAN step i
             plan_per_step.append(ran)
+            if obs is not None:
+                dt = time.perf_counter() - ts
+                obs.spans.add("compile" if fresh else "step", dt)
+                obs.on_step(i, active_plan, ran, m,
+                            wall_ms=None if fresh else dt * 1e3)
             if self.track_history:
                 history.append(m)
             if (i + 1) < n_steps:
+                td = time.perf_counter() if obs is not None else 0.0
                 nxt = self.policy.decide(i + 1)
+                if obs is not None:
+                    obs.spans.add("controller_decide",
+                                  time.perf_counter() - td)
                 if nxt is not None:
+                    active_plan = nxt
                     k = nxt.key()
                     if k != active:
                         if self.on_switch is not None:
                             self.on_switch(i + 1, active, k)
+                        if obs is not None:
+                            obs.on_switch(i + 1, active, k)
                         wire_log.append((i + 1, k))
                         active = k
             if (self.on_log is not None and self.log_every > 0
@@ -167,8 +213,12 @@ class TrainSession:
                 self.on_log(i, m, ran)
             if self.checkpoint is not None:
                 self.checkpoint(i + 1, self.state, m)
-        return SessionResult(
+        res = SessionResult(
             state=self.state, n_steps=n_steps - start_step, history=history,
             wire_log=wire_log, plan_per_step=plan_per_step,
             bank_stats=dict(self.bank.stats()) if hasattr(self.bank, "stats")
             else {}, wall_s=time.time() - t0)
+        if obs is not None:
+            obs.finalize(bank=res.bank_stats, wall_s=res.wall_s,
+                         n_steps=res.n_steps)
+        return res

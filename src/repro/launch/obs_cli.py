@@ -1,0 +1,115 @@
+"""``python -m repro.launch.obs_cli`` — report / diff / validate for
+``repro.obs`` event logs.
+
+  report   run.jsonl            headline numbers from the log alone
+  diff     a.jsonl b.jsonl      regression gate (exit 1 on regression)
+  validate run.jsonl            strict schema check: every line must parse
+                                as a known v=SCHEMA_VERSION event, the
+                                first event must be a run_manifest with
+                                its required fields — the cli-smoke gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from ..obs import (SCHEMA_VERSION, RunManifest, SchemaError, diff,
+                   format_report, read_events, summarize)
+
+
+def cmd_report(args) -> int:
+    rep = summarize(args.log)
+    if args.json:
+        print(json.dumps(rep, indent=1, default=str))
+    else:
+        print(format_report(rep))
+    bad = [k for k, ok in rep["consistent"].items() if not ok]
+    return 1 if bad else 0
+
+
+def cmd_diff(args) -> int:
+    d = diff(args.a, args.b, bits_tol=args.bits_tol,
+             loss_tol=args.loss_tol, wall_tol=args.wall_tol,
+             gate_wall=args.gate_wall)
+    if args.json:
+        print(json.dumps(d, indent=1, default=str))
+    else:
+        for side in ("a", "b"):
+            der = d[side]["derived"]
+            print(f"{side}: steps={der['n_steps']} "
+                  f"cum_bits={der['cum_bits']:.6g} "
+                  f"final_loss={der['final_loss']} "
+                  f"counters={d[side]['counters']}")
+        for w in d["warnings"]:
+            print(f"WARN,{w}")
+        for r in d["regressions"]:
+            print(f"OBS-REGRESSION,{r}")
+        if d["ok"]:
+            print("ok: no regressions")
+    return 0 if d["ok"] else 1
+
+
+def cmd_validate(args) -> int:
+    try:
+        events = read_events(args.log)
+    except SchemaError as e:
+        print(f"INVALID,{e}")
+        return 1
+    if not events:
+        print(f"INVALID,{args.log}: empty event log")
+        return 1
+    if args.require_manifest:
+        first = events[0]
+        if not isinstance(first, RunManifest):
+            print(f"INVALID,{args.log}: first event is "
+                  f"{first.KIND!r}, not run_manifest")
+            return 1
+        for field in RunManifest.REQUIRED:
+            if getattr(first, field) in (None, {}):
+                print(f"INVALID,{args.log}: run_manifest missing "
+                      f"required field {field!r}")
+                return 1
+    counts: dict = {}
+    for e in events:
+        counts[e.KIND] = counts.get(e.KIND, 0) + 1
+    print(f"valid,v={SCHEMA_VERSION}," + ",".join(
+        f"{k}={counts[k]}" for k in sorted(counts)))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="obs", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("report", help="headline numbers from one log")
+    p.add_argument("log")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_report)
+
+    p = sub.add_parser("diff", help="regression gate between two logs")
+    p.add_argument("a", help="baseline log")
+    p.add_argument("b", help="candidate log")
+    p.add_argument("--bits-tol", type=float, default=0.01)
+    p.add_argument("--loss-tol", type=float, default=0.05)
+    p.add_argument("--wall-tol", type=float, default=0.5)
+    p.add_argument("--gate-wall", action="store_true",
+                   help="treat a wall-time increase as a regression, "
+                        "not a warning")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_diff)
+
+    p = sub.add_parser("validate", help="strict schema check (CI gate)")
+    p.add_argument("log")
+    p.add_argument("--no-manifest", dest="require_manifest",
+                   action="store_false",
+                   help="allow logs without an opening run_manifest "
+                        "(in-process session logs)")
+    p.set_defaults(fn=cmd_validate)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

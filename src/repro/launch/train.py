@@ -100,6 +100,11 @@ def main(argv=None):
     ap.add_argument("--outage-windows", default="",
                     help="scheduled full-link blackouts, e.g. '30-35;80-90' "
                          "([start, end) steps; W_t = I, zero link bits)")
+    ap.add_argument("--obs", default="",
+                    help="write a schema-validated repro.obs JSONL event "
+                         "log (run manifest + per-step/switch/fault/build "
+                         "events + counters audit) to this path; inspect "
+                         "with `python -m repro.launch.obs_cli report`")
     args = ap.parse_args(argv)
 
     import jax
@@ -242,6 +247,22 @@ def main(argv=None):
     def on_switch(step, old, new):
         print(f"adapt: step {step} wire {old!r} -> {new!r}")
 
+    recorder = None
+    if args.obs:
+        from ..comm import WireSpec
+        from ..obs import JsonlSink, Recorder
+        from ..topology import TopoSpec
+        recorder = Recorder(
+            JsonlSink(args.obs),
+            # exact per-node link bits for runs without a budget ledger
+            # or a per-step bits metric (static/rate modes)
+            cost_fn=tr.wire_bits_for if tr.node_mode else None)
+        recorder.emit_manifest(
+            config={k: v for k, v in vars(args).items()},
+            wire=WireSpec.parse(args.wire).canonical(),
+            topology=TopoSpec.parse(args.topology).canonical(),
+            seed=0, n_devices=n_dev, jax_version=jax.__version__)
+
     session = tr.comm_session(
         state, data.batch, policy=policy,
         track_history=False,           # on_log keeps the rows we report;
@@ -249,9 +270,14 @@ def main(argv=None):
         log_every=max(args.log_every, 1), on_log=on_log,
         on_switch=on_switch if adapt_on else None,
         checkpoint=(lambda s, st, m: mgr.maybe_save(
-            s, st, extra={"loss": float(m["loss"])})) if mgr else None)
+            s, st, extra={"loss": float(m["loss"])})) if mgr else None,
+        obs=recorder)
     with set_mesh(mesh):
         res = session.run(args.steps, start_step=start_step)
+
+    if recorder is not None:
+        recorder.close()
+        print(f"obs: {args.obs} counters {recorder.counters.as_dict()}")
 
     if topo_member is not None:
         print(f"topology: switches {topo_member.switch_log} "

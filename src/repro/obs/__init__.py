@@ -1,0 +1,35 @@
+"""repro.obs — structured run telemetry for the comm stack.
+
+One observability layer instead of per-subsystem ad-hoc dicts:
+
+  * :mod:`~repro.obs.events` — versioned, schema-validated JSONL event
+    log (StepEvent / SwitchEvent / FaultEvent / BuildEvent / RunManifest
+    / CountersEvent) behind a pluggable Sink, driven by a
+    :class:`Recorder` the :class:`~repro.comm.session.TrainSession`
+    duck-types against (``session.obs = Recorder(JsonlSink(path))``).
+  * :mod:`~repro.obs.spans` — phase timers and the shared counters
+    registry (``eta_min_violations``, ``budget_violations``,
+    ``outage_steps``, ``plan_builds``, ``plan_evictions``): subsystems
+    emit, obs aggregates.
+  * :mod:`~repro.obs.report` — ``obs report run.jsonl`` reproduces the
+    headline numbers from the log alone; ``obs diff a b`` gates on
+    regressions (CLI: ``python -m repro.launch.obs_cli``).
+
+Importing this package costs no jax import; the session hot path is
+untouched unless a Recorder is attached.
+"""
+from .events import (SCHEMA_VERSION, BuildEvent, CountersEvent, Event,
+                     FaultEvent, JsonlSink, MemorySink, NullSink, Recorder,
+                     RunManifest, SchemaError, StepEvent, SwitchEvent,
+                     parse_record, provenance, read_events, validate_record)
+from .report import diff, format_report, summarize
+from .spans import PHASES, Counters, SpanTimer
+
+__all__ = [
+    "SCHEMA_VERSION", "SchemaError", "Event", "RunManifest", "StepEvent",
+    "SwitchEvent", "FaultEvent", "BuildEvent", "CountersEvent",
+    "MemorySink", "JsonlSink", "NullSink", "Recorder", "provenance",
+    "parse_record", "read_events", "validate_record",
+    "Counters", "SpanTimer", "PHASES",
+    "summarize", "diff", "format_report",
+]

@@ -1,0 +1,475 @@
+"""Typed, versioned, schema-validated run events — the ``repro.obs`` wire
+format.
+
+Every record is one JSON object per line (JSONL) carrying ``kind`` (the
+event type) and ``v`` (the schema version).  The event vocabulary:
+
+  run_manifest  — once, first: config dict, canonical WireSpec/TopoSpec,
+                  seed, device count, jax version (provenance).
+  step          — once per executed step: plan-bank key, link bits, wall
+                  ms, loss, measured SNR, outage flag.
+  switch        — a plan switch decided for a future step (the session's
+                  ``wire_log`` as events).
+  fault         — a step that ran with dropped offset classes
+                  (``runtime.fault`` drop-and-renormalize).
+  build         — a PlanBank compilation (first use of a key).
+  counters      — once, last: the final counters registry, span summary,
+                  bank stats and total wall — the audit block ``obs
+                  report`` cross-checks against the derived per-step view.
+
+SCHEMA VERSION POLICY (v = 1): adding an OPTIONAL field is backward
+compatible and does NOT bump ``SCHEMA_VERSION`` — parsers ignore unknown
+keys.  Removing or renaming a field, changing a field's meaning or units,
+or adding a REQUIRED field bumps the version, and :func:`validate_record`
+rejects records whose ``v`` differs from this module's — an artifact
+written by a different schema generation must be regenerated, not
+reinterpreted.
+
+Sinks are pluggable (:class:`MemorySink` for tests, :class:`JsonlSink`
+for artifacts, :class:`NullSink` to measure instrumentation overhead);
+:class:`Recorder` is the stateful front door the session drives — it
+validates on emit, owns the shared :class:`~repro.obs.spans.Counters` /
+:class:`~repro.obs.spans.SpanTimer`, binds the counters registry into
+policy members (``bind_policy``) and plan banks (``attach_bank``), and
+derives each StepEvent's bits with ledger-first priority so the event log
+bit-matches the budget audit.  This module imports no jax at load time —
+the session hot path stays importable (and cheap) without it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple, Type, Union
+
+from .spans import Counters, SpanTimer
+
+SCHEMA_VERSION = 1
+
+
+class SchemaError(ValueError):
+    """A record that does not conform to the event schema."""
+
+
+def _finite(x: Optional[float]) -> Optional[float]:
+    """JSON has no inf/nan: map non-finite floats to None (absent)."""
+    if x is None:
+        return None
+    x = float(x)
+    return x if math.isfinite(x) else None
+
+
+# ---------------------------------------------------------------------------
+# event types
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _Event:
+    # class attributes, not fields: annotation-free on purpose
+    KIND = ""
+    REQUIRED = ()
+
+    def to_record(self) -> Dict[str, Any]:
+        rec: Dict[str, Any] = {"kind": self.KIND, "v": SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, tuple):
+                v = list(v)
+            rec[f.name] = v
+        return rec
+
+
+@dataclasses.dataclass(frozen=True)
+class RunManifest(_Event):
+    """Who produced this log: launch config + environment provenance."""
+    KIND = "run_manifest"
+    REQUIRED = ("config", "n_devices", "jax_version")
+    config: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    wire: Optional[str] = None        # canonical WireSpec (opening plan)
+    topology: Optional[str] = None    # canonical TopoSpec (opening graph)
+    seed: Optional[int] = None
+    n_devices: Optional[int] = None
+    jax_version: Optional[str] = None
+    backend: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEvent(_Event):
+    """One executed step.  ``bits`` is the step's link-bit charge with
+    ledger-first priority (budget spend_log > the step's own ``bits``
+    metric > an injected cost_fn > None = unknown); ``wall_ms`` is None on
+    first-use compile steps (the wall measures XLA, not the link)."""
+    KIND = "step"
+    REQUIRED = ("step", "plan")
+    step: int = 0
+    plan: str = ""                    # str() of the plan-bank key
+    bits: Optional[float] = None
+    wall_ms: Optional[float] = None
+    loss: Optional[float] = None
+    snr: Optional[float] = None
+    outage: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchEvent(_Event):
+    """The policy switched plans: ``new`` runs from ``step`` on."""
+    KIND = "switch"
+    REQUIRED = ("step", "old", "new")
+    step: int = 0
+    old: str = ""
+    new: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent(_Event):
+    """Step ``step`` ran with the given offset classes dropped."""
+    KIND = "fault"
+    REQUIRED = ("step", "drops")
+    step: int = 0
+    drops: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildEvent(_Event):
+    """A PlanBank build (jit compilation) fired for ``key``."""
+    KIND = "build"
+    REQUIRED = ("key",)
+    key: str = ""
+    step: Optional[int] = None        # step being executed, if known
+
+
+@dataclasses.dataclass(frozen=True)
+class CountersEvent(_Event):
+    """End-of-run audit block: final counters, span summary, bank stats."""
+    KIND = "counters"
+    REQUIRED = ("counters",)
+    n_steps: Optional[int] = None
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+    spans: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    bank: Dict[str, int] = dataclasses.field(default_factory=dict)
+    wall_s: Optional[float] = None
+
+
+Event = Union[RunManifest, StepEvent, SwitchEvent, FaultEvent, BuildEvent,
+              CountersEvent]
+
+EVENT_TYPES: Dict[str, Type[_Event]] = {
+    c.KIND: c for c in (RunManifest, StepEvent, SwitchEvent, FaultEvent,
+                        BuildEvent, CountersEvent)}
+
+# per-kind field typing for validation (bool before int: bool is an int
+# subclass, so an explicit entry keeps ints out of bool fields)
+_FIELD_TYPES: Dict[str, Dict[str, tuple]] = {
+    "run_manifest": {"config": (dict,), "wire": (str,), "topology": (str,),
+                     "seed": (int,), "n_devices": (int,),
+                     "jax_version": (str,), "backend": (str,)},
+    "step": {"step": (int,), "plan": (str,), "bits": (int, float),
+             "wall_ms": (int, float), "loss": (int, float),
+             "snr": (int, float), "outage": (bool,)},
+    "switch": {"step": (int,), "old": (str,), "new": (str,)},
+    "fault": {"step": (int,), "drops": (list, tuple)},
+    "build": {"key": (str,), "step": (int,)},
+    "counters": {"n_steps": (int,), "counters": (dict,), "spans": (dict,),
+                 "bank": (dict,), "wall_s": (int, float)},
+}
+
+
+def validate_record(rec: Dict[str, Any]) -> None:
+    """Raise :class:`SchemaError` unless ``rec`` is a valid v=1 record.
+    Unknown kinds and wrong schema versions are hard errors; unknown extra
+    KEYS on a known kind are tolerated (the additive-change policy)."""
+    if not isinstance(rec, dict):
+        raise SchemaError(f"record is {type(rec).__name__}, not an object")
+    kind = rec.get("kind")
+    cls = EVENT_TYPES.get(kind)
+    if cls is None:
+        raise SchemaError(f"unknown event kind {kind!r} "
+                          f"(known: {sorted(EVENT_TYPES)})")
+    v = rec.get("v")
+    if v != SCHEMA_VERSION:
+        raise SchemaError(f"schema version {v!r} != {SCHEMA_VERSION} "
+                          f"for kind {kind!r}")
+    types = _FIELD_TYPES[kind]
+    for name in cls.REQUIRED:
+        if rec.get(name) is None:
+            raise SchemaError(f"{kind}: required field {name!r} missing "
+                              f"or null")
+    for name, allowed in types.items():
+        val = rec.get(name)
+        if val is None:
+            continue
+        if bool not in allowed and isinstance(val, bool):
+            raise SchemaError(f"{kind}.{name}: bool where "
+                              f"{allowed} expected")
+        if not isinstance(val, allowed):
+            raise SchemaError(f"{kind}.{name}: {type(val).__name__} where "
+                              f"{tuple(t.__name__ for t in allowed)} "
+                              f"expected")
+
+
+def parse_record(rec: Dict[str, Any]) -> Event:
+    """record dict -> typed event (validates first).  Round-trips
+    :meth:`_Event.to_record` exactly."""
+    validate_record(rec)
+    cls = EVENT_TYPES[rec["kind"]]
+    names = {f.name for f in dataclasses.fields(cls)}
+    kw = {k: v for k, v in rec.items() if k in names}
+    if "drops" in kw and kw["drops"] is not None:
+        kw["drops"] = tuple(int(d) for d in kw["drops"])
+    return cls(**kw)
+
+
+def read_events(path) -> List[Event]:
+    """Parse a JSONL event log into typed events (strict: any malformed
+    line raises :class:`SchemaError` with its line number)."""
+    out: List[Event] = []
+    with open(path) as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise SchemaError(f"{path}:{lineno}: not JSON ({e})")
+            try:
+                out.append(parse_record(rec))
+            except SchemaError as e:
+                raise SchemaError(f"{path}:{lineno}: {e}")
+    return out
+
+
+def provenance() -> Dict[str, Any]:
+    """Environment provenance block for artifacts: schema version, jax
+    version, device count/backend, platform, UTC timestamp."""
+    import platform as _platform
+    import time as _time
+    out: Dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+        "timestamp_utc": _time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                        _time.gmtime()),
+    }
+    try:
+        import jax
+        out["jax_version"] = jax.__version__
+        out["n_devices"] = len(jax.devices())
+        out["backend"] = jax.default_backend()
+    except Exception:  # pragma: no cover - jax is baked into this image
+        out["jax_version"] = None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+class MemorySink:
+    """Collects records in a list (tests / in-process reporting)."""
+
+    def __init__(self) -> None:
+        self.records: List[Dict[str, Any]] = []
+
+    def write(self, record: Dict[str, Any]) -> None:
+        self.records.append(record)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """One compact JSON object per line, flushed per write so a crashed
+    run still leaves a readable prefix."""
+
+    def __init__(self, path) -> None:
+        self.path = str(path)
+        self._fh = open(self.path, "w")
+
+    def write(self, record: Dict[str, Any]) -> None:
+        self._fh.write(json.dumps(record, separators=(",", ":"),
+                                  sort_keys=True, allow_nan=False) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if not self._fh.closed:
+            self._fh.close()
+
+
+class NullSink:
+    """Swallows everything — instrumentation overhead measurements."""
+
+    def write(self, record: Dict[str, Any]) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# recorder
+# ---------------------------------------------------------------------------
+class Recorder:
+    """The stateful obs front door a :class:`~repro.comm.session.
+    TrainSession` drives (duck-typed — the session never imports obs).
+
+    One Recorder per run.  It owns the shared :class:`Counters` registry
+    and :class:`SpanTimer`; ``bind_policy`` pushes the registry into every
+    composed member exposing a ``counters`` attribute (TopologyComm's
+    eta_min audit, BudgetPolicy's violation check) and captures the budget
+    spend ledger, so each StepEvent's ``bits`` bit-matches the audit;
+    ``attach_bank`` hooks PlanBank builds/evictions into BuildEvents and
+    the ``plan_builds`` / ``plan_evictions`` counters.  Both are
+    idempotent per object, so the session can call them unconditionally at
+    run start."""
+
+    def __init__(self, sink=None, *, validate: bool = True,
+                 cost_fn: Optional[Callable[[Any], float]] = None) -> None:
+        self.sink = sink if sink is not None else MemorySink()
+        self.validate = validate
+        self.cost_fn = cost_fn        # plan key -> link bits (fallback)
+        self.counters = Counters()
+        self.spans = SpanTimer()
+        self.step = -1                # live step index (BuildEvent tag)
+        self._ledger = None           # BudgetPolicy.spend_log, if bound
+        self._bound: set = set()
+
+    # -- emission ----------------------------------------------------------
+    def emit(self, event: _Event) -> None:
+        rec = event.to_record()
+        if self.validate:
+            validate_record(rec)
+        self.sink.write(rec)
+
+    def emit_manifest(self, *, config: Optional[Dict[str, Any]] = None,
+                      wire: Optional[str] = None,
+                      topology: Optional[str] = None,
+                      seed: Optional[int] = None,
+                      n_devices: Optional[int] = None,
+                      jax_version: Optional[str] = None,
+                      backend: Optional[str] = None) -> RunManifest:
+        """Emit the opening RunManifest; device count / jax version /
+        backend are auto-filled from the live process when not given."""
+        if n_devices is None or jax_version is None or backend is None:
+            prov = provenance()
+            n_devices = prov.get("n_devices") if n_devices is None \
+                else n_devices
+            jax_version = prov.get("jax_version") if jax_version is None \
+                else jax_version
+            backend = prov.get("backend") if backend is None else backend
+        m = RunManifest(config=dict(config or {}), wire=wire,
+                        topology=topology, seed=seed, n_devices=n_devices,
+                        jax_version=jax_version, backend=backend)
+        self.emit(m)
+        return m
+
+    # -- binding -----------------------------------------------------------
+    def bind_policy(self, policy: Any) -> None:
+        """Share the counters registry with every policy member that
+        exposes a ``counters`` attribute (directly or on a wrapped
+        ``.policy``) and capture the budget spend ledger as the per-step
+        bits source of truth."""
+        if policy is None or id(policy) in self._bound:
+            return
+        self._bound.add(id(policy))
+        members = tuple(getattr(policy, "members", ())) or (policy,)
+        for m in members:
+            for target in (m, getattr(m, "policy", None)):
+                if target is not None and hasattr(target, "counters"):
+                    target.counters = self.counters
+            if self._ledger is None:
+                log = getattr(m, "spend_log", None)
+                if log is not None:
+                    self._ledger = log
+
+    def attach_bank(self, bank: Any) -> None:
+        """Hook PlanBank builds/evictions (no-op for banks without the
+        hook API; idempotent per bank object)."""
+        if bank is None or id(bank) in self._bound:
+            return
+        self._bound.add(id(bank))
+        add_build = getattr(bank, "add_build_hook", None)
+        if add_build is not None:
+            def _on_build(key):
+                self.counters.incr("plan_builds")
+                self.emit(BuildEvent(key=str(key),
+                                     step=self.step if self.step >= 0
+                                     else None))
+            add_build(_on_build)
+        add_evict = getattr(bank, "add_evict_hook", None)
+        if add_evict is not None:
+            add_evict(lambda key: self.counters.incr("plan_evictions"))
+
+    # -- per-step ----------------------------------------------------------
+    def _step_bits(self, step: int, key: Any,
+                   metrics: Optional[Dict[str, Any]]) -> Optional[float]:
+        if self._ledger is not None:
+            # entries are step-ascending and the entry for step i is
+            # written at decide(i) time, before i executes: scan from the
+            # tail (O(1) amortized)
+            for e in reversed(self._ledger):
+                if e[0] == step:
+                    return float(e[3])
+                if e[0] < step:
+                    break
+        if metrics is not None and "bits" in metrics:
+            try:
+                return float(metrics["bits"])
+            except Exception:
+                pass
+        if self.cost_fn is not None:
+            try:
+                return float(self.cost_fn(key))
+            except Exception:
+                pass
+        return None
+
+    def on_step(self, step: int, plan: Any, key: Any,
+                metrics: Optional[Dict[str, Any]] = None,
+                wall_ms: Optional[float] = None) -> None:
+        """Emit the StepEvent (and a FaultEvent when the plan carries
+        drops) for one executed step.  ``plan`` is the PerLeafPlan that
+        ran, ``key`` its bank key, ``metrics`` the step's metric dict
+        (already on host)."""
+        self.step = step
+        outage = bool(getattr(plan, "outage", False)) or key == "outage"
+        bits = 0.0 if outage else self._step_bits(step, key, metrics)
+        if outage:
+            self.counters.incr("outage_steps")
+        drops = tuple(getattr(plan, "drops", ()) or ())
+        if drops:
+            self.emit(FaultEvent(step=step, drops=drops))
+        loss = snr = None
+        if metrics:
+            for k in ("loss", "f_bar"):
+                if k in metrics:
+                    try:
+                        loss = _finite(float(metrics[k]))
+                    except Exception:
+                        loss = None
+                    break
+            d, n = metrics.get("diff_power"), metrics.get("noise_power")
+            if d is not None and n is not None:
+                try:
+                    dn, nn = float(d), float(n)
+                    snr = _finite(dn / nn) if nn > 0 else None
+                except Exception:
+                    snr = None
+        self.emit(StepEvent(step=step, plan=str(key), bits=_finite(bits),
+                            wall_ms=_finite(wall_ms), loss=loss, snr=snr,
+                            outage=outage))
+
+    def on_switch(self, step: int, old: Any, new: Any) -> None:
+        self.emit(SwitchEvent(step=step, old=str(old), new=str(new)))
+
+    def finalize(self, *, bank: Optional[Dict[str, int]] = None,
+                 wall_s: Optional[float] = None,
+                 n_steps: Optional[int] = None) -> None:
+        """Emit the closing CountersEvent (audit block)."""
+        self.emit(CountersEvent(n_steps=n_steps,
+                                counters=self.counters.as_dict(),
+                                spans=self.spans.summary(),
+                                bank=dict(bank or {}),
+                                wall_s=_finite(wall_s)))
+
+    def close(self) -> None:
+        self.sink.close()

@@ -1,0 +1,164 @@
+"""Reproduce a run's headline numbers from its event log alone, and diff
+two logs for regressions.
+
+:func:`summarize` is the contract behind ``obs report``: cumulative link
+bits, final loss (the optimality-gap proxy the fig benchmarks plot),
+violation counters, plan switches/builds and the span breakdown are all
+DERIVED from the JSONL events — no live session needed — and cross-checked
+against the closing CountersEvent audit block (``consistent``).
+
+:func:`diff` is the regression gate behind ``obs diff``: relative
+thresholds on cumulative bits / final loss / wall, strict monotone gates
+on the violation counters (any increase flags).  Wall time lands in
+``warnings`` rather than ``regressions`` by default — timing wobbles,
+bits and violations do not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+from .events import (BuildEvent, CountersEvent, Event, FaultEvent,
+                     RunManifest, StepEvent, SwitchEvent, read_events)
+
+# counters where ANY increase between two runs is a regression
+STRICT_COUNTERS = ("eta_min_violations", "budget_violations")
+
+
+def _events(src: Union[str, Sequence[Event]]) -> List[Event]:
+    if isinstance(src, (str, bytes)) or hasattr(src, "read_text"):
+        return read_events(src)
+    return list(src)
+
+
+def summarize(src: Union[str, Sequence[Event]]) -> Dict[str, Any]:
+    """Event log (path or parsed events) -> headline-number report."""
+    evs = _events(src)
+    manifest = next((e for e in evs if isinstance(e, RunManifest)), None)
+    steps = [e for e in evs if isinstance(e, StepEvent)]
+    switches = [e for e in evs if isinstance(e, SwitchEvent)]
+    builds = [e for e in evs if isinstance(e, BuildEvent)]
+    faults = [e for e in evs if isinstance(e, FaultEvent)]
+    closing = next((e for e in reversed(evs)
+                    if isinstance(e, CountersEvent)), None)
+
+    known_bits = [e.bits for e in steps if e.bits is not None]
+    losses = [e.loss for e in steps if e.loss is not None]
+    plans: List[str] = []
+    for e in steps:
+        if not plans or plans[-1] != e.plan:
+            plans.append(e.plan)
+    derived = {
+        "n_steps": len(steps),
+        "cum_bits": float(sum(known_bits)),
+        "bits_unknown_steps": len(steps) - len(known_bits),
+        "final_loss": losses[-1] if losses else None,
+        "outage_steps": sum(1 for e in steps if e.outage),
+        "plan_builds": len(builds),
+        "switches": [(e.step, e.old, e.new) for e in switches],
+        "fault_steps": len(faults),
+        "distinct_plans": sorted(set(e.plan for e in steps)),
+    }
+    counters = dict(closing.counters) if closing is not None else {}
+    consistent: Dict[str, bool] = {}
+    for name, val in (("plan_builds", derived["plan_builds"]),
+                      ("outage_steps", derived["outage_steps"])):
+        if name in counters:
+            consistent[name] = counters[name] == val
+    return {
+        "manifest": dataclasses.asdict(manifest) if manifest else None,
+        "derived": derived,
+        "counters": counters,
+        "spans": dict(closing.spans) if closing is not None else {},
+        "bank": dict(closing.bank) if closing is not None else {},
+        "wall_s": closing.wall_s if closing is not None else None,
+        "consistent": consistent,
+    }
+
+
+def _rel_increase(a: Optional[float], b: Optional[float],
+                  tol: float) -> bool:
+    if a is None or b is None:
+        return False
+    return float(b) > float(a) * (1.0 + tol) + 1e-12
+
+
+def diff(a: Union[str, Sequence[Event]], b: Union[str, Sequence[Event]],
+         *, bits_tol: float = 0.01, loss_tol: float = 0.05,
+         wall_tol: float = 0.5, gate_wall: bool = False) -> Dict[str, Any]:
+    """Compare run ``b`` (candidate) against ``a`` (baseline).  Returns
+    summaries, per-metric deltas, and the ``regressions`` list the CLI
+    gates its exit code on."""
+    sa, sb = summarize(a), summarize(b)
+    da, db = sa["derived"], sb["derived"]
+    regressions: List[str] = []
+    warnings: List[str] = []
+
+    if _rel_increase(da["cum_bits"], db["cum_bits"], bits_tol):
+        regressions.append(
+            f"cum_bits {da['cum_bits']:.6g} -> {db['cum_bits']:.6g} "
+            f"(> +{100 * bits_tol:.1f}%)")
+    if _rel_increase(da["final_loss"], db["final_loss"], loss_tol):
+        regressions.append(
+            f"final_loss {da['final_loss']:.6g} -> {db['final_loss']:.6g} "
+            f"(> +{100 * loss_tol:.1f}%)")
+    for name in STRICT_COUNTERS:
+        ca = sa["counters"].get(name, 0)
+        cb = sb["counters"].get(name, 0)
+        if cb > ca:
+            regressions.append(f"{name} {ca} -> {cb}")
+    if db["plan_builds"] > da["plan_builds"]:
+        warnings.append(f"plan_builds {da['plan_builds']} -> "
+                        f"{db['plan_builds']} (more compilations)")
+    if _rel_increase(sa["wall_s"], sb["wall_s"], wall_tol):
+        msg = (f"wall_s {sa['wall_s']:.3g} -> {sb['wall_s']:.3g} "
+               f"(> +{100 * wall_tol:.0f}%)")
+        (regressions if gate_wall else warnings).append(msg)
+
+    return {
+        "a": {"derived": da, "counters": sa["counters"],
+              "wall_s": sa["wall_s"]},
+        "b": {"derived": db, "counters": sb["counters"],
+              "wall_s": sb["wall_s"]},
+        "regressions": regressions,
+        "warnings": warnings,
+        "ok": not regressions,
+    }
+
+
+def format_report(rep: Dict[str, Any]) -> str:
+    """Human-readable rendering of :func:`summarize` output."""
+    d = rep["derived"]
+    lines = []
+    m = rep["manifest"]
+    if m:
+        lines.append(f"manifest: wire={m.get('wire')} "
+                     f"topology={m.get('topology')} seed={m.get('seed')} "
+                     f"devices={m.get('n_devices')} "
+                     f"jax={m.get('jax_version')}")
+    lines.append(f"steps: {d['n_steps']}   cum_bits: {d['cum_bits']:.6g}"
+                 + (f"   ({d['bits_unknown_steps']} steps unknown)"
+                    if d["bits_unknown_steps"] else ""))
+    if d["final_loss"] is not None:
+        lines.append(f"final_loss: {d['final_loss']:.6g}")
+    lines.append(f"outage_steps: {d['outage_steps']}   "
+                 f"fault_steps: {d['fault_steps']}   "
+                 f"builds: {d['plan_builds']}   "
+                 f"switches: {len(d['switches'])}")
+    if rep["counters"]:
+        lines.append("counters: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(rep["counters"].items())))
+    if rep["spans"]:
+        lines.append("spans:")
+        for name, s in rep["spans"].items():
+            lines.append(f"  {name:18s} total {s['total_s']:.3f}s  "
+                         f"x{int(s['count'])}  mean {s['mean_ms']:.2f}ms")
+    if rep["bank"]:
+        lines.append("bank: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(rep["bank"].items())))
+    if rep["wall_s"] is not None:
+        lines.append(f"wall_s: {rep['wall_s']:.3f}")
+    bad = [k for k, ok in rep["consistent"].items() if not ok]
+    if bad:
+        lines.append(f"INCONSISTENT counters vs events: {bad}")
+    return "\n".join(lines)

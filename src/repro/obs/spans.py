@@ -1,0 +1,97 @@
+"""Phase spans and the counters registry — the aggregation half of
+``repro.obs``.
+
+:class:`SpanTimer` accumulates named wall-clock phases.  The canonical
+phase names for a DC-DGD step are in :data:`PHASES` — ``grad`` / ``encode``
+/ ``ppermute`` / ``decode_axpy`` live INSIDE the jitted step and are only
+separable when a kernel-level harness times them individually (the
+roofline microbenchmarks); the session-level driver records the phases it
+can bound honestly: ``step`` (a non-compile step's wall), ``compile``
+(first-use bank builds), and ``controller_decide`` (host-side policy
+work).  ``span(name, ready=leaves)`` closes over ``jax.block_until_ready``
+so a span covering async-dispatched device work is bounded by completion,
+not by dispatch.
+
+:class:`Counters` is the single home for the stack's audit counts —
+``eta_min_violations``, ``budget_violations``, ``outage_steps``,
+``plan_builds``, ``plan_evictions`` — subsystems increment the shared
+registry (``TopologyComm.audit``, ``BudgetPolicy._account``, the PlanBank
+hooks), obs aggregates and reports.  Both classes are pure stdlib: no jax
+import unless a span asks to block on device values.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Dict, Iterator, Tuple
+
+# canonical phase vocabulary (informative, not enforced)
+PHASES: Tuple[str, ...] = ("grad", "encode", "ppermute", "decode_axpy",
+                           "controller_decide", "step", "compile",
+                           "bank_get")
+
+
+class Counters:
+    """Named monotonic counters: ``incr``/``get``/``as_dict``.  Shared by
+    reference — ``Recorder.bind_policy`` hands ONE instance to every
+    subsystem that exposes a ``counters`` attribute."""
+
+    def __init__(self) -> None:
+        self._c: Dict[str, int] = {}
+
+    def incr(self, name: str, by: int = 1) -> int:
+        v = self._c.get(name, 0) + int(by)
+        self._c[name] = v
+        return v
+
+    def get(self, name: str, default: int = 0) -> int:
+        return self._c.get(name, default)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: self._c[k] for k in sorted(self._c)}
+
+    def reset(self) -> None:
+        self._c.clear()
+
+    def __repr__(self) -> str:
+        return f"Counters({self.as_dict()})"
+
+
+class SpanTimer:
+    """Accumulating named wall-clock spans (total seconds + call count)."""
+
+    def __init__(self) -> None:
+        self._total: Dict[str, float] = {}
+        self._count: Dict[str, int] = {}
+
+    def add(self, name: str, seconds: float) -> None:
+        self._total[name] = self._total.get(name, 0.0) + float(seconds)
+        self._count[name] = self._count.get(name, 0) + 1
+
+    @contextlib.contextmanager
+    def span(self, name: str, ready: Any = None) -> Iterator[None]:
+        """Time a block.  ``ready`` (a pytree of device arrays) bounds the
+        span by ``jax.block_until_ready`` so async dispatch does not make
+        the measurement a lie; leave it None for host-side phases."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            if ready is not None:
+                try:
+                    import jax
+                    jax.block_until_ready(ready)
+                except Exception:
+                    pass
+            self.add(name, time.perf_counter() - t0)
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """{name: {total_s, count, mean_ms}} sorted by total descending."""
+        names = sorted(self._total, key=self._total.get, reverse=True)
+        return {n: {"total_s": self._total[n],
+                    "count": self._count[n],
+                    "mean_ms": 1e3 * self._total[n] / max(self._count[n], 1)}
+                for n in names}
+
+    def __repr__(self) -> str:
+        return f"SpanTimer({self.summary()})"

@@ -116,6 +116,9 @@ class TopologyComm:
     switch_log: List[Tuple[int, str, str, float]] = dataclasses.field(
         default_factory=list)     # (step, old, new, new_eta_min)
     violations: int = 0
+    # shared repro.obs counters registry (Recorder.bind_policy sets it);
+    # the audit mirrors every `violations` increment into it
+    counters: Optional[Any] = None
 
     def __post_init__(self):
         for sp in self.schedule.specs():
@@ -174,6 +177,11 @@ class TopologyComm:
             retarget = getattr(m, "retarget", None)
             if retarget is not None and m is not self:
                 retarget(eta_min=topo.eta_min, neighbors=neighbors)
+            # graph-shape hook (FaultComm): members whose index spaces are
+            # derived from the active graph re-derive them here
+            on_topology = getattr(m, "on_topology", None)
+            if on_topology is not None and m is not self:
+                on_topology(nxt)
         self.switch_log.append((step, old, nxt, topo.eta_min))
         self._below_streak = 0
         return True
@@ -223,6 +231,8 @@ class TopologyComm:
             self._below_streak += 1
             if self._below_streak >= 2:
                 self.violations += 1
+                if self.counters is not None:
+                    self.counters.incr("eta_min_violations")
         else:
             self._below_streak = 0
         self._last_key = plan.key()

@@ -647,13 +647,18 @@ class Trainer:
     def _fault_member(self):
         """RunConfig.edge_drop_prob as a FaultComm Compose member: the
         straggler simulation's per-edge drops become ("fault", drops,
-        inner) plan keys, so they compose with rate/budget control."""
+        inner) plan keys, so they compose with rate/budget control.
+        ``n_classes_fn`` re-derives the droppable-class count from
+        whichever graph a composed TopologyComm activates, so a mid-run
+        switch never leaves drops indexing the opening graph's edges."""
         from ..comm import FaultComm
         from ..runtime import fault
         return FaultComm(
             sim=fault.StragglerSim(prob=self.run.edge_drop_prob,
                                    seed=self.run.edge_drop_seed),
-            n_classes=len(fault.non_self_classes(self.plan)))
+            n_classes=len(fault.non_self_classes(self.plan)),
+            n_classes_fn=lambda c: len(fault.non_self_classes(
+                self.plan_for_topology(c))))
 
     def _topology_member(self):
         """AdaptConfig.topo_schedule as a TopologyComm Compose member:

@@ -1,0 +1,530 @@
+"""repro.obs: schema round-trips per event type, validation hard-failure
+modes, sinks, the counters/spans registries, the Recorder's ledger-first
+bits derivation, report/diff regression gating, the obs CLI — and AUDIT
+PARITY: on a composed fig6-style dcdgd session (rate-static + budget +
+topology switch + fault window), every counter and the cumulative bits
+DERIVED from the event log alone must bit-match the live-object audits.
+"""
+import dataclasses
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro.obs import (SCHEMA_VERSION, BuildEvent, Counters, CountersEvent,
+                       FaultEvent, JsonlSink, MemorySink, NullSink, Recorder,
+                       RunManifest, SchemaError, SpanTimer, StepEvent,
+                       SwitchEvent, diff, parse_record, provenance,
+                       read_events, summarize, validate_record)
+
+ONE_OF_EACH = (
+    RunManifest(config={"steps": 4}, wire="int8:block=64", topology="ring",
+                seed=0, n_devices=8, jax_version="0.4", backend="cpu"),
+    StepEvent(step=3, plan="int8:block=64", bits=1024.0, wall_ms=1.5,
+              loss=0.25, snr=40.0, outage=False),
+    SwitchEvent(step=5, old="dense", new="ternary:block=64"),
+    FaultEvent(step=7, drops=(0, 2)),
+    BuildEvent(key="('topo', 'ring', 'dense')", step=0),
+    CountersEvent(n_steps=4, counters={"plan_builds": 2},
+                  spans={"step": {"total_s": 0.1, "count": 4,
+                                  "mean_ms": 25.0}},
+                  bank={"builds": 2, "hits": 2, "evictions": 0},
+                  wall_s=0.5),
+)
+
+
+# ---------------------------------------------------------------------------
+# schema: round-trip + validation failure modes
+# ---------------------------------------------------------------------------
+class TestEventSchema:
+    @pytest.mark.parametrize("ev", ONE_OF_EACH, ids=lambda e: e.KIND)
+    def test_round_trip_through_json(self, ev):
+        rec = json.loads(json.dumps(ev.to_record()))
+        assert rec["kind"] == ev.KIND and rec["v"] == SCHEMA_VERSION
+        assert parse_record(rec) == ev
+
+    def test_unknown_kind_is_hard_error(self):
+        with pytest.raises(SchemaError, match="unknown event kind"):
+            validate_record({"kind": "nope", "v": SCHEMA_VERSION})
+
+    def test_version_mismatch_is_hard_error(self):
+        rec = StepEvent(step=0, plan="dense").to_record()
+        rec["v"] = SCHEMA_VERSION + 1
+        with pytest.raises(SchemaError, match="schema version"):
+            validate_record(rec)
+
+    def test_missing_required_field_rejected(self):
+        rec = StepEvent(step=0, plan="dense").to_record()
+        rec["plan"] = None
+        with pytest.raises(SchemaError, match="required field 'plan'"):
+            validate_record(rec)
+        rec = RunManifest(config={}).to_record()
+        rec["n_devices"] = None
+        with pytest.raises(SchemaError, match="n_devices"):
+            validate_record(rec)
+
+    def test_type_errors_rejected_including_bool_int(self):
+        rec = StepEvent(step=0, plan="dense").to_record()
+        rec["bits"] = "lots"
+        with pytest.raises(SchemaError, match="step.bits"):
+            validate_record(rec)
+        # bool is an int subclass: an int-typed field must still reject it
+        rec = StepEvent(step=0, plan="dense").to_record()
+        rec["step"] = True
+        with pytest.raises(SchemaError, match="bool"):
+            validate_record(rec)
+
+    def test_unknown_extra_keys_tolerated(self):
+        # the additive-change side of the version policy
+        rec = StepEvent(step=0, plan="dense").to_record()
+        rec["a_future_optional_field"] = 42
+        validate_record(rec)
+        assert parse_record(rec) == StepEvent(step=0, plan="dense")
+
+    def test_read_events_reports_line_numbers(self, tmp_path):
+        p = tmp_path / "bad.jsonl"
+        good = json.dumps(StepEvent(step=0, plan="dense").to_record())
+        p.write_text(good + "\n{not json\n")
+        with pytest.raises(SchemaError, match=":2:"):
+            read_events(p)
+        p.write_text(good + "\n" + json.dumps({"kind": "zap", "v": 1}) + "\n")
+        with pytest.raises(SchemaError, match=":2:.*unknown"):
+            read_events(p)
+
+    def test_provenance_block(self):
+        prov = provenance()
+        assert prov["schema_version"] == SCHEMA_VERSION
+        assert prov["jax_version"] and prov["n_devices"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# counters + spans
+# ---------------------------------------------------------------------------
+class TestCountersSpans:
+    def test_counters(self):
+        c = Counters()
+        assert c.incr("x") == 1 and c.incr("x", 2) == 3
+        assert c.get("x") == 3 and c.get("missing") == 0
+        c.incr("a")
+        assert list(c.as_dict()) == ["a", "x"]      # sorted keys
+        c.reset()
+        assert c.as_dict() == {}
+
+    def test_span_timer_accumulates_and_sorts(self):
+        t = SpanTimer()
+        t.add("fast", 0.001)
+        t.add("slow", 0.5)
+        t.add("slow", 0.5)
+        with t.span("ctx"):
+            pass
+        s = t.summary()
+        assert list(s)[0] == "slow"                 # total-descending
+        assert s["slow"]["count"] == 2
+        assert s["slow"]["total_s"] == pytest.approx(1.0)
+        assert s["slow"]["mean_ms"] == pytest.approx(500.0)
+        assert s["ctx"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sinks + recorder derivation rules
+# ---------------------------------------------------------------------------
+def _plan(outage=False, drops=()):
+    return types.SimpleNamespace(outage=outage, drops=tuple(drops))
+
+
+class TestRecorder:
+    def test_jsonl_sink_round_trip(self, tmp_path):
+        p = tmp_path / "run.jsonl"
+        r = Recorder(JsonlSink(p))
+        r.emit_manifest(config={"steps": 2}, topology="ring", seed=7)
+        r.on_step(0, _plan(), "dense", {"bits": 256.0, "loss": 1.0})
+        r.on_step(1, _plan(drops=(1,)), ("fault", (1,), "dense"),
+                  {"bits": 128.0, "loss": 0.5}, wall_ms=2.0)
+        r.on_switch(2, "dense", "int8:block=64")
+        r.finalize(bank={"builds": 1}, wall_s=0.1, n_steps=2)
+        r.close()
+        evs = read_events(p)
+        kinds = [e.KIND for e in evs]
+        assert kinds == ["run_manifest", "step", "fault", "step", "switch",
+                         "counters"]
+        fault = [e for e in evs if isinstance(e, FaultEvent)][0]
+        assert fault.drops == (1,) and isinstance(fault.drops, tuple)
+        assert evs[0].seed == 7 and evs[0].jax_version    # auto-filled
+
+    def test_ledger_first_bits_priority(self):
+        r = Recorder(MemorySink())
+        pol = types.SimpleNamespace(
+            spend_log=[(0, 10.0, 0.0, 111.0, "solve"),
+                       (1, 10.0, 0.0, 222.0, "hold")],
+            counters=None)
+        r.bind_policy(pol)
+        assert pol.counters is r.counters             # registry shared
+        # ledger beats the metrics dict beats the cost_fn
+        r.on_step(0, _plan(), "dense", {"bits": 999.0})
+        r.on_step(1, _plan(), "dense", None)
+        r.on_step(2, _plan(), "dense", {"bits": 333.0})   # no ledger entry
+        bits = [e["bits"] for e in r.sink.records if e["kind"] == "step"]
+        assert bits == [111.0, 222.0, 333.0]
+
+    def test_cost_fn_fallback_and_unknown(self):
+        r = Recorder(MemorySink(), cost_fn=lambda k: {"dense": 64.0}[k])
+        r.on_step(0, _plan(), "dense", None)
+        r.on_step(1, _plan(), "other", None)          # cost_fn raises -> None
+        bits = [e["bits"] for e in r.sink.records]
+        assert bits == [64.0, None]
+
+    def test_outage_step_zero_bits_and_counter(self):
+        r = Recorder(MemorySink(), cost_fn=lambda k: 1e9)
+        r.on_step(0, _plan(outage=True), "outage", {"bits": 555.0})
+        rec = r.sink.records[0]
+        assert rec["outage"] is True and rec["bits"] == 0.0
+        assert r.counters.get("outage_steps") == 1
+
+    def test_nonfinite_metrics_map_to_none(self):
+        r = Recorder(MemorySink())
+        r.on_step(0, _plan(), "dense",
+                  {"loss": float("nan"), "diff_power": 1.0,
+                   "noise_power": 0.0})
+        rec = r.sink.records[0]
+        assert rec["loss"] is None and rec["snr"] is None
+
+    def test_bind_policy_walks_compose_members(self):
+        inner = types.SimpleNamespace(counters=None)
+        wrapped = types.SimpleNamespace(policy=inner)
+        direct = types.SimpleNamespace(counters=None)
+        comp = types.SimpleNamespace(members=(wrapped, direct))
+        r = Recorder(MemorySink())
+        r.bind_policy(comp)
+        r.bind_policy(comp)                            # idempotent
+        assert inner.counters is r.counters
+        assert direct.counters is r.counters
+
+    def test_attach_bank_counts_builds_and_evictions(self):
+        from repro.adapt.plan_bank import PlanBank
+        bank = PlanBank(build=lambda k: k, max_size=1)
+        r = Recorder(MemorySink())
+        r.attach_bank(bank)
+        r.attach_bank(bank)                            # idempotent
+        bank.get("a")
+        bank.get("a")                                  # hit: no event
+        bank.get("b")                                  # build + evict "a"
+        assert r.counters.get("plan_builds") == 2 == bank.builds
+        assert r.counters.get("plan_evictions") == 1 == bank.evictions
+        builds = [e for e in r.sink.records if e["kind"] == "build"]
+        assert [b["key"] for b in builds] == ["a", "b"]
+
+    def test_null_sink_swallows(self):
+        r = Recorder(NullSink())
+        r.on_step(0, _plan(), "dense", {"bits": 1.0})
+        r.finalize()
+        r.close()                                      # no error, no output
+
+
+# ---------------------------------------------------------------------------
+# counter mirrors: the audits increment the SHARED registry
+# ---------------------------------------------------------------------------
+class TestCounterMirrors:
+    def test_budget_policy_mirrors_violation_no_bucket(self):
+        from repro.adapt.budget import BudgetSchedule
+        from repro.adapt.policies import BudgetPolicy
+        pol = BudgetPolicy(controller=None, schedule=BudgetSchedule(bits=10.0))
+        pol.counters = Counters()
+        pol._active_bits = 20.0
+        pol._account(0, 10.0, "test")                  # 20 > 10: violation
+        pol._active_bits = 5.0
+        pol._account(1, 10.0, "test")                  # fits: no increment
+        assert pol.counters.get("budget_violations") == 1
+        # the same predicate the fig6 post-hoc spend-log audit applies
+        posthoc = sum(1 for _, b, _, bits, _ in pol.spend_log
+                      if bits > b * (1 + 1e-9))
+        assert posthoc == 1
+
+    def test_token_bucket_banked_spend_is_not_a_violation(self):
+        from repro.adapt.budget import BudgetSchedule, TokenBucket
+        from repro.adapt.policies import BudgetPolicy
+        bucket = TokenBucket(capacity=100.0)
+        for _ in range(4):
+            bucket.fill(10.0)                          # bank 40 bits
+        pol = BudgetPolicy(controller=None, schedule=BudgetSchedule(bits=10.0),
+                           bucket=bucket)
+        pol.counters = Counters()
+        pol._active_bits = 25.0                        # > fill, <= balance
+        pol._account(0, 10.0, "burst")
+        assert pol.counters.get("budget_violations") == 0
+
+    def test_topology_comm_mirrors_eta_min_violation(self):
+        from repro.comm import PerLeafPlan, StepTelemetry
+        from repro.topology import TopoSchedule, TopologyComm, topology
+        sched = TopoSchedule.parse("99:ring:lazy=0.0",
+                                   opening="complete:lazy=0.0")
+        topos = {sp.canonical(): topology(sp, n=8) for sp in sched.specs()}
+        tc = TopologyComm(schedule=sched, topologies=topos, dims=(8,))
+        tc.counters = Counters()
+        plan = PerLeafPlan.uniform("ternary:block=64")
+        d = np.full((1,), 1.0)
+        for step in range(3):      # held plan, SNR 0.01 << eta_min = 1.0
+            tc.observe(StepTelemetry(step=step, diff_power=d,
+                                     noise_power=d / 0.01))
+            tc.audit(step, plan)
+        assert tc.violations == 1
+        assert tc.counters.get("eta_min_violations") == 1
+
+
+# ---------------------------------------------------------------------------
+# report + diff
+# ---------------------------------------------------------------------------
+def _run_events(bits=100.0, losses=(2.0, 1.0), counters=None, wall=1.0):
+    evs = [RunManifest(config={}, n_devices=1, jax_version="0")]
+    for i, loss in enumerate(losses):
+        evs.append(StepEvent(step=i, plan="dense", bits=bits, loss=loss))
+    evs.append(CountersEvent(counters=dict(counters or {}), wall_s=wall))
+    return evs
+
+
+class TestReportDiff:
+    def test_summarize_derives_headlines(self):
+        evs = list(_run_events(bits=50.0, losses=(3.0, 2.0, 1.0)))
+        evs.insert(2, BuildEvent(key="dense"))
+        evs.insert(3, SwitchEvent(step=1, old="dense", new="int8"))
+        evs.insert(4, FaultEvent(step=1, drops=(0,)))
+        rep = summarize(evs)
+        d = rep["derived"]
+        assert d["n_steps"] == 3 and d["cum_bits"] == 150.0
+        assert d["final_loss"] == 1.0 and d["plan_builds"] == 1
+        assert d["switches"] == [(1, "dense", "int8")]
+        assert d["fault_steps"] == 1 and d["outage_steps"] == 0
+
+    def test_consistency_cross_check(self):
+        rep = summarize(_run_events(counters={"plan_builds": 3}))
+        assert rep["consistent"] == {"plan_builds": False}   # 0 builds logged
+
+    def test_diff_flags_bits_and_loss_regressions(self):
+        a = _run_events(bits=100.0, losses=(2.0, 1.0))
+        b = _run_events(bits=150.0, losses=(2.0, 1.2))
+        d = diff(a, b, bits_tol=0.01, loss_tol=0.05)
+        assert not d["ok"]
+        assert any("cum_bits" in r for r in d["regressions"])
+        assert any("final_loss" in r for r in d["regressions"])
+
+    def test_diff_strict_counters_any_increase_flags(self):
+        a = _run_events(counters={"eta_min_violations": 0})
+        b = _run_events(counters={"eta_min_violations": 1})
+        d = diff(a, b)
+        assert not d["ok"]
+        assert any("eta_min_violations 0 -> 1" in r for r in d["regressions"])
+
+    def test_diff_wall_warns_unless_gated(self):
+        a = _run_events(wall=1.0)
+        b = _run_events(wall=10.0)
+        d = diff(a, b)
+        assert d["ok"] and any("wall_s" in w for w in d["warnings"])
+        assert not diff(a, b, gate_wall=True)["ok"]
+
+    def test_diff_self_is_clean(self):
+        a = _run_events(counters={"plan_builds": 0})
+        assert diff(a, list(a))["ok"]
+
+
+# ---------------------------------------------------------------------------
+# the obs CLI
+# ---------------------------------------------------------------------------
+def _write_log(path, **kw):
+    r = Recorder(JsonlSink(path))
+    r.emit_manifest(config={"x": 1}, seed=0)
+    r.on_step(0, _plan(), "dense", {"bits": 10.0, "loss": 1.0})
+    r.finalize(n_steps=1, wall_s=0.1)
+    r.close()
+
+
+class TestObsCli:
+    def test_validate_report_diff_happy_path(self, tmp_path, capsys):
+        from repro.launch import obs_cli
+        p = tmp_path / "a.jsonl"
+        _write_log(p)
+        assert obs_cli.main(["validate", str(p)]) == 0
+        assert "valid,v=1" in capsys.readouterr().out
+        assert obs_cli.main(["report", str(p), "--json"]) == 0
+        rep = json.loads(capsys.readouterr().out)
+        assert rep["derived"]["cum_bits"] == 10.0
+        assert obs_cli.main(["diff", str(p), str(p)]) == 0
+
+    def test_validate_rejects_missing_manifest(self, tmp_path, capsys):
+        from repro.launch import obs_cli
+        p = tmp_path / "no_manifest.jsonl"
+        r = Recorder(JsonlSink(p))
+        r.on_step(0, _plan(), "dense", {"bits": 1.0})
+        r.close()
+        assert obs_cli.main(["validate", str(p)]) == 1
+        assert "INVALID" in capsys.readouterr().out
+        assert obs_cli.main(["validate", "--no-manifest", str(p)]) == 0
+
+    def test_validate_rejects_unknown_kind(self, tmp_path, capsys):
+        from repro.launch import obs_cli
+        p = tmp_path / "bad.jsonl"
+        _write_log(p)
+        with open(p, "a") as fh:
+            fh.write(json.dumps({"kind": "mystery", "v": 1}) + "\n")
+        assert obs_cli.main(["validate", str(p)]) == 1
+
+    def test_diff_exit_code_gates_regressions(self, tmp_path, capsys):
+        from repro.launch import obs_cli
+        a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+        _write_log(a)
+        r = Recorder(JsonlSink(b))
+        r.emit_manifest(config={"x": 1}, seed=0)
+        r.on_step(0, _plan(), "dense", {"bits": 100.0, "loss": 1.0})
+        r.finalize(n_steps=1, wall_s=0.1)
+        r.close()
+        assert obs_cli.main(["diff", str(a), str(b)]) == 1
+        assert "OBS-REGRESSION" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# audit parity on a composed fig6-style session: the event log alone
+# reproduces every live-object audit, bit for bit
+# ---------------------------------------------------------------------------
+N, DIM, STEPS, SWITCH = 8, 16, 40, 20
+FAULT_WINDOW = (10, 14)
+LADDER = ("dense", "int8:block=16", "ternary:block=16")
+BUDGET = 3000.0          # affords int8 (~1.1 kbit), never dense (4 kbit)
+
+
+def _edges(canonical):
+    from repro.topology import topology
+    W = np.asarray(topology(canonical, n=N).W)
+    off = np.abs(W) > 1e-12
+    np.fill_diagonal(off, False)
+    return int(off.sum()) // 2
+
+
+@pytest.fixture(scope="module")
+def fig6_style_run(tmp_path_factory):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.adapt import ladder_from_specs
+    from repro.adapt.budget import BudgetController, BudgetSchedule
+    from repro.adapt.policies import BudgetPolicy
+    from repro.adapt.runner import _metric_step, make_dcdgd_session
+    from repro.comm import BudgetComm, Compose, FaultComm, StaticComm
+    from repro.core import problems
+    from repro.core.compressors import Identity, WireCompressor
+    from repro.core.wire import make_wire
+    from repro.runtime.fault import (OUTAGE_SPEC, drop_renormalize_dense,
+                                     peel_plan_key)
+    from repro.topology import TopoSchedule, TopologyComm, topology
+
+    prob = problems.quadratic(n_nodes=N, dim=DIM, seed=1)
+    sched = TopoSchedule.parse(f"{SWITCH}:torus:4x2,lazy=0.25",
+                               opening="ring:lazy=0.0")
+    topos = {sp.canonical(): topology(sp, n=N) for sp in sched.specs()}
+    opening = sched.active_at(0).canonical()
+
+    wire_ladder = ladder_from_specs(LADDER, level="wire")
+    budget_pol = BudgetPolicy(
+        controller=BudgetController(ladder=wire_ladder, shapes=((N, DIM),),
+                                    neighbors=1,
+                                    eta_min=topos[opening].eta_min),
+        schedule=BudgetSchedule(bits=BUDGET), cadence=1)
+    topo_comm = TopologyComm(
+        schedule=sched, topologies=dict(topos), dims=None,
+        guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+
+    class WindowSim:
+        def dropped(self, step, n_classes):
+            return [0] if FAULT_WINDOW[0] <= step < FAULT_WINDOW[1] else []
+
+    fault_comm = FaultComm(sim=WindowSim(), n_classes=_edges(opening),
+                           n_classes_fn=_edges)
+
+    def build_step(key_):
+        alpha = lambda t: 0.08 / jnp.sqrt(t)                # noqa: E731
+        if key_ == OUTAGE_SPEC:
+            return _metric_step(prob, alpha, jnp.eye(N, dtype=jnp.float32),
+                                Identity())
+        topo_c, drops, inner = peel_plan_key(key_)
+        W = topos[topo_c or opening].W
+        if drops:
+            W = drop_renormalize_dense(W, drops)
+        return _metric_step(prob, alpha, jnp.asarray(W, jnp.float32),
+                            WireCompressor(fmt=make_wire(inner)))
+
+    log = tmp_path_factory.mktemp("obs") / "run.jsonl"
+    recorder = Recorder(JsonlSink(log))
+    recorder.emit_manifest(config={"steps": STEPS, "budget": BUDGET},
+                           topology=opening, seed=0)
+    # bank_size 2 < the 3 distinct plans: the LRU MUST evict, and the
+    # event log must count it
+    session = make_dcdgd_session(
+        prob, topos[opening].W, lambda t: 0.08 / jnp.sqrt(t),
+        jax.random.PRNGKey(0), None, bank_size=2, build_step=build_step,
+        obs=recorder)
+    session.policy = Compose(StaticComm("int8:block=16"),
+                             BudgetComm(policy=budget_pol),
+                             topo_comm, fault_comm)
+    res = session.run(STEPS)
+    recorder.close()
+    return types.SimpleNamespace(res=res, log=log, recorder=recorder,
+                                 budget_pol=budget_pol, topo_comm=topo_comm,
+                                 fault_comm=fault_comm)
+
+
+class TestAuditParity:
+    def test_counters_bit_match_live_audits(self, fig6_style_run):
+        r = fig6_style_run
+        rep = summarize(str(r.log))
+        c = rep["counters"]
+        # cumulative bits: identical summation order as the live ledger
+        ledger_bits = sum(float(e[3]) for e in r.budget_pol.spend_log)
+        assert rep["derived"]["cum_bits"] == ledger_bits
+        assert rep["derived"]["bits_unknown_steps"] == 0
+        # violation counters == the live audit objects
+        assert c.get("eta_min_violations", 0) == r.topo_comm.violations == 0
+        posthoc = sum(1 for _, b, _, bits, _ in r.budget_pol.spend_log
+                      if bits > b * (1 + 1e-9))
+        assert c.get("budget_violations", 0) == posthoc == 0
+        # bank counters == the bank's own stats (evictions forced)
+        assert c["plan_builds"] == r.res.bank_stats["builds"] == 3
+        assert c["plan_evictions"] == r.res.bank_stats["evictions"] == 1
+
+    def test_step_stream_matches_session_history(self, fig6_style_run):
+        r = fig6_style_run
+        rep = summarize(str(r.log))
+        d = rep["derived"]
+        assert d["n_steps"] == STEPS
+        fault_steps = sum(1 for k in r.res.plan_per_step
+                          if "fault" in str(k))
+        assert d["fault_steps"] == fault_steps == \
+            FAULT_WINDOW[1] - FAULT_WINDOW[0]
+        assert d["outage_steps"] == 0
+        assert sorted(d["distinct_plans"]) == \
+            sorted(str(k) for k in set(r.res.plan_per_step))
+        # fault-in, fault-out, topo switch
+        assert len(d["switches"]) == 3
+        assert any("torus" in new for _, _, new in d["switches"])
+        assert all(rep["consistent"].values())
+        assert rep["manifest"]["topology"].startswith("ring")
+
+    def test_topology_switch_rederived_fault_class_count(self, fig6_style_run):
+        # the FaultComm n_classes_fn hook: after the ring -> torus:4x2
+        # switch the droppable-class space is the torus's 12 edges, not
+        # the ring's 8
+        r = fig6_style_run
+        assert len(r.topo_comm.switch_log) == 1
+        assert r.fault_comm.n_classes == 12
+
+    def test_spans_cover_every_step(self, fig6_style_run):
+        rep = summarize(str(fig6_style_run.log))
+        spans = rep["spans"]
+        assert spans["compile"]["count"] == 3            # == builds
+        assert spans["step"]["count"] == STEPS - 3
+        assert spans["controller_decide"]["count"] >= STEPS - 1
+
+    def test_log_validates_and_self_diff_is_clean(self, fig6_style_run,
+                                                  capsys):
+        from repro.launch import obs_cli
+        log = str(fig6_style_run.log)
+        assert obs_cli.main(["validate", log]) == 0
+        capsys.readouterr()
+        assert obs_cli.main(["diff", log, log]) == 0

@@ -239,6 +239,52 @@ class TestTaggedPlans:
         assert comp.decide(2).outage          # every class out = blackout
         assert comp.decide(3).key() == "dense"
 
+    def test_fault_comm_on_topology_rederives_class_count(self):
+        # the stale-edge-space bug: under a composed TopologyComm the
+        # droppable-class count must follow the ACTIVE graph
+        class Sim:
+            def dropped(self, step, n_classes):
+                return [n_classes - 1]
+
+        def edges(canonical):
+            W = np.asarray(topology(canonical, n=8).W)
+            off = np.abs(W) > 1e-12
+            np.fill_diagonal(off, False)
+            return int(off.sum()) // 2
+
+        fc = FaultComm(sim=Sim(), n_classes=edges("ring"),
+                       n_classes_fn=edges)
+        assert fc.n_classes == 8                      # ring-8: 8 edges
+        fc.on_topology(TopoSpec.parse("torus:4x2").canonical())
+        assert fc.n_classes == 12                     # torus 4x2: 12 edges
+        assert fc.drops_at(0) == (11,)                # NEW edge space
+        # without n_classes_fn the hook is a no-op (legacy behavior)
+        fc2 = FaultComm(sim=Sim(), n_classes=8)
+        fc2.on_topology("torus:4x2")
+        assert fc2.n_classes == 8
+
+    def test_topology_switch_drives_fault_comm_hook(self):
+        # TopologyComm.maybe_switch calls on_topology on every member:
+        # complete-8 (28 edges) -> ring-8 (8 edges) at step 5
+        class Sim:
+            def dropped(self, step, n_classes):
+                return []
+
+        def edges(canonical):
+            W = np.asarray(topology(canonical, n=8).W)
+            off = np.abs(W) > 1e-12
+            np.fill_diagonal(off, False)
+            return int(off.sum()) // 2
+
+        tc = _topo_comm(switch_step=5)
+        fc = FaultComm(sim=Sim(), n_classes=edges("complete:lazy=0.0"),
+                       n_classes_fn=edges)
+        assert fc.n_classes == 28
+        assert not tc.maybe_switch(4, (fc, tc))
+        assert fc.n_classes == 28
+        assert tc.maybe_switch(5, (fc, tc))
+        assert fc.n_classes == 8
+
     def test_fault_plan_keeps_w_doubly_stochastic(self):
         from repro.runtime.fault import fault_plan, non_self_classes
         t = topology("ring", n=8, lazy=0.25)
