@@ -1,0 +1,325 @@
+"""Fig. 8 (beyond-paper): a 64-node erdos fleet surviving scripted chaos —
+live membership churn, a slow link, a full outage window — on ONE session,
+with a mid-run kill + crash-consistent resume that bit-matches.
+
+The scenario is a deterministic :class:`repro.runtime.chaos.FaultSchedule`::
+
+    crash:node=3,at=80   | rejoin:node=3,at=160
+  | slow:edge=1-2,span=200:240,factor=0.25 | outage:span=260:266
+
+driven through one composed policy —
+
+    Compose(RateComm(ControllerPolicy),   # model-based rate control
+            BudgetComm(BudgetPolicy),     # hard per-step bit budget
+            ElasticComm(Membership, TopologyComm),   # LIVE churn
+            ChaosComm(schedule),          # slow-link budget scaling
+            OutageComm(windows))          # blackout spans
+
+— and asserts, all from one TrainSession run:
+
+  * LIVE churn: the crash shrinks the stacked state to (63, d) and the
+    rejoin grows it back, via ``rekey_dcdgd_state`` + epoch-qualified
+    plan-bank keys — ZERO trainer rebuilds (builds == distinct plan keys,
+    no evictions), zero eta_min violations across both retargets;
+  * the budget stays hard through churn, the slow span (cost-scaled, not
+    dropped) and the outage: zero ledger violations;
+  * the run CONVERGES: the final epoch holds all 64 nodes (rows permuted;
+    the global objective is permutation-invariant), so the tail gap is
+    measured against the exact-wire reference driven through the SAME
+    schedule;
+  * CRASH-CONSISTENT RESUME: the run checkpoints every CKPT_EVERY steps
+    (model state + policy snapshot, ``repro.comm.resume``); a fresh
+    process restored at step KILL_AT — inside the one-node-down epoch, so
+    the checkpoint's (63, d) state overrides the fresh (64, d) opening
+    via ``strict_shapes=False`` — replays steps KILL_AT..END and its event
+    log step/fault tail EQUALS the baseline's (``obs.report.diff_exact``)
+    and its final state is bit-identical;
+  * the event log validates and carries the churn/slow fault events
+    (``cause`` ∈ {crash, rejoin, slow} — the additive v=1 fields).
+
+Writes artifacts/bench/BENCH_chaos.json and prints a CSV summary.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adapt import ladder_from_specs
+from repro.adapt.budget import BudgetController, BudgetSchedule
+from repro.adapt.controller import RateController
+from repro.adapt.policies import BudgetPolicy, ControllerPolicy
+from repro.adapt.runner import _metric_step, make_dcdgd_session
+from repro.comm import (BudgetComm, Compose, ElasticComm, OutageComm,
+                        RateComm, SessionCheckpointer, StaticComm,
+                        restore_policy)
+from repro.core import problems
+from repro.core.compressors import Identity, WireCompressor
+from repro.core.wire import make_wire
+from repro.obs import JsonlSink, Recorder, diff_exact, read_events, summarize
+from repro.runtime.chaos import ChaosComm, FaultSchedule
+from repro.runtime.elastic import (Membership, rekey_dcdgd_state,
+                                   restrict_problem)
+from repro.runtime.fault import OUTAGE_SPEC, peel_plan_key
+from repro.topology import TopoSchedule, TopologyComm
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+N_NODES = 64
+DIM = 64
+STEPS = 320
+TAIL = 25
+TOPO = "erdos:p=0.15,seed=7"       # resampled-until-connected per fleet size
+SCHEDULE = ("crash:node=3,at=80 | rejoin:node=3,at=160 | "
+            "slow:edge=1-2,span=200:240,factor=0.25 | outage:span=260:266")
+LADDER = ("dense", "int8:block=64", "ternary:block=64")
+# affords int8 (~35 kbit on (64, 64)) but never dense (131 kbit)
+BUDGET = 60_000.0
+RATE_CADENCE = 10
+CONV_TOL = 1.5
+CKPT_EVERY = 40
+KILL_AT = 120                      # inside the 63-node epoch (80 <= k < 160)
+
+
+def build_run(obs_path=None, *, identity=False, ckpt_dir=None):
+    """One complete, FRESH harness: membership, registries, composed
+    policy, session.  Called once per run (baseline / reference / resume)
+    so the resume path proves a new process can reconstruct everything
+    from config + checkpoint alone."""
+    prob = problems.quadratic(n_nodes=N_NODES, dim=DIM, seed=3)
+    sched = FaultSchedule.parse(SCHEDULE)
+    mem = Membership(list(range(N_NODES)), topology=TOPO, lazy=0.25)
+    opening = mem.topo
+    alpha_fn = lambda t: 0.08 / jnp.sqrt(t)                  # noqa: E731
+    key = jax.random.PRNGKey(0)
+
+    topo_sched = TopoSchedule(entries=((0, TOPO),))
+    topo_comm = TopologyComm(
+        schedule=topo_sched,
+        topologies={topo_sched.entries[0][1].canonical(): opening},
+        dims=None,
+        guaranteed_snr=None if identity
+        else (lambda s: make_wire(s).snr_lower_bound(1)))
+    opening_c = topo_comm._active
+
+    # plan-key registries the bank builder and the churn hooks share;
+    # "current" tracks the live epoch key (the shared OUTAGE entry builds
+    # against whatever fleet is live when the window opens)
+    Ws = {opening_c: np.asarray(opening.W)}
+    probs = {opening_c: prob}
+    current = {"key": opening_c}
+
+    def register_hook(key_, topo, node_ids):
+        Ws[key_] = np.asarray(topo.W)
+        probs[key_] = restrict_problem(prob, node_ids)
+        current["key"] = key_
+
+    def build_step(key_):
+        if key_ == OUTAGE_SPEC:
+            p = probs[current["key"]]
+            return _metric_step(p, alpha_fn,
+                                jnp.eye(p.n_nodes, dtype=jnp.float32),
+                                Identity())
+        topo_c, drops, inner = peel_plan_key(key_)
+        assert not drops, f"fig8 runs no drop faults, got {key_!r}"
+        W = jnp.asarray(Ws[topo_c or opening_c], jnp.float32)
+        p = probs[topo_c or opening_c]
+        comp = Identity() if identity \
+            else WireCompressor(fmt=make_wire(inner))
+        return _metric_step(p, alpha_fn, W, comp)
+
+    recorder = None
+    if obs_path is not None:
+        recorder = Recorder(JsonlSink(obs_path))
+        recorder.emit_manifest(
+            config={"steps": STEPS, "budget": BUDGET,
+                    "ladder": list(LADDER), "chaos": sched.canonical()},
+            topology=opening_c, seed=0)
+    bank_size = 4 * len(LADDER) + 4
+    session = make_dcdgd_session(prob, opening.W, alpha_fn, key, None,
+                                 bank_size=bank_size,
+                                 build_step=build_step, obs=recorder)
+
+    def state_hook(plan, topo, node_ids, key_):
+        session.state = rekey_dcdgd_state(
+            session.state, plan, probs[key_].grad,
+            float(alpha_fn(int(session.state.t))))
+
+    n_edges = int(np.asarray(opening.adj).sum()) // 2
+    elastic = ElasticComm(
+        membership=mem, topo_comm=topo_comm,
+        events=sched.churn_events(), state_hook=state_hook,
+        register_hook=register_hook,
+        shapes_fn=None if identity else (lambda n: ((n, DIM),)))
+    outage = OutageComm(windows=sched.outage_windows())
+
+    if identity:
+        policy = Compose(StaticComm("identity"), elastic, outage)
+        budget_pol = None
+    else:
+        wire_ladder = ladder_from_specs(LADDER, level="wire")
+        rate_ctl = RateController(
+            ladder=wire_ladder, eta_min=opening.eta_min, margin=1.25,
+            synthesize_hybrid=False, level="wire")
+        rate = RateComm(
+            policy=ControllerPolicy(
+                controller=rate_ctl,
+                probe_fn=lambda: np.asarray(session.state.d),
+                cadence=RATE_CADENCE),
+            n_leaves=1, cadence=RATE_CADENCE)
+        budget_pol = BudgetPolicy(
+            controller=BudgetController(ladder=wire_ladder,
+                                        shapes=((N_NODES, DIM),),
+                                        neighbors=1,
+                                        eta_min=opening.eta_min),
+            schedule=BudgetSchedule(bits=BUDGET), cadence=1)
+        chaos = ChaosComm(schedule=sched, n_edges=n_edges)
+        policy = Compose(rate, BudgetComm(policy=budget_pol), elastic,
+                         chaos, outage)
+    session.policy = policy
+
+    ckptr = None
+    if ckpt_dir is not None:
+        ckptr = SessionCheckpointer(directory=str(ckpt_dir), policy=policy,
+                                    every=CKPT_EVERY, retain=0)
+        session.checkpoint = ckptr
+
+    return {"session": session, "policy": policy, "elastic": elastic,
+            "topo_comm": topo_comm, "budget_pol": budget_pol,
+            "recorder": recorder, "prob": prob, "ckptr": ckptr,
+            "n_edges": n_edges}
+
+
+def run():
+    ART.mkdir(parents=True, exist_ok=True)
+    ckpt_dir = ART / "fig8_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    base_log = ART / "fig8_run.jsonl"
+    resume_log = ART / "fig8_resume.jsonl"
+
+    # ---- baseline: the uninterrupted chaos run (checkpointing) -----------
+    base = build_run(base_log, ckpt_dir=ckpt_dir)
+    res = base["session"].run(STEPS)
+    base["recorder"].close()
+
+    # ---- exact-wire reference through the SAME schedule ------------------
+    ref = build_run(identity=True)
+    ref_res = ref["session"].run(STEPS)
+
+    # ---- kill + resume: a fresh harness restored at KILL_AT --------------
+    from repro.ckpt import checkpoint as ck
+    resumed = build_run(resume_log)
+    state2, manifest = ck.restore(ckpt_dir, KILL_AT,
+                                  resumed["session"].state,
+                                  strict_shapes=False)
+    restore_policy(resumed["policy"], manifest["extra"]["policy"])
+    resumed["session"].state = state2
+    res2 = resumed["session"].run(STEPS, start_step=KILL_AT)
+    resumed["recorder"].close()
+
+    # ---- audits ----------------------------------------------------------
+    prob = base["prob"]
+    hist = res.metrics_arrays()
+    gap = hist["f_bar"] - prob.f_star
+    ref_gap = ref_res.metrics_arrays()["f_bar"] - prob.f_star
+    final_gap = float(np.mean(gap[-TAIL:]))
+    ref_final = float(np.mean(ref_gap[-TAIL:]))
+
+    budget_pol = base["budget_pol"]
+    budget_viols = sum(1 for _, b, _, bits, _ in budget_pol.spend_log
+                       if bits > b * (1 + 1e-9))
+    distinct = sorted(set(res.plan_per_step), key=str)
+    builds = res.bank_stats["builds"]
+    churn = list(base["elastic"].churn_log)
+    final_shape = tuple(np.asarray(res.state.x).shape)
+
+    # resume bit-exactness: event-log tail + raw state
+    exact = diff_exact(str(base_log), str(resume_log), from_step=KILL_AT)
+    state_equal = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(res.state),
+                        jax.tree.leaves(res2.state)))
+
+    # obs: schema-valid, and the injections are classified
+    events = read_events(str(base_log))
+    causes = sorted({e.cause for e in events
+                     if e.KIND == "fault" and e.cause})
+    rep = summarize(str(base_log))
+    obs_valid = bool(causes == ["crash", "rejoin", "slow"]
+                     and rep["derived"]["outage_steps"] == 6
+                     and all(rep["consistent"].values()))
+
+    return {
+        "problem": f"quadratic_n{N_NODES}_d{DIM}",
+        "topology": TOPO,
+        "chaos": FaultSchedule.parse(SCHEDULE).canonical(),
+        "ladder": list(LADDER),
+        "budget_per_step": BUDGET,
+        "steps": STEPS,
+        "n_edges": base["n_edges"],
+        "final_gap": final_gap,
+        "ref_final_gap": ref_final,
+        "converged": bool(final_gap <= max(ref_final * CONV_TOL, 1e-6)
+                          or final_gap <= ref_final + 0.05),
+        "eta_min_violations": int(base["topo_comm"].violations),
+        "budget_violations": int(budget_viols),
+        "zero_violations": bool(base["topo_comm"].violations == 0
+                                and budget_viols == 0),
+        "churn_log": [list(c) for c in churn],
+        "final_state_shape": list(final_shape),
+        "bank": dict(res.bank_stats),
+        "bank_bound": 4 * len(LADDER) + 4,
+        "distinct_plans": [str(k) for k in distinct],
+        "live_churn": bool(len(churn) == 2
+                           and final_shape == (N_NODES, DIM)
+                           and builds == len(distinct)
+                           and res.bank_stats["evictions"] == 0),
+        "kill_at": KILL_AT,
+        "ckpt_every": CKPT_EVERY,
+        "resume_diff": exact,
+        "resume_state_bit_equal": bool(state_equal),
+        "resume_bit_exact": bool(exact["ok"] and state_equal),
+        "obs_log": str(base_log),
+        "resume_obs_log": str(resume_log),
+        "fault_causes": causes,
+        "obs_counters": dict(rep["counters"]),
+        "obs_valid": obs_valid,
+    }
+
+
+def main():
+    ART.mkdir(parents=True, exist_ok=True)
+    out = run()
+    (ART / "BENCH_chaos.json").write_text(json.dumps(out, indent=1))
+
+    print("name,step,kind,node,epoch_key")
+    for at, kind, node, key_ in out["churn_log"]:
+        print(f"fig8-churn,{at},{kind},{node},{key_}")
+    print(f"fig8 final gap {out['final_gap']:.4f} "
+          f"(exact-wire ref {out['ref_final_gap']:.4f}) "
+          f"state {tuple(out['final_state_shape'])}")
+    print(f"fig8 violations: eta_min={out['eta_min_violations']} "
+          f"budget={out['budget_violations']}; "
+          f"bank {out['bank']} (bound {out['bank_bound']})")
+    print(f"fig8 resume: diff_ok={out['resume_diff']['ok']} "
+          f"({out['resume_diff']['n_steps']} tail steps) "
+          f"state_bit_equal={out['resume_state_bit_equal']}")
+    for m in out["resume_diff"]["mismatches"]:
+        print(f"fig8-resume-mismatch,{m}")
+    print(f"fig8 obs: valid={out['obs_valid']} "
+          f"causes={out['fault_causes']} "
+          f"counters={out['obs_counters']}")
+    ok = (out["converged"] and out["zero_violations"]
+          and out["live_churn"] and out["resume_bit_exact"]
+          and out["obs_valid"])
+    print(f"fig8 acceptance: {'ALL OK' if ok else 'FAIL'} "
+          f"-> {ART / 'BENCH_chaos.json'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

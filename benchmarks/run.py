@@ -21,6 +21,11 @@ _ARTIFACT_FLAGS = {
     "BENCH_gossip.json": ("bit_exact", "wire_bits_equal"),
     "BENCH_topology.json": ("converged", "no_recompiles_beyond_bank",
                             "obs_parity"),
+    # elastic-fleet resilience: live churn with zero trainer rebuilds,
+    # zero eta_min/budget violations, and a kill+resume whose event-log
+    # tail and final state bit-match the uninterrupted run
+    "BENCH_chaos.json": ("converged", "zero_violations", "live_churn",
+                         "resume_bit_exact", "obs_valid"),
     # kernel-baseline exactness vs the ref oracles (dict flag: every
     # kernel entry must be True) — timings are reported, never gated
     "BENCH_roofline.json": ("kernels_ok",),
@@ -89,8 +94,8 @@ def main(argv=None):
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
-                   fig4_adaptive, fig5_budget, fig6_topology, roofline,
-                   wire_micro)
+                   fig4_adaptive, fig5_budget, fig6_topology, fig8_chaos,
+                   roofline, wire_micro)
     if args.smoke:
         print("==== gossip (smoke) ====", flush=True)
         r = wire_micro.main(smoke=True)
@@ -103,6 +108,7 @@ def main(argv=None):
         "fig4": fig4_adaptive.main,
         "fig5": fig5_budget.main,
         "fig6": fig6_topology.main,
+        "fig8": fig8_chaos.main,
         "wire": wire_micro.main,
         "roofline": roofline.main,
     }

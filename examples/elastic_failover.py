@@ -1,126 +1,179 @@
-"""Fault-tolerance walkthrough: decentralized training survives a node
-failure, a node join, simulated link faults, and a checkpoint restart —
-the DESIGN.md §6 story, executable on CPU, driven through the typed front
-doors: graphs are ``repro.topology`` objects (Membership rebuilds one per
-change and re-derives eta_min), every training segment is a
-``repro.comm.TrainSession``, and the straggling-link segment composes a
-``FaultComm`` over the static policy (drop-and-renormalize per step).
+"""Elastic-fleet walkthrough: ONE decentralized TrainSession survives a
+scripted crash, the crashed node's rejoin, a slow link and a full outage —
+then a mid-run kill + crash-consistent resume reproduces it bit-exactly.
+
+This is the DESIGN.md §6 story on the live machinery (it used to be four
+separate sessions glued by hand):
+
+  * the scenario is a deterministic ``repro.runtime.chaos.FaultSchedule``
+    string — no RNG, no wall clock, reproducible from the script alone;
+  * churn is LIVE: ``repro.comm.ElasticComm`` re-keys the stacked (x, s)
+    state (``rekey_dcdgd_state``: departures averaged in, the rejoiner
+    warm-started from its best-connected neighbor), retargets the
+    Theorem-1 floor for the rebuilt graph, and swaps epoch-qualified
+    plan-bank entries — the trainer is never rebuilt;
+  * the slow link is budget scaling, not a drop: ``ChaosComm`` makes bits
+    proportionally more expensive while the span lasts, so the composed
+    ``BudgetComm`` buys cheaper rungs;
+  * ``SessionCheckpointer`` snapshots the POLICY (ledger, held plans,
+    hysteresis) alongside the model state, so a fresh process restored at
+    the kill step replays an event-log tail equal to the uninterrupted
+    run's (``repro.obs.diff_exact``) with a bit-identical final state.
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
 import tempfile
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.adapt import make_dcdgd_session
-from repro.adapt.runner import _metric_step
-from repro.ckpt import restore, save
-from repro.comm import Compose, FaultComm, StaticComm
-from repro.core import dcdgd, problems
-from repro.core.compressors import make_compressor
-from repro.runtime.elastic import Membership, apply_state_plan, \
-    rebuild_consensus
-from repro.runtime.fault import StragglerSim, drop_renormalize_dense, \
-    peel_plan_key
+from repro.adapt import ladder_from_specs
+from repro.adapt.budget import BudgetController, BudgetSchedule
+from repro.adapt.policies import BudgetPolicy
+from repro.adapt.runner import _metric_step, make_dcdgd_session
+from repro.comm import (BudgetComm, Compose, ElasticComm, OutageComm,
+                        SessionCheckpointer, StaticComm, restore_policy)
+from repro.core import problems
+from repro.core.compressors import Identity, WireCompressor
+from repro.core.wire import make_wire
+from repro.obs import JsonlSink, Recorder, diff_exact
+from repro.runtime.chaos import ChaosComm, FaultSchedule
+from repro.runtime.elastic import (Membership, rekey_dcdgd_state,
+                                   restrict_problem)
+from repro.runtime.fault import OUTAGE_SPEC, peel_plan_key
+from repro.topology import TopoSchedule, TopologyComm
 
-SPEC = "sparsifier:p=0.8"
+N, DIM, STEPS = 5, 8, 120
 ALPHA = 0.08
+LADDER = ("dense", "int8:block=8", "ternary:block=8")
+BUDGET = 600.0                     # affords int8 on (5, 8), never dense
+SCHEDULE = ("crash:node=2,at=30 | rejoin:node=2,at=60 | "
+            "slow:edge=0-1,span=70:90,factor=0.5 | outage:span=95:100")
+CKPT_EVERY = 20
+KILL_AT = 40                       # inside the 4-node epoch (30 <= k < 60)
 
 
-def warm_state(prob, x0, key):
-    """DCDGDState warm-started at x0 with the residual RESET (s = 0, i.e.
-    y = x — the apply_state_plan convention after a membership change)."""
-    d1 = jax.tree.map(lambda g: -ALPHA * g, prob.grad(x0))
-    return dcdgd.DCDGDState(x=x0, y=x0, d=d1, t=jnp.int32(1), key=key)
+def build_run(obs_path, ckpt_dir=None):
+    """A complete fresh harness (membership, registries, composed policy,
+    session) — the resume path calls this again to prove a new process
+    reconstructs everything from config + checkpoint alone."""
+    prob = problems.quadratic(n_nodes=N, dim=DIM, seed=3)
+    sched = FaultSchedule.parse(SCHEDULE)
+    mem = Membership(list(range(N)), topology="ring")
+    opening = mem.topo
+    alpha_fn = lambda t: ALPHA                               # noqa: E731
 
+    topo_sched = TopoSchedule(entries=((0, "ring"),))
+    topo_comm = TopologyComm(
+        schedule=topo_sched,
+        topologies={topo_sched.entries[0][1].canonical(): opening},
+        dims=None,
+        guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+    opening_c = topo_comm._active
 
-def run_segment(prob, m, x0, key, steps, policy=None, build_step=None):
-    """One training segment on the CURRENT membership graph, through the
-    one TrainSession driver.  Returns (x, s) for the next state-carry."""
-    session = make_dcdgd_session(prob, m.topo, ALPHA, key,
-                                 policy or StaticComm(SPEC),
-                                 build_step=build_step)
-    key, sub = jax.random.split(key)
-    session.state = warm_state(prob, x0, sub)
-    res = session.run(steps)
-    st = res.state
-    return st.x, st.y - st.x, key
+    # registries the bank builder and churn hooks share: epoch key -> W /
+    # restricted problem; "current" tracks the live epoch for OUTAGE
+    Ws = {opening_c: np.asarray(opening.W)}
+    probs = {opening_c: prob}
+    current = {"key": opening_c}
 
+    def register_hook(key_, topo, node_ids):
+        Ws[key_] = np.asarray(topo.W)
+        probs[key_] = restrict_problem(prob, node_ids)
+        current["key"] = key_
 
-def gnorm(prob, x):
-    return float(jnp.sum(prob.global_grad(jnp.mean(x, 0)) ** 2))
+    def build_step(key_):
+        if key_ == OUTAGE_SPEC:
+            p = probs[current["key"]]
+            return _metric_step(p, alpha_fn,
+                                jnp.eye(p.n_nodes, dtype=jnp.float32),
+                                Identity())
+        topo_c, drops, inner = peel_plan_key(key_)
+        assert not drops, key_
+        W = jnp.asarray(Ws[topo_c or opening_c], jnp.float32)
+        comp = WireCompressor(fmt=make_wire(inner))
+        return _metric_step(probs[topo_c or opening_c], alpha_fn, W, comp)
+
+    recorder = Recorder(JsonlSink(obs_path))
+    recorder.emit_manifest(config={"chaos": sched.canonical(),
+                                   "budget": BUDGET},
+                           topology=opening_c, seed=0)
+    session = make_dcdgd_session(prob, opening.W, alpha_fn,
+                                 jax.random.PRNGKey(0), None,
+                                 bank_size=16, build_step=build_step,
+                                 obs=recorder)
+
+    def state_hook(plan, topo, node_ids, key_):
+        session.state = rekey_dcdgd_state(session.state, plan,
+                                          probs[key_].grad, ALPHA)
+
+    elastic = ElasticComm(
+        membership=mem, topo_comm=topo_comm, events=sched.churn_events(),
+        state_hook=state_hook, register_hook=register_hook,
+        shapes_fn=lambda n: ((n, DIM),))
+    budget = BudgetComm(policy=BudgetPolicy(
+        controller=BudgetController(
+            ladder=ladder_from_specs(LADDER, level="wire"),
+            shapes=((N, DIM),), neighbors=1, eta_min=opening.eta_min),
+        schedule=BudgetSchedule(bits=BUDGET), cadence=1))
+    chaos = ChaosComm(schedule=sched,
+                      n_edges=int(np.asarray(opening.adj).sum()) // 2)
+    policy = Compose(StaticComm(LADDER[1]), budget, elastic, chaos,
+                     OutageComm(windows=sched.outage_windows()))
+    session.policy = policy
+
+    ckptr = None
+    if ckpt_dir is not None:
+        ckptr = SessionCheckpointer(directory=str(ckpt_dir), policy=policy,
+                                    every=CKPT_EVERY, retain=0)
+        session.checkpoint = ckptr
+    return session, policy, elastic, recorder, prob
 
 
 def main():
-    comp_snr = make_compressor(SPEC).snr_lower_bound(8)
-    m = Membership(node_ids=[0, 1, 2, 3, 4], topology="ring")
-    prob = problems.quadratic(n_nodes=5, dim=8, seed=3)
-    info = rebuild_consensus(m, comp_snr)
-    print(f"[gate] 5-node {m.topo.canonical()!r}: "
-          f"eta_min={info['eta_min']:.3f} ok={info['ok']}")
+    with tempfile.TemporaryDirectory() as tmp:
+        tmp = Path(tmp)
+        ckpt_dir, base_log, resume_log = \
+            tmp / "ckpt", tmp / "run.jsonl", tmp / "resume.jsonl"
 
-    x = jnp.zeros((5, 8))
-    key = jax.random.PRNGKey(0)
-    x, s, key = run_segment(prob, m, x, key, 120)
-    print(f"[train] 120 session steps, |grad|^2 = {gnorm(prob, x):.2e}")
+        # --- the uninterrupted chaos run (checkpointing as it goes) ------
+        session, policy, elastic, recorder, prob = \
+            build_run(base_log, ckpt_dir=ckpt_dir)
+        print(f"[gate] {N}-node ring: eta_min="
+              f"{elastic.membership.topo.eta_min:.3f}; chaos script: "
+              f"{FaultSchedule.parse(SCHEDULE).canonical()!r}")
+        res = session.run(STEPS)
+        recorder.close()
+        for at, kind, node, key_ in elastic.churn_log:
+            print(f"[churn] step {at}: {kind} node {node} -> {key_}")
+        x = np.asarray(res.state.x)
+        gap = float(res.metrics_arrays()["f_bar"][-1] - prob.f_star)
+        print(f"[train] {STEPS} steps on ONE session through crash/rejoin/"
+              f"slow/outage: state {x.shape}, final gap {gap:.2e}, "
+              f"bank {res.bank_stats}")
+        assert x.shape == (N, DIM) and len(elastic.churn_log) == 2
 
-    # --- checkpoint, then simulate a crash + restart ---
-    with tempfile.TemporaryDirectory() as d:
-        save(d, 120, {"x": x, "s": s})
-        x2, _ = restore(d, 120, {"x": jax.eval_shape(lambda: x),
-                                 "s": jax.eval_shape(lambda: s)})
-        print(f"[ckpt] restart drift: "
-              f"{float(jnp.abs(x2['x'] - x).max()):.1e} (exact)")
+        # --- kill at step KILL_AT + crash-consistent resume --------------
+        from repro.ckpt import checkpoint as ck
+        session2, policy2, _, recorder2, _ = build_run(resume_log)
+        state2, manifest = ck.restore(ckpt_dir, KILL_AT, session2.state,
+                                      strict_shapes=False)
+        restore_policy(policy2, manifest["extra"]["policy"])
+        session2.state = state2
+        res2 = session2.run(STEPS, start_step=KILL_AT)
+        recorder2.close()
 
-    # --- node 2 dies: Membership rebuilds the Topology, the gate re-runs ---
-    plan = m.leave(2)
-    x, s = apply_state_plan(x, s, plan)
-    prob4 = problems.quadratic(n_nodes=4, dim=8, seed=3)
-    info = rebuild_consensus(m, comp_snr)
-    print(f"[leave] node 2 gone; {m.topo.canonical()!r} rebuilt "
-          f"(eta_min={info['eta_min']:.3f}, doubly stochastic: "
-          f"{np.allclose(m.W.sum(0), 1)})")
-    x, s, key = run_segment(prob4, m, x, key, 120)
-    print(f"[train] post-failure |grad|^2 = {gnorm(prob4, x):.2e}")
-
-    # --- straggling links: FaultComm composes over the static policy ---
-    n_edges = int(m.topo.adj.sum()) // 2
-    sim = StragglerSim(prob=0.5, seed=7)
-
-    def build_step(key_):
-        # plan keys are the spec, ("fault", drops, spec), or "outage"
-        # (every edge out that step): lower drops by renormalizing W —
-        # the same rule runtime.fault applies to circulant offsets
-        from repro.core.compressors import Identity
-        from repro.runtime.fault import OUTAGE_SPEC
-        if key_ == OUTAGE_SPEC:
-            return _metric_step(prob4, lambda t: ALPHA,
-                                jnp.eye(m.n, dtype=jnp.float32), Identity())
-        _, drops, inner = peel_plan_key(key_)
-        W = drop_renormalize_dense(m.W, drops)
-        return _metric_step(prob4, lambda t: ALPHA,
-                            jnp.asarray(W, jnp.float32),
-                            make_compressor(inner))
-
-    faulty = Compose(StaticComm(SPEC),
-                     FaultComm(sim=sim, n_classes=n_edges))
-    x, s, key = run_segment(prob4, m, x, key, 30, policy=faulty,
-                            build_step=build_step)
-    print(f"[straggler] 30 steps with 50% per-edge faults "
-          f"(FaultComm over {n_edges} edges): "
-          f"|grad|^2 = {gnorm(prob4, x):.2e}")
-
-    # --- a new node joins, warm-started from a neighbor ---
-    plan = m.join(9)
-    x, s = apply_state_plan(x, s, plan)
-    prob5 = problems.quadratic(n_nodes=5, dim=8, seed=3)
-    info = rebuild_consensus(m, comp_snr)
-    print(f"[join] node 9 joined {m.topo.canonical()!r} "
-          f"(eta_min={info['eta_min']:.3f}, neighbor-copy init)")
-    x, s, key = run_segment(prob5, m, x, key, 150)
-    print(f"[train] post-join |grad|^2 = {gnorm(prob5, x):.2e}")
+        exact = diff_exact(str(base_log), str(resume_log),
+                           from_step=KILL_AT)
+        bit_equal = all(np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(jax.tree.leaves(res.state),
+                                        jax.tree.leaves(res2.state)))
+        print(f"[ckpt] killed at {KILL_AT} (4-node epoch), resumed: "
+              f"{exact['n_steps']}-step event tail exact={exact['ok']}, "
+              f"final state bit-equal={bit_equal}")
+        assert exact["ok"] and bit_equal, exact["mismatches"]
     print("elastic failover cycle complete")
 
 

@@ -11,7 +11,8 @@
 #                                   # deterministic and wall-time-bounded
 #   scripts/run_tests.sh --cli-smoke    # launch/train.py --smoke once per
 #                                   # comm-policy class (static / adapt /
-#                                   # budget / composed), 8 virtual CPU
+#                                   # budget / composed / topology /
+#                                   # chaos), 8 virtual CPU
 #                                   # devices; fails on nonzero exit,
 #                                   # missing metrics keys, or a repro.obs
 #                                   # event log that does not validate
@@ -55,7 +56,7 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
     COMMON=(--arch qwen3-8b --smoke --steps 6 --seq-len 64 --global-batch 8
             --optimizer sgd --alpha 0.05 --log-every 2 --adapt-interval 2
             --adapt-ladder "$LADDER")
-    modes=(static adapt budget composed topology)
+    modes=(static adapt budget composed topology chaos)
     declare -A FLAGS=(
         [static]=""
         [adapt]="--adapt"
@@ -68,6 +69,15 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
         [topology]="--mesh 8x1 --adapt --compose --bit-budget 2400000
                     --topology torus:4x2 --topo-schedule 3:ring
                     --edge-drop-prob 0.2"
+        # scripted faults + crash-consistent checkpointing: a slow-link
+        # span scales the composed budget, an outage window blacks out a
+        # step, and SessionCheckpointer snapshots policy state alongside
+        # the model; the checker additionally gates on zero eta_min /
+        # budget violation counters in the event log.  NOTE the --chaos
+        # value must stay space-free: ${FLAGS[$mode]} expands unquoted.
+        [chaos]="--adapt --compose --bit-budget 1200000 --token-bucket
+                 --chaos slow:edge=0-1,span=2:4,factor=0.5|outage:span=4:5
+                 --ckpt-every 3 --ckpt-dir $TMP/chaos-ckpt"
     )
     rc=0
     for mode in "${modes[@]}"; do
@@ -85,6 +95,25 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
         if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
                 python -m repro.launch.obs_cli validate "$TMP/$mode.jsonl"; then
             echo "cli-smoke $mode: FAIL (obs validate)"; rc=1; continue
+        fi
+        if [[ "$mode" == chaos ]]; then
+            # the run must have checkpointed, injected the scripted faults,
+            # and closed with zero violation counters (counters only emits
+            # touched counters — absent means zero, hence .get)
+            if ! python - "$TMP/$mode.jsonl" "$TMP/chaos-ckpt" <<'PY'
+import json, pathlib, sys
+recs = [json.loads(l) for l in open(sys.argv[1])]
+counters = next(r["counters"] for r in recs if r.get("kind") == "counters")
+for name in ("eta_min_violations", "budget_violations"):
+    assert counters.get(name, 0) == 0, f"{name}: {counters[name]}"
+assert counters.get("fault_injections", 0) >= 1, counters
+assert counters.get("outage_steps", 0) == 1, counters
+assert list(pathlib.Path(sys.argv[2]).glob("step_*")), "no checkpoint"
+print(f"cli-smoke chaos: counters OK {counters}")
+PY
+            then
+                echo "cli-smoke $mode: FAIL (chaos counters)"; rc=1; continue
+            fi
         fi
         if ! python - "$TMP/$mode.json" "$mode" <<'PY'
 import json, sys

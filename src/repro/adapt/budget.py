@@ -229,7 +229,9 @@ class BudgetController:
     :class:`TokenBucket`)."""
     ladder: Tuple[Rung, ...]
     shapes: Tuple[Tuple[int, ...], ...]
-    neighbors: int = 1
+    neighbors: float = 1              # effective multiplier (may be
+    # fractional: chaos slow-link spans scale the graph fan-out by the
+    # fleet-average bandwidth degradation — see BudgetComm.rescale_link)
     eta_min: float = 0.0
     snr_cap: Optional[float] = None
     # burst-or-silence floor: when set, a solution whose maximin SNR lands
@@ -260,12 +262,23 @@ class BudgetController:
              for r in self.ladder]
             for s in self.shapes]
 
-    def set_neighbors(self, neighbors: int) -> None:
-        """Re-base the link-cost model on a new gossip neighbor count —
-        the topology-switch hook (``BudgetComm.retarget``): the same rung
-        vector costs ``n_out`` times one encode's bits, and ``n_out`` is
-        a property of the active graph."""
-        self.neighbors = int(neighbors)
+    def set_neighbors(self, neighbors: float) -> None:
+        """Re-base the link-cost model on a new effective gossip neighbor
+        multiplier — the topology-switch hook (``BudgetComm.retarget``):
+        the same rung vector costs ``n_out`` times one encode's bits, and
+        ``n_out`` is a property of the active graph.  Fractional values
+        are legal: chaos slow-link spans scale the fan-out by the
+        fleet-average bandwidth degradation (``BudgetComm.rescale_link``)."""
+        self.neighbors = float(neighbors)
+        self._rebuild_cost_table()
+
+    def set_shapes(self, shapes: Sequence[Tuple[int, ...]]) -> None:
+        """Re-base the cost model on new gossiped leaf shapes — the
+        elastic-churn hook: node-stacked (n, dim) leaves grow/shrink with
+        the fleet, and budgeting against stale shapes would charge the
+        wrong bits for every candidate vector."""
+        self.shapes = tuple(tuple(int(d) for d in s) for s in shapes)
+        assert self.shapes
         self._rebuild_cost_table()
 
     @classmethod

@@ -112,10 +112,18 @@ def latest_step(ckpt_dir: str | Path) -> Optional[int]:
 
 def restore(ckpt_dir: str | Path, step: int, state_like, *,
             n_nodes_from: Optional[int] = None,
-            n_nodes_to: Optional[int] = None):
+            n_nodes_to: Optional[int] = None,
+            strict_shapes: bool = True):
     """Restore into the structure/dtypes of ``state_like`` (a concrete state
     or ShapeDtypeStruct tree).  Set n_nodes_from/to for elastic resharding of
-    node-stacked leaves (leading dim from -> to via consensus mean)."""
+    node-stacked leaves (leading dim from -> to via consensus mean).
+
+    ``strict_shapes=False`` lets a mismatched leaf adopt the CHECKPOINT's
+    shape instead of raising — the crash-consistent resume path for elastic
+    churn, where the mid-run fleet size (and thus every node-stacked leaf)
+    differs from a freshly initialized opening state; the caller replays
+    the membership log (``ElasticComm.fast_forward``) so the restored
+    shapes are exactly what the resumed step expects."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     cache: Dict[str, Any] = {}
@@ -140,7 +148,7 @@ def restore(ckpt_dir: str | Path, step: int, state_like, *,
             else:
                 mean = arr.mean(axis=0, keepdims=True)   # consensus mean
                 arr = np.broadcast_to(mean, want).copy()
-        elif arr.shape != want:
+        elif arr.shape != want and strict_shapes:
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
                              f"vs target {want} (no reshard rule)")
         out.append(jnp.asarray(arr.astype(like.dtype)))

@@ -42,9 +42,11 @@ Quick example (a budget-capped adaptive trainer session)::
                            batch_fn=data.batch)
     result = session.run(n_steps)
 """
+from .elastic import ElasticComm
 from .policy import (OUTAGE_PLAN, BudgetComm, CommPolicy, Compose,
                      FaultComm, OutageComm, PerLeafPlan, RateComm,
                      StaticComm, StepTelemetry)
+from .resume import SessionCheckpointer, restore_policy, snapshot_policy
 from .session import SessionResult, TrainSession
 from .wirespec import OUTAGE, WireSpec, canonical_key
 
@@ -52,5 +54,6 @@ __all__ = [
     "WireSpec", "OUTAGE", "canonical_key",
     "CommPolicy", "PerLeafPlan", "StepTelemetry", "OUTAGE_PLAN",
     "StaticComm", "RateComm", "BudgetComm", "OutageComm", "FaultComm",
-    "Compose", "TrainSession", "SessionResult",
+    "ElasticComm", "Compose", "TrainSession", "SessionResult",
+    "SessionCheckpointer", "snapshot_policy", "restore_policy",
 ]

@@ -1,0 +1,153 @@
+"""ElasticComm — live membership churn as a Compose member.
+
+Before this module, a node join/leave tore the whole session down: the
+pre-PR-7 ``examples/elastic_failover.py`` ran one trainer per membership
+epoch and hand-carried state between them.  ElasticComm makes churn an
+in-band event on ONE surviving session:
+
+  * it owns a :class:`runtime.elastic.Membership` and a scripted event
+    list ``((at_step, "crash"|"rejoin", node_id), ...)`` (usually from
+    ``runtime.chaos.FaultSchedule.churn_events()``);
+  * as the Compose "topology" member (it exposes ``maybe_switch`` and
+    delegates to an INNER :class:`~repro.topology.TopologyComm`), it
+    applies due events at the top of ``decide`` — exactly where a
+    scheduled graph switch would happen — so floors and cost models are
+    live before any proposal is solved;
+  * each applied event: the membership rebuilds its graph, the rebuilt
+    :class:`~repro.topology.Topology` is registered with the inner
+    TopologyComm under an EPOCH-QUALIFIED key
+    (``"elastic:<epoch>:<canonical>"`` — canonical alone is not enough:
+    erdos canonicals don't carry n, and a leave + rejoin permutes node
+    rows, so two epochs with the same canonical need distinct jitted
+    steps), every member exposing ``set_shapes`` re-bases its cost model
+    on the new fleet's leaf shapes, the caller's ``state_hook`` re-keys
+    the live stacked state (``runtime.elastic.rekey_dcdgd_state``), and a
+    ``repro.obs`` fault event (kind="crash"/"rejoin") is emitted;
+  * the inner TopologyComm then retargets every composed controller's
+    Theorem-1 floor through the existing switch machinery and tags plans
+    with the epoch key — the PlanBank compiles at most one step per
+    distinct key, so churn costs bounded recompiles and ZERO trainer
+    rebuilds.
+
+Resume contract: :meth:`snapshot` records only how many events have
+applied; :meth:`fast_forward` replays that many through the membership
+and the topology registry (``register_hook`` fires so bank builders can
+resolve epoch keys) WITHOUT touching session state or emitting obs events
+— the checkpointed state already has the post-churn shapes, and the
+resumed event log must be an exact tail of the uninterrupted one.
+
+Known limit (documented, asserted by the fig8 harness rather than here):
+the OUTAGE blackout bank entry is shared across graphs by design
+(``PerLeafPlan.key() == "outage"``), so its jitted step is shape-bound to
+the epoch that first builds it — schedule full outage windows within one
+membership epoch, or give each epoch its own bank.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class ElasticComm:
+    """See module docstring.  ``events`` must be step-sorted; ``state_hook
+    (plan, topo, node_ids, key)`` mutates the live session state (skipped
+    on replay); ``register_hook(key, topo, node_ids)`` lets the plan-bank
+    builder resolve the epoch key (fires on live apply AND replay);
+    ``shapes_fn(n)`` maps a fleet size to the gossiped leaf shapes pushed
+    into composed ``set_shapes`` members (None = no cost-model re-basing,
+    the dims-free dcdgd default is per-encode accounting)."""
+    membership: Any                      # runtime.elastic.Membership
+    topo_comm: Any                       # inner repro.topology.TopologyComm
+    events: Tuple[Tuple[int, str, int], ...] = ()
+    state_hook: Optional[Callable[..., None]] = None
+    register_hook: Optional[Callable[..., None]] = None
+    shapes_fn: Optional[Callable[[int], Tuple]] = None
+    recorder: Optional[Any] = None       # Recorder.bind_policy fills this
+    consumes_telemetry = True
+
+    def __post_init__(self):
+        evs = tuple((int(at), str(kind), int(node))
+                    for at, kind, node in self.events)
+        assert all(k in ("crash", "rejoin") for _, k, _ in evs), evs
+        assert list(evs) == sorted(evs, key=lambda e: e[0]), \
+            f"events must be step-sorted: {evs}"
+        self.events = evs
+        self._applied = 0
+        self._epoch = 0
+        self.churn_log: List[Tuple[int, str, int, str]] = []
+        # (step, kind, node, new_key)
+
+    # ------------------------------------------------------------------
+    @property
+    def active_key(self) -> str:
+        return self.topo_comm._active
+
+    def _apply(self, event: Tuple[int, str, int],
+               members: Sequence[Any] = (), *, live: bool) -> str:
+        at, kind, node = event
+        plan = (self.membership.leave(node) if kind == "crash"
+                else self.membership.join(node))
+        topo = self.membership.topo
+        self._epoch += 1
+        key = f"elastic:{self._epoch}:{topo.canonical()}"
+        # register BEFORE the inner switch: switch_to asserts the key and
+        # the bank builder may resolve it on the very next step
+        self.topo_comm.switch_to(key, topo=topo)
+        node_ids = list(self.membership.node_ids)
+        if self.register_hook is not None:
+            self.register_hook(key, topo, node_ids)
+        if live:
+            if self.shapes_fn is not None:
+                shapes = self.shapes_fn(self.membership.n)
+                for m in members:
+                    set_shapes = getattr(m, "set_shapes", None)
+                    if set_shapes is not None:
+                        set_shapes(shapes)
+            if self.state_hook is not None:
+                self.state_hook(plan, topo, node_ids, key)
+            if self.recorder is not None:
+                self.recorder.on_fault(at, cause=kind, node=node)
+            self.churn_log.append((at, kind, node, key))
+        return key
+
+    # ------------------------------------------------------------------
+    # Compose "topology member" surface (delegates to the inner comm)
+    # ------------------------------------------------------------------
+    def maybe_switch(self, step: int, members: Sequence[Any]) -> bool:
+        while (self._applied < len(self.events)
+               and self.events[self._applied][0] <= step):
+            self._apply(self.events[self._applied], members, live=True)
+            self._applied += 1
+        return self.topo_comm.maybe_switch(step, members)
+
+    def annotate(self, step: int, plan):
+        return self.topo_comm.annotate(step, plan)
+
+    def audit(self, step: int, plan) -> None:
+        self.topo_comm.audit(step, plan)
+
+    def observe(self, t) -> None:
+        self.topo_comm.observe(t)
+
+    def decide(self, step: int):
+        return None                  # never proposes, like TopologyComm
+
+    # ------------------------------------------------------------------
+    # crash-consistent resume
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {"applied": self._applied, "epoch": self._epoch}
+
+    def fast_forward(self, applied: int) -> None:
+        """Replay the first ``applied`` events through the membership and
+        the topology registry only — no state mutation, no obs emission,
+        no cost-model pushes (those live in the restored member
+        snapshots).  Must run on a FRESH ElasticComm (same events, same
+        opening membership) before its first decide."""
+        assert self._applied == 0 and self._epoch == 0, \
+            "fast_forward needs a fresh ElasticComm"
+        assert 0 <= applied <= len(self.events), (applied, self.events)
+        for event in self.events[:applied]:
+            self._apply(event, (), live=False)
+        self._applied = applied

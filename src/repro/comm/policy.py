@@ -257,6 +257,11 @@ class BudgetComm:
     def __post_init__(self):
         self._snap = None
         self._cost_cache: dict = {}   # plan key -> exact flat-layout bits
+        # link-heterogeneity state: the controller's effective neighbor
+        # multiplier is base (graph fan-out) x scale (chaos slow-link
+        # factor); retarget moves the base, rescale_link moves the scale
+        self._base_neighbors: float = float(self.policy.controller.neighbors)
+        self._link_scale: float = 1.0
 
     @property
     def spend_log(self):
@@ -318,13 +323,41 @@ class BudgetComm:
         """Topology-switch hook (TopologyComm): the audit floor moves to
         the new graph's eta_min and — because the wire-bits -> link-bits
         multiplier is the graph's neighbor count — the cost model is
-        re-based and the plan-cost cache dropped, so the very next cap /
-        re-solve budgets against the new graph's real link cost."""
+        re-based (preserving any live slow-link scale) and the plan-cost
+        cache dropped, so the very next cap / re-solve budgets against
+        the new graph's real link cost."""
         ctl = self.policy.controller
         ctl.eta_min = float(eta_min)
-        if neighbors is not None and neighbors != ctl.neighbors:
-            ctl.set_neighbors(int(neighbors))
+        if neighbors is not None:
+            self._base_neighbors = float(neighbors)
+            eff = self._base_neighbors * self._link_scale
+            if eff != ctl.neighbors:
+                ctl.set_neighbors(eff)
         self._cost_cache.clear()
+
+    def rescale_link(self, scale: float) -> None:
+        """Chaos slow-link hook (``runtime.chaos.ChaosComm``): per-edge
+        bandwidth degradation lowers to a COST multiplier on the neighbor
+        fan-out — a fleet whose links run at average factor 1/scale pays
+        ``scale``x the bits per deadline, so the budget knapsack buys
+        cheaper rungs for the span (and restores itself when the scale
+        returns to 1)."""
+        scale = float(scale)
+        if scale == self._link_scale:
+            return
+        self._link_scale = scale
+        self.policy.controller.set_neighbors(self._base_neighbors * scale)
+        self._cost_cache.clear()
+
+    def set_shapes(self, shapes) -> None:
+        """Elastic-churn hook (``ElasticComm``): the gossiped leaf shapes
+        follow the fleet size (node-stacked (n, dim) leaves), so a
+        join/leave re-bases the whole cost model and invalidates every
+        cached cost and the telemetry probe snapshot (its per-leaf view
+        described the old fleet)."""
+        self.policy.controller.set_shapes(shapes)
+        self._cost_cache.clear()
+        self._snap = None
 
 
 @dataclasses.dataclass
@@ -450,8 +483,14 @@ class Compose:
         topos = [p for p in policies if hasattr(p, "maybe_switch")]
         assert len(topos) <= 1, "at most one TopologyComm (one graph)"
         self.topo = topos[0] if topos else None
+        # pre-deciders run after the graph resolves but before anyone
+        # proposes: per-step environment mutation (ChaosComm slow-link
+        # scaling) that the proposals/caps of the SAME step must see
+        self.pre_deciders: List[Any] = [
+            p for p in policies if hasattr(p, "pre_decide")]
         special = set(map(id, self.outages)) | set(map(id, self.faults)) \
-            | {id(self.budget), id(self.topo)}
+            | {id(self.budget), id(self.topo)} \
+            | set(map(id, self.pre_deciders))
         self.proposers: List[CommPolicy] = [
             p for p in policies if id(p) not in special]
         self.members: Tuple[CommPolicy, ...] = tuple(policies)
@@ -479,6 +518,8 @@ class Compose:
             # resolve the active graph BEFORE anyone decides: floors and
             # neighbor multipliers must be live when proposals are solved
             self.topo.maybe_switch(step, self.members)
+        for p in self.pre_deciders:
+            p.pre_decide(step, self.members)
         for p in self.proposers:
             d = p.decide(step)
             if d is not None:

@@ -1,0 +1,355 @@
+"""Crash-consistent policy snapshots — the other half of a checkpoint.
+
+``ckpt.checkpoint`` captures the MODEL state (the DC-DGD ``(x, y, d, t,
+key)`` stack); this module captures the POLICY state: telemetry EMAs, the
+held plan, the budget ledger and token-bucket balance, hysteresis indices,
+topology overrides and the elastic churn position.  Together they make a
+kill-at-step-k + resume run bit-identical to the uninterrupted one — the
+contract ``obs.report.diff_exact`` verifies on the two event logs.
+
+Why a separate layer instead of pickling the policy: snapshots ride inside
+the checkpoint manifest's ``extra`` dict (JSON), so they must be plain
+data; and restore targets a FRESHLY CONSTRUCTED policy (the resuming
+process rebuilds its Compose from the same config), so only the mutable
+fields move — jitted closures, topology registries and controllers are
+rebuilt by setup code, never serialized.
+
+Encoding notes:
+  * plan-bank keys can be nested tuples (``("topo", c, ("fault", ...))``)
+    — JSON has no tuples, so they are wrapped ``{"__t__": [...]}``
+    recursively (``_key_enc`` / ``_key_dec``);
+  * plans serialize as their canonical spec strings + tags and are
+    re-parsed on restore (``PerLeafPlan`` is frozen — identity never
+    matters, only the key);
+  * floats go through ``json.dump``'s repr round-trip (exact), and the
+    manifest writer permits ``NaN`` tokens (TopologyComm's pre-telemetry
+    ``_last_snr``);
+  * telemetry arrays (float32/int32) are stored as nested lists — the
+    float64 JSON value of a float32 is exact, and restore casts back.
+
+:class:`SessionCheckpointer` bundles both halves as the ``checkpoint=``
+hook of :class:`~repro.comm.session.TrainSession` — which fires it AFTER
+step k-1's metrics land but BEFORE ``decide(k)``, so a resumed session
+re-creates the step-k decision (ledger entry, bucket spend, index moves)
+exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from .policy import (OUTAGE_PLAN, BudgetComm, Compose, FaultComm,
+                     OutageComm, PerLeafPlan, RateComm, StaticComm,
+                     _ProbeSnap)
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+def _key_enc(k: Any) -> Any:
+    """Plan-bank key -> JSON-safe (tuples wrapped ``{"__t__": [...]}``)."""
+    if isinstance(k, tuple):
+        return {"__t__": [_key_enc(x) for x in k]}
+    return k
+
+
+def _key_dec(k: Any) -> Any:
+    if isinstance(k, dict) and "__t__" in k:
+        return tuple(_key_dec(x) for x in k["__t__"])
+    return k
+
+
+def _plan_enc(plan: Optional[PerLeafPlan]) -> Optional[dict]:
+    if plan is None:
+        return None
+    return {"specs": [s.canonical() for s in plan.specs],
+            "outage": bool(plan.outage),
+            "topo": plan.topo,
+            "drops": [int(d) for d in plan.drops]}
+
+
+def _plan_dec(d: Optional[dict]) -> Optional[PerLeafPlan]:
+    if d is None:
+        return None
+    if d["outage"]:
+        return OUTAGE_PLAN
+    plan = PerLeafPlan.vector(d["specs"])
+    return dataclasses.replace(plan, topo=d["topo"],
+                               drops=tuple(int(x) for x in d["drops"]))
+
+
+# ---------------------------------------------------------------------------
+# wrapped adapt.policies mutables (RateComm's inner policy)
+# ---------------------------------------------------------------------------
+def _snap_wrapped(p: Any) -> dict:
+    out: dict = {}
+    if hasattr(p, "index"):                  # SNRFeedbackPolicy hysteresis
+        out["index"] = int(p.index)
+    if hasattr(p, "indices"):                # PerLeafSNRPolicy
+        out["indices"] = [int(i) for i in p.indices]
+    if hasattr(p, "eta_min"):                # retargeted Theorem-1 floor
+        out["eta_min"] = float(p.eta_min)
+    ctl = getattr(p, "controller", None)     # ControllerPolicy
+    if ctl is not None and hasattr(ctl, "eta_min"):
+        out["ctl_eta_min"] = float(ctl.eta_min)
+    return out
+
+
+def _restore_wrapped(p: Any, snap: dict) -> None:
+    if "index" in snap:
+        p.index = int(snap["index"])
+    if "indices" in snap:
+        p.indices = [int(i) for i in snap["indices"]]
+    if "eta_min" in snap:
+        p.eta_min = float(snap["eta_min"])
+    if "ctl_eta_min" in snap:
+        p.controller.eta_min = float(snap["ctl_eta_min"])
+
+
+# ---------------------------------------------------------------------------
+# per-member dispatch
+# ---------------------------------------------------------------------------
+def _is_elastic(m: Any) -> bool:
+    return hasattr(m, "fast_forward") and hasattr(m, "membership")
+
+
+def _is_topology(m: Any) -> bool:
+    return hasattr(m, "maybe_switch") and hasattr(m, "topologies")
+
+
+def _wall_sched(pol: Any) -> Optional[Any]:
+    sched = pol.schedule
+    if hasattr(sched, "record_wall_time"):
+        return sched
+    base = getattr(sched, "base", None)
+    return base if base is not None and hasattr(base, "record_wall_time") \
+        else None
+
+
+def _snap_member(m: Any) -> dict:
+    if _is_elastic(m):                       # before topology: it quacks too
+        return {"kind": "elastic", **m.snapshot(),
+                "inner": _snap_member(m.topo_comm)}
+    if _is_topology(m):
+        return {"kind": "topology",
+                "active": m._active,
+                "forced": m._forced,
+                "below_streak": int(m._below_streak),
+                "last_key": _key_enc(m._last_key),
+                "last_snr": float(m._last_snr),
+                "violations": int(m.violations),
+                "switch_log": [[int(s), a, b, float(e)]
+                               for s, a, b, e in m.switch_log]}
+    if isinstance(m, RateComm):
+        tel = m._tel
+        return {"kind": "rate",
+                "tel": {"diff_ema": np.asarray(tel.diff_ema).tolist(),
+                        "noise_ema": np.asarray(tel.noise_ema).tolist(),
+                        "log_snr_ema": float(np.asarray(tel.log_snr_ema)),
+                        "ring_diff": np.asarray(tel.ring_diff).tolist(),
+                        "ring_noise": np.asarray(tel.ring_noise).tolist(),
+                        "count": int(np.asarray(tel.count))},
+                "held": _plan_enc(m._held),
+                "policy": _snap_wrapped(m.policy)}
+    if isinstance(m, BudgetComm):
+        pol, ctl, ps = m.policy, m.policy.controller, m._snap
+        out = {"kind": "budget",
+               "probe_snap": None if ps is None else
+               {"diff_power": np.asarray(ps.diff_power).tolist(),
+                "n_layers": int(ps.n_layers), "count": int(ps.count)},
+               "active": _key_enc(pol._active),
+               "active_bits": float(pol._active_bits),
+               "spend_log": [[int(s), float(b), float(bal), float(bits), r]
+                             for s, b, bal, bits, r in pol.spend_log],
+               "link_scale": float(m._link_scale),
+               "base_neighbors": float(m._base_neighbors),
+               "ctl": {"neighbors": float(ctl.neighbors),
+                       "eta_min": float(ctl.eta_min),
+                       "shapes": [list(map(int, s)) for s in ctl.shapes]},
+               "bucket": None, "wall": None}
+        if pol.bucket is not None:
+            bk = pol.bucket
+            out["bucket"] = {"balance": float(bk.balance),
+                             "filled": float(bk.filled),
+                             "spent": float(bk.spent),
+                             "initial": float(bk.initial)}
+        wall = _wall_sched(pol)
+        if wall is not None:
+            out["wall"] = {"ema_ms": None if wall.ema_ms is None
+                           else float(wall.ema_ms),
+                           "samples": int(wall.samples)}
+        return out
+    if hasattr(m, "pre_decide"):             # ChaosComm: schedule-pure
+        return {"kind": "chaos"}
+    if isinstance(m, OutageComm):
+        return {"kind": "outage"}
+    if isinstance(m, FaultComm):
+        return {"kind": "fault", "n_classes": int(m.n_classes)}
+    if isinstance(m, StaticComm):
+        return {"kind": "static"}
+    raise TypeError(f"no snapshot rule for policy member {type(m).__name__}"
+                    f" — add one to repro.comm.resume")
+
+
+def _restore_member(m: Any, snap: dict) -> None:
+    kind = snap["kind"]
+    if kind == "elastic":
+        assert _is_elastic(m), type(m).__name__
+        m.fast_forward(int(snap["applied"]))
+        assert m._epoch == int(snap["epoch"]), \
+            (m._epoch, snap["epoch"], "event list changed since checkpoint?")
+        _restore_member(m.topo_comm, snap["inner"])
+        return
+    if kind == "topology":
+        assert _is_topology(m), type(m).__name__
+        m._active = snap["active"]
+        m._forced = snap["forced"]
+        m._below_streak = int(snap["below_streak"])
+        m._last_key = _key_dec(snap["last_key"])
+        m._last_snr = float(snap["last_snr"])
+        m.violations = int(snap["violations"])
+        m.switch_log[:] = [(int(s), a, b, float(e))
+                           for s, a, b, e in snap["switch_log"]]
+        return
+    if kind == "rate":
+        assert isinstance(m, RateComm), type(m).__name__
+        import jax.numpy as jnp
+        from ..adapt.telemetry import TelemetryState
+        t = snap["tel"]
+        m._tel = TelemetryState(
+            diff_ema=jnp.asarray(t["diff_ema"], jnp.float32),
+            noise_ema=jnp.asarray(t["noise_ema"], jnp.float32),
+            log_snr_ema=jnp.float32(t["log_snr_ema"]),
+            ring_diff=jnp.asarray(t["ring_diff"], jnp.float32),
+            ring_noise=jnp.asarray(t["ring_noise"], jnp.float32),
+            count=jnp.int32(t["count"]))
+        m._held = _plan_dec(snap["held"])
+        _restore_wrapped(m.policy, snap["policy"])
+        return
+    if kind == "budget":
+        assert isinstance(m, BudgetComm), type(m).__name__
+        pol, ctl = m.policy, m.policy.controller
+        ps = snap["probe_snap"]
+        m._snap = None if ps is None else _ProbeSnap(
+            np.asarray(ps["diff_power"], np.float64),
+            int(ps["n_layers"]), int(ps["count"]))
+        pol._active = _key_dec(snap["active"])
+        pol._active_bits = float(snap["active_bits"])
+        pol.spend_log[:] = [(int(s), float(b), float(bal), float(bits),
+                             str(r)) for s, b, bal, bits, r
+                            in snap["spend_log"]]
+        m._base_neighbors = float(snap["base_neighbors"])
+        m._link_scale = float(snap["link_scale"])
+        shapes = tuple(tuple(int(d) for d in s)
+                       for s in snap["ctl"]["shapes"])
+        if shapes != tuple(tuple(s) for s in ctl.shapes):
+            ctl.set_shapes(shapes)
+        ctl.eta_min = float(snap["ctl"]["eta_min"])
+        if float(snap["ctl"]["neighbors"]) != ctl.neighbors:
+            ctl.set_neighbors(float(snap["ctl"]["neighbors"]))
+        if snap["bucket"] is not None:
+            bk = pol.bucket
+            assert bk is not None, \
+                "checkpoint carries a token bucket; resuming policy has none"
+            # TokenBucket.__post_init__ re-derives `initial`, so fields are
+            # assigned post-construction, never passed to the constructor
+            bk.balance = float(snap["bucket"]["balance"])
+            bk.filled = float(snap["bucket"]["filled"])
+            bk.spent = float(snap["bucket"]["spent"])
+            bk.initial = float(snap["bucket"]["initial"])
+        if snap["wall"] is not None:
+            wall = _wall_sched(pol)
+            assert wall is not None, \
+                "checkpoint carries wall-clock EMA; schedule has none"
+            ema = snap["wall"]["ema_ms"]
+            wall.ema_ms = None if ema is None else float(ema)
+            wall.samples = int(snap["wall"]["samples"])
+        m._cost_cache.clear()
+        return
+    if kind in ("chaos", "outage", "static"):
+        return                                # schedule-pure, nothing moves
+    if kind == "fault":
+        m.n_classes = int(snap["n_classes"])
+        return
+    raise ValueError(f"unknown member snapshot kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# public surface
+# ---------------------------------------------------------------------------
+def snapshot_policy(policy: Any) -> dict:
+    """Policy -> plain-data snapshot (JSON-safe; rides in the checkpoint
+    manifest's ``extra["policy"]``)."""
+    if isinstance(policy, Compose):
+        return {"kind": "compose",
+                "held": _plan_enc(policy._held),
+                "last": _plan_enc(policy._last),
+                "members": [_snap_member(p) for p in policy.members]}
+    return _snap_member(policy)
+
+
+def restore_policy(policy: Any, snap: dict) -> None:
+    """Restore a snapshot into a FRESHLY CONSTRUCTED policy of the same
+    composition (same member order — the resuming process runs the same
+    deterministic setup code that built the original)."""
+    if isinstance(policy, Compose):
+        assert snap.get("kind") == "compose", snap.get("kind")
+        assert len(snap["members"]) == len(policy.members), \
+            (len(snap["members"]), len(policy.members))
+        for m, s in zip(policy.members, snap["members"]):
+            _restore_member(m, s)
+        policy._held = _plan_dec(snap["held"])
+        policy._last = _plan_dec(snap["last"])
+        return
+    _restore_member(policy, snap)
+
+
+@dataclasses.dataclass
+class SessionCheckpointer:
+    """TrainSession ``checkpoint=`` hook that saves model state AND the
+    policy snapshot every ``every`` steps (atomic, via ``ckpt.checkpoint``).
+
+    ``extra_fn(step, state, metrics) -> dict`` merges caller extras (e.g.
+    the launcher's ``{"loss": ...}``) into the manifest."""
+    directory: str
+    policy: Any
+    every: int = 0
+    retain: int = 3
+    extra_fn: Optional[Callable[[int, Any, Dict[str, Any]],
+                                Dict[str, Any]]] = None
+
+    def __call__(self, step: int, state: Any,
+                 metrics: Dict[str, Any]) -> None:
+        if self.every and step % self.every == 0 and step > 0:
+            self.save(step, state, metrics)
+
+    def save(self, step: int, state: Any,
+             metrics: Optional[Dict[str, Any]] = None):
+        from ..ckpt import checkpoint as ck
+        extra = {"policy": snapshot_policy(self.policy)}
+        if self.extra_fn is not None:
+            extra.update(self.extra_fn(step, state, metrics or {}))
+        return ck.save(self.directory, step, state, extra=extra,
+                       retain=self.retain)
+
+    def resume(self, state_like: Any, *, strict_shapes: bool = False,
+               **reshard_kw) -> Optional[Tuple[Any, dict]]:
+        """Restore the latest checkpoint into ``state_like`` and replay the
+        policy snapshot into ``self.policy``.  Returns ``(state, manifest)``
+        (resume from ``manifest["step"]``), or None when the directory holds
+        no checkpoint.  ``strict_shapes`` defaults OFF: the elastic resume
+        path restores into a fresh opening-fleet state whose node-stacked
+        shapes the checkpoint overrides."""
+        from ..ckpt import checkpoint as ck
+        step = ck.latest_step(self.directory)
+        if step is None:
+            return None
+        state, manifest = ck.restore(self.directory, step, state_like,
+                                     strict_shapes=strict_shapes,
+                                     **reshard_kw)
+        psnap = (manifest.get("extra") or {}).get("policy")
+        if psnap is not None:
+            restore_policy(self.policy, psnap)
+        return state, manifest

@@ -191,6 +191,13 @@ class TrainSession:
                             wall_ms=None if fresh else dt * 1e3)
             if self.track_history:
                 history.append(m)
+            # checkpoint BEFORE deciding step i+1: the snapshot must not
+            # contain the i+1 decision's side effects (budget ledger entry,
+            # bucket spend, telemetry-fed index moves) — a resumed session
+            # re-opens with decide(i+1), so a post-decide snapshot would
+            # charge that step twice and break bit-exact resume
+            if self.checkpoint is not None:
+                self.checkpoint(i + 1, self.state, m)
             if (i + 1) < n_steps:
                 td = time.perf_counter() if obs is not None else 0.0
                 nxt = self.policy.decide(i + 1)
@@ -211,8 +218,6 @@ class TrainSession:
                     and ((i + 1) % self.log_every == 0
                          or i == n_steps - 1)):
                 self.on_log(i, m, ran)
-            if self.checkpoint is not None:
-                self.checkpoint(i + 1, self.state, m)
         res = SessionResult(
             state=self.state, n_steps=n_steps - start_step, history=history,
             wire_log=wire_log, plan_per_step=plan_per_step,

@@ -2,7 +2,10 @@
 ``repro.obs`` event logs.
 
   report   run.jsonl            headline numbers from the log alone
-  diff     a.jsonl b.jsonl      regression gate (exit 1 on regression)
+  diff     a.jsonl b.jsonl      regression gate (exit 1 on regression);
+                                with --exact, a bit-exactness gate: every
+                                step event from --from-step on must match
+                                the baseline's exactly (the resume check)
   validate run.jsonl            strict schema check: every line must parse
                                 as a known v=SCHEMA_VERSION event, the
                                 first event must be a run_manifest with
@@ -15,11 +18,11 @@ import json
 import sys
 
 from ..obs import (SCHEMA_VERSION, RunManifest, SchemaError, diff,
-                   format_report, read_events, summarize)
+                   diff_exact, format_report, read_events, summarize)
 
 
 def cmd_report(args) -> int:
-    rep = summarize(args.log)
+    rep = summarize(args.log, from_step=args.from_step)
     if args.json:
         print(json.dumps(rep, indent=1, default=str))
     else:
@@ -29,6 +32,17 @@ def cmd_report(args) -> int:
 
 
 def cmd_diff(args) -> int:
+    if args.exact:
+        d = diff_exact(args.a, args.b, from_step=args.from_step)
+        if args.json:
+            print(json.dumps(d, indent=1, default=str))
+        else:
+            for m in d["mismatches"]:
+                print(f"OBS-MISMATCH,{m}")
+            if d["ok"]:
+                print(f"exact: {d['n_steps']} step events match from "
+                      f"step {d['from_step']}")
+        return 0 if d["ok"] else 1
     d = diff(args.a, args.b, bits_tol=args.bits_tol,
              loss_tol=args.loss_tol, wall_tol=args.wall_tol,
              gate_wall=args.gate_wall)
@@ -85,6 +99,8 @@ def main(argv=None) -> int:
     p = sub.add_parser("report", help="headline numbers from one log")
     p.add_argument("log")
     p.add_argument("--json", action="store_true")
+    p.add_argument("--from-step", type=int, default=0,
+                   help="derive only from events at step >= N")
     p.set_defaults(fn=cmd_report)
 
     p = sub.add_parser("diff", help="regression gate between two logs")
@@ -96,6 +112,12 @@ def main(argv=None) -> int:
     p.add_argument("--gate-wall", action="store_true",
                    help="treat a wall-time increase as a regression, "
                         "not a warning")
+    p.add_argument("--exact", action="store_true",
+                   help="bit-exactness gate (crash-consistent resume): "
+                        "step/fault events must match the baseline "
+                        "exactly from --from-step on (walls excluded)")
+    p.add_argument("--from-step", type=int, default=0,
+                   help="compare only events at step >= N")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_diff)
 

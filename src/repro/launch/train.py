@@ -7,10 +7,14 @@ For the 512-chip production mesh use launch/dryrun.py (this container
 cannot execute 512-way programs, only compile them).
 
 Every scenario — static, adaptive (--adapt / --adapt-per-leaf), budgeted
-(--bit-budget), composed (--compose), outage-scheduled (--outage-windows)
+(--bit-budget), composed (--compose), outage-scheduled (--outage-windows),
+chaos-scripted (--chaos: deterministic slow-link/outage faults)
 — drives training through ONE loop: ``Trainer.comm_session`` builds a
 ``repro.comm.TrainSession`` whose policy is the scenario; the launcher
-only adds logging/checkpoint hooks.
+only adds logging/checkpoint hooks.  With --ckpt-dir the checkpoint is
+crash-consistent: the policy state (budget ledger, token bucket,
+telemetry EMAs) rides in the manifest, so a killed run --resume's
+bit-exact.
 """
 import argparse
 import json
@@ -100,6 +104,16 @@ def main(argv=None):
     ap.add_argument("--outage-windows", default="",
                     help="scheduled full-link blackouts, e.g. '30-35;80-90' "
                          "([start, end) steps; W_t = I, zero link bits)")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault script (runtime.chaos "
+                         "grammar): '|'-separated clauses, e.g. "
+                         "'slow:edge=0-1,span=20:40,factor=0.5"
+                         "|outage:span=50:55'.  slow spans scale the "
+                         "composed bit budget (needs --bit-budget); outage "
+                         "spans merge into --outage-windows; crash/rejoin "
+                         "churn needs the elastic dcdgd backend "
+                         "(benchmarks/fig8_chaos.py) and is rejected here "
+                         "— this launcher's device mesh is fixed")
     ap.add_argument("--obs", default="",
                     help="write a schema-validated repro.obs JSONL event "
                          "log (run manifest + per-step/switch/fault/build "
@@ -138,6 +152,23 @@ def main(argv=None):
     if args.outage_windows:
         from ..comm import OutageComm
         outage_windows = OutageComm.parse(args.outage_windows).windows
+    chaos_sched = None
+    if args.chaos:
+        # parse (and so validate) at the CLI boundary; lowering happens
+        # per clause kind (see runtime.chaos)
+        from ..runtime.chaos import FaultSchedule
+        chaos_sched = FaultSchedule.parse(args.chaos)
+        if chaos_sched.crashes or chaos_sched.rejoins:
+            raise SystemExit(
+                "--chaos crash/rejoin clauses need live membership churn "
+                "(repro.comm.ElasticComm over the elastic dcdgd backend — "
+                "see benchmarks/fig8_chaos.py); this launcher's device "
+                "mesh is fixed")
+        if chaos_sched.slow_links and args.bit_budget <= 0:
+            raise SystemExit(
+                "--chaos slow clauses lower to per-edge budget scaling "
+                "and need --bit-budget > 0")
+        outage_windows = tuple(outage_windows) + chaos_sched.outage_windows()
     topo_schedule = ()
     if args.topo_schedule:
         # parse (and so validate) at the CLI boundary; --topology is the
@@ -181,21 +212,40 @@ def main(argv=None):
         print(f"wire: {tr.wire_stats()}")
 
     state = tr.init_state(0)
-    start_step = 0
-    mgr = None
-    if args.ckpt_dir:
-        from ..ckpt import CheckpointManager
-        mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
-        if args.resume:
-            restored, manifest = mgr.resume(state)
-            if restored is not None:
-                state = restored
-                start_step = manifest["step"]
-                print(f"resumed from step {start_step}")
 
     adapt_on = run.adapt.enabled and tr.node_mode
     policy = tr.comm_policy()      # validates the ladder (Theorem-1 gate)
+    if chaos_sched is not None and chaos_sched.slow_links and tr.node_mode:
+        # slow links ride the composed policy as a pre-decider: ChaosComm
+        # scales BudgetComm's per-edge cost model while a span is active
+        from ..runtime.chaos import ChaosComm
+        n_edges = int(np.asarray(
+            tr.topology_for(args.topology).adj).sum()) // 2
+        chaos_member = ChaosComm(schedule=chaos_sched, n_edges=n_edges)
+        policy = (Compose(*policy.members, chaos_member)
+                  if isinstance(policy, Compose)
+                  else Compose(policy, chaos_member))
     topo_member = policy.topo if isinstance(policy, Compose) else None
+
+    start_step = 0
+    ckptr = None
+    if args.ckpt_dir:
+        # model state AND policy snapshot (telemetry EMAs, budget ledger,
+        # token-bucket balance, hysteresis indices) land in one atomic
+        # checkpoint, so kill + --resume replays bit-exact (verify with
+        # `python -m repro.launch.obs_cli diff --exact` on the two logs)
+        from ..comm import SessionCheckpointer
+        ckptr = SessionCheckpointer(
+            args.ckpt_dir, policy, every=args.ckpt_every,
+            extra_fn=lambda s, st, m: {"loss": float(m["loss"])})
+        if args.resume:
+            got = ckptr.resume(state, strict_shapes=True)
+            if got is not None:
+                state, manifest = got
+                start_step = manifest["step"]
+                has_pol = bool((manifest.get("extra") or {}).get("policy"))
+                print(f"resumed from step {start_step}"
+                      f"{' (policy state restored)' if has_pol else ''}")
     if adapt_on:
         eta_min = tr.eta_min()
         mode = ("composed" if args.compose and run.adapt.bit_budget > 0
@@ -269,8 +319,7 @@ def main(argv=None):
         # retaining every step's device metrics would grow with --steps
         log_every=max(args.log_every, 1), on_log=on_log,
         on_switch=on_switch if adapt_on else None,
-        checkpoint=(lambda s, st, m: mgr.maybe_save(
-            s, st, extra={"loss": float(m["loss"])})) if mgr else None,
+        checkpoint=ckptr,
         obs=recorder)
     with set_mesh(mesh):
         res = session.run(args.steps, start_step=start_step)

@@ -22,7 +22,7 @@ from .events import (SCHEMA_VERSION, BuildEvent, CountersEvent, Event,
                      FaultEvent, JsonlSink, MemorySink, NullSink, Recorder,
                      RunManifest, SchemaError, StepEvent, SwitchEvent,
                      parse_record, provenance, read_events, validate_record)
-from .report import diff, format_report, summarize
+from .report import diff, diff_exact, format_report, summarize
 from .spans import PHASES, Counters, SpanTimer
 
 __all__ = [
@@ -31,5 +31,5 @@ __all__ = [
     "MemorySink", "JsonlSink", "NullSink", "Recorder", "provenance",
     "parse_record", "read_events", "validate_record",
     "Counters", "SpanTimer", "PHASES",
-    "summarize", "diff", "format_report",
+    "summarize", "diff", "diff_exact", "format_report",
 ]

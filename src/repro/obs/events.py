@@ -121,11 +121,23 @@ class SwitchEvent(_Event):
 
 @dataclasses.dataclass(frozen=True)
 class FaultEvent(_Event):
-    """Step ``step`` ran with the given offset classes dropped."""
+    """A fault injection touched step ``step``.
+
+    The original (and still default) shape is a link-fault step: ``drops``
+    holds the dropped offset classes.  The OPTIONAL fields — an additive
+    v=1 extension, no version bump — classify other injections:
+    ``cause`` ∈ {"crash", "rejoin", "slow"} (``runtime.chaos`` /
+    ``comm.ElasticComm``; named ``cause`` because ``kind`` is every
+    record's type discriminator), ``node`` the churned node id, ``edge``
+    the slowed edge as ``"u-v"``.  Absent fields mean a plain drop
+    event."""
     KIND = "fault"
     REQUIRED = ("step", "drops")
     step: int = 0
     drops: Tuple[int, ...] = ()
+    cause: Optional[str] = None       # "crash" | "rejoin" | "slow"
+    node: Optional[int] = None        # churned node id (crash/rejoin)
+    edge: Optional[str] = None        # slowed edge "u-v"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,7 +179,8 @@ _FIELD_TYPES: Dict[str, Dict[str, tuple]] = {
              "wall_ms": (int, float), "loss": (int, float),
              "snr": (int, float), "outage": (bool,)},
     "switch": {"step": (int,), "old": (str,), "new": (str,)},
-    "fault": {"step": (int,), "drops": (list, tuple)},
+    "fault": {"step": (int,), "drops": (list, tuple), "cause": (str,),
+              "node": (int,), "edge": (str,)},
     "build": {"key": (str,), "step": (int,)},
     "counters": {"n_steps": (int,), "counters": (dict,), "spans": (dict,),
                  "bank": (dict,), "wall_s": (int, float)},
@@ -376,6 +389,11 @@ class Recorder:
             for target in (m, getattr(m, "policy", None)):
                 if target is not None and hasattr(target, "counters"):
                     target.counters = self.counters
+            # fault-injecting members (ElasticComm, ChaosComm) expose a
+            # ``recorder`` slot; fill an empty one so their injections
+            # land in THIS log
+            if hasattr(m, "recorder") and getattr(m, "recorder") is None:
+                m.recorder = self
             if self._ledger is None:
                 log = getattr(m, "spend_log", None)
                 if log is not None:
@@ -457,6 +475,16 @@ class Recorder:
         self.emit(StepEvent(step=step, plan=str(key), bits=_finite(bits),
                             wall_ms=_finite(wall_ms), loss=loss, snr=snr,
                             outage=outage))
+
+    def on_fault(self, step: int, *, cause: Optional[str] = None,
+                 node: Optional[int] = None, edge: Optional[str] = None,
+                 drops: Tuple[int, ...] = ()) -> None:
+        """Emit an injected-fault event (churn / slow link) and count it
+        under ``fault_injections`` — distinct from the per-step drop
+        events ``on_step`` derives from the executed plan."""
+        self.counters.incr("fault_injections")
+        self.emit(FaultEvent(step=step, drops=tuple(drops), cause=cause,
+                             node=node, edge=edge))
 
     def on_switch(self, step: int, old: Any, new: Any) -> None:
         self.emit(SwitchEvent(step=step, old=str(old), new=str(new)))

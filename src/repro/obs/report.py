@@ -31,14 +31,23 @@ def _events(src: Union[str, Sequence[Event]]) -> List[Event]:
     return list(src)
 
 
-def summarize(src: Union[str, Sequence[Event]]) -> Dict[str, Any]:
-    """Event log (path or parsed events) -> headline-number report."""
+def summarize(src: Union[str, Sequence[Event]],
+              *, from_step: int = 0) -> Dict[str, Any]:
+    """Event log (path or parsed events) -> headline-number report.
+
+    ``from_step`` restricts the derived view to step/switch/fault events at
+    ``step >= from_step`` — the resumed-run comparison window.  A nonzero
+    ``from_step`` disables the counters-vs-events consistency checks (the
+    closing audit block always covers the whole run)."""
     evs = _events(src)
     manifest = next((e for e in evs if isinstance(e, RunManifest)), None)
-    steps = [e for e in evs if isinstance(e, StepEvent)]
-    switches = [e for e in evs if isinstance(e, SwitchEvent)]
+    steps = [e for e in evs if isinstance(e, StepEvent)
+             and e.step >= from_step]
+    switches = [e for e in evs if isinstance(e, SwitchEvent)
+                and e.step >= from_step]
     builds = [e for e in evs if isinstance(e, BuildEvent)]
-    faults = [e for e in evs if isinstance(e, FaultEvent)]
+    faults = [e for e in evs if isinstance(e, FaultEvent)
+              and e.step >= from_step]
     closing = next((e for e in reversed(evs)
                     if isinstance(e, CountersEvent)), None)
 
@@ -61,10 +70,11 @@ def summarize(src: Union[str, Sequence[Event]]) -> Dict[str, Any]:
     }
     counters = dict(closing.counters) if closing is not None else {}
     consistent: Dict[str, bool] = {}
-    for name, val in (("plan_builds", derived["plan_builds"]),
-                      ("outage_steps", derived["outage_steps"])):
-        if name in counters:
-            consistent[name] = counters[name] == val
+    if from_step == 0:
+        for name, val in (("plan_builds", derived["plan_builds"]),
+                          ("outage_steps", derived["outage_steps"])):
+            if name in counters:
+                consistent[name] = counters[name] == val
     return {
         "manifest": dataclasses.asdict(manifest) if manifest else None,
         "derived": derived,
@@ -124,6 +134,42 @@ def diff(a: Union[str, Sequence[Event]], b: Union[str, Sequence[Event]],
         "warnings": warnings,
         "ok": not regressions,
     }
+
+
+def diff_exact(a: Union[str, Sequence[Event]],
+               b: Union[str, Sequence[Event]],
+               *, from_step: int = 0) -> Dict[str, Any]:
+    """Bit-exactness gate for crash-consistent resume: the step events of
+    ``b`` (the killed-and-resumed run) at ``step >= from_step`` must EQUAL
+    the baseline's — same plan key, same bits, same loss/SNR floats (the
+    JSON repr round-trip is exact), same outage flag — and the fault-event
+    tails must match on (step, drops, cause, node, edge).  Wall times are
+    excluded (honest clocks never reproduce).  Returns ``{"ok", "n_steps",
+    "mismatches"}`` with at most 10 mismatch descriptions."""
+    ea, eb = _events(a), _events(b)
+
+    def _steps(evs):
+        return [(e.step, e.plan, e.bits, e.loss, e.snr, e.outage)
+                for e in evs if isinstance(e, StepEvent)
+                and e.step >= from_step]
+
+    def _faults(evs):
+        return [(e.step, tuple(e.drops), e.cause, e.node, e.edge)
+                for e in evs if isinstance(e, FaultEvent)
+                and e.step >= from_step]
+
+    sa, sb = _steps(ea), _steps(eb)
+    mism: List[str] = []
+    if len(sa) != len(sb):
+        mism.append(f"step-event count {len(sa)} != {len(sb)}")
+    for ra, rb in zip(sa, sb):
+        if ra != rb and len(mism) < 10:
+            mism.append(f"step {ra[0]}: baseline {ra} != resumed {rb}")
+    fa, fb = _faults(ea), _faults(eb)
+    if fa != fb and len(mism) < 10:
+        mism.append(f"fault-event tails differ: {fa} != {fb}")
+    return {"ok": not mism, "n_steps": len(sa), "from_step": from_step,
+            "mismatches": mism}
 
 
 def format_report(rep: Dict[str, Any]) -> str:

@@ -1,0 +1,229 @@
+"""Deterministic chaos schedules: scripted faults as one parseable string.
+
+``runtime.fault`` owns the per-step lowering rules (drop-renormalize,
+outage plans, Bernoulli straggler sims); this module owns the SCRIPT — a
+:class:`FaultSchedule` names exactly which fault hits which node/edge at
+which step, so a chaos scenario is reproducible from its schedule string
+alone (no RNG, no wall clock).  Grammar — ``|``-separated clauses::
+
+    crash:node=3,at=200          # node 3 leaves the fleet at step 200
+    rejoin:node=3,at=350         # node 3 (or a new id) joins at step 350
+    slow:edge=1-2,span=100:180,factor=0.25   # edge (1,2) runs at 0.25x
+                                 # bandwidth for steps [100, 180)
+    outage:span=50:60            # full link blackout, steps [50, 60)
+
+Lowering, by clause kind:
+  * ``crash``/``rejoin`` feed ``repro.comm.ElasticComm`` (live membership
+    churn: state re-key + topology retarget + plan-bank swap);
+  * ``slow`` is PER-EDGE BUDGET SCALING, not a drop: a link at bandwidth
+    factor f costs 1/f of its normal per-step deadline share, so
+    :class:`ChaosComm` scales the composed ``BudgetComm``'s neighbor
+    multiplier (``BudgetController.set_neighbors``) by the fleet-average
+    slowdown — the budget knapsack then buys cheaper rungs while the slow
+    span lasts, exactly as a deadline-bound fleet would;
+  * ``outage`` windows lower to ``repro.comm.OutageComm`` (W_t = I).
+
+Every injection emits a ``repro.obs`` fault event (optional ``cause`` /
+``node`` / ``edge`` fields — an additive, no-version-bump schema change).
+All accessors are pure functions of (schedule, step): a resumed session
+recomputes the same injections without replaying history.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+
+def _parse_span(text: str) -> Tuple[int, int]:
+    a, sep, b = text.partition(":")
+    if not sep:
+        raise ValueError(f"malformed span {text!r} (want start:end)")
+    span = (int(a), int(b))
+    if span[0] >= span[1]:
+        raise ValueError(f"empty span {text!r} (want start < end)")
+    return span
+
+
+def _parse_edge(text: str) -> Tuple[int, int]:
+    a, sep, b = text.partition("-")
+    if not sep:
+        raise ValueError(f"malformed edge {text!r} (want u-v)")
+    u, v = int(a), int(b)
+    if u == v:
+        raise ValueError(f"self-edge {text!r}")
+    return (min(u, v), max(u, v))
+
+
+@dataclasses.dataclass(frozen=True)
+class Crash:
+    node: int
+    at: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejoin:
+    node: int
+    at: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowLink:
+    edge: Tuple[int, int]
+    span: Tuple[int, int]            # [start, end) steps
+    factor: float                    # bandwidth multiplier in (0, 1]
+
+    def active(self, step: int) -> bool:
+        return self.span[0] <= step < self.span[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Outage:
+    span: Tuple[int, int]            # [start, end) steps
+
+
+_KINDS = ("crash", "rejoin", "slow", "outage")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """The parsed script (see module docstring for the grammar).  Every
+    accessor is deterministic in (self, step) — resume-safe by
+    construction."""
+    crashes: Tuple[Crash, ...] = ()
+    rejoins: Tuple[Rejoin, ...] = ()
+    slow_links: Tuple[SlowLink, ...] = ()
+    outages: Tuple[Outage, ...] = ()
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultSchedule":
+        crashes: List[Crash] = []
+        rejoins: List[Rejoin] = []
+        slows: List[SlowLink] = []
+        outs: List[Outage] = []
+        for clause in text.split("|"):
+            clause = clause.strip()
+            if not clause:
+                continue
+            kind, sep, argstr = clause.partition(":")
+            kind = kind.strip()
+            if not sep or kind not in _KINDS:
+                raise ValueError(f"unknown chaos clause {clause!r} "
+                                 f"(want one of {_KINDS})")
+            kw = {}
+            for kv in argstr.split(","):
+                k, s2, v = kv.partition("=")
+                if not s2:
+                    raise ValueError(f"malformed arg {kv!r} in {clause!r}")
+                kw[k.strip()] = v.strip()
+            try:
+                if kind == "crash":
+                    crashes.append(Crash(node=int(kw.pop("node")),
+                                         at=int(kw.pop("at"))))
+                elif kind == "rejoin":
+                    rejoins.append(Rejoin(node=int(kw.pop("node")),
+                                          at=int(kw.pop("at"))))
+                elif kind == "slow":
+                    factor = float(kw.pop("factor"))
+                    if not 0.0 < factor <= 1.0:
+                        raise ValueError(
+                            f"slow factor {factor} outside (0, 1]")
+                    slows.append(SlowLink(edge=_parse_edge(kw.pop("edge")),
+                                          span=_parse_span(kw.pop("span")),
+                                          factor=factor))
+                else:
+                    outs.append(Outage(span=_parse_span(kw.pop("span"))))
+            except KeyError as e:
+                raise ValueError(f"chaos clause {clause!r} missing "
+                                 f"required arg {e.args[0]!r}")
+            if kw:
+                raise ValueError(f"chaos clause {clause!r} has unknown "
+                                 f"args {sorted(kw)}")
+        return cls(crashes=tuple(crashes), rejoins=tuple(rejoins),
+                   slow_links=tuple(slows), outages=tuple(outs))
+
+    # ------------------------------------------------------------------
+    def churn_events(self) -> Tuple[Tuple[int, str, int], ...]:
+        """``((at, "crash"|"rejoin", node), ...)`` sorted by step — the
+        ``ElasticComm.events`` wire format.  Simultaneous events apply in
+        (crash, rejoin) order within a step."""
+        evs = [(c.at, "crash", c.node) for c in self.crashes] \
+            + [(r.at, "rejoin", r.node) for r in self.rejoins]
+        return tuple(sorted(evs, key=lambda e: (e[0], e[1] != "crash")))
+
+    def slow_at(self, step: int) -> Tuple[SlowLink, ...]:
+        return tuple(s for s in self.slow_links if s.active(step))
+
+    def slow_scale(self, step: int, n_edges: int) -> float:
+        """Fleet-average per-edge cost multiplier at ``step``: a link at
+        bandwidth factor f consumes 1/f of its normal deadline share, so
+        ``n_edges`` links with ``k`` slow among them cost
+        ``(n_edges - k + sum(1/f_i)) / n_edges`` of the healthy fleet —
+        the scale :class:`ChaosComm` pushes into the budget cost model."""
+        act = self.slow_at(step)
+        if not act or n_edges <= 0:
+            return 1.0
+        return float((n_edges - len(act) + sum(1.0 / s.factor
+                                               for s in act)) / n_edges)
+
+    def outage_windows(self) -> Tuple[Tuple[int, int], ...]:
+        """[start, end) spans for ``repro.comm.OutageComm(windows=...)``."""
+        return tuple(o.span for o in self.outages)
+
+    def canonical(self) -> str:
+        """Round-trippable normal form (events sorted; provenance field
+        for run manifests / artifacts)."""
+        parts = [f"crash:node={c.node},at={c.at}"
+                 for c in sorted(self.crashes, key=lambda c: c.at)]
+        parts += [f"rejoin:node={r.node},at={r.at}"
+                  for r in sorted(self.rejoins, key=lambda r: r.at)]
+        parts += [f"slow:edge={s.edge[0]}-{s.edge[1]},"
+                  f"span={s.span[0]}:{s.span[1]},factor={s.factor:g}"
+                  for s in sorted(self.slow_links, key=lambda s: s.span)]
+        parts += [f"outage:span={o.span[0]}:{o.span[1]}"
+                  for o in sorted(self.outages, key=lambda o: o.span)]
+        return " | ".join(parts)
+
+
+@dataclasses.dataclass
+class ChaosComm:
+    """Compose member lowering a schedule's SLOW-LINK clauses onto the
+    composed budget: each decided step it recomputes the fleet-average
+    slowdown (:meth:`FaultSchedule.slow_scale`) and, when it changed,
+    pushes it through every member exposing ``rescale_link`` (the
+    ``BudgetComm`` per-edge budget-scaling hook) — so a slow span makes
+    bits proportionally more expensive rather than dropping the edge.
+
+    Stateless with respect to the run: the scale is a pure function of
+    (schedule, step), so a resumed session re-applies the correct scale at
+    its first decide without event-log replay.  A ``repro.obs`` fault
+    event (cause="slow") is emitted once per span START — mid-span resumes
+    re-emit nothing, keeping the resumed event log an exact tail of the
+    uninterrupted one.  Runs under ``Compose.pre_decide`` (before
+    proposers/budget decide); never proposes a plan."""
+    schedule: FaultSchedule
+    n_edges: int
+    recorder: Optional[Any] = None       # Recorder.bind_policy fills this
+    consumes_telemetry = False
+
+    def __post_init__(self):
+        self._applied_scale: Optional[float] = None
+
+    def pre_decide(self, step: int, members: Sequence[Any]) -> None:
+        scale = self.schedule.slow_scale(step, self.n_edges)
+        if scale != self._applied_scale:
+            for m in members:
+                rescale = getattr(m, "rescale_link", None)
+                if rescale is not None:
+                    rescale(scale)
+            self._applied_scale = scale
+        if self.recorder is not None:
+            for s in self.schedule.slow_at(step):
+                if s.span[0] == step:
+                    self.recorder.on_fault(
+                        step, cause="slow", edge=f"{s.edge[0]}-{s.edge[1]}")
+
+    def observe(self, t) -> None:
+        pass
+
+    def decide(self, step: int):
+        return None

@@ -1,4 +1,4 @@
-"""Elastic membership: node join/leave with consensus-matrix rebuild.
+"""Elastic membership: LIVE node join/leave for a running DC-DGD session.
 
 Consensus graphs are membership-local: removing/adding a node only rewires
 its neighbors, and Metropolis weights stay doubly stochastic for ANY
@@ -7,14 +7,30 @@ connected graph, so W can be rebuilt online.  On every change we recompute
 Theorem 1 — growth that pushes eta_min above the compressor's guaranteed SNR
 is REJECTED (or the runtime switches to a safer format).
 
+:class:`Membership` is the bookkeeping half: the active node-id list, the
+rebuilt :class:`~repro.topology.Topology`, and the state-carry *plan* each
+change returns.  The LIVE half is ``repro.comm.ElasticComm``: a Compose
+member that applies scripted churn events mid-run — it feeds each plan
+through :func:`apply_state_plan` / :func:`rekey_dcdgd_state` to re-key the
+stacked ``(x, s)`` state in place, restricts the objective to the
+surviving nodes (:func:`restrict_problem`), registers the rebuilt graph
+with the composed ``TopologyComm`` (which retargets every controller's
+Theorem-1 floor), and swaps gossip plans from the PlanBank under
+epoch-qualified keys — no trainer rebuild, bounded recompiles.  The old
+per-epoch session-rebuild pattern (pre-ElasticComm
+``examples/elastic_failover.py``) is superseded.
+
 State carry-over across membership changes (checkpoint-free):
   * leavers: simply dropped; the consensus mean moves by <= ||x_i - x_bar||/N
     (bounded by Theorem 2's deviation bound);
-  * joiners: initialized from a neighbor's x with s = 0 — the newcomer's
-    first differential is its own Lyapunov gradient, so the self-noise-
-    reduction property is preserved (no warm-up protocol needed).
+  * joiners: initialized from an ACTUAL NEIGHBOR's x in the rebuilt graph
+    (``plan["init_from"]`` is the highest-index adjacent row) with s = 0 —
+    the newcomer's first differential is its own Lyapunov gradient, so the
+    self-noise-reduction property is preserved (no warm-up protocol).
 This is the DESIGN.md §6 story for 1000+-node operation; the unit tests
-drive a full join -> converge -> leave -> converge cycle.
+drive a full join -> converge -> leave -> converge cycle, and
+``benchmarks/fig8_chaos.py`` drives a 64-node erdos fleet through scripted
+crash/rejoin churn (``runtime.chaos``) on one surviving session.
 """
 from __future__ import annotations
 
@@ -83,13 +99,23 @@ class Membership:
         return {"keep_rows": keep, "init_from": None}
 
     def join(self, node_id: int) -> Dict:
-        """Add a node.  The newcomer copies a neighbor's x (row
-        ``init_from``) and starts with s = 0."""
+        """Add a node.  The newcomer copies an actual NEIGHBOR's x (row
+        ``init_from``, adjacent to the joiner in the rebuilt graph) and
+        starts with s = 0.  Under ring the neighbor happens to be a
+        boundary row, but erdos/expander graphs wire the joiner
+        arbitrarily — the plan must follow the rebuilt adjacency, not a
+        positional convention."""
         assert node_id not in self.node_ids
         self.node_ids.append(node_id)
         self._rebuild()
+        if self.n > 1:
+            nbrs = np.flatnonzero(np.asarray(self.topo.adj)[self.n - 1])
+            assert nbrs.size, "rebuilt graph left the joiner isolated"
+            init_from = int(nbrs.max())
+        else:
+            init_from = 0
         return {"keep_rows": list(range(self.n - 1)),
-                "init_from": self.n - 2 if self.n > 1 else 0}
+                "init_from": init_from}
 
 
 def rebuild_consensus(membership: Membership, snr_lb: float, *,
@@ -136,3 +162,50 @@ def apply_state_plan(state_x, state_s, plan: Dict):
     new_s = jax.tree.map(
         lambda t: jnp.zeros((new_n,) + t.shape[1:], t.dtype), state_s)
     return new_x, new_s
+
+
+def restrict_problem(prob, rows: Sequence[int]):
+    """The objective of the SURVIVING fleet: per-node terms of ``prob``
+    selected (and ordered) by ``rows`` — original node indices, in the
+    live ``Membership.node_ids`` order, so churn that permutes rows (a
+    leave followed by a rejoin appends the returner LAST) keeps every
+    state row paired with its own f_i.
+
+    Works for any per-row ``node_f`` via scatter-into-full-then-gather:
+    the restricted x is placed at its original rows of a zero-padded
+    (n_nodes, dim) stack, evaluated, and gathered back — absent nodes
+    contribute f_i(0), which is never read."""
+    import jax.numpy as jnp
+
+    idx = np.asarray(list(rows), dtype=np.int64)
+    assert idx.size and idx.min() >= 0 and idx.max() < prob.n_nodes, \
+        (list(rows), prob.n_nodes)
+    base_f = prob.node_f
+    full_n = prob.n_nodes
+
+    def node_f(x):
+        full = jnp.zeros((full_n,) + x.shape[1:], x.dtype)
+        full = full.at[jnp.asarray(idx)].set(x)
+        return base_f(full)[jnp.asarray(idx)]
+
+    return dataclasses.replace(prob, n_nodes=int(idx.size), node_f=node_f,
+                               name=f"{prob.name}[{idx.size}]")
+
+
+def rekey_dcdgd_state(state, plan: Dict, grad_fn, alpha: float):
+    """Re-key a live :class:`repro.core.dcdgd.DCDGDState` across a
+    membership change: ``(x, s = y - x)`` through :func:`apply_state_plan`
+    (rows kept/copied, residual zeroed), then the warm restart at the new
+    x — ``y = x`` and ``d = -alpha * grad(x)`` (the paper's x_0 = y_0
+    convention generalized, exactly the post-churn restart the pre-
+    ElasticComm ``elastic_failover`` example applied between sessions).
+    ``grad_fn`` is the RESTRICTED problem's stacked gradient and ``alpha``
+    the live step size at ``state.t``; ``t`` and the PRNG key carry over
+    (the resumed step sequence stays deterministic)."""
+    import jax
+    import jax.numpy as jnp
+
+    s = jax.tree.map(jnp.subtract, state.y, state.x)
+    new_x, _ = apply_state_plan(state.x, s, plan)
+    d = jax.tree.map(lambda g: -alpha * g, grad_fn(new_x))
+    return type(state)(x=new_x, y=new_x, d=d, t=state.t, key=state.key)

@@ -27,6 +27,22 @@ the plan bank lowers them through :func:`fault_plan` (keys
 rate/budget/topology control instead of owning a private driver.
 ``RunConfig.edge_drop_prob`` / ``launch.train --edge-drop-prob`` wire it
 into the trainer.
+
+Index hygiene: :func:`fault_plan` and :func:`drop_renormalize_dense` RAISE
+on out-of-range drop indices instead of silently skipping them.  Drop
+indices name edges of a SPECIFIC graph (offset classes of a gossip plan,
+or the (i < j) nonzero-edge list of a dense W); an index past that edge
+space means the caller is holding a stale view of the topology — the
+PR-6 FaultComm bug class, where a graph switch kept the opening graph's
+class count.  Renormalizing quietly would mask exactly that bug, so the
+lowering fails loud and the composing layer (``FaultComm.on_topology``,
+``ElasticComm``'s membership epochs) is responsible for re-deriving the
+index space whenever the graph changes.
+
+Scripted, deterministic fault injection (crash / rejoin / slow-link /
+outage from one schedule string) lives one module over in
+``runtime.chaos``; this module owns the per-step lowering rules those
+schedules ultimately drive.
 """
 from __future__ import annotations
 
@@ -94,7 +110,14 @@ def fault_plan(plan: GossipPlan, drops: Sequence[int]) -> GossipPlan:
         # dense-fallback (or degenerate) plans have no offset classes to
         # drop: per-edge faults are a circulant-lowering feature
         return plan
-    idx = [nz[k] for k in drops if 0 <= k < len(nz)]
+    bad = [k for k in drops if not 0 <= int(k) < len(nz)]
+    if bad:
+        raise IndexError(
+            f"fault_plan: drop indices {sorted(bad)} out of range for "
+            f"{len(nz)} non-self offset classes — drops index the ACTIVE "
+            f"plan's edge space; a stale index means the caller missed a "
+            f"topology change (re-derive via FaultComm.on_topology)")
+    idx = [nz[int(k)] for k in drops]
     eff = drop_renormalize_plan(plan, idx)
     return dataclasses.replace(plan, offsets=tuple(eff))
 
@@ -112,10 +135,15 @@ def drop_renormalize_dense(W: np.ndarray, drops: Sequence[int]
     n = W.shape[0]
     edges = [(i, j) for i in range(n) for j in range(i + 1, n)
              if abs(W[i, j]) > 1e-12]
+    bad = [k for k in drops if not 0 <= int(k) < len(edges)]
+    if bad:
+        raise IndexError(
+            f"drop_renormalize_dense: drop indices {sorted(bad)} out of "
+            f"range for {len(edges)} edges of this W — drops index the "
+            f"ACTIVE graph's (i < j) edge list; a stale index means the "
+            f"caller missed a topology/membership change")
     for k in drops:
-        if not (0 <= k < len(edges)):
-            continue
-        i, j = edges[k]
+        i, j = edges[int(k)]
         w = W[i, j]
         W[i, j] = W[j, i] = 0.0
         W[i, i] += w

@@ -147,10 +147,23 @@ class TopologyComm:
                   topo: Optional[Topology] = None) -> None:
         """Elastic/fault-driven override: from the next decided step on,
         the active graph is ``spec`` regardless of the schedule (pass the
-        prebuilt Topology when it is not already registered)."""
-        spec = TopoSpec.parse(spec) if not isinstance(spec, TopoSpec) \
-            else spec
-        c = spec.canonical()
+        prebuilt Topology when it is not already registered).
+
+        ``spec`` is normally a TopoSpec (or parseable string); with
+        ``topo`` supplied it may also be a RAW registry key that is not
+        TopoSpec grammar — ElasticComm's epoch-qualified keys
+        (``"elastic:<epoch>:<canonical>"``), which must stay distinct per
+        membership epoch even when the canonical graph recurs (erdos
+        canonicals don't carry n, and churn permutes node rows)."""
+        if isinstance(spec, TopoSpec):
+            c = spec.canonical()
+        else:
+            try:
+                c = TopoSpec.parse(spec).canonical()
+            except ValueError:
+                if topo is None:
+                    raise
+                c = str(spec)
         if topo is not None:
             self.topologies[c] = topo
         assert c in self.topologies, f"no Topology for {c!r}"

@@ -1,0 +1,318 @@
+"""Elastic-fleet resilience: the runtime.chaos schedule grammar, the
+fault-plan drop-index range checks, Membership.join neighbor
+initialization, live ElasticComm churn through one session, ChaosComm
+slow-link budget scaling, and the crash-consistent session resume
+(ledger + token-bucket continuity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapt import (BudgetController, BudgetPolicy, BudgetSchedule,
+                         PlanBank, SNRFeedbackPolicy, TokenBucket,
+                         ladder_from_specs)
+from repro.comm import (BudgetComm, Compose, ElasticComm, PerLeafPlan,
+                        RateComm, SessionCheckpointer, StaticComm,
+                        TrainSession, restore_policy)
+from repro.core.wire import make_wire
+from repro.runtime.chaos import ChaosComm, FaultSchedule
+from repro.runtime.elastic import Membership, apply_state_plan
+from repro.topology import TopoSchedule, TopologyComm, topology
+
+LADDER = ("dense", "int8:block=8", "ternary:block=8")
+SHAPES = ((4, 8),)
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule grammar
+# ---------------------------------------------------------------------------
+class TestFaultSchedule:
+    SCRIPT = ("crash:node=3,at=200 | rejoin:node=3,at=350 | "
+              "slow:edge=1-2,span=100:180,factor=0.25 | outage:span=50:60")
+
+    def test_parse_canonical_roundtrip(self):
+        s = FaultSchedule.parse(self.SCRIPT)
+        assert s.canonical() == self.SCRIPT
+        assert FaultSchedule.parse(s.canonical()) == s
+        # the cli-smoke form: space-free, same schedule
+        assert FaultSchedule.parse(self.SCRIPT.replace(" ", "")) == s
+
+    def test_churn_events_sorted_crash_first(self):
+        s = FaultSchedule.parse("rejoin:node=9,at=5 | crash:node=1,at=5 | "
+                                "crash:node=2,at=3")
+        assert s.churn_events() == ((3, "crash", 2), (5, "crash", 1),
+                                    (5, "rejoin", 9))
+
+    def test_slow_scale_is_fleet_average(self):
+        s = FaultSchedule.parse("slow:edge=0-1,span=2:4,factor=0.25")
+        assert s.slow_scale(1, 4) == 1.0
+        # (n_edges - k + sum 1/f) / n_edges = (4 - 1 + 4) / 4
+        assert s.slow_scale(2, 4) == pytest.approx(7 / 4)
+        assert s.slow_scale(4, 4) == 1.0          # [start, end) exclusive
+        assert s.outage_windows() == ()
+
+    @pytest.mark.parametrize("bad", [
+        "wobble:at=3",                            # unknown clause kind
+        "crash:node=1",                           # missing required arg
+        "crash:node=1,at=2,extra=9",              # unknown arg
+        "crash:nodeat",                           # malformed k=v
+        "slow:edge=1-1,span=1:2,factor=0.5",      # self-edge
+        "slow:edge=0-1,span=5:2,factor=0.5",      # empty span
+        "slow:edge=0-1,span=1:2,factor=1.5",      # factor outside (0, 1]
+        "outage:span=7",                          # span without ':'
+    ])
+    def test_malformed_raises(self, bad):
+        with pytest.raises(ValueError):
+            FaultSchedule.parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# fault-plan drop indices are range-checked (stale-edge-space guard)
+# ---------------------------------------------------------------------------
+class TestFaultPlanRange:
+    def _gossip_plan(self):
+        from repro.core.gossip import GossipPlan
+        from repro.core.wire import DenseWire
+        t = topology("ring", n=8, lazy=0.25)
+        _, offs = t.lowering((8,))
+        return GossipPlan(consensus_axes=("data",), dims=(8,), n_nodes=8,
+                          mode="circulant", offsets=offs, W=t.W,
+                          fmt=DenseWire())
+
+    def test_fault_plan_out_of_range_raises(self):
+        from repro.runtime.fault import fault_plan, non_self_classes
+        gp = self._gossip_plan()
+        n = len(non_self_classes(gp))
+        fault_plan(gp, [n - 1])                   # in range: fine
+        with pytest.raises(IndexError, match="out of range"):
+            fault_plan(gp, [n])
+        with pytest.raises(IndexError, match="out of range"):
+            fault_plan(gp, [-1])
+
+    def test_drop_renormalize_dense_out_of_range_raises(self):
+        from repro.runtime.fault import drop_renormalize_dense
+        W = topology("ring", n=8, lazy=0.25).W
+        drop_renormalize_dense(W, [0])            # in range: fine
+        with pytest.raises(IndexError, match="out of range"):
+            drop_renormalize_dense(W, [99])
+
+
+# ---------------------------------------------------------------------------
+# Membership.join warm-starts from an ACTUAL neighbor of the joiner
+# ---------------------------------------------------------------------------
+class TestMembershipJoin:
+    @pytest.mark.parametrize("topo", ["ring", "erdos:p=0.3,seed=1",
+                                      "expander:d=4"])
+    def test_init_from_is_adjacent_in_rebuilt_graph(self, topo):
+        m = Membership(node_ids=list(range(8)), topology=topo)
+        plan = m.join(99)
+        new_idx = m.n - 1
+        adj = np.asarray(m.topo.adj)
+        assert plan["init_from"] != new_idx
+        assert adj[new_idx, plan["init_from"]]
+        # and the state plan copies exactly that row (s reset to 0)
+        x = jnp.arange(8 * 3, dtype=jnp.float32).reshape(8, 3)
+        x2, s2 = apply_state_plan(x, jnp.ones((8, 3)), plan)
+        np.testing.assert_array_equal(np.asarray(x2[-1]),
+                                      np.asarray(x[plan["init_from"]]))
+        assert np.abs(np.asarray(s2)).max() == 0
+
+
+# ---------------------------------------------------------------------------
+# ChaosComm: slow links lower to budget scaling, not drops
+# ---------------------------------------------------------------------------
+def _budget_comm(bits, neighbors=1.0, bucket=None):
+    return BudgetComm(policy=BudgetPolicy(
+        controller=BudgetController(
+            ladder=ladder_from_specs(LADDER, level="wire"),
+            shapes=SHAPES, neighbors=neighbors, eta_min=0.5),
+        schedule=BudgetSchedule(bits=bits), cadence=1, bucket=bucket))
+
+
+class TestChaosComm:
+    def test_slow_span_scales_budget_and_retarget_preserves_scale(self):
+        sched = FaultSchedule.parse("slow:edge=0-1,span=2:4,factor=0.5")
+        bc = _budget_comm(bits=1e9, neighbors=2.0)
+        ctl = bc.controller
+        chaos = ChaosComm(schedule=sched, n_edges=4)
+        members = (bc, chaos)
+        chaos.pre_decide(0, members)
+        assert ctl.neighbors == 2.0
+        base = bc.plan_cost(PerLeafPlan.vector(("int8:block=8",)))
+        # span opens: fleet-average scale (4 - 1 + 1/0.5)/4 = 1.25
+        chaos.pre_decide(2, members)
+        assert ctl.neighbors == pytest.approx(2.0 * 1.25)
+        assert bc.plan_cost(PerLeafPlan.vector(("int8:block=8",))) \
+            == pytest.approx(base * 1.25)
+        # a topology retarget mid-span re-bases but keeps the live scale
+        bc.retarget(0.9, neighbors=3.0)
+        assert ctl.eta_min == 0.9
+        assert ctl.neighbors == pytest.approx(3.0 * 1.25)
+        # span closes: back to the (new) base exactly
+        chaos.pre_decide(4, members)
+        assert ctl.neighbors == pytest.approx(3.0)
+
+    def test_fault_event_only_at_span_start(self):
+        calls = []
+
+        class Rec:
+            def on_fault(self, step, **kw):
+                calls.append((step, kw))
+
+        sched = FaultSchedule.parse("slow:edge=0-1,span=2:4,factor=0.5")
+        chaos = ChaosComm(schedule=sched, n_edges=4, recorder=Rec())
+        for step in range(6):
+            chaos.pre_decide(step, ())
+        assert calls == [(2, {"cause": "slow", "edge": "0-1"})]
+        # a MID-SPAN resume re-applies the scale but re-emits nothing:
+        # the resumed event log must be an exact tail of the baseline's
+        calls.clear()
+        chaos2 = ChaosComm(schedule=sched, n_edges=4, recorder=Rec())
+        chaos2.pre_decide(3, ())
+        assert calls == [] and chaos2._applied_scale == sched.slow_scale(3, 4)
+
+
+# ---------------------------------------------------------------------------
+# live churn through ONE dcdgd session (ElasticComm)
+# ---------------------------------------------------------------------------
+class TestElasticChurn:
+    def test_crash_rejoin_one_session_no_rebuilds(self):
+        from repro.adapt.runner import _metric_step, make_dcdgd_session
+        from repro.core import problems
+        from repro.core.compressors import WireCompressor
+        from repro.runtime.elastic import (rekey_dcdgd_state,
+                                           restrict_problem)
+        from repro.runtime.fault import peel_plan_key
+
+        N, DIM = 6, 4
+        prob = problems.quadratic(n_nodes=N, dim=DIM, seed=0)
+        mem = Membership(list(range(N)), topology="ring")
+        opening = mem.topo
+        sched = TopoSchedule(entries=((0, "ring"),))
+        topo_comm = TopologyComm(
+            schedule=sched,
+            topologies={sched.entries[0][1].canonical(): opening},
+            dims=None,
+            guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+        opening_c = topo_comm._active
+        Ws, probs = {opening_c: np.asarray(opening.W)}, {opening_c: prob}
+
+        def register_hook(key_, topo, node_ids):
+            Ws[key_] = np.asarray(topo.W)
+            probs[key_] = restrict_problem(prob, node_ids)
+
+        def build_step(key_):
+            topo_c, drops, inner = peel_plan_key(key_)
+            W = jnp.asarray(Ws[topo_c or opening_c], jnp.float32)
+            return _metric_step(probs[topo_c or opening_c], lambda t: 0.05,
+                                W, WireCompressor(fmt=make_wire(inner)))
+
+        session = make_dcdgd_session(prob, opening.W, lambda t: 0.05,
+                                     jax.random.PRNGKey(0), None,
+                                     bank_size=8, build_step=build_step)
+
+        def state_hook(plan, topo, node_ids, key_):
+            session.state = rekey_dcdgd_state(
+                session.state, plan, probs[key_].grad, 0.05)
+
+        elastic = ElasticComm(
+            membership=mem, topo_comm=topo_comm,
+            events=((2, "crash", 1), (4, "rejoin", 1)),
+            state_hook=state_hook, register_hook=register_hook,
+            shapes_fn=lambda n: ((n, DIM),))
+        session.policy = Compose(StaticComm("dense"), elastic)
+
+        shapes = []
+        session.checkpoint = \
+            lambda s, st, m: shapes.append(np.asarray(st.x).shape)
+        res = session.run(6)
+
+        assert [c[:3] for c in elastic.churn_log] == \
+            [(2, "crash", 1), (4, "rejoin", 1)]
+        assert (N - 1, DIM) in shapes             # the shrunken epoch ran
+        assert np.asarray(res.state.x).shape == (N, DIM)
+        # zero trainer rebuilds beyond the three epochs' plans
+        distinct = set(res.plan_per_step)
+        assert len(distinct) == 3
+        assert res.bank_stats["builds"] == len(distinct)
+        assert res.bank_stats["evictions"] == 0
+        assert topo_comm.violations == 0
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent resume: composed rate + budget(+bucket) + topology
+# ---------------------------------------------------------------------------
+def _toy_bank():
+    """Deterministic toy steps whose dynamics DEPEND on the plan key, so a
+    resume that replayed the wrong decision would diverge bitwise."""
+    def build(key):
+        inc = jnp.float32(0.125 * (1 + len(str(key)) % 7))
+
+        def f(state):
+            w = state["w"] + inc
+            return {"w": w}, {
+                "loss": w,
+                "diff_power_leaves": jnp.full((1,), 100.0) + w,
+                "noise_power_leaves": jnp.full((1,), 1.0)
+                + 0.5 * jnp.cos(w)}
+        return f
+    return PlanBank(build, max_size=8)
+
+
+def _composed_harness(bits):
+    """A fresh rate + budget(token bucket) + topology session; called once
+    per process stand-in (baseline / resumed)."""
+    rate = RateComm(policy=SNRFeedbackPolicy(
+        ladder=LADDER, eta_min=0.5, margin=1.0, upgrade=1.5, cadence=2),
+        n_leaves=1, cadence=2)
+    bc = _budget_comm(bits=bits, bucket=TokenBucket(capacity=3 * bits))
+    tsched = TopoSchedule.parse("6:ring:lazy=0.0",
+                                opening="complete:lazy=0.0")
+    tc = TopologyComm(
+        schedule=tsched,
+        topologies={sp.canonical(): topology(sp, n=8)
+                    for sp in tsched.specs()},
+        dims=(8,),
+        guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+    policy = Compose(rate, bc, tc)
+    session = TrainSession(bank=_toy_bank(), policy=policy,
+                           state={"w": jnp.float32(0.0)})
+    return session, policy, rate, bc, tc
+
+
+class TestSessionResume:
+    def test_kill_and_resume_bit_exact_with_ledger_continuity(self, tmp_path):
+        from repro.ckpt import checkpoint as ck
+
+        dense_bits = _budget_comm(bits=1.0).plan_cost(
+            PerLeafPlan.vector(("dense",)))
+        bits = 0.6 * dense_bits                   # caps actually bind
+
+        # baseline: 12 steps, checkpoint every 4, keep all checkpoints
+        session, policy, rate, bc, tc = _composed_harness(bits)
+        session.checkpoint = SessionCheckpointer(
+            directory=str(tmp_path), policy=policy, every=4, retain=0)
+        res = session.run(12)
+        assert len(bc.spend_log) == 12 and tc.switch_log
+
+        # kill at 8: a FRESH harness restores checkpoint + policy snapshot
+        session2, policy2, rate2, bc2, tc2 = _composed_harness(bits)
+        state2, manifest = ck.restore(tmp_path, 8, session2.state)
+        restore_policy(policy2, manifest["extra"]["policy"])
+        session2.state = state2
+        assert len(bc2.spend_log) == 8            # ledger prefix restored
+        res2 = session2.run(12, start_step=8)
+
+        # bit-exact state, identical plan tail, continuous audit trails
+        np.testing.assert_array_equal(np.asarray(res.state["w"]),
+                                      np.asarray(res2.state["w"]))
+        assert res2.plan_per_step == res.plan_per_step[8:]
+        assert bc2.spend_log == bc.spend_log      # incl. the replayed tail
+        for f in ("balance", "filled", "spent", "initial"):
+            assert getattr(bc2.policy.bucket, f) \
+                == getattr(bc.policy.bucket, f), f
+        assert tc2.switch_log == tc.switch_log
+        assert rate2.policy.index == rate.policy.index
+        for a, b in zip(jax.tree.leaves(rate._tel),
+                        jax.tree.leaves(rate2._tel)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
