@@ -26,6 +26,13 @@ _ARTIFACT_FLAGS = {
     # tail and final state bit-match the uninterrupted run
     "BENCH_chaos.json": ("converged", "zero_violations", "live_churn",
                          "resume_bit_exact", "obs_valid"),
+    # async delayed gossip: delay=0 machinery bit-exact with sync, both
+    # quadratic arms AND the 64-node fleet converge at the corrected-floor
+    # reference gap with zero eta_min/budget violations, and the
+    # overlap-adjusted async wall beats the sync baseline
+    "BENCH_async.json": ("delay0_bit_exact", "converged",
+                         "fleet_converged", "zero_violations",
+                         "async_faster"),
     # kernel-baseline exactness vs the ref oracles (dict flag: every
     # kernel entry must be True) — timings are reported, never gated
     "BENCH_roofline.json": ("kernels_ok",),
@@ -84,7 +91,7 @@ def stamp_provenance(art_dir: Path = ART) -> int:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,...,fig6,roofline,wire")
+                    help="comma list: fig1,...,fig6,fig8,fig9,roofline,wire")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI probe: gossip-step microbenchmark "
                          "only (refreshes artifacts/bench/BENCH_gossip.json); "
@@ -95,7 +102,7 @@ def main(argv=None):
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
                    fig4_adaptive, fig5_budget, fig6_topology, fig8_chaos,
-                   roofline, wire_micro)
+                   fig9_async, roofline, wire_micro)
     if args.smoke:
         print("==== gossip (smoke) ====", flush=True)
         r = wire_micro.main(smoke=True)
@@ -109,6 +116,7 @@ def main(argv=None):
         "fig5": fig5_budget.main,
         "fig6": fig6_topology.main,
         "fig8": fig8_chaos.main,
+        "fig9": fig9_async.main,
         "wire": wire_micro.main,
         "roofline": roofline.main,
     }

@@ -37,7 +37,8 @@ elif [[ "${1:-}" == "--hypothesis" ]]; then
     # their seeded fallback tests (and --hypothesis-seed would be an
     # unknown flag), so only pass the seed when the plugin is present.
     ARGS=(tests/test_wire_properties.py tests/test_compressors.py
-          tests/test_consensus_greedy.py "${@:2}")
+          tests/test_consensus_greedy.py tests/test_async_gossip.py
+          "${@:2}")
     if python -c "import hypothesis" 2>/dev/null; then
         ARGS+=(--hypothesis-seed=0)
     else
@@ -56,7 +57,7 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
     COMMON=(--arch qwen3-8b --smoke --steps 6 --seq-len 64 --global-batch 8
             --optimizer sgd --alpha 0.05 --log-every 2 --adapt-interval 2
             --adapt-ladder "$LADDER")
-    modes=(static adapt budget composed topology chaos)
+    modes=(static adapt budget composed topology chaos async)
     declare -A FLAGS=(
         [static]=""
         [adapt]="--adapt"
@@ -78,6 +79,12 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
         [chaos]="--adapt --compose --bit-budget 1200000 --token-bucket
                  --chaos slow:edge=0-1,span=2:4,factor=0.5|outage:span=4:5
                  --ckpt-every 3 --ckpt-dir $TMP/chaos-ckpt"
+        # async delayed gossip: one-step-stale exchange through the
+        # composed rate + budget session; controllers retarget against
+        # the staleness-corrected floor eta_min(1).  The checker gates on
+        # zero eta_min/budget violation counters and on every step event
+        # carrying gossip_delay=1 (the stale-attribution stamp).
+        [async]="--gossip-delay 1 --adapt --compose --bit-budget 1200000"
     )
     rc=0
     for mode in "${modes[@]}"; do
@@ -115,6 +122,26 @@ PY
                 echo "cli-smoke $mode: FAIL (chaos counters)"; rc=1; continue
             fi
         fi
+        if [[ "$mode" == async ]]; then
+            # delayed run: zero violation counters against the corrected
+            # floor, and every step event stamped gossip_delay=1
+            if ! python - "$TMP/$mode.jsonl" <<'PY'
+import json, sys
+recs = [json.loads(l) for l in open(sys.argv[1])]
+counters = next(r["counters"] for r in recs if r.get("kind") == "counters")
+for name in ("eta_min_violations", "budget_violations"):
+    assert counters.get(name, 0) == 0, f"{name}: {counters[name]}"
+steps = [r for r in recs if r.get("kind") == "step"]
+assert steps, "no step events"
+assert all(r.get("gossip_delay") == 1 for r in steps), \
+    [r.get("gossip_delay") for r in steps]
+print(f"cli-smoke async: counters OK {counters}, "
+      f"{len(steps)} delay-stamped step events")
+PY
+            then
+                echo "cli-smoke $mode: FAIL (async counters)"; rc=1; continue
+            fi
+        fi
         if ! python - "$TMP/$mode.json" "$mode" <<'PY'
 import json, sys
 rows = json.load(open(sys.argv[1])); mode = sys.argv[2]
@@ -124,8 +151,12 @@ if mode != "static":
     need.add("wire")
 if mode == "topology":
     need |= {"topology", "eta_min", "eta_min_violations"}
+if mode == "async":
+    need.add("gossip_delay")
 missing = need - set(rows[-1])
 assert not missing, f"missing metrics keys: {sorted(missing)}"
+if mode == "async":
+    assert rows[-1]["gossip_delay"] == 1, rows[-1]["gossip_delay"]
 if mode == "topology":
     assert rows[-1]["eta_min_violations"] == 0, \
         f"eta_min violations: {rows[-1]['eta_min_violations']}"

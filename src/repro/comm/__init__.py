@@ -44,8 +44,8 @@ Quick example (a budget-capped adaptive trainer session)::
 """
 from .elastic import ElasticComm
 from .policy import (OUTAGE_PLAN, BudgetComm, CommPolicy, Compose,
-                     FaultComm, OutageComm, PerLeafPlan, RateComm,
-                     StaticComm, StepTelemetry)
+                     DelayComm, DelayState, FaultComm, OutageComm,
+                     PerLeafPlan, RateComm, StaticComm, StepTelemetry)
 from .resume import SessionCheckpointer, restore_policy, snapshot_policy
 from .session import SessionResult, TrainSession
 from .wirespec import OUTAGE, WireSpec, canonical_key
@@ -54,6 +54,7 @@ __all__ = [
     "WireSpec", "OUTAGE", "canonical_key",
     "CommPolicy", "PerLeafPlan", "StepTelemetry", "OUTAGE_PLAN",
     "StaticComm", "RateComm", "BudgetComm", "OutageComm", "FaultComm",
+    "DelayComm", "DelayState",
     "ElasticComm", "Compose", "TrainSession", "SessionResult",
     "SessionCheckpointer", "snapshot_policy", "restore_policy",
 ]

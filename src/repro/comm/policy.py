@@ -92,6 +92,11 @@ class PerLeafPlan:
     outage: bool = False
     topo: Optional[str] = None           # canonical TopoSpec string
     drops: Tuple[int, ...] = ()          # dropped offset-class indices
+    # async gossip: steps of staleness on the mixed differential (set by a
+    # composed DelayComm; 0 = synchronous).  Rides outermost in key(), so
+    # a delay toggle is a new plan-bank axis — a dict lookup, never a
+    # recompile — exactly like a topology switch.
+    delay: int = 0
 
     def __post_init__(self):
         assert self.outage or self.specs, "empty plan"
@@ -140,6 +145,8 @@ class PerLeafPlan:
             k = ("fault", self.drops, k)
         if self.topo is not None:
             k = ("topo", self.topo, k)
+        if self.delay:
+            k = ("delay", int(self.delay), k)
         return k
 
 
@@ -446,6 +453,64 @@ class FaultComm:
         return None
 
 
+class DelayState:
+    """Host-side slot for the async gossip carry — the in-flight packed
+    row buffer (post-issue wires, own decode rows, stale telemetry powers,
+    and the PRNG replay key; see ``core.gossip`` for the contract).
+
+    The trainer's delayed step functions read/write ``carry`` around each
+    jitted call; ``struct`` is the structural identity of the buffer (wire
+    formats x lowering), so a rung/graph switch that changes the packed
+    layout re-initializes the carry (a symmetric flush: every node drops
+    the same buffer, which differential coding self-corrects — d is always
+    computed against the locally tracked x).  The slot lives on a
+    DelayComm member because the carry is POLICY state: SessionCheckpointer
+    snapshots it (repro.comm.resume kind "delay") so kill/resume restores
+    the exact in-flight buffer."""
+
+    def __init__(self):
+        self.carry: Optional[Any] = None
+        self.struct: Optional[Any] = None
+
+
+@dataclasses.dataclass
+class DelayComm:
+    """Async (delayed) gossip as a Compose member.
+
+    Never proposes a plan; tags every composed decision with the run's
+    gossip delay (``PerLeafPlan.delay`` -> bank key ``("delay", d,
+    inner)``), so sync and delayed step functions coexist in the plan
+    bank and a mid-run delay change behaves exactly like a topology
+    switch: a key-axis flip plus a floor retarget, zero recompiles.
+
+    Division of labor for the staleness correction: :class:`Topology`
+    owns the math (``eta_min(delay)`` / ``alpha_max(..., delay)``); a
+    composed TopologyComm binds it (Compose copies ``delay`` into
+    ``TopologyComm.gossip_delay`` so every switch pushes the corrected
+    floor); this member owns the IN-FLIGHT BUFFER (``state``) and the
+    delay tag.  The blackout plan is never tagged — an outage step does
+    no communication, so there is nothing to delay (the carry simply
+    survives the window and lands after it, symmetrically on all nodes).
+    """
+    delay: int = 1
+    state: DelayState = dataclasses.field(default_factory=DelayState)
+    consumes_telemetry = False
+
+    def observe(self, t: StepTelemetry) -> None:
+        pass
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        return None
+
+    def annotate(self, step: int, plan: Optional[PerLeafPlan]
+                 ) -> Optional[PerLeafPlan]:
+        if plan is None or plan.outage or not self.delay:
+            return plan
+        if plan.delay == self.delay:
+            return plan
+        return dataclasses.replace(plan, delay=int(self.delay))
+
+
 class Compose:
     """Stack rate + budget + outage + topology + fault behaviors in one
     policy.
@@ -483,13 +548,21 @@ class Compose:
         topos = [p for p in policies if hasattr(p, "maybe_switch")]
         assert len(topos) <= 1, "at most one TopologyComm (one graph)"
         self.topo = topos[0] if topos else None
+        delays = [p for p in policies if isinstance(p, DelayComm)]
+        assert len(delays) <= 1, "at most one DelayComm (one carry)"
+        self.delay_member: Optional[DelayComm] = \
+            delays[0] if delays else None
+        if self.delay_member is not None and self.topo is not None:
+            # the topology member binds the staleness-corrected floor on
+            # every retarget (Topology.eta_min(delay))
+            self.topo.gossip_delay = int(self.delay_member.delay)
         # pre-deciders run after the graph resolves but before anyone
         # proposes: per-step environment mutation (ChaosComm slow-link
         # scaling) that the proposals/caps of the SAME step must see
         self.pre_deciders: List[Any] = [
             p for p in policies if hasattr(p, "pre_decide")]
         special = set(map(id, self.outages)) | set(map(id, self.faults)) \
-            | {id(self.budget), id(self.topo)} \
+            | {id(self.budget), id(self.topo), id(self.delay_member)} \
             | set(map(id, self.pre_deciders))
         self.proposers: List[CommPolicy] = [
             p for p in policies if id(p) not in special]
@@ -539,6 +612,8 @@ class Compose:
                 out = (OUTAGE_PLAN if len(drops) >= n_classes
                        else dataclasses.replace(out,
                                                 drops=tuple(sorted(drops))))
+        if self.delay_member is not None:
+            out = self.delay_member.annotate(step, out)
         if self.topo is not None and out is not None:
             out = self.topo.annotate(step, out)
             self.topo.audit(step, out)

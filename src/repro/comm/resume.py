@@ -40,9 +40,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from .policy import (OUTAGE_PLAN, BudgetComm, Compose, FaultComm,
-                     OutageComm, PerLeafPlan, RateComm, StaticComm,
-                     _ProbeSnap)
+from .policy import (OUTAGE_PLAN, BudgetComm, Compose, DelayComm,
+                     FaultComm, OutageComm, PerLeafPlan, RateComm,
+                     StaticComm, _ProbeSnap)
 
 
 # ---------------------------------------------------------------------------
@@ -64,10 +64,13 @@ def _key_dec(k: Any) -> Any:
 def _plan_enc(plan: Optional[PerLeafPlan]) -> Optional[dict]:
     if plan is None:
         return None
-    return {"specs": [s.canonical() for s in plan.specs],
-            "outage": bool(plan.outage),
-            "topo": plan.topo,
-            "drops": [int(d) for d in plan.drops]}
+    out = {"specs": [s.canonical() for s in plan.specs],
+           "outage": bool(plan.outage),
+           "topo": plan.topo,
+           "drops": [int(d) for d in plan.drops]}
+    if plan.delay:
+        out["delay"] = int(plan.delay)
+    return out
 
 
 def _plan_dec(d: Optional[dict]) -> Optional[PerLeafPlan]:
@@ -77,7 +80,52 @@ def _plan_dec(d: Optional[dict]) -> Optional[PerLeafPlan]:
         return OUTAGE_PLAN
     plan = PerLeafPlan.vector(d["specs"])
     return dataclasses.replace(plan, topo=d["topo"],
-                               drops=tuple(int(x) for x in d["drops"]))
+                               drops=tuple(int(x) for x in d["drops"]),
+                               delay=int(d.get("delay", 0)))
+
+
+# ---------------------------------------------------------------------------
+# async-gossip carry codec (DelayComm's in-flight buffer)
+# ---------------------------------------------------------------------------
+def _tree_enc(x: Any) -> Any:
+    """Arbitrary array pytree -> JSON-safe, dtype/shape-preserving.  The
+    carry mixes packed wire buffers (int8/uint8), f32 rows and the uint32
+    replay key under dict keys that are ints (rung-group / offset
+    indices), which plain JSON would stringify — so dicts are wrapped
+    ``{"__d__": [[k, v], ...]}`` and arrays ``{"__a__": ...}``.  Integer
+    payloads round-trip exactly; float payloads round-trip exactly through
+    JSON's repr (f32/bf16 -> f64 is exact)."""
+    if x is None or isinstance(x, (bool, int, str)):
+        return x
+    if isinstance(x, float):
+        return x
+    if isinstance(x, dict):
+        return {"__d__": [[_tree_enc(k), _tree_enc(v)]
+                          for k, v in x.items()]}
+    if isinstance(x, tuple):
+        return {"__t__": [_tree_enc(v) for v in x]}
+    if isinstance(x, list):
+        return [_tree_enc(v) for v in x]
+    a = np.asarray(x)
+    return {"__a__": {"dtype": str(a.dtype), "shape": list(a.shape),
+                      "data": a.astype(np.float64).ravel().tolist()
+                      if a.dtype.kind == "f" and a.dtype.itemsize < 4
+                      else a.ravel().tolist()}}
+
+
+def _tree_dec(x: Any) -> Any:
+    if isinstance(x, dict) and "__a__" in x:
+        import jax.numpy as jnp
+        spec = x["__a__"]
+        arr = np.asarray(spec["data"]).reshape(spec["shape"])
+        return jnp.asarray(arr.astype(spec["dtype"]))
+    if isinstance(x, dict) and "__d__" in x:
+        return {_tree_dec(k): _tree_dec(v) for k, v in x["__d__"]}
+    if isinstance(x, dict) and "__t__" in x:
+        return tuple(_tree_dec(v) for v in x["__t__"])
+    if isinstance(x, list):
+        return [_tree_dec(v) for v in x]
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +229,13 @@ def _snap_member(m: Any) -> dict:
                            else float(wall.ema_ms),
                            "samples": int(wall.samples)}
         return out
+    if isinstance(m, DelayComm):
+        import jax
+        st = m.state
+        return {"kind": "delay", "delay": int(m.delay),
+                "struct": _key_enc(st.struct),
+                "carry": None if st.carry is None else _tree_enc(
+                    jax.tree.map(np.asarray, st.carry))}
     if hasattr(m, "pre_decide"):             # ChaosComm: schedule-pure
         return {"kind": "chaos"}
     if isinstance(m, OutageComm):
@@ -267,6 +322,14 @@ def _restore_member(m: Any, snap: dict) -> None:
             wall.ema_ms = None if ema is None else float(ema)
             wall.samples = int(snap["wall"]["samples"])
         m._cost_cache.clear()
+        return
+    if kind == "delay":
+        assert isinstance(m, DelayComm), type(m).__name__
+        assert int(snap["delay"]) == int(m.delay), \
+            (snap["delay"], m.delay, "resume with a different --gossip-delay")
+        m.state.struct = _key_dec(snap["struct"])
+        m.state.carry = (None if snap["carry"] is None
+                         else _tree_dec(snap["carry"]))
         return
     if kind in ("chaos", "outage", "static"):
         return                                # schedule-pure, nothing moves

@@ -35,6 +35,24 @@ it once:
     leaves the hot path byte-for-byte on the pre-obs behavior,
     including StaticComm's async dispatch.
 
+**Delayed (async) gossip.**  The session itself is delay-agnostic: a
+composed :class:`~repro.comm.policy.DelayComm` tags every decided plan
+with ``("delay", d, inner)``, so delayed and sync step functions coexist
+in the plan bank and a mid-run delay change is a key flip, never a
+recompile.  The in-flight exchange buffer lives in the step functions'
+explicit carry, surfaced through the shared
+:class:`~repro.comm.policy.DelayState` holder that DelayComm owns — the
+checkpointer snapshots it as policy state (``repro.comm.resume`` kind
+"delay"), which is what makes a mid-flight kill/resume bit-exact.  The
+telemetry a delayed step reports through ``policy.observe`` is
+attributed to the differential actually MIXED that step (one step
+stale); step 0 of a delayed run therefore reports the zero opening
+carry.  The staleness CORRECTION is not here either: ``Topology``
+owns it (``eta_min(delay)`` / ``alpha_max(..., delay)``), and a
+composed TopologyComm binds the corrected floor into every
+controller's retarget (Compose copies the delay into
+``TopologyComm.gossip_delay``).
+
 Typical use (the CLI path)::
 
     session = TrainSession(bank=trainer.wire_bank(), policy=policy,

@@ -245,6 +245,10 @@ class RunConfig:
     compute_dtype: str = "bfloat16"
     kv_dtype: str = "bfloat16"               # serving KV cache: bfloat16|int8
     gossip_stream: bool = False              # leaf-sequential gossip (memory cap)
+    gossip_delay: int = 0                    # async gossip: mix the encoded
+    # differential issued d steps ago (0 = sync; 1 = overlap comm with the
+    # next step's grad).  Consensus floors are staleness-corrected via
+    # Topology.eta_min(delay); incompatible with gossip_stream
     grad_dtype: str = "float32"              # grad accumulation: float32|bfloat16
     remat: str = "full"                      # none | full | dots
     grad_accum: int = 1

@@ -118,30 +118,100 @@ def step(state: DCDGDState, W: jax.Array, grad_fn: GradFn, alpha_t: jax.Array,
     return DCDGDState(x=x_new, y=y_new, d=d_next, t=state.t + 1, key=key), aux
 
 
+def delayed_step(state: DCDGDState, W: jax.Array, grad_fn: GradFn,
+                 alpha_t: jax.Array, comp: Compressor,
+                 carry: Optional[dict] = None, track_bits: bool = False
+                 ) -> Tuple[DCDGDState, dict, dict]:
+    """One ASYNC (one-step-delayed) DC-DGD iteration.
+
+    Step t encodes ``C(d_t)`` immediately (the buffer is "in flight" —
+    on real links it overlaps the next gradient) and MIXES the carry
+    encoded at t-1; the returned ``new_carry`` holds the fresh buffer
+    plus its telemetry, so the reported powers/bits always belong to the
+    differential actually mixed this step (one step stale).
+    ``carry=None`` is the delay-0 degenerate case: the fresh encode is
+    consumed immediately and the update is bit-exact with :func:`step`
+    under the same PRNG key.  The opening carry of a delayed run is the
+    encode of a ZERO differential (``C(0) = 0`` for every compressor, so
+    step 0 mixes an exact zero).  Consensus floors for delayed runs come
+    from ``Topology.eta_min(delay)`` / ``alpha_max(..., delay)``."""
+    key, sub = jax.random.split(state.key)
+    c_new = _node_compress(comp, sub, state.d)
+    new_carry = {"c": c_new}
+    if track_bits:
+        new_carry["bits"] = _tree_bits(comp, state.d)
+        new_carry["noise_power"] = sum(
+            jnp.sum((a - b) ** 2) for a, b in
+            zip(jax.tree.leaves(c_new), jax.tree.leaves(state.d)))
+        new_carry["differential_power"] = sum(
+            jnp.sum(b ** 2) for b in jax.tree.leaves(state.d))
+    use = new_carry if carry is None else carry
+    c = use["c"]
+    x_new = jax.tree.map(jnp.add, state.x, c)
+    y_new = jax.tree.map(jnp.add, state.y, _mix(W, c))
+    g = grad_fn(x_new)
+    z_next = jax.tree.map(lambda y, gg: y - alpha_t * gg, y_new, g)
+    # The differential must be formed against the iterate AT APPLICATION
+    # time.  Under delay the in-flight buffer c_new lands before d_next
+    # does, so the reference point is x_new + c_new (known exactly — we
+    # just encoded it); forming it against x_new alone injects a stale
+    # drift term whose recursion sits on the unit circle and diverges.
+    # At delay 0 the buffer is consumed immediately (c is c_new) and the
+    # prediction collapses to x_new — bit-exact with :func:`step`.
+    x_pred = (x_new if carry is None
+              else jax.tree.map(jnp.add, x_new, c_new))
+    d_next = jax.tree.map(jnp.subtract, z_next, x_pred)
+    aux = {k: use[k] for k in ("bits", "noise_power", "differential_power")
+           if k in use}
+    return (DCDGDState(x=x_new, y=y_new, d=d_next, t=state.t + 1, key=key),
+            aux, new_carry)
+
+
+def init_delay_carry(comp: Compressor, params_like: PyTree, key: jax.Array,
+                     track_bits: bool = False) -> dict:
+    """The opening carry of a delayed run: the issued encode of an
+    all-zero differential (mixes an exact zero at step 0)."""
+    zeros = _tree_zeros_like(params_like)
+    carry = {"c": _node_compress(comp, key, zeros)}
+    if track_bits:
+        carry["bits"] = _tree_bits(comp, zeros)
+        carry["noise_power"] = sum(
+            jnp.sum((a - b) ** 2) for a, b in
+            zip(jax.tree.leaves(carry["c"]), jax.tree.leaves(zeros)))
+        carry["differential_power"] = jnp.float32(0.0)
+    return carry
+
+
 def run(problem, W, comp: Compressor, alpha: float | Callable,
         n_steps: int, key: jax.Array, track_bits: bool = True,
-        validate: bool = False) -> dict:
+        validate: bool = False, gossip_delay: int = 0) -> dict:
     """Convenience driver: runs DC-DGD for ``n_steps`` on ``problem`` (see
     core.problems.Problem) and returns per-step metric arrays.  Used by the
     paper benchmarks (Figs. 1 & 3) and integration tests.  ``W`` is a
     consensus matrix or a :class:`repro.topology.Topology` (the typed
-    front door — ``dcdgd.run(prob, topology("w1"), ...)``)."""
+    front door — ``dcdgd.run(prob, topology("w1"), ...)``).
+    ``gossip_delay=1`` runs the async variant (:func:`delayed_step`):
+    each step mixes the encode issued one step earlier, and the metric
+    powers/bits are attributed to that stale differential."""
     W = getattr(W, "W", W)           # unwrap a Topology
     if validate:
+        # the sync Theorem-1 threshold upper-bounds the staleness-
+        # corrected floor (eta_min(d) is nonincreasing in d), so gating
+        # delayed runs on it stays conservative
         cons.validate_compressor_for_topology(
             W, comp.snr_lower_bound(problem.dim))
+    delay = int(gossip_delay)
+    assert delay in (0, 1), f"gossip_delay must be 0 or 1, got {delay}"
     Wj = jnp.asarray(W, jnp.float32)
     n = W.shape[0]
     params_like = jnp.zeros((n, problem.dim), jnp.float32)
     alpha_fn = alpha if callable(alpha) else (lambda t: alpha)
     key, ik = jax.random.split(key)
     state = init(problem.grad, params_like, float(alpha_fn(1)), ik)
+    carry = (init_delay_carry(comp, params_like, jax.random.PRNGKey(0),
+                              track_bits=track_bits) if delay else None)
 
-    @partial(jax.jit, static_argnums=())
-    def one(state):
-        a_t = alpha_fn(state.t)
-        new_state, aux = step(state, Wj, problem.grad, a_t, comp,
-                              track_bits=track_bits)
+    def _metrics(new_state, aux):
         xbar = jnp.mean(new_state.x, axis=0)
         m = {
             "f_bar": problem.global_f(xbar),
@@ -149,11 +219,29 @@ def run(problem, W, comp: Compressor, alpha: float | Callable,
             "consensus_err": jnp.sum((new_state.x - xbar[None, :]) ** 2),
         }
         m.update(aux)
-        return new_state, m
+        return m
+
+    @partial(jax.jit, static_argnums=())
+    def one(state):
+        a_t = alpha_fn(state.t)
+        new_state, aux = step(state, Wj, problem.grad, a_t, comp,
+                              track_bits=track_bits)
+        return new_state, _metrics(new_state, aux)
+
+    @partial(jax.jit, static_argnums=())
+    def one_delayed(state, carry):
+        a_t = alpha_fn(state.t)
+        new_state, aux, carry2 = delayed_step(state, Wj, problem.grad, a_t,
+                                              comp, carry=carry,
+                                              track_bits=track_bits)
+        return new_state, _metrics(new_state, aux), carry2
 
     history = []
     for _ in range(n_steps):
-        state, m = one(state)
+        if delay:
+            state, m, carry = one_delayed(state, carry)
+        else:
+            state, m = one(state)
         history.append(m)
     out = {k: np.array([float(h[k]) for h in history]) for k in history[0]}
     out["x_final"] = np.asarray(state.x)

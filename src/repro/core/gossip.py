@@ -256,24 +256,20 @@ def gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
     return jax.tree.unflatten(treedef, c_own), jax.tree.unflatten(treedef, agg)
 
 
-def flat_gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
-                         ) -> Tuple[PyTree, PyTree]:
-    """Fused flat-wire gossip body (same contract as
-    :func:`gossip_exchange`, same results bit-for-bit on f32 trees).
+def _gossip_axis(plan: GossipPlan):
+    return plan.consensus_axes if len(plan.consensus_axes) > 1 else \
+        plan.consensus_axes[0]
 
-    The differential tree becomes ONE (R, block) row buffer; each rung
-    group is one codec pass (Pallas behind ``plan.use_pallas``); each
-    neighbor offset moves one packed buffer per wire part; neighbor
-    accumulation is the fused decode-axpy (no d-sized f32 decode temp).
-    """
+
+def _flat_setup(plan: GossipPlan, leaves):
+    """Flat layout + per-rung-group Pallas eligibility (shared by the sync
+    and delayed flat paths so the two stay bit-exact by construction)."""
     from ..kernels import ops as kops
 
-    leaves, treedef = jax.tree.flatten(d_local)
     fmts = plan.fmts_for(len(leaves))
     fplan = wirelib.make_flat_plan([l.shape for l in leaves],
                                    [l.dtype for l in leaves], fmts)
-    buf = wirelib.flatten_rows(fplan, leaves)
-    bits = wirelib.rng_rows(fplan, key)
+
     # Pallas codecs only on the circulant accumulate path (the dense
     # fallback needs a full per-node decode anyway, and the kernel's
     # quarter-interleaved packing must stay within one codec stack).
@@ -289,7 +285,16 @@ def flat_gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
               and kops.pallas_supported(g.fmt, fplan.block)
               and _f32_group(gi)
               for gi, g in enumerate(fplan.groups)]
+    return fplan, pallas
 
+
+def _flat_encode(plan: GossipPlan, fplan, pallas, key: jax.Array, leaves
+                 ) -> Dict[int, Any]:
+    """Encode the flat row buffer: one codec pass per rung group."""
+    from ..kernels import ops as kops
+
+    buf = wirelib.flatten_rows(fplan, leaves)
+    bits = wirelib.rng_rows(fplan, key)
     wires: Dict[int, Any] = {}
     for gi, g in enumerate(fplan.groups):
         rows = buf[g.row_start:g.row_start + g.rows]
@@ -299,33 +304,61 @@ def flat_gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
             u = wirelib.uniform_from_bits(bits[gi]) \
                 if wirelib.needs_rng(g.fmt) else None
             wires[gi] = wirelib.row_encode(g.fmt, rows, u)
+    return wires
 
-    c_rows = [kops.decode_rows(g.fmt, wires[gi]) if pallas[gi]
-              else wirelib.row_decode(g.fmt, wires[gi])
-              for gi, g in enumerate(fplan.groups)]
-    c_tree = jax.tree.unflatten(treedef,
-                                wirelib.unflatten_rows(fplan, c_rows))
 
-    if plan.n_nodes == 1:
-        return c_tree, c_tree
+def _flat_decode_own(fplan, pallas, wires) -> List[jax.Array]:
+    from ..kernels import ops as kops
 
-    axis = plan.consensus_axes if len(plan.consensus_axes) > 1 else \
-        plan.consensus_axes[0]
+    return [kops.decode_rows(g.fmt, wires[gi]) if pallas[gi]
+            else wirelib.row_decode(g.fmt, wires[gi])
+            for gi, g in enumerate(fplan.groups)]
+
+
+def _flat_issue_comm(plan: GossipPlan, axis, wires) -> Dict[Any, Any]:
+    """Put the packed wires on the links NOW; decode/mix can happen later
+    (the delayed path consumes the result one step after issue).
+
+    circulant: ``{offset_index: moved_wires}`` for every non-self offset
+    (ONE tree-map over the whole wire dict per offset: one ppermute per
+    wire part, not one per leaf).  dense: ``{"gathered": {gi: stacked}}``
+    — the all-gathered wires, one entry per rung group.
+    """
+    if plan.mode == "circulant":
+        comm: Dict[Any, Any] = {}
+        for oi, (off, _w) in enumerate(plan.offsets):
+            if all(o == 0 for o in off):
+                continue
+            perm = offset_perm(plan.dims, off)
+            comm[oi] = jax.tree.map(
+                lambda t, perm=perm: jax.lax.ppermute(t, axis, perm), wires)
+        return comm
+    gathered = {gi: jax.tree.map(
+        lambda t: jax.lax.all_gather(t, axis, axis=0, tiled=False), w)
+        for gi, w in wires.items()}
+    return {"gathered": gathered}
+
+
+def _flat_mix(plan: GossipPlan, fplan, pallas, comm, c_rows
+              ) -> List[jax.Array]:
+    """Accumulate agg rows from an in-flight comm buffer + own c_rows.
+
+    Accumulation order follows ``plan.offsets`` exactly (the self offset
+    contributes at its original loop position), so the result is
+    bit-identical to the interleaved sync loop.
+    """
+    from ..kernels import ops as kops
 
     if plan.mode == "circulant":
         acc = [jnp.zeros((g.rows, fplan.block), jnp.float32)
                for g in fplan.groups]
         c_cast = [wirelib.cast_rows_like(fplan, gi, r)
                   for gi, r in enumerate(c_rows)]
-        for off, w in plan.offsets:
+        for oi, (off, w) in enumerate(plan.offsets):
             if all(o == 0 for o in off):
                 acc = [a + w * c for a, c in zip(acc, c_cast)]
                 continue
-            perm = offset_perm(plan.dims, off)
-            # ONE tree-map over the whole wire dict: one ppermute per wire
-            # part, not one per leaf
-            moved = jax.tree.map(
-                lambda t: jax.lax.ppermute(t, axis, perm), wires)
+            moved = comm[oi]
             for gi, g in enumerate(fplan.groups):
                 if pallas[gi]:
                     acc[gi] = kops.decode_axpy_rows(g.fmt, moved[gi],
@@ -334,22 +367,210 @@ def flat_gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
                     dec = wirelib.row_decode(g.fmt, moved[gi])
                     acc[gi] = acc[gi] + w * wirelib.cast_rows_like(
                         fplan, gi, dec)
-        agg_rows = acc
-    else:
-        Wj = jnp.asarray(plan.W, jnp.float32)
-        my = _my_node_index(plan)
-        row = Wj[my]
-        agg_rows = []
-        for gi, g in enumerate(fplan.groups):
-            gathered = jax.tree.map(
-                lambda t: jax.lax.all_gather(t, axis, axis=0, tiled=False),
-                wires[gi])
-            dec = jax.vmap(lambda w1, f=g.fmt: wirelib.row_decode(f, w1)
-                           )(gathered)
-            agg_rows.append(jnp.einsum("n,n...->...", row, dec))
+        return acc
+    Wj = jnp.asarray(plan.W, jnp.float32)
+    my = _my_node_index(plan)
+    row = Wj[my]
+    agg_rows = []
+    for gi, g in enumerate(fplan.groups):
+        dec = jax.vmap(lambda w1, f=g.fmt: wirelib.row_decode(f, w1)
+                       )(comm["gathered"][gi])
+        agg_rows.append(jnp.einsum("n,n...->...", row, dec))
+    return agg_rows
+
+
+def flat_gossip_exchange(plan: GossipPlan, key: jax.Array, d_local: PyTree,
+                         ) -> Tuple[PyTree, PyTree]:
+    """Fused flat-wire gossip body (same contract as
+    :func:`gossip_exchange`, same results bit-for-bit on f32 trees).
+
+    The differential tree becomes ONE (R, block) row buffer; each rung
+    group is one codec pass (Pallas behind ``plan.use_pallas``); each
+    neighbor offset moves one packed buffer per wire part; neighbor
+    accumulation is the fused decode-axpy (no d-sized f32 decode temp).
+    """
+    leaves, treedef = jax.tree.flatten(d_local)
+    fplan, pallas = _flat_setup(plan, leaves)
+    wires = _flat_encode(plan, fplan, pallas, key, leaves)
+    c_rows = _flat_decode_own(fplan, pallas, wires)
+    c_tree = jax.tree.unflatten(treedef,
+                                wirelib.unflatten_rows(fplan, c_rows))
+
+    if plan.n_nodes == 1:
+        return c_tree, c_tree
+
+    axis = _gossip_axis(plan)
+    comm = _flat_issue_comm(plan, axis, wires)
+    agg_rows = _flat_mix(plan, fplan, pallas, comm, c_rows)
     agg_tree = jax.tree.unflatten(treedef,
                                   wirelib.unflatten_rows(fplan, agg_rows))
     return c_tree, agg_tree
+
+
+# ---------------------------------------------------------------------------
+# async / delayed gossip
+# ---------------------------------------------------------------------------
+# THE DELAYED-STATE CONTRACT.  A delayed (one-step-stale) gossip step
+# carries the IN-FLIGHT exchange as an explicit, jittable pytree:
+#
+#   carry = {"comm":        the packed wires ALREADY ISSUED on the links
+#                           (post-ppermute / post-all-gather, see
+#                           _flat_issue_comm) — the buffer "in flight",
+#            "c_rows":      the sender's own decoded C(d) rows (f32), so
+#                           consumption needs no second own-decode,
+#            "diff_power":  per-leaf ||d||^2 of the carried differential,
+#            "noise_power": per-leaf ||C(d) - d||^2 of the carried
+#                           differential (telemetry is attributed to the
+#                           STALE differential actually mixed),
+#            "key":         the PRNG key that encoded the buffer (replay /
+#                           audit: re-encoding the same d under this key
+#                           reproduces the carry bit-for-bit)}
+#
+# Step t encodes d_t and issues its collectives immediately (they overlap
+# step t+1's gradient on hardware with async collectives), while MIXING the
+# carry from step t-1.  The carry is explicit loop state: the trainer
+# threads it through the jitted step, and the session checkpointer snapshots
+# it as policy state (repro.comm.resume kind "delay") so kill/resume is
+# bit-exact mid-flight.  The staleness correction on the consensus floor
+# lives on Topology (``eta_min(delay)`` / ``alpha_max(..., delay)``), NOT
+# here — a GossipPlan is delay-agnostic.
+GossipCarry = Dict[str, Any]
+
+
+def delayed_flat_gossip_exchange(plan: GossipPlan, key: jax.Array,
+                                 d_local: PyTree,
+                                 carry: Optional[GossipCarry] = None,
+                                 ) -> Tuple[PyTree, PyTree, PyTree,
+                                            Tuple[jax.Array, jax.Array],
+                                            GossipCarry]:
+    """One async gossip step: encode + issue d_local NOW, mix the carry.
+
+    Returns ``(c_own, agg, c_fresh, (diff_power, noise_power),
+    new_carry)`` where c_own/agg come from the CARRIED (stale) buffer,
+    ``c_fresh`` is the own-row decode of the buffer issued THIS step, and
+    new_carry holds that freshly issued buffer.  The caller's surplus
+    update must subtract ``c_fresh`` (s' = s + agg - c_fresh) while x
+    absorbs ``c_own``: the next differential d' = s' - alpha u is formed
+    against the iterate AT ITS APPLICATION time (x will have absorbed the
+    in-flight c_fresh by then) — subtracting the stale decode instead
+    injects a drift term whose recursion sits on the unit circle and
+    diverges.  ``carry=None`` is the delay=0 degenerate case: the fresh
+    buffer is consumed immediately, c_fresh == c_own, and (c_own, agg)
+    are bit-exact with :func:`flat_gossip_exchange` under the same key
+    (both paths share _flat_setup/_flat_encode/_flat_issue_comm/
+    _flat_mix).  The returned power scalars belong to the differential
+    actually mixed this step — one step stale when a carry was given.
+    """
+    leaves, treedef = jax.tree.flatten(d_local)
+    fplan, pallas = _flat_setup(plan, leaves)
+    wires = _flat_encode(plan, fplan, pallas, key, leaves)
+    c_rows = _flat_decode_own(fplan, pallas, wires)
+
+    comm: Dict[Any, Any] = {}
+    if plan.n_nodes > 1:
+        comm = _flat_issue_comm(plan, _gossip_axis(plan), wires)
+
+    c_leaves = wirelib.unflatten_rows(fplan, c_rows)
+    f32 = lambda t: t.astype(jnp.float32)
+    diff_p = jnp.stack([jnp.sum(jnp.square(f32(l))) for l in leaves])
+    noise_p = jnp.stack([jnp.sum(jnp.square(f32(c) - f32(l)))
+                         for c, l in zip(c_leaves, leaves)])
+    new_carry: GossipCarry = {"comm": comm, "c_rows": c_rows,
+                              "diff_power": diff_p, "noise_power": noise_p,
+                              "key": key}
+    use = new_carry if carry is None else carry
+
+    c_fresh = jax.tree.unflatten(treedef, c_leaves)
+    c_tree = (c_fresh if carry is None else
+              jax.tree.unflatten(treedef,
+                                 wirelib.unflatten_rows(fplan,
+                                                        use["c_rows"])))
+    stats = (use["diff_power"], use["noise_power"])
+    if plan.n_nodes == 1:
+        return c_tree, c_tree, c_fresh, stats, new_carry
+    agg_rows = _flat_mix(plan, fplan, pallas, use["comm"], use["c_rows"])
+    agg_tree = jax.tree.unflatten(treedef,
+                                  wirelib.unflatten_rows(fplan, agg_rows))
+    return c_tree, agg_tree, c_fresh, stats, new_carry
+
+
+def build_delayed_gossip_fn(plan: GossipPlan, mesh, d_specs: PyTree):
+    """Shard-mapped delayed gossip for node-stacked trees.
+
+    Returns ``(init_fn, step_fn)``:
+
+      * ``init_fn(key, d_zeros_stacked) -> carry`` — the opening carry is
+        the issued encoding of an ALL-ZERO differential (step 0 of a
+        delayed run mixes an exact-zero stale update; decode(encode(0))
+        is 0 for every wire format, so x/s are untouched);
+      * ``step_fn(key, d_stacked, carry) -> (c_own, agg, c_fresh,
+        (diff_power, noise_power), carry')`` — stacked like
+        :func:`build_gossip_fn`, with the carry threaded through and
+        the fresh own decode exposed for the surplus update (see
+        :func:`delayed_flat_gossip_exchange`).
+
+    The carry's ``key`` leaf always holds the UNFOLDED session key (the
+    per-node decorrelation fold happens inside the body, exactly as in
+    the sync wrapper, so replaying the stored key reproduces the buffer).
+    """
+    from ..compat import shard_map
+
+    lead = P(plan.consensus_axes)
+
+    def _fold(key):
+        k = key
+        for a in mesh.axis_names:
+            k = jax.random.fold_in(k, jax.lax.axis_index(a))
+        return k
+
+    strip = lambda t: t.reshape(t.shape[1:])
+    lift = lambda t: t.reshape((1,) + t.shape)
+
+    # pytree-PREFIX specs: one spec leaf per carry slot covers the whole
+    # subtree (the packed-wire structure under "comm" varies per format)
+    cspecs = {"comm": lead, "c_rows": lead,
+              "diff_power": lead, "noise_power": lead, "key": P()}
+
+    def _lift_carry(carry, key):
+        out = jax.tree.map(lift, {k: carry[k] for k in
+                                  ("comm", "c_rows", "diff_power",
+                                   "noise_power")})
+        out["key"] = key
+        return out
+
+    def _strip_carry(carry):
+        out = jax.tree.map(strip, {k: carry[k] for k in
+                                   ("comm", "c_rows", "diff_power",
+                                    "noise_power")})
+        out["key"] = carry["key"]
+        return out
+
+    def init_body(key, d_stacked):
+        d_local = jax.tree.map(strip, d_stacked)
+        zeros = jax.tree.map(jnp.zeros_like, d_local)
+        _, _, _, _, carry = delayed_flat_gossip_exchange(
+            plan, _fold(key), zeros, carry=None)
+        return _lift_carry(carry, key)
+
+    def step_body(key, d_stacked, carry):
+        d_local = jax.tree.map(strip, d_stacked)
+        c_own, agg, c_fresh, stats, carry2 = delayed_flat_gossip_exchange(
+            plan, _fold(key), d_local, carry=_strip_carry(carry))
+        return (jax.tree.map(lift, c_own), jax.tree.map(lift, agg),
+                jax.tree.map(lift, c_fresh),
+                (lift(stats[0]), lift(stats[1])),
+                _lift_carry(carry2, key))
+
+    init_fn = shard_map(init_body, mesh=mesh,
+                        in_specs=(P(), d_specs),
+                        out_specs=cspecs,
+                        check_vma=False)
+    step_fn = shard_map(step_body, mesh=mesh,
+                        in_specs=(P(), d_specs, cspecs),
+                        out_specs=(d_specs, d_specs, d_specs,
+                                   (lead, lead), cspecs),
+                        check_vma=False)
+    return init_fn, step_fn
 
 
 def _my_node_index(plan: GossipPlan) -> jax.Array:

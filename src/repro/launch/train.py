@@ -70,6 +70,13 @@ def main(argv=None):
     ap.add_argument("--pallas-wire", action="store_true",
                     help="flat path: route the wire codec through the "
                          "Pallas kernels (interpret mode on CPU)")
+    ap.add_argument("--gossip-delay", type=int, default=0,
+                    help="async gossip: mix the encoded differential issued "
+                         "this many steps ago (0 = sync, 1 = overlap the "
+                         "exchange with the next step's gradient).  The "
+                         "consensus floor is staleness-corrected "
+                         "(Topology.eta_min(delay)) and the in-flight "
+                         "buffer rides checkpoints for bit-exact resume")
     ap.add_argument("--adapt", action="store_true",
                     help="retune the gossip wire online from SNR telemetry")
     ap.add_argument("--adapt-per-leaf", action="store_true",
@@ -202,6 +209,7 @@ def main(argv=None):
         wire=args.wire, topology=args.topology, optimizer=args.optimizer,
         alpha=args.alpha, schedule=args.schedule, grad_accum=args.grad_accum,
         wire_path=args.wire_path, use_pallas_wire=args.pallas_wire,
+        gossip_delay=args.gossip_delay,
         unsafe=args.unsafe, edge_drop_prob=args.edge_drop_prob,
         edge_drop_seed=args.edge_drop_seed, adapt=AdaptConfig(**adapt_kw))
 
@@ -285,7 +293,10 @@ def main(argv=None):
             row["wire"] = ran
         if topo_member is not None:
             row["topology"] = topo_member.active.canonical()
-            row["eta_min"] = topo_member.active.eta_min
+            # the floor the audit actually binds on: staleness-corrected
+            # under --gossip-delay, the plain Theorem-1 floor otherwise
+            row["eta_min"] = topo_member.active.eta_min(
+                topo_member.gossip_delay)
             row["eta_min_violations"] = topo_member.violations
         history.append(row)
         print(f"step {i+1:5d} loss {row['loss']:.4f} "

@@ -107,6 +107,11 @@ class StepEvent(_Event):
     loss: Optional[float] = None
     snr: Optional[float] = None
     outage: bool = False
+    # async gossip: the step mixed a differential issued this many steps
+    # ago (its snr is attributed to that STALE differential).  OPTIONAL
+    # additive v=1 extension — absent/None on sync steps and in old logs,
+    # no SCHEMA_VERSION bump.
+    gossip_delay: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,7 +182,8 @@ _FIELD_TYPES: Dict[str, Dict[str, tuple]] = {
                      "jax_version": (str,), "backend": (str,)},
     "step": {"step": (int,), "plan": (str,), "bits": (int, float),
              "wall_ms": (int, float), "loss": (int, float),
-             "snr": (int, float), "outage": (bool,)},
+             "snr": (int, float), "outage": (bool,),
+             "gossip_delay": (int,)},
     "switch": {"step": (int,), "old": (str,), "new": (str,)},
     "fault": {"step": (int,), "drops": (list, tuple), "cause": (str,),
               "node": (int,), "edge": (str,)},
@@ -472,9 +478,15 @@ class Recorder:
                     snr = _finite(dn / nn) if nn > 0 else None
                 except Exception:
                     snr = None
+        delay = None
+        if metrics and metrics.get("gossip_delay") is not None:
+            try:
+                delay = int(metrics["gossip_delay"])
+            except Exception:
+                delay = None
         self.emit(StepEvent(step=step, plan=str(key), bits=_finite(bits),
                             wall_ms=_finite(wall_ms), loss=loss, snr=snr,
-                            outage=outage))
+                            outage=outage, gossip_delay=delay))
 
     def on_fault(self, step: int, *, cause: Optional[str] = None,
                  node: Optional[int] = None, edge: Optional[str] = None,

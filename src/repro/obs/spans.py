@@ -63,10 +63,24 @@ class SpanTimer:
     def __init__(self) -> None:
         self._total: Dict[str, float] = {}
         self._count: Dict[str, int] = {}
+        self._overlap: Dict[str, float] = {}
 
-    def add(self, name: str, seconds: float) -> None:
-        self._total[name] = self._total.get(name, 0.0) + float(seconds)
+    def add(self, name: str, seconds: float, overlap_s: float = 0.0) -> None:
+        """Record one span.  ``overlap_s`` is the portion of this span
+        that ran CONCURRENTLY with another recorded phase — async gossip's
+        comm span hides under the next step's grad — and is subtracted so
+        ``total_s`` accumulates the EXCLUSIVE wall: summing phase totals
+        then never double-counts overlapped time (the pre-fix behavior
+        reported gossip's full busy time next to the grad wall it was
+        hidden under).  The raw busy time is kept and surfaces as
+        ``busy_s``/``overlap_s`` in :meth:`summary` for spans that ever
+        recorded overlap, so utilization stays derivable."""
+        s = float(seconds)
+        ov = min(max(float(overlap_s), 0.0), max(s, 0.0))
+        self._total[name] = self._total.get(name, 0.0) + (s - ov)
         self._count[name] = self._count.get(name, 0) + 1
+        if ov > 0.0:
+            self._overlap[name] = self._overlap.get(name, 0.0) + ov
 
     @contextlib.contextmanager
     def span(self, name: str, ready: Any = None) -> Iterator[None]:
@@ -86,12 +100,23 @@ class SpanTimer:
             self.add(name, time.perf_counter() - t0)
 
     def summary(self) -> Dict[str, Dict[str, float]]:
-        """{name: {total_s, count, mean_ms}} sorted by total descending."""
+        """{name: {total_s, count, mean_ms}} sorted by total descending;
+        ``total_s`` is the exclusive (overlap-adjusted) wall.  Spans that
+        recorded overlap additionally carry ``busy_s`` (raw busy time)
+        and ``overlap_s`` — absent otherwise, so overlap-free logs are
+        byte-identical to the pre-fix format."""
         names = sorted(self._total, key=self._total.get, reverse=True)
-        return {n: {"total_s": self._total[n],
-                    "count": self._count[n],
-                    "mean_ms": 1e3 * self._total[n] / max(self._count[n], 1)}
-                for n in names}
+        out = {}
+        for n in names:
+            row = {"total_s": self._total[n],
+                   "count": self._count[n],
+                   "mean_ms": 1e3 * self._total[n] / max(self._count[n], 1)}
+            ov = self._overlap.get(n, 0.0)
+            if ov > 0.0:
+                row["overlap_s"] = ov
+                row["busy_s"] = self._total[n] + ov
+            out[n] = row
+        return out
 
     def __repr__(self) -> str:
         return f"SpanTimer({self.summary()})"

@@ -40,8 +40,8 @@ Quick example (ring -> torus mid-run under a bit budget)::
                      TopologyComm(schedule=sched, topologies=topos))
 """
 from .topospec import TopoSpec
-from .topology import Topology, topology
+from .topology import SnrFloor, Topology, topology
 from .schedule import TopoSchedule, TopologyComm
 
-__all__ = ["TopoSpec", "Topology", "topology", "TopoSchedule",
+__all__ = ["SnrFloor", "TopoSpec", "Topology", "topology", "TopoSchedule",
            "TopologyComm"]

@@ -110,6 +110,12 @@ class TopologyComm:
     topologies: Dict[str, Topology]
     dims: Optional[Tuple[int, ...]] = None
     guaranteed_snr: Optional[Any] = None     # Callable[[str], float]
+    # async gossip: every floor this member reads or pushes is the
+    # STALENESS-CORRECTED ``Topology.eta_min(gossip_delay)`` (a composed
+    # DelayComm sets this through Compose; 0 = the sync Theorem-1 floor,
+    # bit-identical to the pre-async behavior).  The correction itself
+    # lives on Topology — this member only selects which delay to bind.
+    gossip_delay: int = 0
     consumes_telemetry = True
 
     # populated as the session runs
@@ -141,7 +147,8 @@ class TopologyComm:
         return self.schedule.active_at(step).canonical()
 
     def eta_min_at(self, step: int) -> float:
-        return self.topologies[self.active_canonical(step)].eta_min
+        return self.topologies[self.active_canonical(step)].eta_min(
+            self.gossip_delay)
 
     def switch_to(self, spec: Union[str, TopoSpec],
                   topo: Optional[Topology] = None) -> None:
@@ -186,16 +193,17 @@ class TopologyComm:
         # dims=None = a backend whose bit accounting is per-encode, not
         # per-link (the dcdgd sessions): leave cost-model neighbors alone
         neighbors = topo.n_out(self.dims) if self.dims is not None else None
+        floor = topo.eta_min(self.gossip_delay)
         for m in members:
             retarget = getattr(m, "retarget", None)
             if retarget is not None and m is not self:
-                retarget(eta_min=topo.eta_min, neighbors=neighbors)
+                retarget(eta_min=floor, neighbors=neighbors)
             # graph-shape hook (FaultComm): members whose index spaces are
             # derived from the active graph re-derive them here
             on_topology = getattr(m, "on_topology", None)
             if on_topology is not None and m is not self:
                 on_topology(nxt)
-        self.switch_log.append((step, old, nxt, topo.eta_min))
+        self.switch_log.append((step, old, nxt, floor))
         self._below_streak = 0
         return True
 
@@ -226,7 +234,7 @@ class TopologyComm:
         non-blackout, non-guaranteed-safe plan is held (a reacting policy
         climbs within one decide; only a stale floor or a floor-ignoring
         policy sustains this)."""
-        floor = self.active.eta_min
+        floor = self.active.eta_min(self.gossip_delay)
         if plan is None or plan.outage or not math.isfinite(self._last_snr):
             self._below_streak = 0
             self._last_key = None if plan is None else plan.key()

@@ -34,6 +34,44 @@ from .topospec import TopoSpec
 Array = np.ndarray
 
 
+class SnrFloor(float):
+    """Theorem-1 SNR floor that doubles as the staleness-correction map.
+
+    Instances ARE floats — the value is the synchronous (delay=0) floor
+    ``(1 - lambda_N)/(1 + lambda_N)``, so arithmetic, comparisons, JSON
+    encoding and every existing ``topo.eta_min`` consumer work unchanged.
+    Calling the instance applies the delayed-gossip correction of Tang et
+    al. (1803.06443): ``floor(d)`` is the floor under d-step-stale
+    neighbor information, computed from the effective eigenvalue
+    ``lambda_eff(d) = (lambda_N + d)/(1 + d)`` (delayed mixing behaves
+    like lazy mixing with the identity over the delay window).  The map
+    is monotone nonincreasing in d and ``floor(0) == float(floor)``.
+    """
+
+    __slots__ = ("_lambda_n",)
+
+    def __new__(cls, lambda_n: float) -> "SnrFloor":
+        lam = float(lambda_n)
+        self = super().__new__(cls, (1.0 - lam) / (1.0 + lam))
+        self._lambda_n = lam
+        return self
+
+    @property
+    def lambda_n(self) -> float:
+        return self._lambda_n
+
+    def __call__(self, delay: int = 0) -> float:
+        d = int(delay)
+        if d < 0:
+            raise ValueError(f"gossip delay must be >= 0, got {delay}")
+        lam_eff = (self._lambda_n + d) / (1.0 + d)
+        return (1.0 - lam_eff) / (1.0 + lam_eff)
+
+    # keep pickling/deepcopy working despite __slots__ + custom __new__
+    def __reduce__(self):
+        return (SnrFloor, (self._lambda_n,))
+
+
 def _expander_adjacency(n: int, d: int, seed: int = 0) -> Array:
     """Random CIRCULANT d-regular expander: offset set {1} plus d//2 - 1
     random distinct offsets in [2, n//2].  Circulant by construction, so
@@ -258,13 +296,38 @@ class Topology:
         return self.spectrum.beta
 
     @property
-    def eta_min(self) -> float:
-        """Theorem-1 SNR floor (1 - lambda_N)/(1 + lambda_N)."""
-        return self.spectrum.snr_threshold
+    def eta_min(self) -> "SnrFloor":
+        """Theorem-1 SNR floor (1 - lambda_N)/(1 + lambda_N).
 
-    def alpha_max(self, eta: float, L: float) -> float:
-        """Theorem-1 step-size cap for compressor SNR eta, smoothness L."""
-        return self.spectrum.max_step_size(eta, L)
+        The returned value IS a float (the delay=0 floor, so every
+        existing consumer keeps working unchanged) and is additionally
+        callable with a gossip delay: ``topo.eta_min(d)`` is the
+        staleness-corrected floor for d-step-stale neighbor information
+        (Tang et al., arXiv:1803.06443).  Delayed gossip mixes each
+        node's fresh state with d-step-old neighbor contributions, which
+        acts on the consensus error like lazy mixing with the identity:
+        the effective smallest eigenvalue is
+        ``lambda_eff(d) = (lambda_N + d) / (1 + d)``, so the corrected
+        floor ``(1 - lambda_eff)/(1 + lambda_eff)`` equals the base
+        floor at d=0 and is monotone nonincreasing in d (stale rounds
+        average out compression noise, never tighten the requirement).
+        """
+        return SnrFloor(self.spectrum.lambda_n)
+
+    def alpha_max(self, eta: float, L: float, delay: int = 0) -> float:
+        """Theorem-1 step-size cap for compressor SNR eta, smoothness L.
+
+        ``delay`` applies the staleness correction of 1803.06443: with
+        d-step-stale neighbor information the admissible step size
+        shrinks by 1/(1+d) (the delayed-consensus contraction argument
+        — information takes d extra rounds to propagate, so the cap
+        that kept the sync recursion contractive must be split across
+        the delay window).  delay=0 is exactly the sync Theorem-1 cap.
+        """
+        d = int(delay)
+        if d < 0:
+            raise ValueError(f"gossip delay must be >= 0, got {delay}")
+        return self.spectrum.max_step_size(eta, L) / (1.0 + d)
 
     # ------------------------------------------------------------------
     def canonical(self) -> str:

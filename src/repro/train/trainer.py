@@ -107,6 +107,18 @@ class Trainer:
             rules = AxisRules(compute=comp, storage=stor)
         self.rules = rules
 
+        delay = int(self.run.gossip_delay)
+        if delay not in (0, 1):
+            raise ValueError(f"gossip_delay must be 0 or 1, got {delay}")
+        if delay:
+            if self.run.gossip_stream:
+                raise ValueError(
+                    "gossip_delay is incompatible with gossip_stream (the "
+                    "leaf-sequential path carries no in-flight buffer)")
+            if self.run.wire_path != "flat":
+                raise ValueError(
+                    "gossip_delay needs wire_path='flat' (the delayed "
+                    "exchange carries the packed flat row buffer)")
         if self.node_mode:
             fmt = make_wire(self.run.wire)
             self.plan = G.make_plan(self.mesh, self.consensus_axes, fmt,
@@ -116,6 +128,9 @@ class Trainer:
                                     use_pallas=self.run.use_pallas_wire)
             self._validate_snr()
         else:
+            if delay:
+                raise ValueError("gossip_delay needs an active consensus "
+                                 "graph (multi-node mode)")
             self.snr_check = (True, "single node: exact update")
 
     # ------------------------------------------------------------------
@@ -250,18 +265,12 @@ class Trainer:
     # ------------------------------------------------------------------
     # the step
     # ------------------------------------------------------------------
-    def build_train_step(self, plan: Optional[G.GossipPlan] = None):
-        """``plan=None`` uses the launch-time gossip plan; the adapt
-        controller passes an override with the same topology but a
-        different wire format (see ``train_step_for_wire``)."""
-        plan = plan if plan is not None else self.plan
-        arch, run, shape = self.arch, self.run, self.shape
-        schedule = make_schedule(run.schedule, run.alpha)
-        rules = self.rules
+    def _grad_fn(self):
+        """The per-node loss+grad closure, shared by the sync and delayed
+        (async gossip) step builders."""
+        arch, run = self.arch, self.run
         accum = max(run.grad_accum, 1)
         dtype = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
-        n = self.n_nodes
-
         g_dtype = (jnp.bfloat16 if run.grad_dtype == "bfloat16"
                    else jnp.float32)
 
@@ -294,6 +303,19 @@ class Trainer:
             (l, g), metrics = jax.lax.scan(body, (jnp.float32(0), zeros_g), mbs)
             metrics = jax.tree.map(lambda t: t[-1], metrics)
             return l / accum, metrics, _tree_scale(g, 1.0 / accum)
+
+        return per_node_grad
+
+    def build_train_step(self, plan: Optional[G.GossipPlan] = None):
+        """``plan=None`` uses the launch-time gossip plan; the adapt
+        controller passes an override with the same topology but a
+        different wire format (see ``train_step_for_wire``)."""
+        plan = plan if plan is not None else self.plan
+        run = self.run
+        schedule = make_schedule(run.schedule, run.alpha)
+        rules = self.rules
+        n = self.n_nodes
+        per_node_grad = self._grad_fn()
 
         if self.node_mode:
             param_specs = self.param_specs()
@@ -424,6 +446,156 @@ class Trainer:
                        donate_argnums=(0,) if donate else ())
 
     # ------------------------------------------------------------------
+    # async (delayed) gossip step
+    # ------------------------------------------------------------------
+    def build_delayed_train_step(self, plan: Optional[G.GossipPlan] = None):
+        """The one-step-delayed gossip train step.
+
+        Returns ``(init_carry_fn, step_fn)``:
+
+          * ``init_carry_fn(state) -> carry`` — the opening carry is the
+            issued encoding of an all-zero differential (step 0 mixes an
+            exact zero, so x/s are untouched by the warm-up);
+          * ``step_fn(state, batch, carry) -> (state', metrics, carry')``
+            — jittable: step t encodes d_t and ISSUES its collectives
+            inside the step (on hardware with async collectives the
+            in-flight buffer overlaps step t+1's gradient), while the
+            x/s update MIXES the carry issued at t-1.
+
+        The carry is explicit loop state (see the delayed-state contract
+        in ``core.gossip``); the trainer-side holder that threads it
+        between jitted calls is a ``repro.comm.DelayState`` (shared with
+        the composed DelayComm member so kill/resume snapshots the
+        in-flight buffer).  Telemetry powers are attributed to the STALE
+        differential actually mixed this step.
+        """
+        plan = plan if plan is not None else self.plan
+        assert self.node_mode, "delayed gossip needs an active gossip plan"
+        assert not self.run.gossip_stream
+        run = self.run
+        schedule = make_schedule(run.schedule, run.alpha)
+        rules = self.rules
+        n = self.n_nodes
+        per_node_grad = self._grad_fn()
+        param_specs = self.param_specs()
+        spmd_axes = (self.consensus_axes if len(self.consensus_axes) > 1
+                     else self.consensus_axes[0])
+        init_fn, gstep_fn = G.build_delayed_gossip_fn(plan, self.mesh,
+                                                      param_specs)
+
+        def init_carry_fn(state: TrainState):
+            zeros = jax.tree.map(jnp.zeros_like, state.s)
+            return init_fn(jax.random.PRNGKey(0), zeros)
+
+        def step_fn(state: TrainState, batch, carry
+                    ) -> Tuple[TrainState, Dict, Any]:
+            key, k_gossip = jax.random.split(state.key)
+            gb = batch["tokens"].shape[0]
+            per = gb // n
+
+            def to_nodes(t):
+                return t.reshape((n, per) + t.shape[1:])
+
+            nb = jax.tree.map(to_nodes, batch)
+            with use_rules(rules):
+                vg = jax.vmap(per_node_grad, spmd_axis_name=spmd_axes)
+                loss, metrics, grads = vg(state.x, nb)
+            alpha_t = schedule(state.step + 1)
+            u, opt = update_direction(run.optimizer, grads, state.opt,
+                                      state.x)
+            d = jax.tree.map(lambda ss, uu: ss - alpha_t *
+                             uu.astype(ss.dtype), state.s, u)
+            c_own, agg, c_fresh, (dp, npw), carry2 = gstep_fn(k_gossip, d,
+                                                             carry)
+            # x absorbs the STALE decode (the buffer actually mixed this
+            # step) while the surplus subtracts the FRESH one: the next
+            # differential d' = s' - alpha u must be formed against the
+            # iterate at its APPLICATION time — x will have absorbed the
+            # in-flight c_fresh by the time d' lands (see
+            # delayed_flat_gossip_exchange).  At delay 0 they coincide.
+            x_new = _tree_add(state.x, c_own)
+            s_new = jax.tree.map(lambda a, b, c: a + b - c,
+                                 state.s, agg, c_fresh)
+            # per-leaf powers of the STALE differential mixed this step,
+            # summed over nodes (node-stacked (n, L) from the exchange)
+            diff_l = jnp.sum(dp.astype(jnp.float32), axis=0)
+            noise_l = jnp.sum(npw.astype(jnp.float32), axis=0)
+            out_metrics = {
+                "loss": jnp.mean(loss),
+                "alpha": alpha_t,
+                "grad_norm": jnp.sqrt(sum(
+                    jnp.sum(g.astype(jnp.float32) ** 2)
+                    for g in jax.tree.leaves(grads))),
+                "diff_power": jnp.sum(diff_l),
+                "noise_power": jnp.sum(noise_l),
+                "diff_power_leaves": diff_l,
+                "noise_power_leaves": noise_l,
+            }
+            out_metrics.update({k: jnp.mean(v) for k, v in metrics.items()})
+            return (TrainState(x=x_new, s=s_new, opt=opt,
+                               step=state.step + 1, key=key),
+                    out_metrics, carry2)
+
+        return init_carry_fn, step_fn
+
+    def jit_delayed_train_step(self, donate: bool = True,
+                               plan: Optional[G.GossipPlan] = None):
+        """``build_delayed_train_step`` jitted: carry shardings are left
+        unspecified (the shard_map in_specs pin them), state/batch match
+        the sync step.  Donates state AND carry — both are dead after the
+        call."""
+        init_carry_fn, step_fn = self.build_delayed_train_step(plan)
+        shardings = self.state_shardings()
+        batch_sh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                                self.batch_spec(),
+                                is_leaf=lambda t: isinstance(t, P))
+        jitted = jax.jit(step_fn,
+                         in_shardings=(shardings, batch_sh, None),
+                         out_shardings=(shardings, None, None),
+                         donate_argnums=(0, 2) if donate else ())
+        return init_carry_fn, jitted
+
+    def _delay_holder(self):
+        """The ONE DelayState this trainer threads its in-flight gossip
+        buffer through — shared with the composed DelayComm member, so
+        the session checkpointer snapshots/restores the same slot the
+        step wrappers read and write."""
+        from ..comm import DelayState
+        h = getattr(self, "_delay_state", None)
+        if h is None:
+            h = self._delay_state = DelayState()
+        return h
+
+    def _delayed_step_for(self, delay: int, inner, donate: bool = False):
+        """Bank entry for a ``("delay", d, inner)`` key: a
+        ``step(state, batch)`` wrapper around the jitted delayed core
+        that threads the carry through the shared DelayState.  A struct
+        change (rung or graph switch altering the packed-row layout)
+        flushes the carry — a SYMMETRIC drop on every node, which
+        differential coding self-corrects (d is always computed against
+        the locally tracked x) — and re-opens with the zero encoding."""
+        d = int(delay)
+        if d != 1:
+            raise ValueError(f"only gossip_delay=1 is supported, got {d}")
+        plan = self.plan_for_wire(inner)
+        init_carry_fn, jitted = self.jit_delayed_train_step(donate=donate,
+                                                            plan=plan)
+        holder = self._delay_holder()
+        struct = (inner, plan.mode,
+                  tuple((tuple(int(o) for o in off), float(w))
+                        for off, w in plan.offsets))
+
+        def step(state, batch):
+            if holder.struct != struct or holder.carry is None:
+                holder.carry = init_carry_fn(state)
+                holder.struct = struct
+            state, m, holder.carry = jitted(state, batch, holder.carry)
+            m["gossip_delay"] = d
+            return state, m
+
+        return step
+
+    # ------------------------------------------------------------------
     def lower_train_step(self, batch_struct=None):
         """AOT-lower against ShapeDtypeStructs only (the dry-run path).
         State donation is on — the deployed step aliases x/s/opt in place."""
@@ -498,6 +670,10 @@ class Trainer:
                 isinstance(spec, (tuple, list))
                 and any(isinstance(s, WireSpec) for s in spec)):
             spec = canonical_key(spec)
+        if isinstance(spec, tuple) and len(spec) == 3 and spec[0] == "delay":
+            # a GossipPlan is delay-agnostic (the delayed-ness lives in the
+            # step function and its carry): unwrap and resolve the inner key
+            return self.plan_for_wire(spec[2], base_plan=plan)
         if isinstance(spec, tuple) and len(spec) == 3 and spec[0] == "topo":
             return self.plan_for_wire(
                 spec[2], base_plan=self.plan_for_topology(spec[1]))
@@ -581,7 +757,15 @@ class Trainer:
 
     def train_step_for_wire(self, spec, donate: bool = False):
         """Jitted train step with the gossip wire overridden to ``spec``
-        (a single spec string or a per-leaf rung vector)."""
+        (a single spec string or a per-leaf rung vector).  A
+        ``("delay", d, inner)`` tagged key — produced by a composed
+        DelayComm — builds the async step for the inner plan instead, so
+        sync and delayed entries coexist in one plan bank and a mid-run
+        ``--gossip-delay`` toggle is a key-axis flip, never a recompile
+        of existing entries."""
+        if (isinstance(spec, tuple) and len(spec) == 3
+                and spec[0] == "delay"):
+            return self._delayed_step_for(spec[1], spec[2], donate=donate)
         return self.jit_train_step(donate=donate,
                                    plan=self.plan_for_wire(spec))
 
@@ -677,6 +861,16 @@ class Trainer:
             schedule=sched, topologies=topos, dims=self.plan.dims,
             guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
 
+    def _delay_member(self):
+        """RunConfig.gossip_delay as a DelayComm Compose member: tags
+        every decided plan with the delay (bank key ``("delay", d,
+        inner)``) and owns the in-flight carry slot — the SAME DelayState
+        the trainer's delayed step wrappers thread, so a session
+        checkpoint snapshots the exact buffer mid-flight."""
+        from ..comm import DelayComm
+        return DelayComm(delay=int(self.run.gossip_delay),
+                         state=self._delay_holder())
+
     def comm_policy(self):
         """This run's RunConfig/AdaptConfig as ONE repro.comm CommPolicy:
 
@@ -690,19 +884,35 @@ class Trainer:
                                                   graph; retargets floors)
           * edge_drop_prob > 0                 -> FaultComm (per-edge drop-
                                                   and-renormalize faults)
+          * gossip_delay > 0                   -> DelayComm (async gossip:
+                                                  delay-tagged plan keys +
+                                                  the in-flight carry slot;
+                                                  floors staleness-corrected)
 
         The driver for any of them is the same TrainSession — see
         :meth:`comm_session`."""
         from ..comm import (BudgetComm, Compose, OutageComm, RateComm,
                             StaticComm)
         faults_on = self.node_mode and self.run.edge_drop_prob > 0
+        delay_on = self.node_mode and self.run.gossip_delay > 0
         ac = self.run.adapt
         if not (ac.enabled and self.node_mode):
+            parts = [StaticComm(self.run.wire)]
             if faults_on:
-                return Compose(StaticComm(self.run.wire),
-                               self._fault_member())
-            return StaticComm(self.run.wire)
+                parts.append(self._fault_member())
+            if delay_on:
+                parts.append(self._delay_member())
+            return parts[0] if len(parts) == 1 else Compose(*parts)
         eta_min = self.validate_ladder()
+        if delay_on:
+            # async gossip: every composed controller targets the
+            # STALENESS-CORRECTED floor of the launch graph from step 0
+            # (Topology.eta_min(delay) <= the sync floor, so the ladder
+            # anchor gate above — which binds on the sync floor — stays
+            # conservative); a composed TopologyComm re-binds the
+            # corrected floor of whichever graph a switch activates
+            eta_min = self.topology_for(self.run.topology).eta_min(
+                self.run.gossip_delay)
         parts = []
         budget_on = ac.bit_budget > 0
         if self._rate_member_on():
@@ -742,6 +952,17 @@ class Trainer:
             if not parts:
                 parts.append(StaticComm(self.run.wire))
             parts.append(self._fault_member())
+        if delay_on:
+            if not parts:
+                parts.append(StaticComm(self.run.wire))
+            for p in parts:
+                # push the corrected floor into members that derived their
+                # own from the plan (BudgetController.for_plan): a delayed
+                # run budgets/audits against eta_min(delay) everywhere
+                rt = getattr(p, "retarget", None)
+                if rt is not None:
+                    rt(eta_min=eta_min)
+            parts.append(self._delay_member())
         if not parts:
             # enabled but no member applies (e.g. rate_control=False with
             # no budget and no outage windows): hold the configured wire

@@ -1,0 +1,640 @@
+"""Async delayed gossip: bit-exactness + staleness contracts.
+
+Locks down the one-step-delayed gossip pipeline end to end:
+
+  * ``SnrFloor`` staleness correction: ``eta_min(0)`` equals the base
+    Theorem-1 floor on every TopoSpec constructor, the map is monotone
+    NONINCREASING in the delay, and ``alpha_max`` shrinks by 1/(1+d);
+  * delay=0 async machinery is BIT-EXACT with the sync path under the
+    same PRNG key, at every layer: ``dcdgd.delayed_step(carry=None)`` vs
+    ``dcdgd.step``, ``delayed_flat_gossip_exchange(carry=None)`` vs
+    ``flat_gossip_exchange`` (hypothesis-randomized over wire formats
+    and mixed per-leaf rungs, with seeded fallbacks), and the
+    shard-mapped wrappers on 8 virtual devices (circulant AND dense
+    lowerings);
+  * delay=1 sentinel: a differential encoded at step t is mixed exactly
+    at step t+1 (the opening carry mixes an exact zero);
+  * stale telemetry attribution: the reported powers belong to the
+    differential actually mixed (one step stale);
+  * a composed delayed session (rate + budget + topology + delay) runs
+    with ZERO eta_min/budget violations in the shared obs counters
+    registry, delay-tagged plan-bank keys, and delay-stamped step events.
+"""
+import json
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dcdgd, gossip as G, problems
+from repro.core.compressors import Identity, WireCompressor, make_compressor
+from repro.core.wire import make_wire
+from repro.topology import topology
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+RNG_SPECS = ("int8:block=64", "ternary:block=128",
+             "hybrid:block=128,top_j=4", "randk:block=128,k=32")
+ALL_SPECS = RNG_SPECS + ("dense", "topk:block=128,k=32")
+
+# every TopoSpec constructor family; n=None where the spec pins n
+FLOOR_SPECS = (("ring", 8), ("torus:4x2", None), ("complete", 8),
+               ("star", 8), ("erdos:p=0.3,seed=1", 8),
+               ("w1", None), ("w2", None))
+
+
+# ---------------------------------------------------------------------------
+# staleness-corrected consensus floor (SnrFloor / alpha_max contracts)
+# ---------------------------------------------------------------------------
+class TestSnrFloorContract:
+    @pytest.mark.parametrize("spec,n", FLOOR_SPECS)
+    def test_delay0_equals_base_floor(self, spec, n):
+        topo = topology(spec, n=n)
+        assert topo.eta_min(0) == float(topo.eta_min)
+        assert topo.eta_min() == float(topo.eta_min)
+
+    @pytest.mark.parametrize("spec,n", FLOOR_SPECS)
+    def test_monotone_nonincreasing_in_delay(self, spec, n):
+        floor = topology(spec, n=n).eta_min
+        vals = [floor(d) for d in range(7)]
+        for d in range(6):
+            assert vals[d + 1] <= vals[d] + 1e-12, (spec, d, vals)
+        assert all(v >= 0.0 for v in vals), (spec, vals)
+
+    def test_is_float_and_json_roundtrips(self):
+        floor = topology("ring", n=8).eta_min
+        assert isinstance(floor, float)
+        assert floor + 0.0 == float(floor)        # plain arithmetic works
+        assert json.loads(json.dumps({"eta": floor}))["eta"] \
+            == pytest.approx(float(floor))
+
+    def test_pickle_preserves_correction_map(self):
+        floor = topology("erdos:p=0.3,seed=1", n=8).eta_min
+        back = pickle.loads(pickle.dumps(floor))
+        assert float(back) == float(floor)
+        assert back.lambda_n == floor.lambda_n
+        assert back(1) == floor(1) and back(3) == floor(3)
+
+    def test_negative_delay_raises(self):
+        floor = topology("ring", n=8).eta_min
+        with pytest.raises(ValueError):
+            floor(-1)
+
+    def test_alpha_max_shrinks_by_one_over_one_plus_d(self):
+        topo = topology("ring", n=8)
+        eta, L = 4.0, 2.0
+        base = topo.alpha_max(eta, L)
+        for d in (1, 2, 5):
+            assert topo.alpha_max(eta, L, delay=d) \
+                == pytest.approx(base / (1 + d))
+        with pytest.raises(ValueError):
+            topo.alpha_max(eta, L, delay=-1)
+
+    def test_topology_comm_binds_corrected_floor(self):
+        from repro.topology import TopoSchedule, TopologyComm
+        topo = topology("ring", n=8)
+        sched = TopoSchedule(entries=((0, "ring"),))
+        tc = TopologyComm(
+            schedule=sched,
+            topologies={sched.entries[0][1].canonical(): topo},
+            dims=None, gossip_delay=1)
+        assert tc.eta_min_at(0) == topo.eta_min(1)
+        assert tc.eta_min_at(0) < float(topo.eta_min)
+        tc.gossip_delay = 0
+        assert tc.eta_min_at(0) == float(topo.eta_min)
+
+
+# ---------------------------------------------------------------------------
+# dcdgd delayed step (paper Alg. 1 under one-step staleness)
+# ---------------------------------------------------------------------------
+def _w1_setup(comp, alpha=0.02, seed=5):
+    topo = topology("w1")
+    n = int(topo.W.shape[0])
+    prob = problems.quadratic(n_nodes=n, dim=8, seed=2)
+    Wj = jnp.asarray(topo.W, jnp.float32)
+    params_like = jnp.zeros((n, prob.dim), jnp.float32)
+    state = dcdgd.init(prob.grad, params_like, alpha,
+                       jax.random.PRNGKey(seed))
+    return prob, Wj, state
+
+
+class TestDcdgdDelayed:
+    @pytest.mark.parametrize("comp", [
+        Identity(), make_compressor("blocked_hybrid:block=16,top_j=4")],
+        ids=["identity", "blocked_hybrid"])
+    def test_delay0_bit_exact_with_sync_step(self, comp):
+        prob, Wj, st_s = _w1_setup(comp)
+        st_d = st_s
+        for _ in range(10):
+            st_s, aux_s = dcdgd.step(st_s, Wj, prob.grad, 0.02, comp,
+                                     track_bits=True)
+            st_d, aux_d, _ = dcdgd.delayed_step(st_d, Wj, prob.grad, 0.02,
+                                                comp, carry=None,
+                                                track_bits=True)
+            for a, b in zip(jax.tree.leaves(st_s), jax.tree.leaves(st_d)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            for k in aux_s:
+                np.testing.assert_array_equal(np.asarray(aux_s[k]),
+                                              np.asarray(aux_d[k]))
+
+    def test_sentinel_mixed_exactly_one_step_late(self):
+        """With the exact wire a differential encoded at step t lands at
+        t+1: the opening (zero) carry leaves x untouched at step 0, and
+        step 1 applies step 0's encode verbatim."""
+        comp = Identity()
+        prob, Wj, st0 = _w1_setup(comp)
+        carry0 = dcdgd.init_delay_carry(comp, st0.x, jax.random.PRNGKey(0),
+                                        track_bits=True)
+        for leaf in jax.tree.leaves(carry0["c"]):
+            np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+        st1, _, carry1 = dcdgd.delayed_step(st0, Wj, prob.grad, 0.02, comp,
+                                            carry=carry0, track_bits=True)
+        # step 0 mixed an exact zero -> x unchanged
+        np.testing.assert_array_equal(np.asarray(st1.x), np.asarray(st0.x))
+        # the in-flight buffer is exactly C(d_0) = d_0 (Identity)
+        np.testing.assert_array_equal(np.asarray(carry1["c"]),
+                                      np.asarray(st0.d))
+        st2, _, _ = dcdgd.delayed_step(st1, Wj, prob.grad, 0.02, comp,
+                                       carry=carry1, track_bits=True)
+        # step 1 applies step 0's differential verbatim
+        np.testing.assert_array_equal(
+            np.asarray(st2.x), np.asarray(st1.x) + np.asarray(st0.d))
+
+    def test_stale_telemetry_attribution(self):
+        """Reported powers belong to the differential actually MIXED:
+        step 0 of a delayed run reports the zero opening carry."""
+        topo = topology("w1")
+        prob = problems.quadratic(n_nodes=5, dim=8, seed=2)
+        comp = make_compressor("blocked_hybrid:block=16,top_j=4")
+        res = dcdgd.run(prob, topo, comp, 0.02, 30, jax.random.PRNGKey(0),
+                        gossip_delay=1)
+        assert res["differential_power"][0] == 0.0
+        assert res["noise_power"][0] == 0.0
+        assert res["differential_power"][1] > 0.0
+
+    def test_delayed_run_converges_to_exact_wire_reference(self):
+        topo = topology("w1")
+        prob = problems.quadratic(n_nodes=5, dim=8, seed=2)
+        comp = make_compressor("blocked_hybrid:block=16,top_j=4")
+        key = jax.random.PRNGKey(0)
+        d1 = dcdgd.run(prob, topo, comp, 0.02, 300, key, gossip_delay=1)
+        ref = dcdgd.run(prob, topo, Identity(), 0.02, 300, key,
+                        gossip_delay=1)
+        assert np.isfinite(d1["f_bar"]).all()
+        gap = float(np.mean(d1["f_bar"][-20:])) - prob.f_star
+        ref_gap = float(np.mean(ref["f_bar"][-20:])) - prob.f_star
+        assert gap <= max(1.5 * ref_gap, ref_gap + 0.05), (gap, ref_gap)
+
+    def test_run_rejects_unsupported_delay(self):
+        topo = topology("w1")
+        prob = problems.quadratic(n_nodes=5, dim=8, seed=2)
+        with pytest.raises(AssertionError):
+            dcdgd.run(prob, topo, Identity(), 0.02, 2,
+                      jax.random.PRNGKey(0), gossip_delay=2)
+
+    def test_init_delay_carry_reports_zero_power(self):
+        carry = dcdgd.init_delay_carry(
+            make_compressor("blocked_hybrid:block=16,top_j=4"),
+            jnp.zeros((5, 8)), jax.random.PRNGKey(0), track_bits=True)
+        assert float(carry["differential_power"]) == 0.0
+        assert float(carry["noise_power"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# delayed flat exchange: codec-level bit-exactness (single-node plan)
+# ---------------------------------------------------------------------------
+def _single_node_plan(fmts):
+    return G.GossipPlan(consensus_axes=(), dims=(), n_nodes=1,
+                        mode="circulant", offsets=(), W=np.ones((1, 1)),
+                        fmt=fmts[0], leaf_fmts=tuple(fmts))
+
+
+def _tree_for(shapes, seed):
+    key = jax.random.PRNGKey(seed)
+    return {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+            * (1.0 + 3.0 * i) for i, s in enumerate(shapes)}
+
+
+def check_delay0_matches_flat(shapes, specs, seed):
+    """delayed_flat_gossip_exchange(carry=None) == flat_gossip_exchange,
+    bit for bit under the same key, and c_fresh == c_own."""
+    key = jax.random.PRNGKey(seed)
+    d = _tree_for(shapes, seed + 1)
+    plan = _single_node_plan([make_wire(s) for s in specs])
+    c_sync, agg_sync = G.flat_gossip_exchange(plan, key, d)
+    c_own, agg, c_fresh, _, _ = G.delayed_flat_gossip_exchange(
+        plan, key, d, carry=None)
+    for k in d:
+        msg = f"leaf {k} specs {specs} shapes {shapes} seed {seed}"
+        np.testing.assert_array_equal(np.asarray(c_sync[k]),
+                                      np.asarray(c_own[k]), err_msg=msg)
+        np.testing.assert_array_equal(np.asarray(agg_sync[k]),
+                                      np.asarray(agg[k]), err_msg=msg)
+        np.testing.assert_array_equal(np.asarray(c_own[k]),
+                                      np.asarray(c_fresh[k]), err_msg=msg)
+
+
+def check_sentinel_one_step_late(spec, seed):
+    """An encode issued with d_t is returned as c_own at t+1, bit for
+    bit; the opening (zero) carry yields an all-zero mix with zero
+    reported powers."""
+    plan = _single_node_plan([make_wire(spec)])
+    key = jax.random.PRNGKey(seed)
+    k0, k1, k2 = jax.random.split(key, 3)
+    d1 = _tree_for([(96,)], seed + 1)
+    d2 = _tree_for([(96,)], seed + 2)
+    zeros = jax.tree.map(jnp.zeros_like, d1)
+    _, _, _, _, carry0 = G.delayed_flat_gossip_exchange(plan, k0, zeros,
+                                                        carry=None)
+    c1, agg1, f1, (dp1, np1), carry1 = G.delayed_flat_gossip_exchange(
+        plan, k1, d1, carry=carry0)
+    np.testing.assert_array_equal(np.asarray(c1["l0"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(agg1["l0"]), 0.0)
+    assert float(jnp.sum(dp1)) == 0.0 and float(jnp.sum(np1)) == 0.0
+    c2, _, _, (dp2, _), _ = G.delayed_flat_gossip_exchange(
+        plan, k2, d2, carry=carry1)
+    # step 2's mixed decode IS step 1's fresh encode
+    np.testing.assert_array_equal(np.asarray(c2["l0"]),
+                                  np.asarray(f1["l0"]))
+    # ... and its reported power is step 1's differential power
+    np.testing.assert_allclose(float(jnp.sum(dp2)),
+                               float(jnp.sum(jnp.square(d1["l0"]))),
+                               rtol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    _last = st.integers(1, 300)
+    _lead = st.integers(1, 4)
+    _shape = st.one_of(
+        st.tuples(_last),
+        st.tuples(_lead, _last),
+        st.tuples(_lead, st.integers(1, 3), _last),
+    )
+    _tree = st.lists(st.tuples(_shape, st.sampled_from(ALL_SPECS)),
+                     min_size=1, max_size=4)
+
+    @settings(deadline=None)
+    @given(tree=_tree, seed=st.integers(0, 2 ** 16 - 1))
+    def test_delay0_exchange_bit_exact_property(tree, seed):
+        check_delay0_matches_flat([t[0] for t in tree],
+                                  [t[1] for t in tree], seed)
+
+    @settings(deadline=None)
+    @given(spec=st.sampled_from(ALL_SPECS),
+           seed=st.integers(0, 2 ** 16 - 1))
+    def test_sentinel_one_step_late_property(spec, seed):
+        check_sentinel_one_step_late(spec, seed)
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_delay0_exchange_bit_exact_seeded(spec):
+    check_delay0_matches_flat([(96,), (2, 200)], [spec, spec], seed=11)
+
+
+def test_delay0_exchange_bit_exact_mixed_rungs():
+    check_delay0_matches_flat(
+        [(96,), (2, 200), (3, 2, 64)],
+        ["int8:block=64", "ternary:block=128", "dense"], seed=3)
+
+
+@pytest.mark.parametrize("spec", RNG_SPECS + ("dense",))
+def test_sentinel_one_step_late_seeded(spec):
+    check_sentinel_one_step_late(spec, seed=17)
+
+
+def test_carry_key_replay_is_deterministic():
+    """Replaying the carry's stored key over the same differential
+    reproduces the in-flight buffer bit-for-bit (the audit contract)."""
+    plan = _single_node_plan([make_wire("int8:block=64")])
+    key = jax.random.PRNGKey(41)
+    d = _tree_for([(2, 200)], 9)
+    _, _, _, _, ca = G.delayed_flat_gossip_exchange(plan, key, d, carry=None)
+    _, _, _, _, cb = G.delayed_flat_gossip_exchange(plan, ca["key"], d,
+                                                    carry=None)
+    for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# shard-mapped delayed gossip on 8 virtual devices (subprocess)
+# ---------------------------------------------------------------------------
+@pytest.mark.multidevice
+class TestMultideviceDelayed:
+    # the sentinel doubles as delay-0 machinery parity: the delayed
+    # wrapper's FRESH encode must bit-match the sync wrapper's own decode
+    # under the same step key, and land as c_own exactly one step later
+    _BODY = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh
+        from jax.sharding import PartitionSpec as P
+        from repro.core.wire import make_wire
+        from repro.core.gossip import (make_plan, build_gossip_fn,
+                                       build_delayed_gossip_fn)
+        mesh = make_mesh(%(mesh)s)
+        fmt = make_wire("int8:block=64")
+        plan = make_plan(mesh, %(axes)s, fmt, topology=%(topo)r)
+        assert plan.mode == %(mode)r, plan.mode
+        axes = %(axes)s
+        lead = axes if len(axes) > 1 else axes[0]
+        d_specs = {"w": P(lead, None)}
+        k = jax.random.PRNGKey(0)
+        d1 = {"w": jax.random.normal(jax.random.fold_in(k, 1), (8, 96))}
+        d2 = {"w": jax.random.normal(jax.random.fold_in(k, 2), (8, 96))}
+        sync = jax.jit(build_gossip_fn(plan, mesh, d_specs))
+        init_fn, step_fn = build_delayed_gossip_fn(plan, mesh, d_specs)
+        init_fn, step_fn = jax.jit(init_fn), jax.jit(step_fn)
+        k0, k1, k2 = jax.random.split(k, 3)
+        carry0 = init_fn(k0, d1)
+        c1, agg1, f1, (dp1, np1), carry1 = step_fn(k1, d1, carry0)
+        # opening carry mixes an exact zero, with zero reported powers
+        assert np.array_equal(np.asarray(c1["w"]), 0.0 * np.asarray(c1["w"]))
+        assert np.array_equal(np.asarray(agg1["w"]),
+                              0.0 * np.asarray(agg1["w"]))
+        assert float(jnp.sum(dp1)) == 0.0 and float(jnp.sum(np1)) == 0.0
+        # the fresh encode matches the SYNC wrapper under the same key
+        c_s1, agg_s1 = sync(k1, d1)
+        assert np.array_equal(np.asarray(f1["w"]), np.asarray(c_s1["w"]))
+        # ... and is mixed exactly one step later: the decode is bitwise
+        # equal; the aggregate only up to compiler reassociation of the
+        # decode-axpy (sync and delayed are separately-jitted programs)
+        c2, agg2, f2, (dp2, _), carry2 = step_fn(k2, d2, carry1)
+        assert np.array_equal(np.asarray(c2["w"]), np.asarray(f1["w"]))
+        assert np.allclose(np.asarray(agg2["w"]), np.asarray(agg_s1["w"]),
+                           rtol=1e-5, atol=1e-6)
+        # stale power attribution: step 2 reports step 1's differential
+        ref = float(jnp.sum(jnp.square(d1["w"])))
+        assert abs(float(jnp.sum(dp2)) - ref) <= 1e-5 * (ref + 1.0)
+        print("OK")
+    """
+
+    def test_circulant_lowering_sentinel(self):
+        from conftest import run_in_devices
+        out = run_in_devices(8, self._BODY % {
+            "mesh": '(2, 4), ("pod", "data")',
+            "axes": '("pod", "data")', "topo": "ring",
+            "mode": "circulant"})
+        assert "OK" in out
+
+    def test_dense_lowering_sentinel(self):
+        from conftest import run_in_devices
+        out = run_in_devices(8, self._BODY % {
+            "mesh": '(8,), ("data",)',
+            "axes": '("data",)', "topo": "erdos:p=0.4,seed=1",
+            "mode": "dense"})
+        assert "OK" in out
+
+    def test_trainer_delayed_node_mode(self):
+        from conftest import run_in_devices
+        out = run_in_devices(8, """
+            import jax, numpy as np
+            from repro.compat import make_mesh
+            from repro.configs import get_smoke
+            from repro.configs.base import RunConfig, ShapeConfig
+            from repro.data import SyntheticLMData
+            from repro.train import make_trainer
+            mesh = make_mesh((8, 1), ("data", "model"))
+            arch = get_smoke("qwen3-8b")
+            run = RunConfig(consensus_axis="data", topology="ring",
+                            wire="int8:block=64", gossip_delay=1,
+                            alpha=0.02)
+            tr = make_trainer(mesh, arch, run,
+                              ShapeConfig("t", 64, 8, "train"))
+            data = SyntheticLMData(vocab_size=arch.vocab_size, seq_len=64,
+                                   global_batch=8)
+            state = tr.init_state(0)
+            step = tr.train_step_for_wire(("delay", 1, run.wire),
+                                          donate=False)
+            losses = []
+            for i in range(8):
+                state, m = step(state, data.batch(i))
+                losses.append(float(m["loss"]))
+                assert int(m["gossip_delay"]) == 1
+                if i == 0:
+                    # step 0 mixed the zero opening carry
+                    assert float(np.sum(np.asarray(
+                        m["diff_power_leaves"]))) == 0.0
+            assert np.isfinite(losses).all(), losses
+            assert losses[-1] < losses[0], losses
+            print("OK", round(losses[0], 3), "->", round(losses[-1], 3))
+        """, timeout=560)
+        assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# composed delayed session: corrected floors, zero violations, obs stamps
+# ---------------------------------------------------------------------------
+FLEET_N, FLEET_DIM, FLEET_STEPS = 16, 16, 48
+FLEET_LADDER = ("dense", "int8:block=64")
+FLEET_BUDGET = 20000.0          # affords int8 (~8.7 kbit), never dense
+
+
+def _delayed_metric_step(problem, alpha_fn, Wj, comp, holder, delay):
+    """Session step threading the dcdgd in-flight carry through the shared
+    DelayState (the composed DelayComm snapshots exactly what it reads)."""
+    @jax.jit
+    def one(st, carry):
+        a_t = alpha_fn(st.t)
+        new_state, aux, carry2 = dcdgd.delayed_step(
+            st, Wj, problem.grad, a_t, comp, carry=carry, track_bits=True)
+        xbar = jnp.mean(new_state.x, axis=0)
+        m = {"f_bar": problem.global_f(xbar),
+             "grad_norm_sq": jnp.sum(problem.global_grad(xbar) ** 2),
+             "consensus_err": jnp.sum((new_state.x - xbar[None, :]) ** 2)}
+        m.update(aux)
+        return new_state, m, carry2
+
+    def step(st):
+        if holder.carry is None:
+            holder.carry = dcdgd.init_delay_carry(
+                comp, jax.tree.map(jnp.zeros_like, st.x),
+                jax.random.PRNGKey(0), track_bits=True)
+            holder.struct = ("dcdgd", int(np.asarray(st.x).shape[0]))
+        st2, m, carry2 = one(st, holder.carry)
+        holder.carry = carry2
+        m = dict(m)
+        m["gossip_delay"] = jnp.int32(delay)
+        return st2, m
+
+    return step
+
+
+def build_delayed_fleet(obs_path, topo_spec="erdos:p=0.3,seed=1",
+                        n=FLEET_N, steps=FLEET_STEPS, ckpt_dir=None,
+                        chaos_schedule=None):
+    """A small fig9-shaped composed session: RateComm + BudgetComm +
+    TopologyComm + DelayComm, every floor the corrected eta_min(1).
+    ``chaos_schedule`` (a FaultSchedule string) additionally composes a
+    ChaosComm — slow-link spans scale the budget while the in-flight
+    delayed buffer keeps moving."""
+    from repro.adapt import ladder_from_specs
+    from repro.adapt.budget import BudgetController, BudgetSchedule
+    from repro.adapt.controller import RateController
+    from repro.adapt.policies import BudgetPolicy, ControllerPolicy
+    from repro.adapt.runner import _metric_step, make_dcdgd_session
+    from repro.comm import (BudgetComm, Compose, DelayComm, DelayState,
+                            RateComm)
+    from repro.obs import JsonlSink, Recorder
+    from repro.runtime.fault import peel_plan_key
+    from repro.topology import TopoSchedule, TopologyComm
+
+    topo = topology(topo_spec, n=n)
+    prob = problems.quadratic(n_nodes=n, dim=FLEET_DIM, seed=3)
+    Wj = jnp.asarray(topo.W, jnp.float32)
+    alpha_fn = lambda t: 0.04 / jnp.sqrt(t)                  # noqa: E731
+    holder = DelayState()
+    floor = float(topo.eta_min(1))
+
+    def build_step(key_):
+        d, k = 0, key_
+        if isinstance(k, tuple) and len(k) == 3 and k[0] == "delay":
+            d, k = int(k[1]), k[2]
+        _, drops, inner = peel_plan_key(k)
+        assert not drops, f"no drop faults scheduled, got {key_!r}"
+        comp = WireCompressor(fmt=make_wire(inner))
+        if d == 0:
+            return _metric_step(prob, alpha_fn, Wj, comp)
+        return _delayed_metric_step(prob, alpha_fn, Wj, comp, holder, d)
+
+    recorder = Recorder(JsonlSink(obs_path))
+    recorder.emit_manifest(
+        config={"steps": steps, "budget": FLEET_BUDGET,
+                "ladder": list(FLEET_LADDER), "gossip_delay": 1,
+                "eta_min_corrected": floor},
+        topology=topo.canonical(), seed=0)
+    session = make_dcdgd_session(prob, topo.W, alpha_fn,
+                                 jax.random.PRNGKey(0), None,
+                                 bank_size=2 * len(FLEET_LADDER) + 2,
+                                 build_step=build_step, obs=recorder)
+
+    wire_ladder = ladder_from_specs(FLEET_LADDER, level="wire")
+    rate = RateComm(
+        policy=ControllerPolicy(
+            controller=RateController(ladder=wire_ladder, eta_min=floor,
+                                      margin=1.25, synthesize_hybrid=False,
+                                      level="wire"),
+            probe_fn=lambda: np.asarray(session.state.d),
+            cadence=8),
+        n_leaves=1, cadence=8)
+    budget_pol = BudgetPolicy(
+        controller=BudgetController(ladder=wire_ladder,
+                                    shapes=((n, FLEET_DIM),),
+                                    neighbors=1, eta_min=floor),
+        schedule=BudgetSchedule(bits=FLEET_BUDGET), cadence=1)
+    topo_sched = TopoSchedule(entries=((0, topo_spec),))
+    topo_comm = TopologyComm(
+        schedule=topo_sched,
+        topologies={topo_sched.entries[0][1].canonical(): topo},
+        dims=None,
+        guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
+    members = [rate, BudgetComm(policy=budget_pol), topo_comm,
+               DelayComm(delay=1, state=holder)]
+    if chaos_schedule is not None:
+        from repro.runtime.chaos import ChaosComm, FaultSchedule
+        n_edges = int(np.asarray(topo.adj).sum()) // 2
+        members.append(ChaosComm(schedule=FaultSchedule.parse(
+            chaos_schedule), n_edges=n_edges))
+    policy = Compose(*members)
+    session.policy = policy
+    if ckpt_dir is not None:
+        from repro.comm import SessionCheckpointer
+        session.checkpoint = SessionCheckpointer(
+            directory=str(ckpt_dir), policy=policy, every=4, retain=0)
+    return {"session": session, "policy": policy, "topo_comm": topo_comm,
+            "budget_pol": budget_pol, "recorder": recorder, "prob": prob,
+            "topo": topo, "holder": holder, "steps": steps}
+
+
+@pytest.fixture(scope="module")
+def delayed_fleet(tmp_path_factory):
+    log = tmp_path_factory.mktemp("async_fleet") / "fleet.jsonl"
+    fleet = build_delayed_fleet(str(log))
+    res = fleet["session"].run(fleet["steps"])
+    fleet["recorder"].close()
+    return {"res": res, "log": str(log), **fleet}
+
+
+class TestComposedDelayedSession:
+    def test_zero_violation_counters(self, delayed_fleet):
+        from repro.obs import summarize
+        rep = summarize(delayed_fleet["log"])
+        counters = dict(rep["counters"])
+        assert counters.get("eta_min_violations", 0) == 0, counters
+        assert counters.get("budget_violations", 0) == 0, counters
+        assert delayed_fleet["topo_comm"].violations == 0
+        bp = delayed_fleet["budget_pol"]
+        assert not any(bits > b * (1 + 1e-9)
+                       for _, b, _, bits, _ in bp.spend_log)
+
+    def test_plan_keys_are_delay_tagged(self, delayed_fleet):
+        keys = set(delayed_fleet["res"].plan_per_step)
+        assert keys, "no plans recorded"
+        for k in keys:
+            assert isinstance(k, tuple) and k[0] == "delay" and k[1] == 1, k
+
+    def test_budget_holds_session_on_cheap_rung(self, delayed_fleet):
+        # dense (~8 kbit) exceeds the 4 kbit cap: every decided plan must
+        # be the int8 rung
+        inner = {k[2] for k in delayed_fleet["res"].plan_per_step}
+        assert all("int8" in str(i) for i in inner), inner
+
+    def test_step_events_stamp_gossip_delay(self, delayed_fleet):
+        from repro.obs import read_events, summarize
+        steps = [e for e in read_events(delayed_fleet["log"])
+                 if e.KIND == "step"]
+        assert len(steps) == delayed_fleet["steps"]
+        assert all(e.gossip_delay == 1 for e in steps)
+        rep = summarize(delayed_fleet["log"])
+        assert all(rep["consistent"].values()), rep["consistent"]
+
+    def test_fleet_converges_under_corrected_floor(self, delayed_fleet):
+        hist = delayed_fleet["res"].metrics_arrays()
+        prob = delayed_fleet["prob"]
+        assert np.isfinite(hist["f_bar"]).all()
+        assert float(hist["f_bar"][-1]) - prob.f_star \
+            < float(hist["f_bar"][0]) - prob.f_star
+
+    def test_floor_pushed_is_corrected_one(self, delayed_fleet):
+        tc = delayed_fleet["topo_comm"]
+        topo = delayed_fleet["topo"]
+        assert tc.gossip_delay == 1             # Compose copied the delay
+        assert tc.eta_min_at(0) == topo.eta_min(1)
+        assert tc.eta_min_at(0) < float(topo.eta_min)
+
+
+# ---------------------------------------------------------------------------
+# trainer-facing validation (single device: raises before any mesh work)
+# ---------------------------------------------------------------------------
+class TestTrainerDelayValidation:
+    def _make(self, **run_kw):
+        from repro.compat import make_mesh
+        from repro.configs import get_smoke
+        from repro.configs.base import RunConfig, ShapeConfig
+        from repro.train import make_trainer
+        mesh = make_mesh((1, 1), ("data", "model"))
+        run = RunConfig(consensus_axis="data", wire="int8:block=64",
+                        alpha=0.02, **run_kw)
+        return make_trainer(mesh, get_smoke("qwen3-8b"), run,
+                            ShapeConfig("t", 64, 8, "train"))
+
+    def test_delay_out_of_range_raises(self):
+        with pytest.raises(ValueError, match="must be 0 or 1"):
+            self._make(gossip_delay=2)
+
+    def test_delay_incompatible_with_gossip_stream(self):
+        with pytest.raises(ValueError, match="gossip_stream"):
+            self._make(gossip_delay=1, gossip_stream=True)
+
+    def test_delay_needs_flat_wire_path(self):
+        with pytest.raises(ValueError, match="wire_path"):
+            self._make(gossip_delay=1, wire_path="leaf")
+
+    def test_delay_needs_consensus_graph(self):
+        with pytest.raises(ValueError, match="consensus"):
+            self._make(gossip_delay=1)

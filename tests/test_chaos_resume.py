@@ -316,3 +316,55 @@ class TestSessionResume:
         for a, b in zip(jax.tree.leaves(rate._tel),
                         jax.tree.leaves(rate2._tel)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDelayedSessionResume:
+    """Kill/resume with an IN-FLIGHT delayed differential: the DelayComm
+    snapshot (repro.comm.resume kind "delay") must restore the carried
+    buffer so the resumed run bit-matches the uninterrupted one — state,
+    plan tail, AND the obs step-event tail (obs.diff_exact from the kill
+    step) — including under a chaos-schedule composition whose slow span
+    straddles the resume point."""
+
+    KILL_AT, STEPS = 12, 24
+    # slow span opens after the kill: the resumed session must recompute
+    # the budget scale from (schedule, step) alone, mid-flight carry intact
+    CHAOS = "slow:edge=0-1,span=14:18,factor=0.5"
+
+    @pytest.mark.parametrize("chaos", [None, CHAOS],
+                             ids=["plain", "chaos-composed"])
+    def test_kill_and_resume_bit_exact_with_inflight_carry(
+            self, tmp_path, chaos):
+        from test_async_gossip import build_delayed_fleet
+        from repro.ckpt import checkpoint as ck
+        from repro.obs import diff_exact
+
+        base_log = tmp_path / "base.jsonl"
+        resume_log = tmp_path / "resume.jsonl"
+        ckpt_dir = tmp_path / "ckpt"
+
+        base = build_delayed_fleet(str(base_log), steps=self.STEPS,
+                                   ckpt_dir=ckpt_dir, chaos_schedule=chaos)
+        res = base["session"].run(self.STEPS)
+        base["recorder"].close()
+        assert base["holder"].carry is not None   # buffer was in flight
+
+        resumed = build_delayed_fleet(str(resume_log), steps=self.STEPS,
+                                      ckpt_dir=None, chaos_schedule=chaos)
+        state2, manifest = ck.restore(ckpt_dir, self.KILL_AT,
+                                      resumed["session"].state)
+        restore_policy(resumed["policy"], manifest["extra"]["policy"])
+        resumed["session"].state = state2
+        # the in-flight delayed differential came back with the policy
+        assert resumed["holder"].carry is not None
+        res2 = resumed["session"].run(self.STEPS, start_step=self.KILL_AT)
+        resumed["recorder"].close()
+
+        for a, b in zip(jax.tree.leaves(res.state),
+                        jax.tree.leaves(res2.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert res2.plan_per_step == res.plan_per_step[self.KILL_AT:]
+        exact = diff_exact(str(base_log), str(resume_log),
+                           from_step=self.KILL_AT)
+        assert exact["ok"], exact["mismatches"]
+        assert exact["n_steps"] == self.STEPS - self.KILL_AT

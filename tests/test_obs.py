@@ -92,6 +92,25 @@ class TestEventSchema:
         with pytest.raises(SchemaError, match=":2:.*unknown"):
             read_events(p)
 
+    def test_gossip_delay_optional_field(self):
+        """gossip_delay is an ADDITIVE optional StepEvent field: stamped
+        events round-trip, old records (no key) still parse under the
+        SAME schema version, and type errors are rejected."""
+        ev = StepEvent(step=3, plan="int8:block=64", gossip_delay=1)
+        rec = json.loads(json.dumps(ev.to_record()))
+        assert rec["v"] == SCHEMA_VERSION        # no version bump
+        assert parse_record(rec) == ev
+        assert parse_record(rec).gossip_delay == 1
+        # a pre-async log line: same version, key absent
+        old = StepEvent(step=3, plan="int8:block=64").to_record()
+        old.pop("gossip_delay", None)
+        validate_record(old)
+        assert parse_record(old).gossip_delay is None
+        bad = StepEvent(step=3, plan="dense").to_record()
+        bad["gossip_delay"] = "one"
+        with pytest.raises(SchemaError, match="gossip_delay"):
+            validate_record(bad)
+
     def test_provenance_block(self):
         prov = provenance()
         assert prov["schema_version"] == SCHEMA_VERSION
@@ -124,6 +143,41 @@ class TestCountersSpans:
         assert s["slow"]["total_s"] == pytest.approx(1.0)
         assert s["slow"]["mean_ms"] == pytest.approx(500.0)
         assert s["ctx"]["count"] == 1
+
+    def test_span_timer_overlap_exclusive_total(self):
+        """overlap_s subtracts from total_s (the exclusive wall) while
+        busy_s keeps the raw busy time — summing phase totals never
+        double-counts time hidden under another phase."""
+        t = SpanTimer()
+        t.add("grad", 1.0)
+        t.add("gossip", 0.6, overlap_s=0.4)      # 0.4s hid under grad
+        s = t.summary()
+        assert s["gossip"]["total_s"] == pytest.approx(0.2)
+        assert s["gossip"]["busy_s"] == pytest.approx(0.6)
+        assert s["gossip"]["overlap_s"] == pytest.approx(0.4)
+        # grad never recorded overlap: no busy_s/overlap_s keys
+        assert set(s["grad"]) == {"total_s", "count", "mean_ms"}
+        assert s["grad"]["total_s"] + s["gossip"]["total_s"] \
+            == pytest.approx(1.2)                # exclusive wall adds up
+
+    def test_span_timer_overlap_clamped_to_span(self):
+        t = SpanTimer()
+        t.add("a", 0.5, overlap_s=2.0)           # clamp: at most the span
+        t.add("b", 0.5, overlap_s=-1.0)          # clamp: never negative
+        s = t.summary()
+        assert s["a"]["total_s"] == pytest.approx(0.0)
+        assert s["a"]["busy_s"] == pytest.approx(0.5)
+        assert s["b"]["total_s"] == pytest.approx(0.5)
+        assert "busy_s" not in s["b"]
+
+    def test_span_timer_overlap_free_summary_unchanged(self):
+        """An overlap-free timer must serialize byte-identically to the
+        pre-overlap format (old CountersEvent consumers keep working)."""
+        a, b = SpanTimer(), SpanTimer()
+        a.add("step", 0.25); a.add("step", 0.25)
+        b.add("step", 0.25); b.add("step", 0.25, overlap_s=0.0)
+        assert json.dumps(a.summary()) == json.dumps(b.summary())
+        assert set(a.summary()["step"]) == {"total_s", "count", "mean_ms"}
 
 
 # ---------------------------------------------------------------------------
