@@ -1,0 +1,306 @@
+"""Fig. 10 (beyond-paper): the serve-plane requests/sec-vs-sync-bits
+frontier — DC-DGD's differential coding applied to weight sync for decode
+replicas tracking a live training fleet.
+
+One xlstm_350m-class decode anchor (real prefill + greedy decode_step
+loop, measured once) prices requests/sec; every sync arm then runs the
+SAME ScriptedFleet trajectory through a :class:`repro.serve.ServeSession`
+and is placed on the frontier by the served-request model::
+
+    req_s = N_req / (N_req / decode_tput  +  sync_bits / LINK_RATE)
+
+Arms:
+  * ``ladder``   — Compose(FreshnessController, BudgetComm): differential
+    coding under a hard per-tick sync-bits budget sized to the int8 rung;
+    checkpoints + obs log, killed at KILL_AT and resumed in a fresh
+    harness (the crash-consistency audit);
+  * ``broadcast``— full-weight dense broadcast every tick (the classic
+    deploy: replace, not accumulate) — same freshness, ~30x the bits;
+  * ``broadcast@budget`` — the SAME dense broadcast under the ladder's
+    bits/sec budget: dense never fits, every tick blacks out, staleness
+    grows without bound — full-weight sync cannot hold the staleness
+    target at the differential ladder's link rate;
+  * per-rung static frontier points and the zero-bit ``no-sync`` endpoint.
+
+Acceptance (all gated in benchmarks/run.py):
+  ``ladder_dominates``  — ladder req/s strictly above full broadcast's at
+  bounded tracking error, while broadcast at the ladder's bit rate blows
+  through the staleness target;
+  ``zero_violations``   — ladder ledger: no tick over budget;
+  ``staleness_bounded`` — ladder max staleness <= target;
+  ``resume_bit_exact``  — killed/resumed ladder arm bit-matches (state +
+  obs step tail);
+  ``obs_valid``         — the fig10 event log validates and is
+  self-consistent.
+
+Writes artifacts/bench/BENCH_serve.json and prints a CSV frontier.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adapt import (BudgetController, BudgetPolicy, BudgetSchedule,
+                         ladder_from_specs)
+from repro.comm import (BudgetComm, Compose, SessionCheckpointer,
+                        StaticComm, restore_policy)
+from repro.configs import get_smoke
+from repro.models import alloc_cache, decode_step, init_model, prefill
+from repro.obs import JsonlSink, Recorder, diff_exact, summarize
+from repro.serve import (SERVE_LADDER, FreshnessController, ScriptedFleet,
+                         ServeSession, WeightDeltaWire, head_fanout)
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+ARCH = "xlstm-350m"
+TICKS = 12
+REPLICAS = 2
+TOPOLOGY = "star"
+LADDER = SERVE_LADDER
+STALENESS_TARGET = 2.0
+FLEET_STEPS = 1
+REQ_PER_TICK = 64.0          # served requests between syncs
+LINK_RATE = 1e9              # bits/sec on each head->replica link
+TRACK_TOL = 5e-2             # relative tracking error bound for "useful"
+KILL_AT, CKPT_EVERY = 6, 3
+BATCH, PROMPT, WARM, MEASURE = 2, 8, 4, 16
+
+
+def measure_decode_anchor():
+    """One real decode throughput measurement (tok/s == req/s here):
+    prefill + greedy decode_step against the smoke config's cache."""
+    cfg = get_smoke(ARCH)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab_size)
+    batch_in = {"tokens": toks}
+    if cfg.encdec:
+        batch_in["enc_embeds"] = jax.random.normal(
+            key, (BATCH, min(cfg.frontend_len, PROMPT), cfg.d_model),
+            jnp.bfloat16)
+    cache = alloc_cache(cfg, BATCH, PROMPT + WARM + MEASURE)
+    logits, cache = jax.jit(lambda p, b, c: prefill(p, cfg, b, c))(
+        params, batch_in, cache)
+    dstep = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    t0 = None
+    for i in range(WARM + MEASURE):
+        logits, cache = dstep(params, tok, cache, jnp.int32(PROMPT + i))
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+        tok.block_until_ready()
+        if i + 1 == WARM:
+            t0 = time.perf_counter()
+    dt = time.perf_counter() - t0
+    leaves, _ = jax.tree.flatten(params)
+    return BATCH * MEASURE / dt, [l.shape for l in leaves], leaves
+
+
+def _budget_member(wire, fanout, bits, ladder=LADDER):
+    return BudgetComm(policy=BudgetPolicy(
+        controller=BudgetController(
+            ladder=ladder_from_specs(ladder, level="wire"),
+            shapes=wire.shapes, neighbors=float(fanout), eta_min=0.0),
+        schedule=BudgetSchedule(bits=float(bits)), cadence=1))
+
+
+def build_arm(name, leaves, *, policy_fn, differential=True,
+              obs_path=None, ckpt_dir=None):
+    """One FRESH sync-plane harness over the shared fleet trajectory
+    (ScriptedFleet.advance is pure in (leaves, step): every arm sees the
+    identical weight path)."""
+    wire = WeightDeltaWire([l.shape for l in leaves])
+    fanout = head_fanout(TOPOLOGY, REPLICAS)
+    policy = policy_fn(wire, fanout)
+    recorder = None
+    if obs_path is not None:
+        recorder = Recorder(JsonlSink(str(obs_path)))
+        recorder.emit_manifest(
+            config={"arm": name, "ticks": TICKS, "ladder": list(LADDER),
+                    "staleness_target": STALENESS_TARGET},
+            topology=TOPOLOGY, seed=0)
+    sess = ServeSession(
+        wire=wire, policy=policy, fleet=ScriptedFleet(seed=11, eta=0.02),
+        state=ServeSession.init_state(leaves, REPLICAS),
+        n_replicas=REPLICAS, topology=TOPOLOGY,
+        fleet_steps_per_tick=FLEET_STEPS, differential=differential,
+        decode_fn=lambda tick: (REQ_PER_TICK, 0.0), obs=recorder)
+    ckptr = None
+    if ckpt_dir is not None:
+        ckptr = SessionCheckpointer(directory=str(ckpt_dir), policy=policy,
+                                    every=CKPT_EVERY, retain=0)
+        sess.checkpoint = ckptr
+    return {"name": name, "session": sess, "policy": policy, "wire": wire,
+            "recorder": recorder}
+
+
+def arm_summary(name, res, decode_tput):
+    """Place one finished arm on the frontier."""
+    n_req = float(TICKS * REQ_PER_TICK)
+    wall = n_req / decode_tput + res.sync_bits / LINK_RATE
+    x, xh = res.state["fleet"], res.state["xhat"]
+    num = sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(xh, x))
+    den = sum(float(jnp.sum(a * a)) for a in x)
+    return {
+        "arm": name,
+        "sync_bits": float(res.sync_bits),
+        "sync_bits_per_s": float(res.sync_bits / wall),
+        "req_s": float(n_req / wall),
+        "max_staleness": int(res.max_staleness),
+        "tracking_err": float((num / max(den, 1e-30)) ** 0.5),
+        "bank": dict(res.bank_stats),
+    }
+
+
+def run():
+    ART.mkdir(parents=True, exist_ok=True)
+    base_log = ART / "fig10_run.jsonl"
+    resume_log = ART / "fig10_resume.jsonl"
+    ckpt_dir = ART / "fig10_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    decode_tput, shapes, leaves = measure_decode_anchor()
+    probe = WeightDeltaWire(shapes)
+    fanout = head_fanout(TOPOLOGY, REPLICAS)
+    # the budget affords exactly the int8 rung on every link, never dense
+    budget = float(probe.wire_bits("int8:block=64") * fanout)
+
+    def ladder_policy(wire, fo):
+        return Compose(
+            FreshnessController(ladder=LADDER,
+                                staleness_target=STALENESS_TARGET,
+                                start_index=1),
+            _budget_member(wire, fo, budget))
+
+    arms = {}
+    # ---- ladder (the differential frontier arm; audited) -----------------
+    base = build_arm("ladder", leaves, policy_fn=ladder_policy,
+                     obs_path=base_log, ckpt_dir=ckpt_dir)
+    res = base["session"].run(TICKS)
+    base["recorder"].close()
+    arms["ladder"] = arm_summary("ladder", res, decode_tput)
+
+    # ---- full-weight broadcast, unbudgeted -------------------------------
+    bcast = build_arm("broadcast", leaves, differential=False,
+                      policy_fn=lambda w, fo: StaticComm("dense"))
+    arms["broadcast"] = arm_summary(
+        "broadcast", bcast["session"].run(TICKS), decode_tput)
+
+    # ---- full-weight broadcast AT the ladder's bit rate ------------------
+    # a broadcast-only system has no cheaper rung to fall back to (the
+    # rung ladder is the differential system's asset): its controller
+    # ladder is dense-only, so a budget below dense means blackout
+    starved = build_arm(
+        "broadcast@budget", leaves, differential=False,
+        policy_fn=lambda w, fo: Compose(
+            StaticComm("dense"),
+            _budget_member(w, fo, budget, ladder=("dense",))))
+    arms["broadcast@budget"] = arm_summary(
+        "broadcast@budget", starved["session"].run(TICKS), decode_tput)
+
+    # ---- static per-rung frontier + the no-sync endpoint -----------------
+    for rung in LADDER:
+        arm = build_arm(f"static:{rung}", leaves,
+                        policy_fn=lambda w, fo, r=rung: StaticComm(r))
+        arms[f"static:{rung}"] = arm_summary(
+            f"static:{rung}", arm["session"].run(TICKS), decode_tput)
+    nosync = build_arm("no-sync", leaves,
+                       policy_fn=lambda w, fo: StaticComm("outage"))
+    arms["no-sync"] = arm_summary(
+        "no-sync", nosync["session"].run(TICKS), decode_tput)
+
+    # ---- kill + resume the ladder arm in a fresh harness -----------------
+    from repro.ckpt import checkpoint as ck
+    resumed = build_arm("ladder", leaves, policy_fn=ladder_policy,
+                        obs_path=resume_log)
+    state2, manifest = ck.restore(ckpt_dir, KILL_AT,
+                                  resumed["session"].state,
+                                  strict_shapes=False)
+    restore_policy(resumed["policy"], manifest["extra"]["policy"])
+    resumed["session"].state = state2
+    res2 = resumed["session"].run(TICKS, start_step=KILL_AT)
+    resumed["recorder"].close()
+
+    # ---- audits ----------------------------------------------------------
+    lad, bc, starve = (arms["ladder"], arms["broadcast"],
+                       arms["broadcast@budget"])
+    budget_member = base["policy"].members[-1]
+    spend = budget_member.spend_log
+    budget_viols = sum(1 for e in spend if e[3] > e[1] * (1 + 1e-9))
+    ladder_dominates = bool(
+        lad["req_s"] > bc["req_s"]
+        and lad["sync_bits"] < bc["sync_bits"]
+        and lad["tracking_err"] <= TRACK_TOL
+        and starve["max_staleness"] > STALENESS_TARGET)
+    staleness_bounded = bool(lad["max_staleness"] <= STALENESS_TARGET)
+
+    exact = diff_exact(str(base_log), str(resume_log), from_step=KILL_AT)
+    state_equal = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(res.state),
+                        jax.tree.leaves(res2.state)))
+    rep = summarize(str(base_log))
+    obs_valid = bool(all(rep["consistent"].values())
+                     and rep["derived"]["n_steps"] == TICKS
+                     and rep["counters"].get("budget_violations", 0) == 0)
+
+    return {
+        "arch": ARCH,
+        "ticks": TICKS,
+        "replicas": REPLICAS,
+        "topology": TOPOLOGY,
+        "ladder": list(LADDER),
+        "staleness_target": STALENESS_TARGET,
+        "budget_per_tick": budget,
+        "link_rate_bits_s": LINK_RATE,
+        "decode_tput_req_s": float(decode_tput),
+        "frontier": list(arms.values()),
+        "ladder_dominates": ladder_dominates,
+        "budget_violations": int(budget_viols),
+        "zero_violations": bool(budget_viols == 0),
+        "staleness_bounded": staleness_bounded,
+        "kill_at": KILL_AT,
+        "resume_diff": exact,
+        "resume_state_bit_equal": bool(state_equal),
+        "resume_bit_exact": bool(exact["ok"] and state_equal),
+        "obs_log": str(base_log),
+        "obs_counters": dict(rep["counters"]),
+        "obs_valid": obs_valid,
+    }
+
+
+def main():
+    ART.mkdir(parents=True, exist_ok=True)
+    out = run()
+    (ART / "BENCH_serve.json").write_text(json.dumps(out, indent=1))
+
+    print("name,arm,sync_bits_per_s,req_s,max_staleness,tracking_err")
+    for a in out["frontier"]:
+        print(f"fig10,{a['arm']},{a['sync_bits_per_s']:.4g},"
+              f"{a['req_s']:.2f},{a['max_staleness']},"
+              f"{a['tracking_err']:.3e}")
+    print(f"fig10 anchor: {out['decode_tput_req_s']:.1f} req/s decode, "
+          f"budget {out['budget_per_tick']:.4g} bits/tick, "
+          f"link {out['link_rate_bits_s']:.3g} bits/s")
+    print(f"fig10 audits: dominates={out['ladder_dominates']} "
+          f"violations={out['budget_violations']} "
+          f"staleness_bounded={out['staleness_bounded']} "
+          f"resume_bit_exact={out['resume_bit_exact']} "
+          f"obs_valid={out['obs_valid']}")
+    for m in out["resume_diff"]["mismatches"]:
+        print(f"fig10-resume-mismatch,{m}")
+    ok = (out["ladder_dominates"] and out["zero_violations"]
+          and out["staleness_bounded"] and out["resume_bit_exact"]
+          and out["obs_valid"])
+    print(f"fig10 acceptance: {'ALL OK' if ok else 'FAIL'} "
+          f"-> {ART / 'BENCH_serve.json'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -36,6 +36,13 @@ _ARTIFACT_FLAGS = {
     # kernel-baseline exactness vs the ref oracles (dict flag: every
     # kernel entry must be True) — timings are reported, never gated
     "BENCH_roofline.json": ("kernels_ok",),
+    # serve plane: the differential ladder beats full-weight broadcast on
+    # the req/s-vs-sync-bits frontier (and broadcast at the ladder's bit
+    # rate cannot hold the staleness target), with a hard budget, bounded
+    # staleness, and a bit-exact kill/resume of the serving session
+    "BENCH_serve.json": ("ladder_dominates", "zero_violations",
+                         "staleness_bounded", "resume_bit_exact",
+                         "obs_valid"),
 }
 
 
@@ -91,7 +98,8 @@ def stamp_provenance(art_dir: Path = ART) -> int:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,...,fig6,fig8,fig9,roofline,wire")
+                    help="comma list: fig1,...,fig6,fig8,fig9,fig10,"
+                         "roofline,wire")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI probe: gossip-step microbenchmark "
                          "only (refreshes artifacts/bench/BENCH_gossip.json); "
@@ -102,7 +110,7 @@ def main(argv=None):
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
                    fig4_adaptive, fig5_budget, fig6_topology, fig8_chaos,
-                   fig9_async, roofline, wire_micro)
+                   fig9_async, fig10_serve, roofline, wire_micro)
     if args.smoke:
         print("==== gossip (smoke) ====", flush=True)
         r = wire_micro.main(smoke=True)
@@ -117,6 +125,7 @@ def main(argv=None):
         "fig6": fig6_topology.main,
         "fig8": fig8_chaos.main,
         "fig9": fig9_async.main,
+        "fig10": fig10_serve.main,
         "wire": wire_micro.main,
         "roofline": roofline.main,
     }

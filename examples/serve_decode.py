@@ -1,6 +1,12 @@
-"""Serving example: prefill a batch of prompts, then batched greedy decode
-against the sharded KV/SSM cache — runs every assigned architecture's
-reduced config on CPU.
+"""Serving example: decode replicas live-tracking a moving training fleet.
+
+Migrated onto :class:`repro.serve.ServeSession` — a ScriptedFleet drifts
+the weights every tick while the session interleaves batched greedy
+decode with differential-coded weight sync (DC-DGD applied to the serve
+plane: only d_t = x_t - x_hat_{t-1} crosses the wire).  The printed
+tracking error ||x_hat - x|| / ||x|| shows the replicas staying glued to
+the fleet at a fraction of full-broadcast bits; the decoded tokens come
+from the live, continuously-updated params.
 
     PYTHONPATH=src python examples/serve_decode.py [--arch qwen3-8b]
 """
@@ -12,11 +18,14 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_smoke
 from repro.models import alloc_cache, decode_step, init_model, prefill
+from repro.serve import (FreshnessController, ScriptedFleet, ServeSession,
+                         WeightDeltaWire)
 
 
-def serve(name: str, batch=2, prompt_len=16, gen=24):
+def serve(name: str, batch=2, prompt_len=16, ticks=6, gen=4):
     cfg = get_smoke(name)
     params = init_model(jax.random.PRNGKey(0), cfg)
+    leaves, treedef = jax.tree.flatten(params)
     key = jax.random.PRNGKey(1)
     toks = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
     batch_in = {"tokens": toks}
@@ -24,21 +33,59 @@ def serve(name: str, batch=2, prompt_len=16, gen=24):
         batch_in["enc_embeds"] = jax.random.normal(
             key, (batch, min(cfg.frontend_len, prompt_len), cfg.d_model),
             jnp.bfloat16)
-    cache = alloc_cache(cfg, batch, prompt_len + gen)
-    t0 = time.time()
+    cache = alloc_cache(cfg, batch, prompt_len + ticks * gen)
     logits, cache = jax.jit(lambda p, b, c: prefill(p, cfg, b, c))(
         params, batch_in, cache)
     dstep = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
-    out = []
-    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
-    for i in range(gen):
-        out.append(tok)
-        logits, cache = dstep(params, tok, cache, jnp.int32(prompt_len + i))
-        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
-    dt = time.time() - t0
-    seqs = jnp.stack(out, 1)
-    print(f"{name:28s} generated {seqs.shape} in {dt:5.1f}s "
-          f"({batch * gen / dt:6.1f} tok/s) sample: {seqs[0, :8].tolist()}")
+    box = {"params": params, "cache": cache,
+           "tok": jnp.argmax(logits[:, :cfg.vocab_size], -1)
+           .astype(jnp.int32), "pos": prompt_len, "out": []}
+
+    def decode_fn(tick):
+        ts = time.perf_counter()
+        for _ in range(gen):
+            box["out"].append(box["tok"])
+            lg, box["cache"] = dstep(box["params"], box["tok"],
+                                     box["cache"], jnp.int32(box["pos"]))
+            box["tok"] = jnp.argmax(lg[:, :cfg.vocab_size], -1) \
+                .astype(jnp.int32)
+            box["pos"] += 1
+        box["tok"].block_until_ready()
+        return (batch * gen, time.perf_counter() - ts)
+
+    def on_sync(tick, applied_leaves):
+        # fold the decoded differential into the live decode params
+        delta = jax.tree.unflatten(treedef, list(applied_leaves))
+        box["params"] = jax.tree.map(
+            lambda a, d: a + d.astype(a.dtype), box["params"], delta)
+
+    wire = WeightDeltaWire([l.shape for l in leaves])
+
+    def on_log(i, m, ran):
+        x = session.state["fleet"]
+        xh = session.state["xhat"]
+        num = sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(xh, x))
+        den = sum(float(jnp.sum(a ** 2)) for a in x)
+        err = (num / max(den, 1e-30)) ** 0.5
+        print(f"  tick {i}: wire {str(ran):24s} "
+              f"sync {m['sync_bits']:.3g} bits  tracking err {err:.2e}  "
+              f"{m['requests'] / max(m['decode_wall_s'], 1e-9):6.1f} tok/s")
+
+    session = ServeSession(
+        wire=wire,
+        policy=FreshnessController(
+            ladder=("dense", "int8:block=64", "ternary:block=64"),
+            staleness_target=2.0, start_index=1, upgrade=0.0),
+        fleet=ScriptedFleet(seed=7, eta=0.01),
+        state=ServeSession.init_state(leaves, n_replicas=2),
+        n_replicas=2, decode_fn=decode_fn, on_sync=on_sync,
+        log_every=1, on_log=on_log)
+    print(f"{name}:")
+    res = session.run(ticks)
+    seqs = jnp.stack(box["out"], 1)
+    print(f"{name:28s} generated {seqs.shape} over {res.n_ticks} ticks "
+          f"({res.sync_bits:.3g} sync bits, max staleness "
+          f"{res.max_staleness}) sample: {seqs[0, :8].tolist()}")
 
 
 def main():

@@ -168,6 +168,46 @@ PY
             echo "cli-smoke $mode: FAIL (metrics check)"; rc=1
         fi
     done
+    # serve plane: differential weight sync for 2 decode replicas under a
+    # hard per-tick sync budget (sized to the int8 rung on both star
+    # links), with checkpointing; the checker gates on zero budget
+    # violations, max staleness <= target, and checkpoint presence
+    echo "== cli-smoke: serve =="
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+            python -m repro.launch.serve_cli --arch xlstm-350m --smoke \
+            --replicas 2 --topology star --ticks 6 --gen 2 --batch 2 \
+            --prompt-len 4 --wire int8:block=64 --sync-ladder "$LADDER" \
+            --sync-budget 3000000 --staleness-target 2 \
+            --ckpt-every 3 --ckpt-dir "$TMP/serve-ckpt" \
+            --metrics-out "$TMP/serve.json" --obs "$TMP/serve.jsonl"; then
+        echo "cli-smoke serve: FAIL (nonzero exit)"; rc=1
+    elif ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+            python -m repro.launch.obs_cli validate "$TMP/serve.jsonl"; then
+        echo "cli-smoke serve: FAIL (obs validate)"; rc=1
+    elif ! python - "$TMP/serve.jsonl" "$TMP/serve.json" \
+            "$TMP/serve-ckpt" <<'PY'
+import json, pathlib, sys
+recs = [json.loads(l) for l in open(sys.argv[1])]
+counters = next(r["counters"] for r in recs if r.get("kind") == "counters")
+assert counters.get("budget_violations", 0) == 0, counters
+steps = [r for r in recs if r.get("kind") == "step"]
+assert steps, "no step events"
+assert all(r.get("staleness") is not None and r["staleness"] <= 2
+           for r in steps), [r.get("staleness") for r in steps]
+assert all(r.get("sync_bits") is not None and r.get("replica") is not None
+           for r in steps), "missing serve sync fields"
+rows = json.load(open(sys.argv[2]))
+assert rows, "no metrics rows"
+need = {"step", "wire", "requests", "sync_bits", "staleness", "tok_s"}
+missing = need - set(rows[-1])
+assert not missing, f"missing metrics keys: {sorted(missing)}"
+assert list(pathlib.Path(sys.argv[3]).glob("step_*")), "no checkpoint"
+print(f"cli-smoke serve: OK ({len(steps)} ticks, max staleness "
+      f"{max(r['staleness'] for r in steps)}, counters {counters})")
+PY
+    then
+        echo "cli-smoke serve: FAIL (serve checks)"; rc=1
+    fi
     exit $rc
 fi
 

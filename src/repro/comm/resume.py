@@ -167,6 +167,12 @@ def _is_topology(m: Any) -> bool:
     return hasattr(m, "maybe_switch") and hasattr(m, "topologies")
 
 
+def _is_freshness(m: Any) -> bool:
+    # serve-plane FreshnessController (repro.serve.freshness) — duck-typed
+    # like the topology rule so comm never imports the serve package
+    return hasattr(m, "note_staleness") and hasattr(m, "staleness_ema")
+
+
 def _wall_sched(pol: Any) -> Optional[Any]:
     sched = pol.schedule
     if hasattr(sched, "record_wall_time"):
@@ -236,6 +242,12 @@ def _snap_member(m: Any) -> dict:
                 "struct": _key_enc(st.struct),
                 "carry": None if st.carry is None else _tree_enc(
                     jax.tree.map(np.asarray, st.carry))}
+    if _is_freshness(m):
+        return {"kind": "serve",
+                "index": int(m.index),
+                "staleness_ema": float(m.staleness_ema),
+                "count": int(m.count),
+                "held": _plan_enc(m._held)}
     if hasattr(m, "pre_decide"):             # ChaosComm: schedule-pure
         return {"kind": "chaos"}
     if isinstance(m, OutageComm):
@@ -330,6 +342,13 @@ def _restore_member(m: Any, snap: dict) -> None:
         m.state.struct = _key_dec(snap["struct"])
         m.state.carry = (None if snap["carry"] is None
                          else _tree_dec(snap["carry"]))
+        return
+    if kind == "serve":
+        assert _is_freshness(m), type(m).__name__
+        m.index = int(snap["index"])
+        m.staleness_ema = float(snap["staleness_ema"])
+        m.count = int(snap["count"])
+        m._held = _plan_dec(snap["held"])
         return
     if kind in ("chaos", "outage", "static"):
         return                                # schedule-pure, nothing moves

@@ -1,76 +1,269 @@
-"""Serving launcher: ``python -m repro.launch.serve_cli --arch qwen3-8b
---smoke`` — prefill a batch of synthetic prompts and decode with temperature
-sampling against the sharded KV/SSM cache, reporting tokens/s.
+"""Serve-plane launcher: decode replicas live-tracking a training fleet.
 
-Production shapes are exercised through launch/dryrun.py (this container
-executes CPU-sized configs only).
+The front door to :mod:`repro.serve` — same flag grammar as
+``launch/train.py``, same session architecture: a ScriptedFleet advances
+the weights in-process, a :class:`~repro.serve.session.ServeSession`
+interleaves real sharded decode batches (``Server.jit_decode``) with
+differential-coded sync ticks, a FreshnessController (optionally composed
+with a hard BudgetComm sync-bits budget) picks the rung, and the decoded
+deltas land in the live serving params through the donation-safe
+``Server.update_params`` path (never a re-placement, never a recompile).
+
+    PYTHONPATH=src python -m repro.launch.serve_cli --arch xlstm-350m \
+        --smoke --replicas 2 --ticks 8 --wire int8:block=64 \
+        --sync-budget 2e6 --staleness-target 2 --obs /tmp/serve.jsonl
 """
+from __future__ import annotations
+
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.8)
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=4,
+                    help="decode steps per serve tick")
+    ap.add_argument("--ticks", type=int, default=8,
+                    help="serve ticks (decode batch + sync) to run")
+    ap.add_argument("--no-decode", action="store_true",
+                    help="sync plane only (skip the real decode batches)")
+    ap.add_argument("--mesh", default="auto",
+                    help="'auto' or 'DxM' / 'PxDxM' device mesh")
     ap.add_argument("--kv-dtype", default="bfloat16",
                     choices=["bfloat16", "int8"])
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    # fleet
+    ap.add_argument("--fleet-steps", type=int, default=1,
+                    help="trainer steps the fleet advances per serve tick")
+    ap.add_argument("--fleet-eta", type=float, default=0.02,
+                    help="scripted-fleet drift scale")
+    # sync plane
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--topology", default="star",
+                    help="replica sync topology: star (head sends to every "
+                         "replica) or ring (head sends once, replicas "
+                         "forward)")
+    ap.add_argument("--wire", default="int8:block=64",
+                    help="opening sync rung (WireSpec)")
+    ap.add_argument("--sync-ladder",
+                    default="dense;int8:block=64;hybrid:block=64,top_j=4;"
+                            "ternary:block=64",
+                    help="';'-separated rung ladder, conservative->cheap")
+    ap.add_argument("--sync-budget", type=float, default=0.0,
+                    help="hard sync-bits budget per tick across the head's "
+                         "links (0 = uncapped)")
+    ap.add_argument("--token-bucket", action="store_true",
+                    help="bank unused sync budget across ticks")
+    ap.add_argument("--staleness-target", type=float, default=4.0,
+                    help="replica steps-behind bound the freshness "
+                         "controller trades bits against")
+    ap.add_argument("--sync-cadence", type=int, default=1,
+                    help="freshness-controller ladder-walk cadence (ticks)")
+    ap.add_argument("--use-pallas-wire", action="store_true",
+                    help="fused Pallas row codecs for supported rungs")
+    # persistence / telemetry
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--obs", default="",
+                    help="structured event log (repro.obs JSONL)")
+    ap.add_argument("--log-every", type=int, default=1)
+    return ap
 
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
     import jax
     import jax.numpy as jnp
 
-    from ..configs import get_smoke
-    from ..models import (alloc_cache, decode_step, init_cache_specs,
-                          init_model, prefill)
-
-    cfg = get_smoke(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_model(key, cfg)
-    b, pl, gen = args.batch, args.prompt_len, args.gen
-
-    batch = {"tokens": jax.random.randint(key, (b, pl), 0, cfg.vocab_size)}
-    if cfg.encdec:
-        batch["enc_embeds"] = jax.random.normal(
-            key, (b, min(cfg.frontend_len, pl), cfg.d_model), jnp.bfloat16)
-
-    kv_dtype = jnp.int8 if args.kv_dtype == "int8" else jnp.bfloat16
-    specs = init_cache_specs(cfg, b, pl + gen, kv_dtype)
-    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+    from ..adapt import (BudgetController, BudgetPolicy, BudgetSchedule,
+                         TokenBucket, ladder_from_specs)
+    from ..comm import BudgetComm, Compose, SessionCheckpointer, WireSpec
+    from ..compat import set_mesh
+    from ..configs import (ShapeConfig, default_run_config, get_arch,
+                           get_smoke)
+    from ..models import alloc_cache, init_model
+    from ..serve import (FreshnessController, ScriptedFleet, ServeSession,
+                         WeightDeltaWire, head_fanout)
+    from ..train.serve import make_server
+    from .mesh import make_test_mesh
 
     t0 = time.time()
-    logits, cache = jax.jit(lambda p, bt, c: prefill(p, cfg, bt, c))(
-        params, batch, cache)
-    t_prefill = time.time() - t0
-    print(f"[{cfg.name}] prefill {b}x{pl} in {t_prefill:.2f}s "
-          f"(kv={args.kv_dtype})")
-
-    dstep = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
-    out = []
-    k = key
-    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
-    t0 = time.time()
-    for i in range(gen):
-        out.append(tok)
-        logits, cache = dstep(params, tok, cache, jnp.int32(pl + i))
-        k, sk = jax.random.split(k)
-        if args.temperature > 0:
-            tok = jax.random.categorical(
-                sk, logits[:, : cfg.vocab_size] / args.temperature, -1
-            ).astype(jnp.int32)
+    n_dev = len(jax.devices())
+    if args.mesh == "auto":
+        if n_dev >= 8:
+            shape_axes = ((n_dev // 2, 2), ("data", "model"))
+        elif n_dev > 1:
+            shape_axes = ((n_dev, 1), ("data", "model"))
         else:
-            tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    seqs = jnp.stack(out, 1)
-    print(f"[{cfg.name}] decoded {b}x{gen} in {dt:.2f}s "
-          f"({b * gen / dt:.1f} tok/s); sample row: {seqs[0, :10].tolist()}")
+            shape_axes = ((1, 1), ("data", "model"))
+    else:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = (("data", "model") if len(dims) == 2
+                else ("pod", "data", "model"))
+        shape_axes = (dims, axes)
+    mesh = make_test_mesh(*shape_axes)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    run_cfg = default_run_config(args.arch, kv_dtype=args.kv_dtype)
+    seq_len = args.prompt_len + args.ticks * args.gen
+    shape = ShapeConfig(name="serve_decode", seq_len=seq_len,
+                        global_batch=args.batch, kind="decode")
+
+    # fleet weights: the real model's param tree (f32 master); the serving
+    # copy lives in bf16 behind the Server's construction-time placement
+    params0 = init_model(jax.random.PRNGKey(args.seed), cfg)
+    leaves0, treedef = jax.tree.flatten(params0)
+    assert all(jnp.issubdtype(l.dtype, jnp.floating) for l in leaves0), \
+        "serve sync assumes an all-float param tree"
+    wire = WeightDeltaWire([l.shape for l in leaves0],
+                           use_pallas=args.use_pallas_wire)
+
+    ladder = tuple(s.strip() for s in args.sync_ladder.split(";")
+                   if s.strip())
+    opening = WireSpec.parse(args.wire).canonical()
+    canon = [WireSpec.parse(s).canonical() for s in ladder]
+    start_index = canon.index(opening) if opening in canon else 0
+    fresh = FreshnessController(ladder=ladder,
+                                staleness_target=args.staleness_target,
+                                cadence=args.sync_cadence,
+                                start_index=start_index)
+    fanout = head_fanout(args.topology, args.replicas)
+    members = [fresh]
+    if args.sync_budget > 0:
+        ctl = BudgetController(
+            ladder=ladder_from_specs(ladder, level="wire"),
+            shapes=wire.shapes, neighbors=float(fanout), eta_min=0.0)
+        bucket = (TokenBucket(capacity=4.0 * args.sync_budget)
+                  if args.token_bucket else None)
+        members.append(BudgetComm(policy=BudgetPolicy(
+            controller=ctl, schedule=BudgetSchedule(bits=args.sync_budget),
+            cadence=max(args.sync_cadence, 1), bucket=bucket)))
+    policy = members[0] if len(members) == 1 else Compose(*members)
+
+    obs = None
+    if args.obs:
+        from ..obs import JsonlSink, Recorder
+        obs = Recorder(JsonlSink(args.obs))
+        obs.emit_manifest(config=dict(vars(args)), wire=opening,
+                          topology=args.topology, seed=args.seed,
+                          n_devices=n_dev, jax_version=jax.__version__,
+                          backend=jax.default_backend())
+
+    history = []
+    with set_mesh(mesh):
+        fleet = ScriptedFleet(seed=args.seed + 1, eta=args.fleet_eta)
+        state = ServeSession.init_state(leaves0, args.replicas)
+
+        # live serving stack fed by replica 0's reconstruction
+        decode_fn = on_sync = None
+        if not args.no_decode:
+            server = make_server(mesh, cfg, run_cfg, shape)
+            params = jax.tree.map(
+                lambda x: (x.astype(jnp.bfloat16)
+                           if jnp.issubdtype(x.dtype, jnp.floating)
+                           else x), params0)
+            cache = alloc_cache(cfg, args.batch, seq_len,
+                                server.kv_dtype,
+                                window_bounded=server.window_bounded)
+            toks = jax.random.randint(jax.random.PRNGKey(args.seed + 2),
+                                      (args.batch, args.prompt_len), 0,
+                                      cfg.vocab_size)
+            batch_in = {"tokens": toks}
+            if cfg.encdec:
+                batch_in["enc_embeds"] = jax.random.normal(
+                    jax.random.PRNGKey(args.seed + 3),
+                    (args.batch, min(cfg.frontend_len, args.prompt_len),
+                     cfg.d_model), jnp.bfloat16)
+            jpre = server.jit_prefill(donate=True)
+            jdec = server.jit_decode(donate=True)
+            logits, cache = jpre(params, batch_in, cache)
+            box = {"params": params, "cache": cache,
+                   "tok": jnp.argmax(logits[:, :cfg.vocab_size], -1)
+                   .astype(jnp.int32), "pos": args.prompt_len}
+
+            def decode_fn(tick):
+                ts = time.perf_counter()
+                for _ in range(args.gen):
+                    lg, box["cache"] = jdec(box["params"], box["tok"],
+                                            box["cache"],
+                                            jnp.int32(box["pos"]))
+                    box["tok"] = jnp.argmax(
+                        lg[:, :cfg.vocab_size], -1).astype(jnp.int32)
+                    box["pos"] += 1
+                box["tok"].block_until_ready()
+                return (args.batch * args.gen, time.perf_counter() - ts)
+
+            def on_sync(tick, applied_leaves):
+                delta = jax.tree.unflatten(treedef, list(applied_leaves))
+                box["params"] = server.update_params(box["params"], delta)
+
+        ckptr = None
+        start = 0
+        if args.ckpt_dir:
+            ckptr = SessionCheckpointer(directory=args.ckpt_dir,
+                                        policy=policy,
+                                        every=args.ckpt_every)
+            resumed = ckptr.resume(
+                ServeSession.init_state(leaves0, args.replicas),
+                strict_shapes=False)
+            if resumed is not None:
+                state, manifest = resumed
+                start = int(manifest["step"])
+                print(f"resumed from {args.ckpt_dir} at tick {start}")
+
+        def on_log(i, m, ran):
+            row = {"step": int(m["step"]), "wire": str(ran),
+                   "requests": m["requests"],
+                   "decode_wall_s": m["decode_wall_s"],
+                   "sync_bits": m["sync_bits"],
+                   "staleness": m["staleness"],
+                   "replica": m["replica"],
+                   "tok_s": (m["requests"] / m["decode_wall_s"]
+                             if m["decode_wall_s"] else 0.0),
+                   "wall_s": time.time() - t0}
+            history.append(row)
+            print(f"tick {i:4d}  wire {str(ran):28s} "
+                  f"sync {m['sync_bits']:.3g} bits  "
+                  f"staleness {m['staleness']}  "
+                  f"{row['tok_s']:8.1f} tok/s")
+
+        session = ServeSession(
+            wire=wire, policy=policy, fleet=fleet, state=state,
+            n_replicas=args.replicas, topology=args.topology,
+            fleet_steps_per_tick=args.fleet_steps, seed=args.seed,
+            decode_fn=decode_fn, on_sync=on_sync,
+            log_every=args.log_every, on_log=on_log,
+            checkpoint=ckptr, obs=obs)
+        res = session.run(args.ticks, start_step=start)
+
+    budget = next((m for m in members if hasattr(m, "spend_log")), None)
+    if budget is not None and budget.spend_log:
+        spent = sum(e[3] for e in budget.spend_log)
+        budg = sum(e[1] for e in budget.spend_log)
+        capped = sum(1 for e in budget.spend_log
+                     if e[4] not in ("proposal", "hold"))
+        over = sum(1 for e in budget.spend_log
+                   if e[3] > e[1] * (1.0 + 1e-9))
+        print(f"sync budget: spent {spent:.3g} of {budg:.3g} "
+              f"({spent / max(budg, 1e-9):.1%}); capped/blackout ticks "
+              f"{capped}; over-budget ticks {over}")
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(json.dumps(history, indent=1))
+    req_s = (res.requests / res.decode_wall_s if res.decode_wall_s else 0.0)
+    print(f"done: {res.n_ticks} ticks in {res.wall_s:.1f}s; "
+          f"{res.requests:.0f} requests ({req_s:.1f} req/s decode), "
+          f"{res.sync_bits:.3g} sync bits, "
+          f"max staleness {res.max_staleness} "
+          f"(target {args.staleness_target:g}); bank {res.bank_stats}")
     return 0
 
 

@@ -112,6 +112,13 @@ class StepEvent(_Event):
     # additive v=1 extension — absent/None on sync steps and in old logs,
     # no SCHEMA_VERSION bump.
     gossip_delay: Optional[int] = None
+    # serve sync plane (repro.serve): the reported replica id, its
+    # steps-behind staleness after the tick, and the tick's sync payload
+    # bits across the head's links.  Same additive v=1 policy as
+    # gossip_delay — absent on training steps and in old logs.
+    replica: Optional[int] = None
+    staleness: Optional[float] = None
+    sync_bits: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,7 +190,8 @@ _FIELD_TYPES: Dict[str, Dict[str, tuple]] = {
     "step": {"step": (int,), "plan": (str,), "bits": (int, float),
              "wall_ms": (int, float), "loss": (int, float),
              "snr": (int, float), "outage": (bool,),
-             "gossip_delay": (int,)},
+             "gossip_delay": (int,), "replica": (int,),
+             "staleness": (int, float), "sync_bits": (int, float)},
     "switch": {"step": (int,), "old": (str,), "new": (str,)},
     "fault": {"step": (int,), "drops": (list, tuple), "cause": (str,),
               "node": (int,), "edge": (str,)},
@@ -484,9 +492,22 @@ class Recorder:
                 delay = int(metrics["gossip_delay"])
             except Exception:
                 delay = None
+        replica = staleness = sync_bits = None
+        if metrics:
+            try:
+                if metrics.get("replica") is not None:
+                    replica = int(metrics["replica"])
+                if metrics.get("staleness") is not None:
+                    staleness = _finite(float(metrics["staleness"]))
+                if metrics.get("sync_bits") is not None:
+                    sync_bits = _finite(float(metrics["sync_bits"]))
+            except Exception:
+                replica = staleness = sync_bits = None
         self.emit(StepEvent(step=step, plan=str(key), bits=_finite(bits),
                             wall_ms=_finite(wall_ms), loss=loss, snr=snr,
-                            outage=outage, gossip_delay=delay))
+                            outage=outage, gossip_delay=delay,
+                            replica=replica, staleness=staleness,
+                            sync_bits=sync_bits))
 
     def on_fault(self, step: int, *, cause: Optional[str] = None,
                  node: Optional[int] = None, edge: Optional[str] = None,

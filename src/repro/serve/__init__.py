@@ -1,0 +1,35 @@
+"""repro.serve — the sync plane between a training fleet and decode replicas.
+
+A serve replica tracking a moving training fleet is the paper's "noisy
+copy converging to the iterate" problem on weight deltas instead of
+gradients: the fleet head emits per-leaf differentials
+``d_t = x_t - x_hat_{t-1}`` against the replica's last acknowledged
+reconstruction, codes them through the SAME flat-wire rungs the gossip
+path uses, and the replica decode-accumulates between decode batches.
+Because both ends replay the identical decode, the reconstruction chain
+is bit-exact on both sides — DC-DGD's differential recursion, so the
+compression self-noise vanishes as training converges.
+
+  * :class:`~repro.serve.sync.WeightDeltaWire` — the codec
+    (core.wire flat plans + kernels.ops fused decode-axpy);
+  * :class:`~repro.serve.freshness.FreshnessController` — a CommPolicy
+    proposer trading sync bits against a steps-behind staleness target
+    (compose it with BudgetComm for a hard sync-bits/tick link budget);
+  * :class:`~repro.serve.session.ServeSession` — the driver interleaving
+    decode batches with sync ticks, obs events, and crash-consistent
+    checkpoints (policy snapshot kind "serve" in repro.comm.resume).
+"""
+from .freshness import FreshnessController
+from .session import (SERVE_LADDER, ScriptedFleet, ServeResult, ServeSession,
+                      head_fanout)
+from .sync import WeightDeltaWire
+
+__all__ = [
+    "FreshnessController",
+    "SERVE_LADDER",
+    "ScriptedFleet",
+    "ServeResult",
+    "ServeSession",
+    "WeightDeltaWire",
+    "head_fanout",
+]

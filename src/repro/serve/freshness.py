@@ -1,0 +1,87 @@
+"""FreshnessController — staleness-targeted rung selection for weight sync.
+
+A CommPolicy-protocol proposer (``observe``/``decide``) that trades sync
+bits against a replica staleness target: the ServeSession reports each
+tick's steps-behind through :meth:`note_staleness`, the controller keeps
+an EMA, and at its cadence walks a rung ladder (conservative -> cheap,
+the adapt-ladder convention) — cheaper rungs when the EMA exceeds the
+target (smaller payloads clear a hard TokenBucket link budget every
+tick, which is what actually bounds staleness), richer rungs with
+hysteresis when there is headroom.  ``Compose(freshness, budget,
+outage)`` works unchanged: freshness proposes, BudgetComm caps against
+the sync-bits budget, OutageComm blacks out ticks.
+
+Snapshot kind "serve" in :mod:`repro.comm.resume` (duck-typed on
+``note_staleness``/``staleness_ema``, like the topology rule) makes a
+mid-run kill/resume bit-exact: index, EMA, tick count and the held plan
+all round-trip through the SessionCheckpointer manifest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from ..comm.policy import PerLeafPlan, StepTelemetry
+
+
+@dataclasses.dataclass
+class FreshnessController:
+    """See module docstring.  ``ladder`` is ordered conservative (most
+    bits) -> aggressive (fewest); ``upgrade`` is the hysteresis fraction
+    of the target below which the controller steps back toward richer
+    rungs (0 disables upgrades)."""
+    ladder: Tuple[str, ...]
+    staleness_target: float
+    cadence: int = 1
+    ema_decay: float = 0.5
+    upgrade: float = 0.5
+    start_index: int = 0
+    # telemetry arrives via note_staleness, not StepTelemetry: skip the
+    # per-step device->host power sync unless a composed member wants it
+    consumes_telemetry = False
+
+    def __post_init__(self) -> None:
+        assert self.ladder, "freshness ladder must not be empty"
+        self.index = min(max(int(self.start_index), 0), len(self.ladder) - 1)
+        self.staleness_ema = 0.0
+        self.count = 0
+        self._held: Optional[PerLeafPlan] = None
+
+    # -- session feedback ---------------------------------------------------
+    def note_staleness(self, steps_behind: float) -> None:
+        """One tick's replica steps-behind (max over replicas)."""
+        s = float(steps_behind)
+        if self.count == 0:
+            self.staleness_ema = s
+        else:
+            self.staleness_ema = (self.ema_decay * self.staleness_ema
+                                  + (1.0 - self.ema_decay) * s)
+        self.count += 1
+
+    # -- CommPolicy protocol ------------------------------------------------
+    def observe(self, t: StepTelemetry) -> None:
+        pass
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        if self._held is None:
+            self._held = PerLeafPlan.uniform(self.ladder[self.index])
+            return self._held
+        if self.count == 0 or step % max(self.cadence, 1) != 0:
+            return self._held
+        idx = self.index
+        if (self.staleness_ema > self.staleness_target
+                and idx + 1 < len(self.ladder)):
+            idx += 1                                   # cheaper: catch up
+        elif (self.upgrade > 0.0 and idx > 0
+              and self.staleness_ema <= self.upgrade * self.staleness_target):
+            idx -= 1                                   # richer: headroom
+        if idx != self.index:
+            self.index = idx
+            self._held = PerLeafPlan.uniform(self.ladder[idx])
+        return self._held
+
+    # TopologyComm retarget hook (no floor to move here, but a composed
+    # topology switch must not crash on the member walk)
+    def retarget(self, eta_min: float, neighbors: Optional[int] = None
+                 ) -> None:
+        pass

@@ -1,0 +1,313 @@
+"""ServeSession — the driver interleaving decode batches with sync ticks.
+
+Mirrors :class:`repro.comm.session.TrainSession`'s contract exactly so
+every piece of the comm stack drops in unchanged:
+
+  * the active :class:`~repro.comm.policy.PerLeafPlan` keys into a
+    :class:`~repro.adapt.plan_bank.PlanBank` of pre-built jitted sync
+    steps (a rung switch is a dict lookup, never a recompile);
+  * per-tick telemetry (differential / codec-noise powers) flows into
+    ``policy.observe`` and the tick's steps-behind into every member
+    exposing ``note_staleness`` (the FreshnessController);
+  * ``policy.decide(i + 1)`` runs only for ticks that will execute, and
+    the checkpoint hook fires BEFORE it — the snapshot must not contain
+    the next decision's ledger entry, which is what makes a killed and
+    resumed session replay bit-exactly (policy kinds "serve" and
+    "budget" in ``repro.comm.resume``);
+  * an attached ``repro.obs.Recorder`` gets one step event per tick,
+    stamped with the serve sync fields (replica / staleness /
+    sync_bits), plan switches, bank builds and the closing counters
+    audit.
+
+State is one pytree of arrays — fleet params, the reconstruction chain
+``x_hat``, each replica's copy of it (bit-identical by construction;
+asserting that IS the round-trip test), and the per-replica staleness
+counters — so the ordinary :class:`~repro.comm.resume.SessionCheckpointer`
+snapshots it with the policy state riding in the manifest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..adapt.plan_bank import PlanBank
+from ..comm.policy import CommPolicy, Key, PerLeafPlan, StepTelemetry
+from .sync import WeightDeltaWire
+
+# serve-plane default rung ladder, conservative -> aggressive (block 64:
+# smoke-scale d_model pads cleanly; pass your own for TPU-width rows)
+SERVE_LADDER = ("dense", "int8:block=64", "hybrid:block=64,top_j=4",
+                "ternary:block=64")
+
+
+def head_fanout(topology: Any, n_replicas: int) -> int:
+    """Outgoing payload copies the fleet head pays per sync tick: ``star``
+    sends to every replica; ``ring`` sends one copy that replicas forward
+    around the ring within the tick (the head's link budget prices only
+    its own egress, the DC-DGD link model)."""
+    name = str(topology).split(":")[0].strip().lower()
+    if name in ("star", "dense", "complete"):
+        return max(int(n_replicas), 1)
+    if name == "ring":
+        return 1
+    raise ValueError(f"unknown serve topology {topology!r} "
+                     f"(expected star or ring)")
+
+
+@dataclasses.dataclass
+class ScriptedFleet:
+    """In-process stand-in for a training fleet: a deterministic jitted
+    drift ``x_{t+1} = x_t + eta/sqrt(t+1) * u_t`` with ``u_t`` drawn from
+    ``fold_in(seed, t)`` — a converging-step-size trainer, so the weight
+    differentials shrink over ticks and the codec's self-noise-reduction
+    regime is visible.  ``advance`` is pure in (leaves, step): a resumed
+    session replays the identical trajectory."""
+    seed: int = 0
+    eta: float = 0.02
+
+    def __post_init__(self) -> None:
+        self._key = jax.random.PRNGKey(self.seed)
+
+        def _step(leaves, step):
+            ks = jax.random.split(jax.random.fold_in(self._key, step),
+                                  len(leaves))
+            scale = self.eta * jax.lax.rsqrt(1.0 + step.astype(jnp.float32))
+            return tuple(
+                x + scale * jax.random.normal(k, x.shape, jnp.float32)
+                for x, k in zip(leaves, ks))
+
+        self._jit = jax.jit(_step)
+
+    def advance(self, leaves: Sequence[jax.Array], step: int) -> tuple:
+        return self._jit(tuple(leaves), jnp.int32(step))
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """What one ``session.run`` produced (TrainSession's SessionResult
+    plus the serve headline totals)."""
+    state: Any
+    n_ticks: int
+    history: List[Dict[str, Any]]
+    wire_log: List[Tuple[int, Key]]
+    plan_per_step: List[Key]
+    bank_stats: Dict[str, int]
+    wall_s: float
+    requests: float
+    decode_wall_s: float
+    sync_bits: float
+    max_staleness: int
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """See module docstring.  ``decode_fn(tick) -> (requests,
+    decode_wall_s)`` runs the decode batches between syncs (None skips —
+    the pure sync-plane tests); ``on_sync(tick, applied_delta_leaves)``
+    pushes the decoded update into a live :class:`~repro.train.serve
+    .Server` via its donation-safe ``update_params``."""
+    wire: WeightDeltaWire
+    policy: CommPolicy
+    fleet: Any                                # .advance(leaves, step)
+    state: Dict[str, Any]
+    n_replicas: int = 1
+    topology: str = "star"
+    fleet_steps_per_tick: int = 1
+    seed: int = 0
+    differential: bool = True                 # False = full-weight broadcast
+    decode_fn: Optional[Callable[[int], Tuple[float, float]]] = None
+    on_sync: Optional[Callable[[int, list], None]] = None
+    track_history: bool = True
+    log_every: int = 0
+    on_log: Optional[Callable[[int, Dict[str, Any], Key], None]] = None
+    on_switch: Optional[Callable[[int, Key, Key], None]] = None
+    checkpoint: Optional[Callable[[int, Any, Dict[str, Any]], None]] = None
+    obs: Optional[Any] = None                 # repro.obs.Recorder-like
+
+    def __post_init__(self) -> None:
+        self._fanout = head_fanout(self.topology, self.n_replicas)
+        self._base_key = jax.random.PRNGKey(self.seed)
+        self.bank = PlanBank(build=self._build_sync)
+        self._powers_fn = jax.jit(lambda x, xh: jnp.stack(
+            [jnp.sum((a.astype(jnp.float32) - b) ** 2)
+             for a, b in zip(x, xh)]))
+
+    # -- state --------------------------------------------------------------
+    @staticmethod
+    def init_state(leaves: Sequence[jax.Array], n_replicas: int
+                   ) -> Dict[str, Any]:
+        """Replicas boot from a full snapshot of ``x_0`` (the standard
+        deploy), so the reconstruction chain opens exact on every node."""
+        f32 = tuple(jnp.asarray(l, jnp.float32) for l in leaves)
+        return {"fleet": f32,
+                "xhat": f32,
+                "replicas": tuple(f32 for _ in range(n_replicas)),
+                "staleness": jnp.zeros((n_replicas,), jnp.int32)}
+
+    # -- sync step builder (PlanBank) ---------------------------------------
+    def _build_sync(self, key: Key):
+        """key -> jitted ``(fleet, xhat, replicas, rng) -> (new_xhat,
+        new_replicas, applied, diff_pow, noise_pow)``.  The trainer side
+        encodes the differential and tracks the replica reconstruction by
+        decoding its OWN payload; each replica decode-accumulates the
+        same payload (fused axpy when the rung supports it) — the chains
+        stay bit-identical without acknowledgement traffic."""
+        wire, differential = self.wire, self.differential
+
+        def step(fleet, xhat, replicas, rng):
+            x = [l.astype(jnp.float32) for l in fleet]
+            xh = list(xhat)
+            d = [a - b for a, b in zip(x, xh)] if differential else x
+            payload = wire.encode(key, d, rng)
+            dhat = wire.decode(key, payload)
+            if differential:
+                new_xhat = tuple(a + b for a, b in zip(xh, dhat))
+                new_reps = tuple(
+                    tuple(wire.decode_axpy(key, payload, r))
+                    for r in replicas)
+            else:
+                new_xhat = tuple(dhat)
+                new_reps = tuple(new_xhat for _ in replicas)
+            applied = tuple(a - b for a, b in zip(new_xhat, xh))
+            diff_pow = jnp.stack([jnp.sum(a * a) for a in d])
+            noise_pow = jnp.stack([jnp.sum((a - b) ** 2)
+                                   for a, b in zip(dhat, d)])
+            return new_xhat, new_reps, applied, diff_pow, noise_pow
+
+        return jax.jit(step)
+
+    # -- driver -------------------------------------------------------------
+    def run(self, n_ticks: int, start_step: int = 0) -> ServeResult:
+        if start_step >= n_ticks:
+            return ServeResult(state=self.state, n_ticks=0, history=[],
+                               wire_log=[], plan_per_step=[],
+                               bank_stats=dict(self.bank.stats()),
+                               wall_s=0.0, requests=0.0, decode_wall_s=0.0,
+                               sync_bits=0.0, max_staleness=0)
+        obs = self.obs
+        if obs is not None:
+            obs.bind_policy(self.policy)
+            obs.attach_bank(self.bank)
+        plan = self.policy.decide(start_step)
+        assert plan is not None, "policy must open with a plan"
+        active: Key = plan.key()
+        active_plan = plan
+        wire_log: List[Tuple[int, Key]] = [(start_step, active)]
+        plan_per_step: List[Key] = []
+        history: List[Dict[str, Any]] = []
+        total_req = 0.0
+        total_dec_wall = 0.0
+        total_bits = 0.0
+        max_stal = 0
+        S = int(self.fleet_steps_per_tick)
+        t0 = time.time()
+        for i in range(start_step, n_ticks):
+            outage = bool(active_plan.outage)
+            fresh = (not outage) and active not in self.bank
+            if obs is not None:
+                obs.step = i
+            ts = time.perf_counter()
+            # 1. decode batches on the live replica params
+            n_req, dec_wall = (self.decode_fn(i) if self.decode_fn
+                               else (0.0, 0.0))
+            total_req += float(n_req)
+            total_dec_wall += float(dec_wall)
+            # 2. the fleet trains on (S trainer steps per serve tick)
+            fleet = self.state["fleet"]
+            for j in range(S):
+                fleet = self.fleet.advance(fleet, i * S + j)
+            self.state["fleet"] = tuple(fleet)
+            # 3. sync tick (or blackout)
+            if outage:
+                stal = self.state["staleness"] + jnp.int32(S)
+                self.state["staleness"] = stal
+                diff_pow = self._powers_fn(self.state["fleet"],
+                                           self.state["xhat"])
+                noise_pow = jnp.zeros_like(diff_pow)
+                bits = 0.0
+            else:
+                step_fn = self.bank.get(active)
+                rng = jax.random.fold_in(self._base_key, i)
+                new_xhat, new_reps, applied, diff_pow, noise_pow = step_fn(
+                    self.state["fleet"], self.state["xhat"],
+                    self.state["replicas"], rng)
+                self.state["xhat"] = tuple(new_xhat)
+                self.state["replicas"] = tuple(new_reps)
+                self.state["staleness"] = jnp.zeros(
+                    (self.n_replicas,), jnp.int32)
+                bits = float(self.wire.wire_bits(active) * self._fanout)
+                if self.on_sync is not None:
+                    self.on_sync(i, list(applied))
+            total_bits += bits
+            diff_pow.block_until_ready()
+            wall = time.perf_counter() - ts
+            stal_np = np.asarray(self.state["staleness"])
+            tick_stal = int(stal_np.max()) if stal_np.size else 0
+            max_stal = max(max_stal, tick_stal)
+            # 4. telemetry into the policy, steps-behind into freshness
+            self.policy.observe(StepTelemetry(
+                step=i,
+                diff_power=np.asarray(diff_pow, np.float64),
+                noise_power=np.asarray(noise_pow, np.float64),
+                wall_ms=None if fresh else wall * 1e3))
+            for mem in (getattr(self.policy, "members", None)
+                        or (self.policy,)):
+                if hasattr(mem, "note_staleness"):
+                    mem.note_staleness(tick_stal)
+            m: Dict[str, Any] = {
+                "step": i,
+                "requests": float(n_req),
+                "decode_wall_s": float(dec_wall),
+                "bits": bits,
+                "sync_bits": bits,
+                "staleness": tick_stal,
+                "replica": int(stal_np.argmax()) if stal_np.size else 0,
+                "diff_power_leaves": np.asarray(diff_pow, np.float64),
+                "noise_power_leaves": np.asarray(noise_pow, np.float64),
+                # scalar totals: the Recorder's snr source
+                "diff_power": float(np.asarray(diff_pow).sum()),
+                "noise_power": float(np.asarray(noise_pow).sum()),
+            }
+            ran = active
+            plan_per_step.append(ran)
+            if obs is not None:
+                obs.spans.add("compile" if fresh else "step", wall)
+                obs.on_step(i, active_plan, ran, m,
+                            wall_ms=None if fresh else wall * 1e3)
+            if self.track_history:
+                history.append(m)
+            # checkpoint BEFORE deciding tick i+1 (see TrainSession: the
+            # snapshot must not contain the next decision's ledger entry)
+            if self.checkpoint is not None:
+                self.checkpoint(i + 1, self.state, m)
+            if (i + 1) < n_ticks:
+                nxt = self.policy.decide(i + 1)
+                if nxt is not None:
+                    active_plan = nxt
+                    k = nxt.key()
+                    if k != active:
+                        if self.on_switch is not None:
+                            self.on_switch(i + 1, active, k)
+                        if obs is not None:
+                            obs.on_switch(i + 1, active, k)
+                        wire_log.append((i + 1, k))
+                        active = k
+            if (self.on_log is not None and self.log_every > 0
+                    and ((i + 1) % self.log_every == 0
+                         or i == n_ticks - 1)):
+                self.on_log(i, m, ran)
+        res = ServeResult(
+            state=self.state, n_ticks=n_ticks - start_step, history=history,
+            wire_log=wire_log, plan_per_step=plan_per_step,
+            bank_stats=dict(self.bank.stats()), wall_s=time.time() - t0,
+            requests=total_req, decode_wall_s=total_dec_wall,
+            sync_bits=total_bits, max_staleness=max_stal)
+        if obs is not None:
+            obs.finalize(bank=res.bank_stats, wall_s=res.wall_s,
+                         n_steps=res.n_ticks)
+        return res

@@ -1,0 +1,175 @@
+"""WeightDeltaWire — differential-coded weight sync on the flat-wire path.
+
+The training side sends ``d_t = x_t - x_hat_{t-1}`` where ``x_hat`` is the
+replica's reconstruction; both ends apply the SAME decoded update
+``x_hat_t = x_hat_{t-1} + C(d_t)``, so the chain is bit-identical on both
+sides without acknowledgement traffic (the decode is deterministic given
+the wire payload).  This is DC-DGD's differential recursion verbatim, with
+iterates in place of gradients: as the fleet converges, ``d_t -> 0`` and
+the rung's SNR-proportional noise power decays with it.
+
+Coding rides entirely on :mod:`repro.core.wire`: one
+:class:`~repro.core.wire.FlatWirePlan` per rung vector (cached), the whole
+tree flattened to one (rows, block) f32 buffer, each rung group one codec
+call — ``row_encode`` with the replayed per-leaf RNG streams of
+``rng_rows``, or the Pallas row kernels (``kernels.ops.encode_rows`` /
+``decode_axpy_rows``) when the rung's tile is the row.  Bit accounting is
+``flat_tree_wire_bits`` / ``per_leaf_flat_bits`` — the exact transmitted
+bits including padding, the same table BudgetController prices.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..comm.wirespec import WireSpec, canonical_key
+from ..core.wire import (FlatWirePlan, flat_tree_wire_bits, flatten_rows,
+                         make_flat_plan, needs_rng, per_leaf_flat_bits,
+                         rng_rows, row_decode, row_encode, unflatten_rows,
+                         uniform_from_bits)
+from ..kernels import ops as kops
+
+Key = Union[str, Tuple[str, ...]]
+Payload = Dict[str, list]
+
+
+class WeightDeltaWire:
+    """Per-leaf differential codec over a fixed leaf layout.
+
+    ``leaf_shapes`` fixes the (tree-order) layout; the reconstruction
+    chain lives in f32 regardless of the model's serving dtype — the
+    Server boundary casts (``Server.update_params``), the chain does not
+    round.  ``key`` everywhere below is a plan key: a single rung string
+    or an n_leaves rung tuple (a :class:`PerLeafSNRPolicy` vector).
+    """
+
+    def __init__(self, leaf_shapes: Sequence[Tuple[int, ...]], *,
+                 use_pallas: bool = False, block: Optional[int] = None):
+        self.shapes = tuple(tuple(int(d) for d in s) for s in leaf_shapes)
+        self.n_leaves = len(self.shapes)
+        self.use_pallas = bool(use_pallas)
+        self.block = block
+        self._plans: Dict[Key, Tuple[FlatWirePlan, tuple]] = {}
+        self._bits: Dict[Key, int] = {}
+
+    # -- plan / accounting --------------------------------------------------
+    def specs_for(self, key: Key) -> Tuple[WireSpec, ...]:
+        """Broadcast a plan key to one parsed WireSpec per leaf."""
+        if isinstance(key, (str, WireSpec)):
+            key = (key,) * self.n_leaves
+        if len(key) == 1 and self.n_leaves != 1:
+            key = tuple(key) * self.n_leaves
+        assert len(key) == self.n_leaves, (len(key), self.n_leaves)
+        return tuple(WireSpec.parse(s) for s in key)
+
+    def canonical(self, key: Key) -> Key:
+        """The bank/ledger key: canonical spec strings, uniform collapsed."""
+        return canonical_key(tuple(s.canonical()
+                                   for s in self.specs_for(key)))
+
+    def plan_for(self, key: Key) -> Tuple[FlatWirePlan, tuple]:
+        ck = self.canonical(key)
+        hit = self._plans.get(ck)
+        if hit is None:
+            fmts = tuple(s.wire() for s in self.specs_for(key))
+            plan = make_flat_plan(self.shapes,
+                                  ["float32"] * self.n_leaves, fmts,
+                                  block=self.block)
+            hit = self._plans[ck] = (plan, fmts)
+        return hit
+
+    def wire_bits(self, key: Key) -> int:
+        """Exact bits one sync payload puts on ONE link (incl. padding)."""
+        ck = self.canonical(key)
+        if ck not in self._bits:
+            fmts = tuple(s.wire() for s in self.specs_for(key))
+            self._bits[ck] = flat_tree_wire_bits(fmts, self.shapes,
+                                                 block=self.block)
+        return self._bits[ck]
+
+    def per_leaf_bits(self, key: Key) -> List[int]:
+        fmts = tuple(s.wire() for s in self.specs_for(key))
+        return per_leaf_flat_bits(fmts, self.shapes, block=self.block)
+
+    # -- codec --------------------------------------------------------------
+    def encode(self, key: Key, delta_leaves: Sequence[jax.Array],
+               rng: jax.Array) -> Payload:
+        """delta leaves (tree order) -> per-rung-group wire payloads."""
+        plan, _ = self.plan_for(key)
+        rows = flatten_rows(plan, list(delta_leaves))
+        bit_groups = rng_rows(plan, rng)
+        wires = []
+        for gi, g in enumerate(plan.groups):
+            rows_g = rows[g.row_start:g.row_start + g.rows]
+            if self.use_pallas and kops.pallas_supported(g.fmt, plan.block):
+                wires.append(kops.encode_rows(g.fmt, rows_g, bit_groups[gi]))
+            else:
+                u = (uniform_from_bits(bit_groups[gi])
+                     if needs_rng(g.fmt) else None)
+                wires.append(row_encode(g.fmt, rows_g, u))
+        return {"groups": wires}
+
+    def decode(self, key: Key, payload: Payload) -> List[jax.Array]:
+        """Payload -> decoded delta leaves (f32, tree order).  Payloads
+        must be decoded by the stack that encoded them: the Pallas codecs
+        pack quarter-interleaved rows, so a pallas wire's payload goes
+        through ``kops.decode_rows`` (both ends hold the same
+        WeightDeltaWire config by construction)."""
+        plan, _ = self.plan_for(key)
+        group_rows = []
+        for g, w in zip(plan.groups, payload["groups"]):
+            if self.use_pallas and kops.pallas_supported(g.fmt, plan.block):
+                group_rows.append(kops.decode_rows(g.fmt, w))
+            else:
+                group_rows.append(row_decode(g.fmt, w))
+        return unflatten_rows(plan, group_rows)
+
+    def decode_axpy(self, key: Key, payload: Payload,
+                    acc_leaves: Sequence[jax.Array]) -> List[jax.Array]:
+        """acc += decode(payload), the replica apply path — fused through
+        the Pallas axpy kernel per rung group when the rung supports it
+        (no decoded f32 temp), jnp decode + add otherwise.  Bit-identical
+        to ``decode`` + add either way (the kernels replay the jnp codec
+        exactly), which is what keeps every replica on the trainer's
+        reconstruction chain."""
+        plan, _ = self.plan_for(key)
+        acc_rows = flatten_rows(plan, list(acc_leaves))
+        group_rows = []
+        for g, w in zip(plan.groups, payload["groups"]):
+            acc_g = acc_rows[g.row_start:g.row_start + g.rows]
+            if self.use_pallas and kops.pallas_supported(g.fmt, plan.block):
+                group_rows.append(kops.decode_axpy_rows(g.fmt, w, acc_g, 1.0))
+            else:
+                group_rows.append(acc_g + row_decode(g.fmt, w))
+        return unflatten_rows(plan, group_rows)
+
+    def sync(self, key: Key, x_leaves: Sequence[jax.Array],
+             xhat_leaves: Sequence[jax.Array], rng: jax.Array, *,
+             differential: bool = True
+             ) -> Tuple[List[jax.Array], List[jax.Array],
+                        jax.Array, jax.Array]:
+        """One differential sync: returns ``(new_xhat, applied_delta,
+        diff_power, noise_power)`` with per-leaf power vectors (the
+        StepTelemetry payload).  ``differential=False`` is the
+        full-weight-broadcast baseline: the payload codes ``x_t`` itself
+        and the reconstruction is REPLACED, not accumulated — no
+        self-noise-reduction, the fig10 strawman."""
+        x = [l.astype(jnp.float32) for l in x_leaves]
+        xh = [l.astype(jnp.float32) for l in xhat_leaves]
+        if differential:
+            d = [a - b for a, b in zip(x, xh)]
+        else:
+            d = x
+        payload = self.encode(key, d, rng)
+        dhat = self.decode(key, payload)
+        if differential:
+            new_xhat = [a + b for a, b in zip(xh, dhat)]
+        else:
+            new_xhat = dhat
+        applied = [a - b for a, b in zip(new_xhat, xh)]
+        diff_pow = jnp.stack([jnp.sum(a * a) for a in d])
+        noise_pow = jnp.stack([jnp.sum((a - b) ** 2)
+                               for a, b in zip(dhat, d)])
+        return new_xhat, applied, diff_pow, noise_pow

