@@ -1,0 +1,451 @@
+"""Fig. 11 (beyond-paper, ISSUE 10): the stateful structured-compression
+families — PowerGossip-style ``lowrank`` wires and the innovation-
+compression rung — priced on the same quadratic/W1 ladder as the
+pointwise codecs.
+
+The problem is a MATRIX quadratic on W1: each node holds a 64x64 matrix
+variable X and f_i(X) = ||A_i X - B_i||_F^2 / 2 + lam ||X||_F^2 / 2 with
+a rank-4 A_i, so per-node gradients (hence the DC-DGD differentials) are
+near-low-rank — the regime PowerGossip (arXiv 2008.01425) targets, where
+a rank-r sketch costs r bits/element (block = 4096 -> 64x64 tiles) while
+every pointwise codec pays per element regardless of structure.
+
+Three sections, one artifact:
+
+  * LADDER — every rung, pointwise and structured, run to the same step
+    budget: statics through the stateless cold-start codec
+    (``dcdgd.run`` + WireCompressor), ``lowrank`` additionally through
+    the WARM path (the per-edge power-iteration factors carried across
+    steps — the tentpole's stateful wire), and the innovation rung
+    (``core.innovation``) reusing the same wire codecs.  Cold-vs-warm at
+    identical bits isolates what the carried state buys.
+  * FRONTIER (fig5-style dual) — best achieved gap vs per-step bit
+    budget, ladders WITH and WITHOUT the new families.  The acceptance
+    flag ``lowrank_beats_best_pointwise_at_low_budget``: at the low-
+    budget points (<= 4 bits/element) the structured ladder must beat
+    the best pointwise rung that fits — including budgets where NO
+    pointwise rung fits at all.
+  * SESSION — one composed TrainSession (RateComm model-based rate
+    control pricing the lowrank oracle + BudgetComm with a duty-cycle
+    budget whose low window only ``lowrank:r=4`` fits + WireStateComm
+    holding the live warm factors): the controller walks in and out of
+    the stateful rung with ZERO extra builds (bank hit on re-entry,
+    ``builds == distinct_plans``), zero eta_min / budget violations, and
+    a mid-run kill at a step where the session holds LIVE lowrank edge
+    state — a fresh harness restored from the checkpoint (resume kind
+    "wire-state") replays the tail bit-exactly (``obs_cli diff --exact``
+    semantics via ``repro.obs.diff_exact`` + final-state bit equality).
+
+Writes artifacts/bench/BENCH_lowrank.json and prints a CSV summary.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adapt.budget import BudgetController, BudgetSchedule
+from repro.adapt.controller import RateController, ladder_from_specs
+from repro.adapt.policies import BudgetPolicy, ControllerPolicy
+from repro.adapt.runner import _metric_step, make_dcdgd_session
+from repro.comm import (BudgetComm, Compose, RateComm, SessionCheckpointer,
+                        WireStateComm, restore_policy)
+from repro.core import dcdgd, innovation
+from repro.core.compressors import Identity, WireCompressor
+from repro.core.problems import Problem
+from repro.core.wire import make_wire
+from repro.obs import JsonlSink, Recorder, diff_exact
+from repro.runtime.fault import OUTAGE_SPEC
+from repro.topology import topology
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+# matrix quadratic: X is (M, NC) flattened, rank-K per-node data term
+M_ROWS = 64
+N_COLS = 64
+RANK_K = 4
+NODES = 5
+DIM = M_ROWS * N_COLS
+LAM = 0.1
+SEED = 5
+
+STEPS = 400
+TAIL = 25
+CONV_GAP = 250.0           # a run above this at the tail "diverged"
+
+# the ladder: pointwise rungs vs the structured families
+POINTWISE = ("dense", "int8:block=256", "hybrid:block=64,top_j=4",
+             "topk:block=128,k=16", "topk:block=128,k=8",
+             "ternary:block=512")
+LOWRANK = ("lowrank:block=4096,r=2", "lowrank:block=4096,iters=2,r=3",
+           "lowrank:block=4096,r=4")
+# per-step network budgets (bits): 2 / 3 / 4 / 6 / 8.5 bits per element
+BUDGETS = tuple(int(b * DIM * NODES) for b in (2.0, 3.0, 4.0, 6.0, 8.5))
+LOW_BUDGET_MAX = int(4.0 * DIM * NODES)     # "low budget" = <= 4 bits/elt
+INNOVATION_GAMMA = 0.5
+
+# session section
+SESS_STEPS = 240
+CKPT_EVERY = 20
+KILL_AT = 160              # inside the low-budget (lowrank-only) window
+SESS_LADDER = ("dense", "int8:block=256", "lowrank:block=4096,r=4")
+CADENCE = 10
+BUDGET_HI = 200_000.0      # int8 fits (166.4 kbit), dense (655 kbit) not
+BUDGET_LO = 100_000.0      # only lowrank:r=4 (81.9 kbit) fits
+
+
+def build_problem() -> Problem:
+    rng = np.random.default_rng(SEED)
+    A = jnp.asarray(rng.standard_normal((NODES, RANK_K, M_ROWS))
+                    / np.sqrt(M_ROWS), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((NODES, RANK_K, N_COLS)), jnp.float32)
+
+    def node_f(x):
+        X = x.reshape(-1, M_ROWS, N_COLS)
+        R = jnp.einsum("nkm,nmc->nkc", A, X) - B
+        return (0.5 * jnp.sum(R ** 2, axis=(1, 2))
+                + 0.5 * LAM * jnp.sum(X ** 2, axis=(1, 2)))
+
+    An, Bn = np.asarray(A), np.asarray(B)
+    H = np.einsum("nkm,nkl->ml", An, An) + NODES * LAM * np.eye(M_ROWS)
+    Xs = np.linalg.solve(H, np.einsum("nkm,nkc->mc", An, Bn))
+    f_star = float(0.5 * ((np.einsum("nkm,mc->nkc", An, Xs) - Bn) ** 2).sum()
+                   + 0.5 * NODES * LAM * (Xs ** 2).sum())
+    L = float(np.linalg.eigvalsh(
+        np.einsum("nkm,nkl->nml", An, An)).max() + LAM)
+    return Problem("matquad", DIM, NODES, node_f, L, f_star=f_star)
+
+
+def make_alpha(L):
+    return lambda t: (0.5 / L) / jnp.sqrt(t)
+
+
+def tail_gap(f_bar, f_star) -> float:
+    g = float(np.mean(np.asarray(f_bar)[-TAIL:]) - f_star)
+    return g if np.isfinite(g) else float("inf")
+
+
+def bits_per_step(spec: str) -> int:
+    return NODES * make_wire(spec).wire_bits((DIM,))
+
+
+# ---------------------------------------------------------------------------
+# warm lowrank: the stateful wire threaded through a DC-DGD loop / session
+# ---------------------------------------------------------------------------
+def warm_lowrank_step(problem, alpha_fn, Wj, spec, holder):
+    """A session step over ``dcdgd`` semantics whose lowrank factors warm-
+    start from ``holder`` (a ``repro.comm.WireState``) — the host-side
+    mirror of the trainer's jittable gossip carry, so the checkpointer
+    snapshots the live factors as resume kind "wire-state"."""
+    fmt = make_wire(spec)
+    bits = float(NODES * fmt.wire_bits((DIM,)))
+
+    @jax.jit
+    def inner(st, q):
+        wire, q2 = fmt.encode_rows(st.d, q)
+        c = fmt.decode_rows(wire)
+        x_new = st.x + c
+        y_new = st.y + Wj @ c
+        z = y_new - alpha_fn(st.t + 1) * problem.grad(x_new)
+        st2 = dcdgd.DCDGDState(x=x_new, y=y_new, d=z - x_new,
+                               t=st.t + 1, key=st.key)
+        xbar = jnp.mean(x_new, axis=0)
+        m = {
+            "f_bar": problem.global_f(xbar),
+            "grad_norm_sq": jnp.sum(problem.global_grad(xbar) ** 2),
+            "consensus_err": jnp.sum((x_new - xbar[None, :]) ** 2),
+            "bits": jnp.float32(bits),
+            "noise_power": jnp.sum((c - st.d) ** 2),
+            "differential_power": jnp.sum(st.d ** 2),
+        }
+        return st2, q2, m
+
+    def one(st):
+        if holder.struct == spec and holder.carry is not None:
+            q = holder.carry["q"][0]
+        else:
+            q = fmt.init_rows_state((NODES, DIM))
+        st2, q2, m = inner(st, q)
+        holder.carry = {"q": {0: q2}}
+        holder.struct = spec
+        return st2, m
+
+    return one
+
+
+def run_warm_lowrank(problem, W, spec, alpha_fn, steps):
+    """Standalone warm-path driver for the LADDER section (same metric
+    contract as ``dcdgd.run``)."""
+    from repro.comm import WireState
+    holder = WireState()
+    Wj = jnp.asarray(W.W, jnp.float32)
+    one = warm_lowrank_step(problem, alpha_fn, Wj, spec, holder)
+    st = dcdgd.init(problem.grad, jnp.zeros((NODES, DIM), jnp.float32),
+                    float(alpha_fn(1)), jax.random.PRNGKey(1))
+    hist = []
+    for _ in range(steps):
+        st, m = one(st)
+        hist.append(m)
+    out = {k: np.array([float(h[k]) for h in hist]) for k in hist[0]}
+    out["cum_bits"] = np.cumsum(out["bits"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LADDER + FRONTIER
+# ---------------------------------------------------------------------------
+def run_ladder(prob, W, alpha_fn):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for spec in POINTWISE + LOWRANK:
+        r = dcdgd.run(prob, W, WireCompressor(fmt=make_wire(spec)),
+                      alpha_fn, STEPS, key)
+        rows.append({"wire": spec, "kind": "pointwise"
+                     if spec in POINTWISE else "lowrank_cold",
+                     "bits_per_step": bits_per_step(spec),
+                     "gap": tail_gap(r["f_bar"], prob.f_star)})
+    for spec in LOWRANK:
+        r = run_warm_lowrank(prob, W, spec, alpha_fn, STEPS)
+        rows.append({"wire": spec + " (warm)", "kind": "lowrank_warm",
+                     "bits_per_step": bits_per_step(spec),
+                     "gap": tail_gap(r["f_bar"], prob.f_star)})
+    for spec in ("int8:block=256", "lowrank:block=4096,r=4"):
+        r = innovation.run(prob, W, WireCompressor(fmt=make_wire(spec)),
+                           alpha_fn, STEPS, key, gamma=INNOVATION_GAMMA)
+        rows.append({"wire": spec + " (innovation)", "kind": "innovation",
+                     "bits_per_step": bits_per_step(spec),
+                     "gap": tail_gap(r["f_bar"], prob.f_star)})
+    return rows
+
+
+def assemble_frontier(rows):
+    """Best achieved gap under each per-step budget, pointwise-only vs
+    with the structured families (innovation rows ride the 'with' side:
+    same codecs, different consensus recursion)."""
+    frontier = []
+    for B in BUDGETS:
+        def best(kinds):
+            fits = [r for r in rows if r["kind"] in kinds
+                    and r["bits_per_step"] <= B
+                    and r["gap"] <= CONV_GAP]
+            return min(fits, key=lambda r: r["gap"]) if fits else None
+
+        pw = best({"pointwise"})
+        new = best({"pointwise", "lowrank_cold", "lowrank_warm",
+                    "innovation"})
+        wins = (new is not None
+                and (pw is None or new["gap"] < pw["gap"]))
+        frontier.append({
+            "budget_per_step": B,
+            "budget_bits_per_elt": B / (DIM * NODES),
+            "best_pointwise": pw["wire"] if pw else None,
+            "best_pointwise_gap": pw["gap"] if pw else None,
+            "best_with_new": new["wire"] if new else None,
+            "best_with_new_gap": new["gap"] if new else None,
+            "with_new_wins": bool(wins),
+            "low_budget": B <= LOW_BUDGET_MAX,
+        })
+    return frontier
+
+
+# ---------------------------------------------------------------------------
+# SESSION: composed policy, live wire state, kill/resume
+# ---------------------------------------------------------------------------
+def build_session_run(prob, obs_path, ckpt_dir=None):
+    """One complete, FRESH harness (fig8 pattern): the resume path must
+    reconstruct everything from config + checkpoint alone."""
+    W = topology("w1")
+    alpha_fn = make_alpha(prob.L)
+    Wj = jnp.asarray(W.W, jnp.float32)
+    key = jax.random.PRNGKey(0)
+
+    wire_state = WireStateComm()
+    holder = wire_state.state
+
+    def build_step(spec):
+        if spec == OUTAGE_SPEC:         # budget blackout: exact local step
+            return _metric_step(prob, alpha_fn,
+                                jnp.eye(NODES, dtype=jnp.float32),
+                                Identity())
+        if spec.startswith("lowrank"):
+            return warm_lowrank_step(prob, alpha_fn, Wj, spec, holder)
+        base = _metric_step(prob, alpha_fn, Wj,
+                            WireCompressor(fmt=make_wire(spec)))
+
+        def one(st):
+            holder.flush()              # switching out of lowrank re-inits
+            return base(st)
+
+        return one
+
+    recorder = Recorder(JsonlSink(obs_path))
+    recorder.emit_manifest(
+        config={"steps": SESS_STEPS, "ladder": list(SESS_LADDER),
+                "budget_hi": BUDGET_HI, "budget_lo": BUDGET_LO},
+        topology="w1", seed=0)
+    session = make_dcdgd_session(prob, W.W, alpha_fn, key, None,
+                                 bank_size=8, build_step=build_step,
+                                 obs=recorder)
+    ladder = ladder_from_specs(SESS_LADDER, level="wire")
+    ctl = RateController(ladder=ladder, eta_min=float(W.eta_min),
+                         margin=1.25, synthesize_hybrid=False, level="wire")
+    rate = RateComm(policy=ControllerPolicy(
+        controller=ctl, probe_fn=lambda: np.asarray(session.state.d),
+        cadence=CADENCE), n_leaves=1, cadence=CADENCE)
+    budget_pol = BudgetPolicy(
+        controller=BudgetController(ladder=ladder,
+                                    shapes=((NODES, DIM),), neighbors=1,
+                                    eta_min=float(W.eta_min)),
+        schedule=BudgetSchedule(bits=BUDGET_HI, kind="duty",
+                                period=SESS_STEPS, duty=0.5,
+                                off_bits=BUDGET_LO),
+        cadence=1,
+        probe_fn=lambda: [np.asarray(session.state.d)])
+    policy = Compose(rate, BudgetComm(policy=budget_pol), wire_state)
+    session.policy = policy
+
+    if ckpt_dir is not None:
+        session.checkpoint = SessionCheckpointer(
+            directory=str(ckpt_dir), policy=policy,
+            every=CKPT_EVERY, retain=0)
+    return {"session": session, "policy": policy, "ctl": ctl,
+            "budget_pol": budget_pol, "recorder": recorder,
+            "holder": holder, "eta_min": float(W.eta_min)}
+
+
+def run_session_section(prob):
+    ckpt_dir = ART / "fig11_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    base_log = ART / "fig11_run.jsonl"
+    resume_log = ART / "fig11_resume.jsonl"
+
+    base = build_session_run(prob, base_log, ckpt_dir=ckpt_dir)
+    res = base["session"].run(SESS_STEPS)
+    base["recorder"].close()
+
+    # kill + resume: a fresh harness restored mid lowrank window
+    from repro.ckpt import checkpoint as ck
+    resumed = build_session_run(prob, resume_log)
+    state2, manifest = ck.restore(ckpt_dir, KILL_AT,
+                                  resumed["session"].state)
+    restore_policy(resumed["policy"], manifest["extra"]["policy"])
+    live_state_restored = (resumed["holder"].carry is not None
+                          and str(resumed["holder"].struct
+                                  ).startswith("lowrank"))
+    resumed["session"].state = state2
+    res2 = resumed["session"].run(SESS_STEPS, start_step=KILL_AT)
+    resumed["recorder"].close()
+
+    mix = {}
+    for k in res.plan_per_step:
+        mix[str(k)] = mix.get(str(k), 0) + 1
+    distinct = sorted(set(map(str, res.plan_per_step)))
+    builds = res.bank_stats["builds"]
+    snr_viols = sum(d.predicted_snr < base["eta_min"]
+                    for d in base["ctl"].log)
+    budget_viols = sum(1 for _, b, _, bits, _ in
+                       base["budget_pol"].spend_log
+                       if bits > b * (1 + 1e-9))
+    exact = diff_exact(str(base_log), str(resume_log), from_step=KILL_AT)
+    state_equal = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(res.state),
+                        jax.tree.leaves(res2.state)))
+    gap = tail_gap(res.metrics_arrays()["f_bar"], prob.f_star)
+    lowrank_steps = sum(v for k, v in mix.items() if k.startswith("lowrank"))
+    return {
+        "steps": SESS_STEPS,
+        "ladder": list(SESS_LADDER),
+        "budget_hi": BUDGET_HI,
+        "budget_lo": BUDGET_LO,
+        "kill_at": KILL_AT,
+        "ckpt_every": CKPT_EVERY,
+        "final_gap": gap,
+        "plan_mix": mix,
+        "lowrank_steps": lowrank_steps,
+        "reentered_lowrank": bool(lowrank_steps > SESS_STEPS // 2 - CADENCE),
+        "bank": dict(res.bank_stats),
+        "distinct_plans": distinct,
+        "builds_equal_distinct": bool(builds == len(distinct)),
+        "eta_min_violations": int(snr_viols),
+        "budget_violations": int(budget_viols),
+        "zero_violations": bool(snr_viols == 0 and budget_viols == 0),
+        "live_wire_state_restored": bool(live_state_restored),
+        "resume_diff": exact,
+        "resume_state_bit_equal": bool(state_equal),
+        "resume_bit_exact": bool(exact["ok"] and state_equal
+                                 and live_state_restored),
+        "obs_log": str(base_log),
+        "resume_obs_log": str(resume_log),
+    }
+
+
+def run():
+    prob = build_problem()
+    W = topology("w1")
+    alpha_fn = make_alpha(prob.L)
+    rows = run_ladder(prob, W, alpha_fn)
+    frontier = assemble_frontier(rows)
+    session = run_session_section(prob)
+
+    low = [f for f in frontier if f["low_budget"]]
+    beats = bool(low and all(f["with_new_wins"] for f in low))
+    return {
+        "problem": (f"matrix_quadratic_W1 (X {M_ROWS}x{N_COLS}, rank-"
+                    f"{RANK_K} data term, lam={LAM}, {NODES} nodes)"),
+        "eta_min": float(W.eta_min),
+        "steps": STEPS,
+        "conv_gap": CONV_GAP,
+        "ladder": rows,
+        "frontier": frontier,
+        "session": session,
+        "lowrank_beats_best_pointwise_at_low_budget": beats,
+        "zero_violations": session["zero_violations"],
+        "builds_equal_distinct": session["builds_equal_distinct"],
+        "resume_bit_exact": session["resume_bit_exact"],
+    }
+
+
+def main():
+    ART.mkdir(parents=True, exist_ok=True)
+    out = run()
+    (ART / "BENCH_lowrank.json").write_text(json.dumps(out, indent=1))
+
+    print("name,wire,kind,bits_per_elt,gap")
+    for r in out["ladder"]:
+        print(f"fig11,{r['wire']},{r['kind']},"
+              f"{r['bits_per_step'] / (DIM * NODES):.2f},{r['gap']:.4g}")
+    print("name,budget_bits_per_elt,best_pointwise,pw_gap,"
+          "best_with_new,new_gap,with_new_wins")
+    for f in out["frontier"]:
+        pg = f["best_pointwise_gap"]
+        ng = f["best_with_new_gap"]
+        print(f"fig11-frontier,{f['budget_bits_per_elt']:.1f},"
+              f"{f['best_pointwise'] or '-'},"
+              f"{'-' if pg is None else f'{pg:.4g}'},"
+              f"{f['best_with_new'] or '-'},"
+              f"{'-' if ng is None else f'{ng:.4g}'},"
+              f"{f['with_new_wins']}")
+    s = out["session"]
+    print(f"fig11-session gap={s['final_gap']:.4g} mix={s['plan_mix']} "
+          f"bank={s['bank']} distinct={len(s['distinct_plans'])}")
+    print(f"fig11-session violations: eta_min={s['eta_min_violations']} "
+          f"budget={s['budget_violations']}; resume: "
+          f"diff_ok={s['resume_diff']['ok']} "
+          f"({s['resume_diff']['n_steps']} tail steps) "
+          f"state_bit_equal={s['resume_state_bit_equal']} "
+          f"live_wire_state_restored={s['live_wire_state_restored']}")
+    ok = (out["lowrank_beats_best_pointwise_at_low_budget"]
+          and out["zero_violations"] and out["builds_equal_distinct"]
+          and out["resume_bit_exact"] and s["reentered_lowrank"])
+    print(f"fig11 acceptance: {'ALL OK' if ok else 'FAIL'} "
+          f"-> {ART / 'BENCH_lowrank.json'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,6 +43,17 @@ _ARTIFACT_FLAGS = {
     "BENCH_serve.json": ("ladder_dominates", "zero_violations",
                          "staleness_bounded", "resume_bit_exact",
                          "obs_valid"),
+    # stateful structured compression (fig11): on the low-rank-gradient
+    # matrix quadratic the lowrank family must win every low-budget
+    # frontier point over the best pointwise rung; the composed
+    # rate+budget session that walks in/out of the stateful rung must
+    # close with zero eta_min/budget violations, builds == distinct
+    # plans (re-entry is a bank hit, not a rebuild), and a kill inside
+    # the lowrank window must resume bit-exactly WITH the live
+    # power-iteration factors (resume kind "wire-state")
+    "BENCH_lowrank.json": ("lowrank_beats_best_pointwise_at_low_budget",
+                           "zero_violations", "builds_equal_distinct",
+                           "resume_bit_exact"),
 }
 
 
@@ -98,7 +109,7 @@ def stamp_provenance(art_dir: Path = ART) -> int:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,...,fig6,fig8,fig9,fig10,"
+                    help="comma list: fig1,...,fig6,fig8,fig9,fig10,fig11,"
                          "roofline,wire")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI probe: gossip-step microbenchmark "
@@ -110,7 +121,8 @@ def main(argv=None):
 
     from . import (fig1_convergence, fig2_compressors, fig3_realworld,
                    fig4_adaptive, fig5_budget, fig6_topology, fig8_chaos,
-                   fig9_async, fig10_serve, roofline, wire_micro)
+                   fig9_async, fig10_serve, fig11_lowrank, roofline,
+                   wire_micro)
     if args.smoke:
         print("==== gossip (smoke) ====", flush=True)
         r = wire_micro.main(smoke=True)
@@ -126,6 +138,7 @@ def main(argv=None):
         "fig8": fig8_chaos.main,
         "fig9": fig9_async.main,
         "fig10": fig10_serve.main,
+        "fig11": fig11_lowrank.main,
         "wire": wire_micro.main,
         "roofline": roofline.main,
     }

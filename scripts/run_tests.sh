@@ -12,7 +12,7 @@
 #   scripts/run_tests.sh --cli-smoke    # launch/train.py --smoke once per
 #                                   # comm-policy class (static / adapt /
 #                                   # budget / composed / topology /
-#                                   # chaos), 8 virtual CPU
+#                                   # chaos / lowrank), 8 virtual CPU
 #                                   # devices; fails on nonzero exit,
 #                                   # missing metrics keys, or a repro.obs
 #                                   # event log that does not validate
@@ -57,7 +57,7 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
     COMMON=(--arch qwen3-8b --smoke --steps 6 --seq-len 64 --global-batch 8
             --optimizer sgd --alpha 0.05 --log-every 2 --adapt-interval 2
             --adapt-ladder "$LADDER")
-    modes=(static adapt budget composed topology chaos async)
+    modes=(static adapt budget composed topology chaos async lowrank)
     declare -A FLAGS=(
         [static]=""
         [adapt]="--adapt"
@@ -85,6 +85,14 @@ elif [[ "${1:-}" == "--cli-smoke" ]]; then
         # zero eta_min/budget violation counters and on every step event
         # carrying gossip_delay=1 (the stale-attribution stamp).
         [async]="--gossip-delay 1 --adapt --compose --bit-budget 1200000"
+        # the stateful structured rung: adaptation over a ladder that
+        # includes lowrank:r=4 (warm power-iteration factors threaded
+        # through the trainer's stateful gossip carry), checkpointing
+        # every 2 steps; a second --resume invocation below extends the
+        # run and the checker gates on checkpoint presence plus zero
+        # eta_min violations across BOTH runs
+        [lowrank]="--adapt --adapt-ladder dense;int8:block=64;lowrank:r=4
+                   --ckpt-every 2 --ckpt-dir $TMP/lowrank-ckpt"
     )
     rc=0
     for mode in "${modes[@]}"; do
@@ -140,6 +148,39 @@ print(f"cli-smoke async: counters OK {counters}, "
 PY
             then
                 echo "cli-smoke $mode: FAIL (async counters)"; rc=1; continue
+            fi
+        fi
+        if [[ "$mode" == lowrank ]]; then
+            # kill/resume through the stateful rung: re-invoke with
+            # --resume to pick up the step-6 checkpoint and run to 8
+            # shellcheck disable=SC2086
+            if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+                    python -m repro.launch.train "${COMMON[@]}" \
+                    ${FLAGS[$mode]} --steps 8 --resume \
+                    --metrics-out "$TMP/lowrank-resume.json" \
+                    --obs "$TMP/lowrank-resume.jsonl"; then
+                echo "cli-smoke $mode: FAIL (resume exit)"; rc=1; continue
+            fi
+            if ! python - "$TMP/lowrank.jsonl" "$TMP/lowrank-resume.jsonl" \
+                    "$TMP/lowrank-ckpt" <<'PY'
+import json, pathlib, sys
+for p in sys.argv[1:3]:
+    recs = [json.loads(l) for l in open(p)]
+    counters = next(r["counters"] for r in recs if r.get("kind") == "counters")
+    assert counters.get("eta_min_violations", 0) == 0, (p, counters)
+ckpts = sorted(pathlib.Path(sys.argv[3]).glob("step_*"))
+assert ckpts, "no checkpoint"
+steps = [r["step"] for r in
+         (json.loads(l) for l in open(sys.argv[2]))
+         if r.get("kind") == "step"]
+assert steps and min(steps) > 1, \
+    f"resume replayed from scratch: first step event {steps[:1]}"
+print(f"cli-smoke lowrank: resume OK ({len(ckpts)} checkpoints, "
+      f"resumed steps {min(steps)}..{max(steps)})")
+PY
+            then
+                echo "cli-smoke $mode: FAIL (lowrank resume checks)"; rc=1
+                continue
             fi
         fi
         if ! python - "$TMP/$mode.json" "$mode" <<'PY'

@@ -125,6 +125,36 @@ eta_min at the switch step, before any decision is made against the new
 graph, and audits sustained below-floor operation as
 ``eta_min_violations`` (asserted zero by fig6 and the CLI smoke).
 
+Stateful wires (the ``lowrank`` family)
+---------------------------------------
+Most rungs are memoryless: the codec is a pure function of (key, rows).
+``lowrank:r=..`` is the first STATEFUL family — its power-iteration
+factors warm-start from the previous step — and the contract that keeps
+the controllers, the PlanBank and resume honest is:
+
+  * the STATE LIVES OUTSIDE THE PLAN.  A plan/jitted step stays a pure
+    function; the factor carry is an explicit input/output threaded by
+    the driver (``repro.lowrank.gossip.build_stateful_gossip_fn`` on the
+    trainer path, the session's ``repro.comm.WireState`` holder
+    elsewhere),
+    keyed by gossip rung group.  PlanBank entries therefore stay
+    reusable — re-entering a lowrank rung is a bank HIT, never a
+    rebuild, and ``builds == distinct_plans`` still holds (fig11 gates
+    this);
+  * SWITCHING RE-INITIALIZES.  Leaving the stateful rung flushes the
+    carry (``WireState.flush``); coming back cold-starts from the
+    codec's deterministic orthonormal seed.  A stale subspace is never
+    reused across an intervening rung, and elastic membership changes
+    re-key the state with the fleet;
+  * CONTROLLERS PRICE IT ORACLE-GATED.  The family advertises
+    ``snr_lower_bound = 0`` (no worst-case guarantee, like ternary) but
+    an EXACT residual oracle ``expected_noise_power``, evaluated on the
+    live differential — note the oracle describes the stateless
+    cold-start codec, so it is a conservative price for the warm path;
+  * RESUME SNAPSHOTS THE CARRY.  The holder serializes as resume kind
+    "wire-state" through SessionCheckpointer, so a kill inside a
+    lowrank window restores the LIVE factors and replays bit-exactly.
+
 The budget contract (the dual problem)
 --------------------------------------
 ``budget.BudgetController`` solves the DUAL of the eta_min-gated rate

@@ -79,6 +79,73 @@ def make_dcdgd_session(problem, W: np.ndarray, alpha, key: jax.Array,
     return TrainSession(bank=bank, policy=policy, state=state, obs=obs)
 
 
+def _innovation_metric_step(problem, alpha_fn, Wj: jax.Array,
+                            comp: Compressor, gamma: float) -> Callable:
+    """The innovation-rung counterpart of :func:`_metric_step` — same
+    metric contract, ``core.innovation.step`` backend."""
+    from ..core import innovation
+
+    @jax.jit
+    def one(st):
+        a_t = alpha_fn(st.t)
+        new_state, aux = innovation.step(st, Wj, problem.grad, a_t, comp,
+                                         gamma, track_bits=True)
+        xbar = jnp.mean(new_state.x, axis=0)
+        m = {
+            "f_bar": problem.global_f(xbar),
+            "grad_norm_sq": jnp.sum(problem.global_grad(xbar) ** 2),
+            "consensus_err": jnp.sum((new_state.x - xbar[None, :]) ** 2),
+        }
+        m.update(aux)
+        return new_state, m
+
+    return one
+
+
+def make_innovation_session(problem, W: np.ndarray, alpha, key: jax.Array,
+                            policy, *, gamma: float = 0.0,
+                            bank_size: int = 8,
+                            build_step: Optional[Callable] = None,
+                            obs=None) -> TrainSession:
+    """:func:`make_dcdgd_session` for the innovation-compression rung
+    (core.innovation): same PlanBank/TrainSession plumbing, CHOCO-style
+    backend.  ``gamma=0`` derives the admissible consensus step from W
+    and each rung's guaranteed SNR (``choco_gamma``)."""
+    from ..core import innovation
+
+    W = getattr(W, "W", W)
+    Wj = jnp.asarray(W, jnp.float32)
+    n = W.shape[0]
+    params_like = jnp.zeros((n, problem.dim), jnp.float32)
+    alpha_fn = alpha if callable(alpha) else (lambda t: alpha)
+    key, ik = jax.random.split(key)
+    state = innovation.init(params_like, ik)
+
+    if build_step is None:
+        def build_step(spec: str) -> Callable:
+            comp = make_compressor(spec)
+            g = gamma or innovation.choco_gamma(
+                np.asarray(Wj), comp.snr_lower_bound(problem.dim))
+            return _innovation_metric_step(problem, alpha_fn, Wj, comp, g)
+
+    bank = PlanBank(build_step, max_size=bank_size)
+    return TrainSession(bank=bank, policy=policy, state=state, obs=obs)
+
+
+def session_for_algorithm(run, problem, W, alpha, key: jax.Array, policy,
+                          **kw) -> TrainSession:
+    """RunConfig-selected session builder: ``run.algorithm`` picks the
+    consensus backend ("dcdgd" -> :func:`make_dcdgd_session`,
+    "innovation" -> :func:`make_innovation_session` with
+    ``run.innovation_gamma``) — the one dispatch point the launcher and
+    benchmarks share, so an algorithm rung is a config flip, never a
+    driver fork."""
+    if run.algorithm == "innovation":
+        return make_innovation_session(problem, W, alpha, key, policy,
+                                       gamma=run.innovation_gamma, **kw)
+    return make_dcdgd_session(problem, W, alpha, key, policy, **kw)
+
+
 def _legacy_out(res: SessionResult) -> dict:
     out = res.metrics_arrays()
     out["x_final"] = np.asarray(res.state.x)

@@ -45,16 +45,17 @@ Quick example (a budget-capped adaptive trainer session)::
 from .elastic import ElasticComm
 from .policy import (OUTAGE_PLAN, BudgetComm, CommPolicy, Compose,
                      DelayComm, DelayState, FaultComm, OutageComm,
-                     PerLeafPlan, RateComm, StaticComm, StepTelemetry)
+                     PerLeafPlan, RateComm, StaticComm, StepTelemetry,
+                     WireState, WireStateComm)
 from .resume import SessionCheckpointer, restore_policy, snapshot_policy
 from .session import SessionResult, TrainSession
-from .wirespec import OUTAGE, WireSpec, canonical_key
+from .wirespec import OUTAGE, WireSpec, canonical_key, describe_families
 
 __all__ = [
-    "WireSpec", "OUTAGE", "canonical_key",
+    "WireSpec", "OUTAGE", "canonical_key", "describe_families",
     "CommPolicy", "PerLeafPlan", "StepTelemetry", "OUTAGE_PLAN",
     "StaticComm", "RateComm", "BudgetComm", "OutageComm", "FaultComm",
-    "DelayComm", "DelayState",
+    "DelayComm", "DelayState", "WireState", "WireStateComm",
     "ElasticComm", "Compose", "TrainSession", "SessionResult",
     "SessionCheckpointer", "snapshot_policy", "restore_policy",
 ]

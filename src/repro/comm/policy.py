@@ -511,6 +511,58 @@ class DelayComm:
         return dataclasses.replace(plan, delay=int(self.delay))
 
 
+class WireState:
+    """Host-side slot for a STATEFUL WIRE's carry — the warm-started
+    factors a structured codec threads through the gossip step (today:
+    the lowrank power-iteration Q factors, ``repro.lowrank.gossip``).
+
+    Mirrors :class:`DelayState`: the trainer's stateful step functions
+    read/write ``carry`` around each jitted call, and ``struct`` is the
+    structural identity the carry was built against (rung key x lowering
+    mode x offsets).  Any mismatch — a rung switch in or out of the
+    stateful family, a topology/fault re-lowering, elastic churn —
+    FLUSHES the carry to the codec's deterministic cold seed: warm
+    factors are only meaningful for the exact structure that produced
+    them, and the cold encode is always valid (one step of extra
+    residual, never a correctness loss; the flush is symmetric across
+    nodes, which differential coding self-corrects).  The slot lives on a
+    WireStateComm member because the carry is POLICY state:
+    SessionCheckpointer snapshots it (repro.comm.resume kind
+    "wire-state") so kill/resume restores the exact warm factors."""
+
+    def __init__(self):
+        self.carry: Optional[Any] = None
+        self.struct: Optional[Any] = None
+
+    def flush(self) -> None:
+        self.carry = None
+        self.struct = None
+
+
+@dataclasses.dataclass
+class WireStateComm:
+    """Stateful-wire carry as a (passive) Compose member.
+
+    Never proposes, never observes — it exists so the live wire state is
+    VISIBLE to the comm stack: ``repro.comm.resume`` snapshots/restores
+    ``state`` alongside the other members, and ElasticComm churn flushes
+    it via :meth:`set_shapes` (the same hook that re-bases budget cost
+    models re-keys wire state alongside ``(x, s)``)."""
+    state: WireState = dataclasses.field(default_factory=WireState)
+    consumes_telemetry = False
+
+    def observe(self, t: StepTelemetry) -> None:
+        pass
+
+    def decide(self, step: int) -> Optional[PerLeafPlan]:
+        return None
+
+    def set_shapes(self, shapes) -> None:
+        """Elastic-churn hook: the fleet changed under the session, so the
+        warm factors describe a dead edge set — flush to the cold seed."""
+        self.state.flush()
+
+
 class Compose:
     """Stack rate + budget + outage + topology + fault behaviors in one
     policy.

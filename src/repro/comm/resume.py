@@ -42,7 +42,7 @@ import numpy as np
 
 from .policy import (OUTAGE_PLAN, BudgetComm, Compose, DelayComm,
                      FaultComm, OutageComm, PerLeafPlan, RateComm,
-                     StaticComm, _ProbeSnap)
+                     StaticComm, WireStateComm, _ProbeSnap)
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +248,13 @@ def _snap_member(m: Any) -> dict:
                 "staleness_ema": float(m.staleness_ema),
                 "count": int(m.count),
                 "held": _plan_enc(m._held)}
+    if isinstance(m, WireStateComm):
+        import jax
+        st = m.state
+        return {"kind": "wire-state",
+                "struct": _key_enc(st.struct),
+                "carry": None if st.carry is None else _tree_enc(
+                    jax.tree.map(np.asarray, st.carry))}
     if hasattr(m, "pre_decide"):             # ChaosComm: schedule-pure
         return {"kind": "chaos"}
     if isinstance(m, OutageComm):
@@ -349,6 +356,12 @@ def _restore_member(m: Any, snap: dict) -> None:
         m.staleness_ema = float(snap["staleness_ema"])
         m.count = int(snap["count"])
         m._held = _plan_dec(snap["held"])
+        return
+    if kind == "wire-state":
+        assert isinstance(m, WireStateComm), type(m).__name__
+        m.state.struct = _key_dec(snap["struct"])
+        m.state.carry = (None if snap["carry"] is None
+                         else _tree_dec(snap["carry"]))
         return
     if kind in ("chaos", "outage", "static"):
         return                                # schedule-pure, nothing moves

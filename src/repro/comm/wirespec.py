@@ -15,7 +15,7 @@ Grammar
     value     := int | float | identifier        (e.g. dtype=bfloat16)
 
 ``name`` must name a packed wire format (``core.wire``: dense, dense_bf16,
-int8, ternary, hybrid, randk, topk) or a math-level compressor
+int8, ternary, hybrid, randk, topk, lowrank) or a math-level compressor
 (``core.compressors``: identity, sparsifier, ternary, blocked_ternary,
 lowprec, hybrid, blocked_hybrid) — several names exist at BOTH levels with
 different semantics ("ternary" is the global-anchor Example-2 operator at
@@ -26,6 +26,34 @@ format-as-compressor adapter (:class:`repro.core.compressors.WireCompressor`)
 and is only meaningful at the compressor level.  ``"outage"`` is the
 zero-link blackout pseudo-spec (``runtime.fault.OUTAGE_SPEC``): it builds
 neither a wire nor a compressor — drivers map it to the W_t = I plan.
+An unknown ``name`` raises at parse time with the full family catalog —
+every registered name and its parameter grammar (see
+:func:`describe_families`).
+
+Stateful wire families
+----------------------
+A spec stays a frozen VALUE even when its format carries runtime state:
+``lowrank:r=..[,iters=..][,block=..]`` (repro.lowrank, PowerGossip-style
+warm-started power-iteration factors) names the CODEC; the warm factors
+themselves are never part of the spec, the format object, or the plan
+key.  The contract a stateful family must follow:
+
+  * state is an explicit jittable pytree threaded through the gossip
+    step (``repro.lowrank.gossip.stateful_flat_gossip_exchange``),
+    mirroring the async in-flight carry — the WireFormat object stays
+    frozen/hashable so PlanBank keys and spec canonicalization are
+    untouched;
+  * the trainer/session owns the live carry host-side in a
+    :class:`repro.comm.WireState` holder (a ``WireStateComm`` member
+    rides the Compose stack so it is visible to resume);
+  * ``repro.comm.resume`` snapshots it as kind "wire-state" and restores
+    it bit-exactly on kill/resume;
+  * any rung/plan switch or ElasticComm churn event FLUSHES the carry to
+    the family's deterministic cold seed (state is only meaningful for
+    the exact (plan, shapes, rung) it was built against; the cold encode
+    is always valid, so a flush costs one step of warm-up, never
+    correctness) — this is how churn "re-keys" wire state alongside
+    ``(x, s)``.
 
 Canonical form
 --------------
@@ -56,6 +84,48 @@ def _wire_registry() -> Dict[str, Any]:
 def _compressor_registry() -> Dict[str, Any]:
     from ..core.compressors import _REGISTRY
     return _REGISTRY
+
+
+def _params_of(entry) -> str:
+    """Parameter grammar of one registry entry: ``k=default,...`` over the
+    init fields of the backing dataclass.  Factory entries (lambdas /
+    functions) are probed by calling them with no args — every registry
+    factory is default-constructible — and fall back to "" if not."""
+    cls = entry
+    if not (isinstance(cls, type) and dataclasses.is_dataclass(cls)):
+        try:
+            cls = type(entry())
+        except Exception:       # noqa: BLE001 — grammar text, best-effort
+            return ""
+    if not dataclasses.is_dataclass(cls):
+        return ""
+    parts = []
+    for f in dataclasses.fields(cls):
+        if not f.init:
+            continue
+        if f.default is not dataclasses.MISSING:
+            parts.append(f"{f.name}={_render(f.default)}")
+        elif f.default_factory is not dataclasses.MISSING:
+            parts.append(f"{f.name}=...")
+        else:
+            parts.append(f"{f.name}=<required>")
+    return ",".join(parts)
+
+
+def describe_families() -> str:
+    """Human-readable catalog of every known codec family and its
+    parameter grammar (defaults shown) — the payload of the unknown-name
+    parse error, so a typo'd rung tells you what IS spellable."""
+    lines = []
+    for level, reg in (("wire", _wire_registry()),
+                       ("compressor", _compressor_registry())):
+        ent = []
+        for nm in sorted(reg):
+            ps = _params_of(reg[nm])
+            ent.append(nm + (f"[:{ps}]" if ps else ""))
+        lines.append(f"  {level}: " + "; ".join(ent))
+    lines.append(f"  {OUTAGE_NAME} (blackout pseudo-spec, no args)")
+    return "\n".join(lines)
 
 
 def _coerce(raw: str) -> _ArgVal:
@@ -112,8 +182,9 @@ class WireSpec:
         known = (set(_wire_registry()) | set(_compressor_registry())
                  | {OUTAGE_NAME})
         if name not in known:
-            raise ValueError(f"unknown codec {name!r} in spec {spec!r}; "
-                             f"have {sorted(known)}")
+            raise ValueError(
+                f"unknown codec {name!r} in spec {spec!r}; known families "
+                f"(name[:k=v,...], defaults shown):\n{describe_families()}")
         if adapter and name not in _wire_registry():
             raise ValueError(f"'wire:' prefix needs a packed wire format, "
                              f"got {name!r} in {spec!r}")

@@ -228,6 +228,14 @@ class AdaptConfig:
 class RunConfig:
     """Distribution + optimization options for a training/serving run."""
     consensus_axis: Optional[str] = "data"   # "data" | "pod" | None (allreduce)
+    algorithm: str = "dcdgd"                 # consensus algorithm rung:
+    # "dcdgd" (paper Alg. 1, differential coding — the trainer backend) |
+    # "innovation" (core.innovation, CHOCO-style innovation compression per
+    # arXiv 2105.06697; session-level backend, selected through
+    # adapt.runner.session_for_algorithm)
+    innovation_gamma: float = 0.0            # innovation consensus step size
+    # (0 = derive the CHOCO-admissible gamma from W and the rung's SNR via
+    # core.innovation.choco_gamma)
     # the consensus graph, in the repro.topology grammar ("ring",
     # "torus:4x2", "erdos:p=0.3,seed=0", ...); parsed to a TopoSpec at
     # construction so a typo'd graph fails at config-build time
@@ -269,3 +277,9 @@ class RunConfig:
     def __post_init__(self):
         from ..topology import TopoSpec
         object.__setattr__(self, "topology", TopoSpec.parse(self.topology))
+        if self.algorithm not in ("dcdgd", "innovation"):
+            raise ValueError(f"unknown algorithm {self.algorithm!r} "
+                             f"(want 'dcdgd' or 'innovation')")
+        if self.innovation_gamma < 0:
+            raise ValueError(f"innovation_gamma must be >= 0, got "
+                             f"{self.innovation_gamma}")

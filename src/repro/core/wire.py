@@ -345,14 +345,21 @@ class TopKWire(WireFormat):
 
 
 # ---------------------------------------------------------------------------
+def _lowrank_wire(**kw) -> WireFormat:
+    # lazy: repro.lowrank imports this module (avoid the import cycle)
+    from ..lowrank.wire import LowRankWire
+    return LowRankWire(**kw)
+
+
 _WIRES = {
     "dense": DenseWire,
-    "dense_bf16": lambda **kw: DenseWire(dtype="bfloat16", **kw),
+    "dense_bf16": lambda **kw: DenseWire(**{"dtype": "bfloat16", **kw}),
     "int8": Int8Wire,
     "ternary": TernaryWire,
     "hybrid": HybridWire,
     "randk": RandKWire,
     "topk": TopKWire,
+    "lowrank": _lowrank_wire,
 }
 
 
@@ -393,7 +400,7 @@ def tree_wire_bits(fmt: WireFormat, tree) -> int:
 # expressions as the per-leaf formats (division-form probabilities, same
 # reduction orders).
 
-_NO_RNG = ("dense", "topk")
+_NO_RNG = ("dense", "topk", "lowrank")
 
 
 def needs_rng(fmt: WireFormat) -> bool:
@@ -652,6 +659,12 @@ def row_encode(fmt: WireFormat, rows: jax.Array,
         idx = jnp.argsort(_rows_tiled(u, b), axis=-1)[..., : fmt.k]
         vals = jnp.take_along_axis(t, idx, axis=-1) * (b / fmt.k)
         return {"val": vals, "idx": idx.astype(jnp.int16)}
+    # duck-typed extension point: a format defined outside this module
+    # (e.g. repro.lowrank.LowRankWire) brings its own row codec instead of
+    # growing the isinstance chain
+    enc = getattr(fmt, "row_encode_rows", None)
+    if enc is not None:
+        return enc(rows, u)
     raise NotImplementedError(f"no row codec for {fmt.name}")
 
 
@@ -678,4 +691,7 @@ def row_decode(fmt: WireFormat, wire: Wire) -> jax.Array:
         out = jnp.put_along_axis(out, idx, wire["val"], axis=-1,
                                  inplace=False)
         return _rows_untiled(out)
+    dec = getattr(fmt, "row_decode_rows", None)
+    if dec is not None:
+        return dec(wire)
     raise NotImplementedError(f"no row codec for {fmt.name}")

@@ -1,0 +1,44 @@
+"""repro.lowrank — structured (low-rank) wire compression, the repo's
+first STATEFUL wire family.
+
+PowerGossip (arXiv 2008.01425) compresses each gossip differential with a
+rank-r sketch refined by warm-started power iteration: the factors found
+at step t seed step t+1, so a slowly-rotating differential subspace (the
+usual late-training regime — the self-compression-noise-reduction effect
+concentrates d into few directions) is tracked at O(r (m+n)) floats per
+(m, n) tile instead of O(m n).
+
+Layout.  :class:`~repro.lowrank.wire.LowRankWire` is a normal
+:class:`repro.core.wire.WireFormat` — each ``block``-wide flat row is
+reshaped to an (m, n) tile (m = 2^floor(log2 sqrt(block))) and sketched
+as P Q^T with P orthonormal (R' = rows * row_width / block tiles per
+buffer, wire parts keep the leading row dim so they ride the one-ppermute
+flat path unchanged).  Stateless uses (the ladder oracle, fig2, the
+per-leaf parity path) cold-start every encode from a FIXED orthonormal
+seed — the codec is deterministic and RNG-free, so ``expected_noise_power``
+is EXACT (residual energy after the same iteration), not a bound.
+
+State.  The warm-started variant threads the trailing Q factors through
+an explicit jittable carry, mirroring the async in-flight carry
+(``core.gossip.delayed_flat_gossip_exchange``):
+:func:`~repro.lowrank.gossip.stateful_flat_gossip_exchange` takes and
+returns ``wstate = {"q": {group_index: (tiles, n, r)}}``, and
+:func:`~repro.lowrank.gossip.build_stateful_gossip_fn` shard_maps it over
+the consensus mesh exactly like ``build_delayed_gossip_fn``.  Who owns
+that state is a comm-layer contract (see ``repro.comm.wirespec``
+"Stateful wire families"): the trainer holds it host-side in a
+:class:`repro.comm.WireState`, ``SessionCheckpointer`` snapshots it as
+resume kind "wire-state", and plan switches / ElasticComm churn flush it
+back to the cold seed (re-keying it alongside ``(x, s)``) — warm factors
+never leak across rungs, graphs, or fleet epochs.
+"""
+from .wire import LowRankWire
+from .gossip import (build_stateful_gossip_fn, init_wire_state,
+                     stateful_flat_gossip_exchange)
+
+__all__ = [
+    "LowRankWire",
+    "build_stateful_gossip_fn",
+    "init_wire_state",
+    "stateful_flat_gossip_exchange",
+]

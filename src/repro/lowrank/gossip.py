@@ -1,0 +1,170 @@
+"""Stateful flat gossip: thread warm-started lowrank factors through the
+one-ppermute flat path.
+
+THE WIRE-STATE CONTRACT (mirrors the delayed-gossip carry, see
+``core.gossip`` "THE DELAYED-STATE CONTRACT").  A stateful wire's
+per-edge memory is an explicit, jittable pytree threaded through the
+gossip step, never hidden inside a format object:
+
+    wstate = {"q": {group_index: (rows_g, S, n, r) f32}}
+
+one trailing power-iteration factor per lowrank rung group of the flat
+plan (stateless groups simply don't appear).  Each node warm-starts the
+encode of its OWN differential from its own ``q`` — under shard_map the
+leading row dim is per-node, so this IS per-edge state keyed by the edge
+source, and the receiving end needs none (the wire carries both factors).
+
+Ownership: the trainer/session holds wstate host-side between steps
+(:class:`repro.comm.WireState`), ``repro.comm.resume`` snapshots it as
+kind "wire-state", and any plan switch, rung change, or ElasticComm churn
+event FLUSHES it to the cold seed — the factors are only meaningful for
+the exact (plan, shapes, rung) they were built against, and
+``decode(encode(d))`` from the cold seed is still a valid (just
+un-warmed) sketch, so a flush costs one step of extra residual, never
+correctness.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import wire as wirelib
+from ..core.gossip import (GossipPlan, _flat_decode_own, _flat_issue_comm,
+                           _flat_mix, _flat_setup, _gossip_axis)
+from .wire import LowRankWire
+
+PyTree = Any
+WireStateTree = Dict[str, Dict[int, jax.Array]]
+
+
+def cold_wire_state(fplan) -> WireStateTree:
+    """The flush/reset value: the fixed cold-start factor per lowrank
+    group of ``fplan`` (empty when the plan has no stateful rung)."""
+    q = {}
+    for gi, g in enumerate(fplan.groups):
+        if isinstance(g.fmt, LowRankWire):
+            q[gi] = g.fmt.init_rows_state((g.rows, fplan.block))
+    return {"q": q}
+
+
+def init_wire_state(plan: GossipPlan, leaf_shapes, leaf_dtypes
+                    ) -> WireStateTree:
+    """Host-side convenience: cold state for ``plan`` over a tree with the
+    given (shard-local) leaf shapes/dtypes."""
+    fmts = plan.fmts_for(len(list(leaf_shapes)))
+    fplan = wirelib.make_flat_plan(list(leaf_shapes), list(leaf_dtypes),
+                                   fmts)
+    return cold_wire_state(fplan)
+
+
+def _stateful_flat_encode(plan: GossipPlan, fplan, pallas, key: jax.Array,
+                          leaves, wstate: WireStateTree
+                          ) -> Tuple[Dict[int, Any], WireStateTree]:
+    """One codec pass per rung group; lowrank groups warm-start from
+    ``wstate`` and contribute their fresh trailing factor to the returned
+    state.  Stateless groups run the exact ``_flat_encode`` arithmetic."""
+    from ..kernels import ops as kops
+
+    buf = wirelib.flatten_rows(fplan, leaves)
+    bits = wirelib.rng_rows(fplan, key)
+    wires: Dict[int, Any] = {}
+    new_q: Dict[int, jax.Array] = {}
+    for gi, g in enumerate(fplan.groups):
+        rows = buf[g.row_start:g.row_start + g.rows]
+        if isinstance(g.fmt, LowRankWire):
+            wires[gi], new_q[gi] = g.fmt.encode_rows(rows, wstate["q"][gi])
+        elif pallas[gi]:
+            wires[gi] = kops.encode_rows(g.fmt, rows, bits[gi])
+        else:
+            u = wirelib.uniform_from_bits(bits[gi]) \
+                if wirelib.needs_rng(g.fmt) else None
+            wires[gi] = wirelib.row_encode(g.fmt, rows, u)
+    return wires, {"q": new_q}
+
+
+def stateful_flat_gossip_exchange(plan: GossipPlan, key: jax.Array,
+                                  d_local: PyTree,
+                                  wstate: Optional[WireStateTree] = None,
+                                  ) -> Tuple[PyTree, PyTree, WireStateTree]:
+    """Same contract as :func:`core.gossip.flat_gossip_exchange`, plus the
+    wire-state carry: returns ``(c_own, agg, wstate')``.  ``wstate=None``
+    cold-starts in place (bit-exact with the stateless flat path, since
+    ``row_encode_rows`` cold-starts from the same seed)."""
+    leaves, treedef = jax.tree.flatten(d_local)
+    fplan, pallas = _flat_setup(plan, leaves)
+    if wstate is None:
+        wstate = cold_wire_state(fplan)
+    wires, new_wstate = _stateful_flat_encode(plan, fplan, pallas, key,
+                                              leaves, wstate)
+    c_rows = _flat_decode_own(fplan, pallas, wires)
+    c_tree = jax.tree.unflatten(treedef,
+                                wirelib.unflatten_rows(fplan, c_rows))
+    if plan.n_nodes == 1:
+        return c_tree, c_tree, new_wstate
+    comm = _flat_issue_comm(plan, _gossip_axis(plan), wires)
+    agg_rows = _flat_mix(plan, fplan, pallas, comm, c_rows)
+    agg_tree = jax.tree.unflatten(treedef,
+                                  wirelib.unflatten_rows(fplan, agg_rows))
+    return c_tree, agg_tree, new_wstate
+
+
+def build_stateful_gossip_fn(plan: GossipPlan, mesh, d_specs: PyTree):
+    """Shard-mapped stateful gossip for node-stacked trees (the exact
+    shape of :func:`core.gossip.build_delayed_gossip_fn`).
+
+    Returns ``(init_fn, step_fn)``:
+
+      * ``init_fn(key, d_zeros_stacked) -> wstate`` — the cold seed,
+        data-independent (the key argument is unused; the signature
+        matches the delayed builder so the trainer treats both carries
+        uniformly);
+      * ``step_fn(key, d_stacked, wstate) -> (c_own, agg, wstate')``.
+
+    The wstate leaves keep the leading node dim sharded over the
+    consensus axes — each node's warm factors live with its shard, so
+    ElasticComm re-keying ``(x, s)`` re-keys them the same way (in
+    practice churn just flushes to the cold seed; see module docstring).
+    """
+    from ..compat import shard_map
+
+    lead = P(plan.consensus_axes)
+
+    def _fold(key):
+        k = key
+        for a in mesh.axis_names:
+            k = jax.random.fold_in(k, jax.lax.axis_index(a))
+        return k
+
+    strip = lambda t: t.reshape(t.shape[1:])
+    lift = lambda t: t.reshape((1,) + t.shape)
+
+    # pytree-PREFIX spec: one leaf covers the whole {"q": {gi: ...}} tree
+    sspecs = {"q": lead}
+
+    def init_body(key, d_stacked):
+        del key
+        d_local = jax.tree.map(strip, d_stacked)
+        leaves, _ = jax.tree.flatten(d_local)
+        fplan, _ = _flat_setup(plan, leaves)
+        return jax.tree.map(lift, cold_wire_state(fplan))
+
+    def step_body(key, d_stacked, wstate):
+        d_local = jax.tree.map(strip, d_stacked)
+        ws = jax.tree.map(strip, wstate)
+        c_own, agg, ws2 = stateful_flat_gossip_exchange(
+            plan, _fold(key), d_local, ws)
+        return (jax.tree.map(lift, c_own), jax.tree.map(lift, agg),
+                jax.tree.map(lift, ws2))
+
+    init_fn = shard_map(init_body, mesh=mesh,
+                        in_specs=(P(), d_specs),
+                        out_specs=sspecs,
+                        check_vma=False)
+    step_fn = shard_map(step_body, mesh=mesh,
+                        in_specs=(P(), d_specs, sspecs),
+                        out_specs=(d_specs, d_specs, sspecs),
+                        check_vma=False)
+    return init_fn, step_fn

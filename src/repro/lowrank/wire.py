@@ -1,0 +1,171 @@
+"""LowRankWire — PowerGossip-style rank-r power-iteration wire format.
+
+Each ``block``-wide row tile is viewed as an (m, n) matrix (m n = block,
+m = 2^floor(log2 sqrt(block))) and transmitted as the rank-r sketch
+P Q^T: P = qr(X Q_prev) orthonormal (m, r), Q = X^T P (n, r), repeated
+``iters`` times.  Because P P^T is an orthogonal projection, the residual
+is EXACTLY ||X||^2 - ||Q||^2 — the closed form behind
+:meth:`LowRankWire.expected_noise_power`.
+
+Determinism: the stateless ``encode`` cold-starts from a FIXED orthonormal
+seed Q0 (module constant), so the codec draws no randomness at all —
+``lowrank`` sits in ``core.wire._NO_RNG`` and its flat-path RNG buffer is
+the zero-bit placeholder.  The stateful gossip path warm-starts from the
+previous step's Q instead (see :mod:`repro.lowrank.gossip`); the oracle
+prices the cold encode, which the warm path only improves on once the
+differential subspace stabilizes (measured SNR feedback captures the
+difference).
+
+Wire parts keep the leading row dimension — ``p``: (R, S, m, r) and
+``q``: (R, S, n, r) float32 for an (R, W) row buffer with S = W / block
+tiles per row — so the flat gossip path's tree-mapped ppermute/all_gather
+moves them like any other packed buffer, and ``wire_bits`` stays linear
+in the row count (the ``per_leaf_flat_bits`` decomposition contract):
+R S r (m + n) * 32 bits, e.g. 3 bits/element at rank 1, block 512.
+
+BIASED (a projection, like TopKWire): ``snr_lower_bound`` is 0, so the
+config validator records a warning and ladder feasibility rides on the
+measured-SNR feedback loop plus a guaranteed-SNR anchor rung.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.wire import Wire, WireFormat, _pad_last
+
+
+def tile_dims(block: int) -> Tuple[int, int]:
+    """(m, n) with m n = block, m = 2^floor(log2 sqrt(block))."""
+    m = 2 ** int(math.floor(math.log2(math.sqrt(block))))
+    if block % m:
+        raise ValueError(f"lowrank block {block} not divisible by tile "
+                         f"height {m}")
+    return m, block // m
+
+
+@functools.lru_cache(maxsize=None)
+def _cold_q0(n: int, r: int) -> np.ndarray:
+    """Fixed orthonormal (n, r) cold-start factor (deterministic seed)."""
+    g = np.random.RandomState(0).standard_normal((n, r))
+    q, _ = np.linalg.qr(g)
+    return np.ascontiguousarray(q.astype(np.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankWire(WireFormat):
+    """Rank-``r`` power-iteration sketch per ``block``-wide tile."""
+    r: int = 4
+    iters: int = 1
+    block: int = 512
+    name: str = dataclasses.field(default="lowrank", init=False)
+    unbiased: bool = dataclasses.field(default=False, init=False)
+
+    def __post_init__(self):
+        m, n = tile_dims(self.block)
+        if not (1 <= self.r <= min(m, n)):
+            raise ValueError(
+                f"lowrank rank r={self.r} out of range [1, {min(m, n)}] "
+                f"for block={self.block} (tile {m}x{n})")
+        if self.iters < 1:
+            raise ValueError(f"lowrank iters={self.iters} must be >= 1")
+
+    # ---- tile geometry ----------------------------------------------------
+    @property
+    def m(self) -> int:
+        return tile_dims(self.block)[0]
+
+    @property
+    def n(self) -> int:
+        return tile_dims(self.block)[1]
+
+    def state_shape(self, rows_shape: Tuple[int, int]) -> Tuple[int, ...]:
+        """Warm-start Q carry shape for an (R, W) row buffer."""
+        R, W = rows_shape
+        assert W % self.block == 0, (rows_shape, self.block)
+        return (R, W // self.block, self.n, self.r)
+
+    def init_rows_state(self, rows_shape: Tuple[int, int]) -> jax.Array:
+        """Cold-start Q factors for an (R, W) row buffer (the fixed seed
+        broadcast over tiles) — also what a state flush resets to."""
+        q0 = jnp.asarray(_cold_q0(self.n, self.r))
+        return jnp.broadcast_to(q0, self.state_shape(rows_shape))
+
+    # ---- the one codec kernel (stateless + warm paths share it) ----------
+    def encode_rows(self, rows: jax.Array, q_prev: jax.Array
+                    ) -> Tuple[Wire, jax.Array]:
+        """(R, W) rows + (R, S, n, r) seed -> (wire, fresh Q carry)."""
+        R, W = rows.shape
+        m, n = self.m, self.n
+        x = rows.astype(jnp.float32).reshape(R, W // self.block, m, n)
+        q = q_prev.astype(jnp.float32)
+        p = None
+        for _ in range(self.iters):
+            y = jnp.einsum("rsmn,rsnk->rsmk", x, q)
+            p, _ = jnp.linalg.qr(y)                    # orthonormal (R,S,m,r)
+            q = jnp.einsum("rsmn,rsmk->rsnk", x, p)
+        return {"p": p, "q": q}, q
+
+    def decode_rows(self, wire: Wire) -> jax.Array:
+        """wire -> (R, W) f32 rows (P Q^T per tile)."""
+        x = jnp.einsum("rsmk,rsnk->rsmn", wire["p"], wire["q"])
+        R, S, m, n = x.shape
+        return x.reshape(R, S * m * n)
+
+    # flat-path hooks (duck-typed by core.wire.row_encode / row_decode)
+    def row_encode_rows(self, rows: jax.Array,
+                        u: Optional[jax.Array]) -> Wire:
+        del u                                          # RNG-free
+        return self.encode_rows(rows, self.init_rows_state(rows.shape))[0]
+
+    def row_decode_rows(self, wire: Wire) -> jax.Array:
+        return self.decode_rows(wire)
+
+    # ---- WireFormat surface ----------------------------------------------
+    def encode(self, key, x):
+        xp, L = _pad_last(x.astype(jnp.float32), self.block)
+        rows = xp.reshape(-1, self.block)
+        return self.encode_rows(rows, self.init_rows_state(rows.shape))[0]
+
+    def decode(self, wire, shape, dtype):
+        rows = self.decode_rows(wire)
+        lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        return (rows.reshape(lead, -1)[..., : shape[-1]]
+                .reshape(shape).astype(dtype))
+
+    def wire_bits(self, shape):
+        L = shape[-1]
+        lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        T = -(-L // self.block)
+        return lead * T * self.r * (self.m + self.n) * 32
+
+    def snr_lower_bound(self, d):
+        return 0.0          # biased projection: no worst-case guarantee
+
+    def expected_noise_power(self, x):
+        """EXACT residual of the cold-start encode on THIS input (the
+        codec is deterministic, so this is an identity, not a bound).
+
+        Closed form: with P orthonormal, ||X - P P^T X||^2 = ||X||^2 -
+        ||X^T P||^2, and the trailing factor is Q = X^T P, so the tile
+        residual is ||X||^2 - ||Q||^2.  That identity lives on the PADDED
+        row domain; when the last dim isn't block-aligned the projection
+        leaks part of the residual into the padding region, which
+        ``decode`` strips — so the misaligned case measures the stripped
+        difference instead (still exact, one extra einsum)."""
+        xf = x.astype(jnp.float32)
+        xp, L = _pad_last(xf, self.block)
+        rows = xp.reshape(-1, self.block)
+        wire, _ = self.encode_rows(rows, self.init_rows_state(rows.shape))
+        if L % self.block == 0:
+            return jnp.maximum(
+                jnp.sum(rows ** 2) - jnp.sum(wire["q"] ** 2), 0.0)
+        lead = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+        diff = (self.decode_rows(wire) - rows).reshape(lead, -1)[:, :L]
+        return jnp.sum(diff ** 2)

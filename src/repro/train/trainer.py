@@ -555,6 +555,160 @@ class Trainer:
                          donate_argnums=(0, 2) if donate else ())
         return init_carry_fn, jitted
 
+    # ------------------------------------------------------------------
+    # stateful-wire (warm-started lowrank) gossip step
+    # ------------------------------------------------------------------
+    def build_stateful_train_step(self, plan: Optional[G.GossipPlan] = None):
+        """The warm-started stateful-wire train step (lowrank rungs).
+
+        Returns ``(init_wstate_fn, step_fn)``:
+
+          * ``init_wstate_fn(state) -> wstate`` — the deterministic cold
+            seed (data-independent; also what a flush resets to);
+          * ``step_fn(state, batch, wstate) -> (state', metrics, wstate')``
+            — jittable: identical x/s algebra to the sync step, but the
+            lowrank groups of the flat plan warm-start their power
+            iteration from ``wstate`` and return the fresh factors.
+
+        The carry is explicit loop state (see the wire-state contract in
+        ``repro.lowrank.gossip``); the trainer-side holder that threads
+        it between jitted calls is a ``repro.comm.WireState`` shared with
+        the composed WireStateComm member, so kill/resume snapshots the
+        warm factors bit-exactly (resume kind "wire-state").
+        """
+        plan = plan if plan is not None else self.plan
+        assert self.node_mode, "stateful gossip needs an active gossip plan"
+        assert not self.run.gossip_stream
+        run = self.run
+        schedule = make_schedule(run.schedule, run.alpha)
+        rules = self.rules
+        n = self.n_nodes
+        per_node_grad = self._grad_fn()
+        param_specs = self.param_specs()
+        spmd_axes = (self.consensus_axes if len(self.consensus_axes) > 1
+                     else self.consensus_axes[0])
+        from ..lowrank import build_stateful_gossip_fn
+        init_fn, gstep_fn = build_stateful_gossip_fn(plan, self.mesh,
+                                                     param_specs)
+
+        def init_wstate_fn(state: TrainState):
+            zeros = jax.tree.map(jnp.zeros_like, state.s)
+            return init_fn(jax.random.PRNGKey(0), zeros)
+
+        def step_fn(state: TrainState, batch, wstate
+                    ) -> Tuple[TrainState, Dict, Any]:
+            key, k_gossip = jax.random.split(state.key)
+            gb = batch["tokens"].shape[0]
+            per = gb // n
+
+            def to_nodes(t):
+                return t.reshape((n, per) + t.shape[1:])
+
+            nb = jax.tree.map(to_nodes, batch)
+            with use_rules(rules):
+                vg = jax.vmap(per_node_grad, spmd_axis_name=spmd_axes)
+                loss, metrics, grads = vg(state.x, nb)
+            alpha_t = schedule(state.step + 1)
+            u, opt = update_direction(run.optimizer, grads, state.opt,
+                                      state.x)
+            d = jax.tree.map(lambda ss, uu: ss - alpha_t *
+                             uu.astype(ss.dtype), state.s, u)
+            c_own, agg, wstate2 = gstep_fn(k_gossip, d, wstate)
+            x_new = _tree_add(state.x, c_own)
+            s_new = jax.tree.map(lambda a, b, c: a + b - c,
+                                 state.s, agg, c_own)
+            diff_l = jnp.stack([
+                jnp.sum(t.astype(jnp.float32) ** 2)
+                for t in jax.tree.leaves(d)])
+            noise_l = jnp.stack([
+                jnp.sum((a.astype(jnp.float32)
+                         - b.astype(jnp.float32)) ** 2)
+                for a, b in zip(jax.tree.leaves(c_own),
+                                jax.tree.leaves(d))])
+            out_metrics = {
+                "loss": jnp.mean(loss),
+                "alpha": alpha_t,
+                "grad_norm": jnp.sqrt(sum(
+                    jnp.sum(g.astype(jnp.float32) ** 2)
+                    for g in jax.tree.leaves(grads))),
+                "diff_power": jnp.sum(diff_l),
+                "noise_power": jnp.sum(noise_l),
+                "diff_power_leaves": diff_l,
+                "noise_power_leaves": noise_l,
+            }
+            out_metrics.update({k: jnp.mean(v) for k, v in metrics.items()})
+            return (TrainState(x=x_new, s=s_new, opt=opt,
+                               step=state.step + 1, key=key),
+                    out_metrics, wstate2)
+
+        return init_wstate_fn, step_fn
+
+    def jit_stateful_train_step(self, donate: bool = True,
+                                plan: Optional[G.GossipPlan] = None):
+        """``build_stateful_train_step`` jitted: carry shardings are left
+        unspecified (the shard_map in_specs pin them), state/batch match
+        the sync step.  Donates state AND carry."""
+        init_wstate_fn, step_fn = self.build_stateful_train_step(plan)
+        shardings = self.state_shardings()
+        batch_sh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                                self.batch_spec(),
+                                is_leaf=lambda t: isinstance(t, P))
+        jitted = jax.jit(step_fn,
+                         in_shardings=(shardings, batch_sh, None),
+                         out_shardings=(shardings, None, None),
+                         donate_argnums=(0, 2) if donate else ())
+        return init_wstate_fn, jitted
+
+    def _wire_state_holder(self):
+        """The ONE WireState this trainer threads its warm lowrank factors
+        through — shared with the composed WireStateComm member, so the
+        session checkpointer snapshots/restores the same slot the step
+        wrappers read and write (and ElasticComm's ``set_shapes`` churn
+        hook flushes it)."""
+        from ..comm import WireState
+        h = getattr(self, "_wire_state", None)
+        if h is None:
+            h = self._wire_state = WireState()
+        return h
+
+    def _plan_stateful(self, plan: G.GossipPlan) -> bool:
+        """Whether ``plan`` carries a stateful (lowrank) rung on the flat
+        path — the dispatch predicate for the warm-started step.  Off-flat
+        and leaf-sequential paths fall back to the stateless cold-start
+        codec (always valid, never warm)."""
+        if plan is None or plan.wire_path != "flat" \
+                or self.run.gossip_stream:
+            return False
+        from ..lowrank.wire import LowRankWire
+        fmts = plan.leaf_fmts if plan.leaf_fmts else (plan.fmt,)
+        return any(isinstance(f, LowRankWire) for f in fmts)
+
+    def _stateful_step_for(self, spec, plan: G.GossipPlan,
+                           donate: bool = False):
+        """Bank entry for a plan containing a lowrank rung: a
+        ``step(state, batch)`` wrapper around the jitted stateful core
+        that threads the warm factors through the shared WireState.  A
+        struct change (rung or graph switch altering the packed-row
+        layout) flushes to the cold seed — a SYMMETRIC reset on every
+        node that differential coding self-corrects (costs one step of
+        warm-up, never correctness)."""
+        init_wstate_fn, jitted = self.jit_stateful_train_step(donate=donate,
+                                                              plan=plan)
+        holder = self._wire_state_holder()
+        key = tuple(spec) if isinstance(spec, list) else spec
+        struct = (key, plan.mode,
+                  tuple((tuple(int(o) for o in off), float(w))
+                        for off, w in plan.offsets))
+
+        def step(state, batch):
+            if holder.struct != struct or holder.carry is None:
+                holder.carry = init_wstate_fn(state)
+                holder.struct = struct
+            state, m, holder.carry = jitted(state, batch, holder.carry)
+            return state, m
+
+        return step
+
     def _delay_holder(self):
         """The ONE DelayState this trainer threads its in-flight gossip
         buffer through — shared with the composed DelayComm member, so
@@ -765,9 +919,14 @@ class Trainer:
         of existing entries."""
         if (isinstance(spec, tuple) and len(spec) == 3
                 and spec[0] == "delay"):
+            # delayed + lowrank runs the stateless cold-start codec (the
+            # in-flight carry already owns the delayed slot; warm factors
+            # would be one step staler than the differential they seed)
             return self._delayed_step_for(spec[1], spec[2], donate=donate)
-        return self.jit_train_step(donate=donate,
-                                   plan=self.plan_for_wire(spec))
+        plan = self.plan_for_wire(spec)
+        if self.node_mode and self._plan_stateful(plan):
+            return self._stateful_step_for(spec, plan, donate=donate)
+        return self.jit_train_step(donate=donate, plan=plan)
 
     def wire_bank(self, max_size: int = 8, donate: bool = False):
         """Bounded LRU of jitted train steps keyed by wire spec — or by a
@@ -861,6 +1020,29 @@ class Trainer:
             schedule=sched, topologies=topos, dims=self.plan.dims,
             guaranteed_snr=lambda s: make_wire(s).snr_lower_bound(1))
 
+    def _stateful_wire_on(self) -> bool:
+        """Whether ANY spec this run can select (the configured wire or an
+        adapt-ladder rung) is a stateful lowrank family on the flat path —
+        the predicate that rides a WireStateComm member on the policy so
+        kill/resume snapshots the warm factors."""
+        if not self.node_mode or self.run.gossip_stream \
+                or self.run.wire_path != "flat":
+            return False
+        from ..comm import WireSpec
+        specs = [WireSpec.parse(self.run.wire)]
+        if self.run.adapt.enabled:
+            specs.extend(WireSpec.parse(s) for s in self.run.adapt.ladder)
+        return any(s.name == "lowrank" for s in specs)
+
+    def _wire_state_member(self):
+        """The warm lowrank factors as a WireStateComm Compose member:
+        passive (never proposes a plan), owns the SAME WireState slot the
+        stateful step wrappers thread, so a session checkpoint snapshots
+        the factors mid-run (kind "wire-state") and ElasticComm churn
+        flushes them via ``set_shapes``."""
+        from ..comm import WireStateComm
+        return WireStateComm(state=self._wire_state_holder())
+
     def _delay_member(self):
         """RunConfig.gossip_delay as a DelayComm Compose member: tags
         every decided plan with the delay (bank key ``("delay", d,
@@ -902,6 +1084,8 @@ class Trainer:
                 parts.append(self._fault_member())
             if delay_on:
                 parts.append(self._delay_member())
+            if self._stateful_wire_on():
+                parts.append(self._wire_state_member())
             return parts[0] if len(parts) == 1 else Compose(*parts)
         eta_min = self.validate_ladder()
         if delay_on:
@@ -963,6 +1147,10 @@ class Trainer:
                 if rt is not None:
                     rt(eta_min=eta_min)
             parts.append(self._delay_member())
+        if self._stateful_wire_on():
+            if not parts:
+                parts.append(StaticComm(self.run.wire))
+            parts.append(self._wire_state_member())
         if not parts:
             # enabled but no member applies (e.g. rate_control=False with
             # no budget and no outage windows): hold the configured wire

@@ -1,0 +1,399 @@
+"""Stateful structured compression (ISSUE 10): the lowrank wire family
+and the innovation-compression rung.
+
+Locks down the new-subsystem contracts end to end:
+
+  * LowRankWire codec: roundtrip determinism, exact ``wire_bits``
+    payload accounting, ``per_leaf_flat_bits`` decomposition on mixed
+    flat plans, and the EXACT ``expected_noise_power`` oracle
+    (Monte-Carlo-validated like the PR-1 oracle tests — the codec is
+    deterministic, so the MC mean must match identically);
+  * the stateful gossip carry: cold-start bit-parity with the stateless
+    flat path, warm-start residual improvement on slowly varying
+    differentials, and the cold flush value;
+  * WireSpec grammar errors: an unknown family raises with the full
+    catalog (every family name + parameter grammar), and every
+    defaults-complete grammar line round-trips through
+    ``WireSpec.parse``;
+  * resume kind "wire-state": snapshot/restore of a live WireStateComm
+    is bit-exact, and ElasticComm-style churn (``set_shapes``) flushes
+    the carry;
+  * the innovation rung (core.innovation): oracle identity on the
+    innovation differential (MC, tolerance-gated), convergence on the
+    W1 quadratic, the hw = (W (x) I) h invariant, and RunConfig /
+    session dispatch (``algorithm="innovation"``).
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import WireSpec, WireState, WireStateComm, describe_families
+from repro.core import gossip as G
+from repro.core import innovation, problems
+from repro.core.compressors import Identity, WireCompressor, make_compressor
+from repro.core.wire import make_flat_plan, make_wire, per_leaf_flat_bits
+from repro.lowrank import (LowRankWire, init_wire_state,
+                           stateful_flat_gossip_exchange)
+from repro.lowrank.wire import tile_dims
+from repro.topology import topology
+
+
+def _single_node_plan(fmts):
+    return G.GossipPlan(consensus_axes=(), dims=(), n_nodes=1,
+                        mode="circulant", offsets=(), W=np.ones((1, 1)),
+                        fmt=fmts[0], leaf_fmts=tuple(fmts))
+
+
+# ---------------------------------------------------------------------------
+# codec geometry + bit accounting
+# ---------------------------------------------------------------------------
+class TestLowRankCodec:
+    def test_tile_dims(self):
+        assert tile_dims(512) == (16, 32)
+        assert tile_dims(64) == (8, 8)
+        assert tile_dims(16) == (4, 4)
+
+    def test_rank_range_validated(self):
+        with pytest.raises(ValueError, match="out of range"):
+            make_wire("lowrank:block=16,r=5")       # tile 4x4 caps r at 4
+        with pytest.raises(ValueError, match="iters"):
+            make_wire("lowrank:r=2,iters=0")
+
+    def test_wire_bits_matches_actual_payload(self):
+        fmt = make_wire("lowrank:block=64,r=3")
+        for shape in [(64,), (200,), (3, 130)]:
+            z = jax.random.normal(jax.random.PRNGKey(0), shape)
+            wire = fmt.encode(jax.random.PRNGKey(1), z)
+            actual = sum(int(np.prod(w.shape)) * w.dtype.itemsize * 8
+                         for w in jax.tree.leaves(wire))
+            assert actual == fmt.wire_bits(shape), (shape, actual)
+
+    def test_bits_linear_in_rank_not_dim(self):
+        # the whole point of the family: payload scales with r, and
+        # per-element cost FALLS as the block grows (r(m+n)/mn)
+        b512 = make_wire("lowrank:block=512,r=4").wire_bits((512,))
+        assert b512 == 4 * (16 + 32) * 32
+        assert make_wire("lowrank:block=512,r=2").wire_bits((512,)) \
+            == b512 // 2
+
+    def test_roundtrip_deterministic_and_zero_maps_to_zero(self):
+        fmt = make_wire("lowrank:block=64,r=2")
+        z = jax.random.normal(jax.random.PRNGKey(3), (3, 130))
+        a = fmt.decode(fmt.encode(jax.random.PRNGKey(0), z), z.shape,
+                       jnp.float32)
+        b = fmt.decode(fmt.encode(jax.random.PRNGKey(9), z), z.shape,
+                       jnp.float32)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        zero = jnp.zeros((2, 64))
+        dec = fmt.decode(fmt.encode(jax.random.PRNGKey(0), zero),
+                         zero.shape, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(dec), 0.0)
+
+    def test_full_rank_tile_is_exact(self):
+        fmt = make_wire("lowrank:block=16,r=4")     # tile 4x4, r = m: exact
+        z = jax.random.normal(jax.random.PRNGKey(5), (48,))
+        dec = fmt.decode(fmt.encode(jax.random.PRNGKey(0), z), z.shape,
+                         jnp.float32)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(z),
+                                   rtol=1e-5, atol=1e-5)
+        power = float(jnp.sum(z ** 2))
+        assert float(fmt.expected_noise_power(z)) <= 1e-5 * power
+
+    def test_per_leaf_flat_bits_decomposition(self):
+        shapes = [(3, 70), (200,), (2, 128)]
+        fmts = [make_wire("int8:block=64"), make_wire("lowrank:block=64,r=3"),
+                make_wire("ternary:block=128")]
+        make_flat_plan(shapes, [jnp.float32] * 3, fmts)   # mixed plan builds
+        per = per_leaf_flat_bits(fmts, shapes)
+        assert len(per) == 3 and all(b > 0 for b in per)
+        from repro.core.wire import flat_tree_wire_bits
+        assert sum(per) == flat_tree_wire_bits(fmts, shapes)
+
+
+# ---------------------------------------------------------------------------
+# the exact oracle, Monte-Carlo-gated (deterministic codec -> identity)
+# ---------------------------------------------------------------------------
+N_MC = 16
+
+
+@pytest.mark.parametrize("spec", ["lowrank:block=64,r=1",
+                                  "lowrank:block=64,iters=3,r=4",
+                                  "lowrank:block=16,r=2"])
+@pytest.mark.parametrize("shape", [(64,), (257,), (3, 130), (2, 2, 100)])
+def test_lowrank_oracle_mc(spec, shape):
+    fmt = make_wire(spec)
+    z = jax.random.normal(jax.random.PRNGKey(11), shape) * 2.0
+    pred = float(fmt.expected_noise_power(z))
+    keys = jax.random.split(jax.random.PRNGKey(12), N_MC)
+
+    def one(k):
+        dec = fmt.decode(fmt.encode(k, z), z.shape, jnp.float32)
+        return jnp.sum((dec - z.astype(jnp.float32)) ** 2)
+
+    draws = np.asarray(jax.vmap(one)(keys), np.float64)
+    mc, se = float(draws.mean()), float(draws.std() / np.sqrt(N_MC))
+    power = float(jnp.sum(z.astype(jnp.float32) ** 2))
+    assert abs(mc - pred) <= 6.0 * se + 1e-5 * (power + 1.0), \
+        (spec, shape, mc, pred)
+    assert se <= 1e-9 * (power + 1.0)       # deterministic: zero variance
+
+
+def test_innovation_oracle_mc():
+    """The innovation rung's oracle IS comp.expected_noise_power on the
+    innovation differential: measured residual must sit within the MC
+    tolerance after the state has moved away from zero."""
+    topo = topology("w1")
+    prob = problems.quadratic(n_nodes=5, dim=8, seed=2)
+    comp = make_compressor("lowprec:bits=4")
+    Wj = jnp.asarray(topo.W, jnp.float32)
+    st = innovation.init(jnp.zeros((5, 8), jnp.float32),
+                         jax.random.PRNGKey(1))
+    for _ in range(20):
+        st, _ = innovation.step(st, Wj, prob.grad, 0.05, comp, 0.3)
+    d = innovation.innovation_differential(st, prob.grad, 0.05)
+    flat = np.asarray(d).reshape(5, -1)
+    pred = float(sum(comp.expected_noise_power(jnp.asarray(r))
+                     for r in flat))
+    keys = jax.random.split(jax.random.PRNGKey(7), 400)
+    draws = np.array([
+        float(sum(jnp.sum((comp(k, jnp.asarray(r)) - jnp.asarray(r)) ** 2)
+                  for r in flat)) for k in keys])
+    mc, se = float(draws.mean()), float(draws.std() / np.sqrt(len(draws)))
+    assert pred > 0.0
+    assert abs(mc - pred) <= 6.0 * se + 1e-6 * (pred + 1.0), (mc, pred, se)
+
+
+# ---------------------------------------------------------------------------
+# stateful gossip carry
+# ---------------------------------------------------------------------------
+class TestStatefulExchange:
+    def _plan_and_tree(self):
+        fmts = [make_wire("lowrank:block=64,r=2"), make_wire("int8:block=64")]
+        plan = _single_node_plan(fmts)
+        key = jax.random.PRNGKey(0)
+        d = {"a": jax.random.normal(jax.random.fold_in(key, 1), (3, 130)),
+             "b": jax.random.normal(jax.random.fold_in(key, 2), (64,))}
+        return plan, key, d
+
+    def test_cold_start_bit_exact_with_stateless_flat_path(self):
+        plan, key, d = self._plan_and_tree()
+        c_ref, agg_ref = G.flat_gossip_exchange(plan, key, d)
+        c, agg, ws = stateful_flat_gossip_exchange(plan, key, d, None)
+        for k in d:
+            np.testing.assert_array_equal(np.asarray(c_ref[k]),
+                                          np.asarray(c[k]), err_msg=k)
+            np.testing.assert_array_equal(np.asarray(agg_ref[k]),
+                                          np.asarray(agg[k]), err_msg=k)
+        # exactly the lowrank group carries state
+        assert set(ws) == {"q"} and len(ws["q"]) == 1
+
+    def test_warm_start_reduces_residual(self):
+        plan, key, d1 = self._plan_and_tree()
+        d2 = jax.tree.map(
+            lambda t: t + 0.01 * jax.random.normal(
+                jax.random.PRNGKey(9), t.shape), d1)
+        _, _, ws1 = stateful_flat_gossip_exchange(plan, key, d1, None)
+        c_warm, _, _ = stateful_flat_gossip_exchange(plan, key, d2, ws1)
+        c_cold, _, _ = stateful_flat_gossip_exchange(plan, key, d2, None)
+
+        def resid(c):
+            return float(sum(jnp.sum((c[k] - d2[k]) ** 2) for k in d2))
+
+        assert resid(c_warm) <= resid(c_cold) + 1e-6
+
+    def test_init_wire_state_is_cold_flush_value(self):
+        plan, key, d = self._plan_and_tree()
+        shapes = [d["a"].shape, d["b"].shape]
+        ws = init_wire_state(plan, shapes, [jnp.float32, jnp.float32])
+        fmt = plan.leaf_fmts[0]
+        (gi, q0), = ws["q"].items()
+        # every tile holds the SAME fixed orthonormal seed
+        q = np.asarray(q0)
+        np.testing.assert_array_equal(q, np.broadcast_to(q[:1, :1], q.shape))
+        np.testing.assert_allclose(
+            np.einsum("ki,kj->ij", q[0, 0], q[0, 0]),
+            np.eye(fmt.r), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# WireSpec grammar catalog (satellite 1) — error text round-trips
+# ---------------------------------------------------------------------------
+class TestGrammarCatalog:
+    def test_unknown_family_lists_catalog(self):
+        with pytest.raises(ValueError) as ei:
+            WireSpec.parse("nosuchcodec:r=3")
+        text = str(ei.value)
+        assert "nosuchcodec" in text
+        for name in ("dense", "int8", "ternary", "hybrid", "lowrank",
+                     "identity", "sparsifier", "outage"):
+            assert name in text, name
+        assert "lowrank[:r=4,iters=1,block=512]" in text
+
+    def test_catalog_grammar_lines_round_trip(self):
+        """Every defaults-complete grammar entry in the catalog must
+        itself parse — the error text can never advertise a spelling the
+        parser rejects."""
+        text = describe_families()
+        m = {level: body for level, _, body in
+             (ln.strip().partition(": ") for ln in text.splitlines())
+             if level in ("wire", "compressor")}
+        assert m["wire"] and m["compressor"]
+        checked = 0
+        for level, body in m.items():
+            for ent in body.split("; "):
+                g = re.fullmatch(r"(\w+)(?:\[:(.*)\])?", ent.strip())
+                assert g, ent
+                name, params = g.group(1), g.group(2) or ""
+                if "<required>" in params or "=..." in params:
+                    continue                 # not spellable from defaults
+                spec = name + (":" + params if params else "")
+                ws = WireSpec.parse(spec)
+                assert ws.name == name
+                assert WireSpec.parse(ws.canonical()) == ws
+                ws.codec("wire" if level == "wire" else "compressor")
+                checked += 1
+        assert checked >= 8, checked
+
+    def test_lowrank_spec_canonical_and_builds(self):
+        ws = WireSpec.parse("lowrank:r=4,iters=2")
+        assert ws.canonical() == "lowrank:iters=2,r=4"
+        fmt = ws.wire()
+        assert isinstance(fmt, LowRankWire)
+        assert (fmt.r, fmt.iters, fmt.block) == (4, 2, 512)
+        comp = WireSpec.parse("wire:lowrank:r=2").compressor()
+        assert isinstance(comp, WireCompressor)
+
+
+# ---------------------------------------------------------------------------
+# resume kind "wire-state" + churn flush
+# ---------------------------------------------------------------------------
+class TestWireStateResume:
+    def _live_member(self):
+        m = WireStateComm()
+        fmt = make_wire("lowrank:block=64,r=2")
+        q = np.asarray(jax.random.normal(jax.random.PRNGKey(3),
+                                         (4, 2, 8, 2)), np.float32)
+        m.state.carry = {"q": {1: jnp.asarray(q)}}
+        m.state.struct = ("lowrank:r=2", "circulant", (((0,), 1.0),))
+        return m, q
+
+    def test_snapshot_restore_bit_exact(self):
+        import json
+
+        from repro.comm.resume import _restore_member, _snap_member
+        m, q = self._live_member()
+        snap = json.loads(json.dumps(_snap_member(m)))   # JSON-safe
+        assert snap["kind"] == "wire-state"
+        fresh = WireStateComm()
+        _restore_member(fresh, snap)
+        assert fresh.state.struct == m.state.struct
+        np.testing.assert_array_equal(
+            np.asarray(fresh.state.carry["q"][1]), q)
+        assert 1 in fresh.state.carry["q"]               # int key survived
+
+    def test_snapshot_none_carry(self):
+        from repro.comm.resume import _restore_member, _snap_member
+        m = WireStateComm()
+        snap = _snap_member(m)
+        assert snap["kind"] == "wire-state" and snap["carry"] is None
+        fresh, _ = self._live_member()
+        _restore_member(fresh, snap)
+        assert fresh.state.carry is None and fresh.state.struct is None
+
+    def test_compose_policy_snapshot_includes_wire_state(self):
+        from repro.comm import Compose, StaticComm
+        from repro.comm.resume import restore_policy, snapshot_policy
+        m, q = self._live_member()
+        pol = Compose(StaticComm("lowrank:r=2"), m)
+        snap = snapshot_policy(pol)
+        m2 = WireStateComm()
+        pol2 = Compose(StaticComm("lowrank:r=2"), m2)
+        restore_policy(pol2, snap)
+        np.testing.assert_array_equal(np.asarray(m2.state.carry["q"][1]), q)
+        assert m2.state.struct == m.state.struct
+
+    def test_churn_set_shapes_flushes(self):
+        m, _ = self._live_member()
+        m.set_shapes([(16, 8)])          # ElasticComm pushes new shapes
+        assert m.state.carry is None and m.state.struct is None
+
+    def test_passive_policy_surface(self):
+        m, _ = self._live_member()
+        assert m.decide(0) is None and m.decide(100) is None
+        m.observe(None)                  # no-op by contract
+        assert not m.consumes_telemetry
+        assert not hasattr(m, "pre_decide")   # must stay a plain proposer
+
+
+# ---------------------------------------------------------------------------
+# innovation rung: dynamics + RunConfig/session plumbing
+# ---------------------------------------------------------------------------
+class TestInnovationRung:
+    def test_hw_invariant(self):
+        topo = topology("w1")
+        prob = problems.quadratic(n_nodes=5, dim=8, seed=2)
+        Wj = jnp.asarray(topo.W, jnp.float32)
+        st = innovation.init(jnp.zeros((5, 8), jnp.float32),
+                             jax.random.PRNGKey(0))
+        comp = make_compressor("lowprec:bits=8")
+        for _ in range(10):
+            st, _ = innovation.step(st, Wj, prob.grad, 0.05, comp, 0.4)
+        np.testing.assert_allclose(np.asarray(Wj @ st.h), np.asarray(st.hw),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_converges_on_w1_quadratic(self):
+        topo = topology("w1")
+        prob = problems.quadratic(n_nodes=5, dim=8, seed=2)
+        res = innovation.run(prob, topo, make_compressor("lowprec:bits=8"),
+                             0.05, 400, jax.random.PRNGKey(0), gamma=0.5)
+        gap0 = res["f_bar"][0] - prob.f_star
+        gapT = res["f_bar"][-1] - prob.f_star
+        assert np.isfinite(res["f_bar"]).all()
+        assert gapT < 0.1 * gap0, (gap0, gapT)
+        # self-annealing: late noise power far below early
+        assert res["noise_power"][-10:].mean() \
+            < 1e-3 * max(res["noise_power"][:10].mean(), 1e-12) + 1e-12
+
+    def test_lowrank_wire_rides_innovation(self):
+        topo = topology("w1")
+        prob = problems.quadratic(n_nodes=5, dim=16, seed=4)
+        comp = WireCompressor(fmt=make_wire("lowrank:block=16,r=2"))
+        res = innovation.run(prob, topo, comp, 0.05, 300,
+                             jax.random.PRNGKey(0), gamma=0.3)
+        assert np.isfinite(res["f_bar"]).all()
+        assert res["f_bar"][-1] < res["f_bar"][0]
+        assert res["cum_bits"][-1] > 0
+
+    def test_choco_gamma_properties(self):
+        topo = topology("w1")
+        g_inf = innovation.choco_gamma(topo.W, float("inf"))
+        g_lo = innovation.choco_gamma(topo.W, 2.0)
+        assert 0.0 < g_lo <= g_inf < 1.0
+
+    def test_runconfig_algorithm_validation(self):
+        from repro.configs.base import RunConfig
+        assert RunConfig(algorithm="innovation").algorithm == "innovation"
+        with pytest.raises(ValueError, match="unknown algorithm"):
+            RunConfig(algorithm="nope")
+        with pytest.raises(ValueError, match="innovation_gamma"):
+            RunConfig(innovation_gamma=-1.0)
+
+    def test_session_for_algorithm_dispatch(self):
+        from repro.adapt.runner import session_for_algorithm
+        from repro.comm import StaticComm
+        from repro.configs.base import RunConfig
+        from repro.core import dcdgd
+        topo = topology("w1")
+        prob = problems.quadratic(n_nodes=5, dim=8, seed=2)
+        for algo, state_t in (("dcdgd", dcdgd.DCDGDState),
+                              ("innovation", innovation.InnovationState)):
+            run = RunConfig(algorithm=algo, innovation_gamma=0.4)
+            sess = session_for_algorithm(
+                run, prob, topo.W, 0.05, jax.random.PRNGKey(0),
+                StaticComm("identity"))
+            assert isinstance(sess.state, state_t), algo
+            res = sess.run(5)
+            assert np.isfinite(res.metrics_arrays()["f_bar"]).all()

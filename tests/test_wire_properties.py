@@ -32,10 +32,14 @@ try:
 except ImportError:     # degrade to the seeded fallback tests only
     HAVE_HYPOTHESIS = False
 
-# the explicit-RNG row codecs (wire.needs_rng); dense/topk are RNG-free
+# the explicit-RNG row codecs (wire.needs_rng); dense/topk/lowrank are
+# RNG-free (lowrank is DETERMINISTIC: its stateless encode cold-starts
+# from a fixed orthonormal seed, so the oracle check is an identity and
+# the flat-vs-leaf parity must be bitwise even without a shared key)
 RNG_SPECS = ("int8:block=64", "ternary:block=128",
              "hybrid:block=128,top_j=4", "randk:block=128,k=32")
-ALL_SPECS = RNG_SPECS + ("dense", "topk:block=128,k=32")
+ALL_SPECS = RNG_SPECS + ("dense", "topk:block=128,k=32",
+                         "lowrank:block=64,r=2")
 
 N_MC = 96   # Monte-Carlo draws for the oracle consistency check
 
@@ -116,6 +120,22 @@ if HAVE_HYPOTHESIS:
     def test_noise_oracle_property(spec, shape, seed, scale):
         check_noise_oracle(spec, shape, seed, scale=scale)
 
+    # lowrank over random ranks / tile geometries / iteration counts: the
+    # flat-vs-leaf parity must be BITWISE (deterministic codec) and the
+    # exact residual oracle must match the measured residual identically
+    @settings(deadline=None)
+    @given(block=st.sampled_from([16, 64]),
+           r=st.integers(1, 4),
+           iters=st.integers(1, 2),
+           shape=_shape,
+           seed=st.integers(0, 2 ** 16 - 1),
+           scale=st.sampled_from([0.02, 1.0, 40.0]))
+    def test_lowrank_roundtrip_and_oracle_property(block, r, iters, shape,
+                                                   seed, scale):
+        spec = f"lowrank:block={block},iters={iters},r={r}"
+        check_flat_matches_leaf([shape], [spec], seed)
+        check_noise_oracle(spec, shape, seed, scale=scale, n=4)
+
 
 # ---------------------------------------------------------------------------
 # seeded coverage (runs with or without hypothesis)
@@ -126,10 +146,16 @@ _SEEDED_TREES = [
     ([(3, 130)], ["ternary:block=128"]),
     ([(2, 2, 200)], ["hybrid:block=128,top_j=4"]),
     ([(150,)], ["randk:block=128,k=32"]),
+    # lowrank alone: padded tail, multi-tile rows, rank at the tile cap
+    ([(257,)], ["lowrank:block=64,r=2"]),
+    ([(3, 130)], ["lowrank:block=16,iters=2,r=4"]),
     # mixed rung vector incl. the RNG-free codecs, ragged shapes
     ([(3, 70), (130,), (2, 2, 128), (1,), (260,), (5, 40)],
      ["ternary:block=128", "dense", "hybrid:block=128,top_j=4",
       "int8:block=64", "randk:block=128,k=32", "topk:block=128,k=32"]),
+    # ... and with a lowrank rung composed into the same flat row buffer
+    ([(3, 70), (200,), (2, 128)],
+     ["int8:block=64", "lowrank:block=64,r=3", "ternary:block=128"]),
 ]
 
 
@@ -143,3 +169,14 @@ def test_row_codec_roundtrip_seeded(shapes, specs, seed):
 @pytest.mark.parametrize("shape,scale", [((3, 130), 1.0), ((257,), 40.0)])
 def test_noise_oracle_seeded(spec, shape, scale):
     check_noise_oracle(spec, shape, seed=7, scale=scale)
+
+
+@pytest.mark.parametrize("spec", ["lowrank:block=64,r=1",
+                                  "lowrank:block=64,r=2",
+                                  "lowrank:block=16,iters=2,r=4"])
+@pytest.mark.parametrize("shape,scale", [((3, 130), 1.0), ((257,), 40.0),
+                                         ((2, 128), 0.02)])
+def test_lowrank_noise_oracle_seeded(spec, shape, scale):
+    # deterministic codec: the MC "mean" is the exact residual, so the
+    # oracle must match to float tolerance (n=4 just proves invariance)
+    check_noise_oracle(spec, shape, seed=7, scale=scale, n=4)
